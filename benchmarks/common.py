@@ -1,0 +1,31 @@
+"""Shared benchmark utilities: timing + CSV emission.
+
+Every benchmark prints rows:  name,us_per_call,derived
+where ``derived`` is the figure's own metric (distortion, SMSE, ...) encoded
+as key=value pairs joined by '|'.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def timed(fn, *args, repeats=3, **kw):
+    fn(*args, **kw)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6
+
+
+def emit(name: str, us_per_call: float, **derived):
+    kv = "|".join(f"{k}={v:.6g}" if isinstance(v, float) else f"{k}={v}" for k, v in derived.items())
+    print(f"{name},{us_per_call:.1f},{kv}", flush=True)
+
+
+def smse(y_true, y_pred):
+    y_true = np.asarray(y_true)
+    y_pred = np.asarray(y_pred)
+    return float(np.mean((y_true - y_pred) ** 2) / np.var(y_true))

@@ -1,0 +1,58 @@
+"""Pallas kernel microbenchmarks (interpret mode on CPU; on-TPU the same
+entry points compile natively).  Reports us/call and achieved element rates,
+plus the fused-vs-unfused HBM-traffic ratio that motivates kernels/qgram.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from repro.core import quantizers as Q
+from repro.kernels.gram.ops import gram
+from repro.kernels.gram.ref import gram_ref
+from repro.kernels.quant.ops import encode, decode, build_scaled_tables
+from repro.kernels.qgram.ops import qgram
+from repro.kernels.decode_attn.ops import decode_attn
+from .common import timed, emit
+
+
+def main(quick: bool = True):
+    rng = np.random.default_rng(0)
+    n, d, p = (256, 64, 256) if quick else (1024, 128, 1024)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    y = rng.normal(size=(p, d)).astype(np.float32)
+
+    _, us = timed(lambda: jax.block_until_ready(gram(x, y, interpret=True)), repeats=2)
+    _, us_ref = timed(lambda: jax.block_until_ready(gram_ref(x, y)), repeats=2)
+    emit("kernel_gram", us, flops=2 * n * d * p, ref_us=us_ref)
+
+    var = rng.uniform(0.1, 2.0, size=d)
+    rates = Q.allocate_bits_greedy(var, 4 * d, 8)
+    sigma = np.sqrt(var).astype(np.float32)
+    edges, cents = build_scaled_tables(sigma, rates)
+    xs = (rng.normal(size=(n, d)) * sigma).astype(np.float32)
+    codes, us = timed(lambda: jax.block_until_ready(encode(xs, edges, interpret=True)), repeats=2)
+    emit("kernel_quant_encode", us, elems=n * d)
+    _, us = timed(lambda: jax.block_until_ready(decode(codes, cents, interpret=True)), repeats=2)
+    emit("kernel_quant_decode", us, elems=n * d)
+
+    _, us = timed(lambda: jax.block_until_ready(qgram(codes, cents, y, interpret=True)), repeats=2)
+    # HBM traffic: unfused writes+reads the (n, d) fp32 reconstruction
+    unfused_bytes = n * d * 4 * 2 + (n * d * 1 + p * d * 4 + n * p * 4)
+    fused_bytes = n * d * 1 + p * d * 4 + n * p * 4
+    emit("kernel_qgram_fused", us, traffic_ratio=unfused_bytes / fused_bytes)
+
+    # decode attention: one token vs a 4k KV cache
+    import jax.numpy as jnp
+    B, S, KV, G, hd = (2, 2048, 2, 4, 64) if quick else (8, 8192, 4, 8, 128)
+    q = jnp.asarray(rng.normal(size=(B, KV, G, hd)), jnp.float32)
+    K = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.bfloat16)
+    V = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.bfloat16)
+    kpos = jnp.asarray(np.arange(S)[None].repeat(B, 0), jnp.int32)
+    _, us = timed(lambda: jax.block_until_ready(
+        decode_attn(q, K, V, kpos, S - 1, interpret=True)), repeats=2)
+    emit("kernel_decode_attn", us, kv_bytes=B * S * KV * hd * 2 * 2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Roofline table from the dry-run JSON artifacts (results/dryrun_*.json).
+
+Emits one CSV row per (arch, shape, mesh) with the three roofline terms in
+seconds, the dominant term, MODEL_FLOPS/HLO_FLOPs, and peak bytes/device.
+Also renders the markdown table for EXPERIMENTS.md §Roofline with --markdown.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from .common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def rows(results):
+    for r in results:
+        if "skipped" in r or "error" in r:
+            continue
+        rl = r["roofline"]
+        yield {
+            "arch": r["arch"],
+            "shape": r["shape"],
+            "pods": 2 if r["multi_pod"] else 1,
+            "compute_s": rl["compute_s"],
+            "memory_s": rl["memory_s"],
+            "collective_s": rl["collective_s"],
+            "dominant": rl["dominant"],
+            "useful_ratio": rl.get("useful_flops_ratio"),
+            "peak_gb": (r["memory"]["peak_bytes"] or 0) / 1e9,
+        }
+
+
+def main(markdown: bool = False, paths=None):
+    paths = paths or [
+        os.path.join(RESULTS, "dryrun_single.json"),
+        os.path.join(RESULTS, "dryrun_multi.json"),
+    ]
+    all_rows = []
+    for p in paths:
+        if os.path.exists(p):
+            all_rows.extend(rows(load(p)))
+    if markdown:
+        print("| arch | shape | pods | compute s | memory s | collective s | dominant | useful FLOPs | peak GB/dev |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for r in all_rows:
+            ur = f"{r['useful_ratio']:.2f}" if r["useful_ratio"] else "-"
+            print(f"| {r['arch']} | {r['shape']} | {r['pods']} | "
+                  f"{r['compute_s']:.3e} | {r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+                  f"{r['dominant']} | {ur} | {r['peak_gb']:.2f} |")
+    else:
+        for r in all_rows:
+            emit("roofline", 0.0, **{k: v for k, v in r.items() if v is not None})
+    return all_rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--markdown", action="store_true")
+    a = ap.parse_args()
+    main(markdown=a.markdown)

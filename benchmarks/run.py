@@ -1,0 +1,44 @@
+"""Benchmark driver: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
+
+  PYTHONPATH=src python -m benchmarks.run          # quick pass (CI scale)
+  PYTHONPATH=src python -m benchmarks.run --full   # paper-scale settings
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list of: fig2,fig3,fig4,fig56,fig7,kernels,ablation_bits,roofline")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from . import fig2_distortion, fig3_pca, fig4_gp1d, fig56_regression, fig7_sparse
+    from . import kernels_bench, roofline, ablation_bits
+
+    benches = {
+        "fig2": lambda: fig2_distortion.main(quick=quick),
+        "fig3": lambda: fig3_pca.main(quick=quick),
+        "fig4": lambda: fig4_gp1d.main(quick=quick),
+        "fig56": lambda: fig56_regression.main(quick=quick),
+        "fig7": lambda: fig7_sparse.main(quick=quick),
+        "kernels": lambda: kernels_bench.main(quick=quick),
+        "ablation_bits": lambda: ablation_bits.main(quick=quick),
+        "roofline": lambda: roofline.main(),
+    }
+    selected = args.only.split(",") if args.only else list(benches)
+    print("name,us_per_call,derived")
+    for name in selected:
+        t0 = time.time()
+        benches[name]()
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Minimal sharded checkpointing: pytree <-> npz with /-joined key paths.
+
+Restore is sharding-aware: pass ``shardings`` (a matching pytree of
+NamedShardings or None) and leaves are device_put into place.
+"""
+from __future__ import annotations
+
+import os
+import re
+
+import numpy as np
+import jax
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat, _ = _flatten(tree)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    tmp = path + ".tmp.npz"  # np.savez keeps the name when it ends in .npz
+    np.savez(tmp, **flat)
+    os.replace(tmp, path)
+    return path
+
+
+def latest_step(directory: str):
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(m.group(1))
+        for f in os.listdir(directory)
+        if (m := re.match(r"ckpt_(\d+)\.npz$", f))
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, like_tree, shardings=None):
+    """Restore into the structure of ``like_tree`` (values ignored)."""
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    data = np.load(path)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
+    shard_flat = (
+        jax.tree_util.tree_flatten(shardings)[0] if shardings is not None else [None] * len(flat)
+    )
+    leaves = []
+    for (pathk, leaf), sh in zip(flat, shard_flat):
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in pathk)
+        arr = data[key]
+        leaves.append(jax.device_put(arr, sh) if sh is not None else arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,1 @@
+from .quantized_collectives import q_all_gather, q_psum, wire_bits_all_gather

@@ -1,0 +1,58 @@
+"""Architecture registry: one module per assigned architecture (exact values
+from the cited source), plus the paper's own GP experiment configs.
+
+``get_config(arch_id)`` returns the full ModelConfig; ``input_specs`` builds
+ShapeDtypeStruct stand-ins for every model input of a (config, shape) pair —
+weak-type-correct, shardable, no device allocation.
+"""
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig, ShapeConfig, SHAPES
+
+ARCHS = [
+    "gemma_7b",
+    "whisper_medium",
+    "internvl2_2b",
+    "mistral_large_123b",
+    "arctic_480b",
+    "stablelm_12b",
+    "gemma2_2b",
+    "xlstm_125m",
+    "qwen2_moe_a2_7b",
+    "zamba2_2_7b",
+]
+
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    mod_name = arch_id.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f".{mod_name}", __package__)
+    return mod.CONFIG
+
+
+def list_archs():
+    """Canonical assigned ids (e.g. 'qwen2-moe-a2.7b')."""
+    return [
+        importlib.import_module(f".{a}", __package__).CONFIG.name for a in ARCHS
+    ]
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, batch_override=None):
+    """ShapeDtypeStruct batch for train/prefill kinds.  Decode state specs are
+    built separately (launch/dryrun.py) via jax.eval_shape on init_decode_state."""
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    batch = {"tokens": tok}
+    if shape.kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.family == "encdec":
+        batch["enc_embed"] = jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["patch_embed"] = jax.ShapeDtypeStruct((B, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+    return batch

@@ -1,0 +1,29 @@
+"""repro.core — the paper's contribution as a composable JAX library.
+
+Layers:
+  quantizers / rate_distortion / transforms / distortion  — §4 math
+  schemes                                                 — the 3 wire protocols
+  gp / nystrom / poe / sparse_gp / fusion                 — GP substrate
+  distributed_gp                                          — §5 protocols
+"""
+from . import quantizers, rate_distortion, transforms, distortion, schemes
+from . import gp, nystrom, poe, sparse_gp, fusion, distributed_gp
+
+from .schemes import PerSymbolScheme, OptimalScheme, DimReductionScheme, PCAScheme
+from .gp import GPModel, GPParams, train_gp, init_params
+from .sparse_gp import SGPR, train_sgpr
+from .distributed_gp import (
+    split_machines,
+    single_center_gp,
+    broadcast_gp,
+    poe_baseline,
+)
+
+__all__ = [
+    "quantizers", "rate_distortion", "transforms", "distortion", "schemes",
+    "gp", "nystrom", "poe", "sparse_gp", "fusion", "distributed_gp",
+    "PerSymbolScheme", "OptimalScheme", "DimReductionScheme", "PCAScheme",
+    "GPModel", "GPParams", "train_gp", "init_params",
+    "SGPR", "train_sgpr",
+    "split_machines", "single_center_gp", "broadcast_gp", "poe_baseline",
+]

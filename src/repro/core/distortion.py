@@ -1,0 +1,26 @@
+"""Inner-product distortion measures (paper eqs. 6 and 7)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["second_moment", "distortion_pairwise", "distortion_quadratic"]
+
+
+def second_moment(Y):
+    """S_y = (1/n) Y^T Y — samples are modeled zero-mean (paper §3)."""
+    Y = jnp.asarray(Y)
+    return Y.T @ Y / Y.shape[0]
+
+
+def distortion_pairwise(X, Xhat, Y):
+    """Eq. (6): (1/n^2) sum_ij (<x_i,y_j> - <xhat_i,y_j>)^2."""
+    X, Xhat, Y = map(jnp.asarray, (X, Xhat, Y))
+    E = (X - Xhat) @ Y.T  # (n, n_y)
+    return jnp.sum(E**2) / (X.shape[0] * Y.shape[0])
+
+
+def distortion_quadratic(X, Xhat, Sy):
+    """Eq. (7): (1/n) sum_i (x_i - xhat_i)^T S_y (x_i - xhat_i)."""
+    X, Xhat = jnp.asarray(X), jnp.asarray(Xhat)
+    E = X - Xhat
+    return jnp.mean(jnp.einsum("nd,de,ne->n", E, jnp.asarray(Sy, E.dtype), E))

@@ -1,0 +1,295 @@
+"""Distributed GP learning under communication limits (paper §5).
+
+Two protocols:
+
+* **single-center** (§5.1): machine 0 is the center.  It ships its local
+  second-moment S_c to every machine; machine j fits the per-symbol scheme to
+  (Qx=S_j, Qy=S_c), transmits int codes; the center decodes X̂_j, forms the
+  first-block rows of the gram matrix (its own block exact), Nyström-completes
+  (eq. 61), trains hyperparameters on the completed gram, and serves
+  predictions.
+* **broadcast** (§5.2): every machine broadcasts codes fitted against
+  Qy = sum of the *other* machines' covariances; each machine builds its own
+  Nyström gram (own block exact), forms a local predictive, and the per-point
+  predictives are fused with the KL barycenter (eqs. 62-64).
+
+Two execution modes:
+
+* ``m`` simulated machines on one host (vmapped / python-loop) — bit-exact
+  protocol semantics, used for the paper's 40-machine experiments;
+* a ``shard_map`` mode where machines are devices along a mesh axis and the
+  wire is a real ``jax.lax.all_gather`` of int8 codes (see repro.comm) — the
+  production path, shared with the transformer GP head.
+
+Targets y are transmitted unquantized (scalars; the paper quantizes inputs
+only).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .distortion import second_moment
+from .schemes import PerSymbolScheme, DimReductionScheme
+from .gp import GPParams, init_params, gram_fn, nlml_from_gram, posterior_from_gram, train_gp
+from .nystrom import nystrom_complete, nystrom_posterior
+from .fusion import kl_fuse_diag
+from .poe import combine
+
+__all__ = [
+    "split_machines",
+    "quantize_to_center",
+    "single_center_gp",
+    "broadcast_gp",
+    "poe_baseline",
+]
+
+
+def split_machines(X, y, m: int, key) -> list[tuple[jnp.ndarray, jnp.ndarray]]:
+    """Random uniform split across m machines (paper §6: 'randomly distributed
+    across 40 machines')."""
+    n = X.shape[0]
+    perm = jax.random.permutation(key, n)
+    chunks = np.array_split(np.asarray(perm), m)
+    return [(jnp.asarray(X)[c], jnp.asarray(y)[c]) for c in chunks]
+
+
+def quantize_to_center(parts, bits_per_sample: int, center: int = 0):
+    """Run the single-center wire protocol; returns
+    (X_recon, y_all, wire_bits, n_center, sq_norms).
+
+    X_recon stacks the center's exact block first, then every machine's decoded
+    points, matching the paper's gram-row layout.  ``sq_norms`` carries each
+    point's EXACT |x|² (an O(32 n)-bit extra the Snelson–Ghahramani/FITC
+    diagonal correction needs; included in the wire accounting)."""
+    S_c = second_moment(parts[center][0])
+    Xs, ys, sqs, wire = [], [], [], 0
+    for j, (Xj, yj) in enumerate(parts):
+        if j == center:
+            Xs.append(Xj)
+        else:
+            S_j = second_moment(Xj)
+            sch = PerSymbolScheme(bits_per_sample).fit(np.asarray(S_j), np.asarray(S_c))
+            Xs.append(sch.decode(sch.encode(Xj)))
+            wire += sch.wire_bits(Xj.shape[0]) + sch.side_info_bits(Xj.shape[1])
+            # (the optional FITC diagonal costs an extra 32 bits/point of
+            #  exact |x|^2 — accounted by the caller when gram_mode uses it)
+        ys.append(yj)
+        sqs.append(jnp.sum(jnp.asarray(Xj) ** 2, axis=-1))
+    order = [center] + [j for j in range(len(parts)) if j != center]
+    X_recon = jnp.concatenate([Xs[j] for j in order], axis=0)
+    y_all = jnp.concatenate([ys[j] for j in order], axis=0)
+    sq_norms = jnp.concatenate([sqs[j] for j in order], axis=0)
+    n_center = parts[center][0].shape[0]
+    return X_recon, y_all, wire, n_center, sq_norms
+
+
+@dataclasses.dataclass
+class CenterGP:
+    kernel: str
+    params: GPParams
+    X_recon: jnp.ndarray  # center block exact, rest reconstructed
+    y: jnp.ndarray
+    n_center: int
+    wire_bits: int
+    gram_mode: str = "nystrom"
+    sq_norms: jnp.ndarray | None = None  # exact |x|^2 for the FITC diagonal
+
+    def _exact_diag(self, params):
+        """k(x_i, x_i) from the EXACT squared norms the machines shipped."""
+        if self.kernel == "linear":
+            return jnp.exp(params.log_a) * self.sq_norms + jnp.exp(params.log_b)
+        return jnp.full_like(self.sq_norms, jnp.exp(params.log_a))  # SE: constant
+
+    def _gram(self, params):
+        k = gram_fn(self.kernel)
+        if self.gram_mode == "direct":
+            # beyond-paper: all blocks straight from the reconstructed points;
+            # converges to the full GP as R -> inf (Nyström caps at rank K)
+            return k(params, self.X_recon)
+        Xc = self.X_recon[: self.n_center]
+        G_KK = k(params, Xc)
+        G_KN = k(params, Xc, self.X_recon)
+        if self.gram_mode == "nystrom_fitc" and self.sq_norms is not None:
+            # Snelson & Ghahramani: make the Nyström diagonal exact (the
+            # correction acts like per-point noise, taming the rank-K inverse)
+            return nystrom_complete(G_KK, G_KN, exact_diag=self._exact_diag(params))
+        return nystrom_complete(G_KK, G_KN)
+
+    def predict(self, X_star):
+        k = gram_fn(self.kernel)
+        g_ss = jnp.diagonal(k(self.params, X_star, X_star))
+        noise = jnp.exp(self.params.log_noise)
+        if self.gram_mode == "nystrom_fitc":
+            # dense path: the FITC-corrected gram is full-rank (the exact
+            # diagonal acts as per-point noise), so the direct predictive is
+            # well-conditioned
+            G = self._gram(self.params)
+            G_sn = k(self.params, X_star, self.X_recon)
+            return posterior_from_gram(G, G_sn, g_ss, self.y, noise)
+        if self.gram_mode == "nystrom":
+            # consistent low-rank predictive: the test cross-covariances must
+            # pass through the same Nyström map (G_*N = G_*K G_KK^{-1} G_KN),
+            # else y-components outside the rank-K span are amplified by 1/s^2
+            Xc = self.X_recon[: self.n_center]
+            return nystrom_posterior(
+                k(self.params, Xc), k(self.params, Xc, self.X_recon),
+                self.y, noise, k(self.params, X_star, Xc), g_ss,
+            )
+        G = self._gram(self.params)
+        G_sn = k(self.params, X_star, self.X_recon)
+        return posterior_from_gram(G, G_sn, g_ss, self.y, noise)
+
+
+def single_center_gp(
+    parts,
+    bits_per_sample: int,
+    kernel: str = "se",
+    steps: int = 150,
+    lr: float = 0.05,
+    params: GPParams | None = None,
+    gram_mode: str = "nystrom",
+) -> CenterGP:
+    """Full §5.1 protocol: quantize-in, Nyström-complete, train hypers on the
+    completed gram by marginal likelihood, return a predictor."""
+    X_recon, y_all, wire, n_c, sq_norms = quantize_to_center(parts, bits_per_sample)
+    if gram_mode == "nystrom_fitc":  # exact |x|^2 side-channel (32 bits/point)
+        wire += 32 * (X_recon.shape[0] - n_c)
+    model = CenterGP(
+        kernel=kernel,
+        params=params or init_params(),
+        X_recon=X_recon,
+        y=y_all,
+        n_center=n_c,
+        wire_bits=wire,
+        gram_mode=gram_mode,
+        sq_norms=sq_norms,
+    )
+    trained = train_gp(
+        X_recon,
+        y_all,
+        kernel=kernel,
+        params=model.params,
+        steps=steps,
+        lr=lr,
+        gram_override=model._gram,
+    )
+    model.params = trained.params
+    return model
+
+
+def broadcast_gp(
+    parts,
+    bits_per_sample: int,
+    X_star,
+    kernel: str = "se",
+    steps: int = 150,
+    lr: float = 0.05,
+    fuse: str = "kl",
+    gram_mode: str = "nystrom",
+):
+    """Full §5.2 protocol.  Hyperparameters are trained once (at machine 0, on
+    its Nyström view) and shared — a cheap O(#hypers) extra broadcast; the
+    paper trains per-machine, which is embarrassingly parallel on a real
+    cluster but m-times serial here.  Returns fused (mean, var) at X_star plus
+    total wire bits.
+    """
+    m = len(parts)
+    S = [second_moment(Xj) for Xj, _ in parts]
+    S_tot = sum(S)
+    # every machine encodes ONCE against the sum of the others' covariances
+    wire = 0
+    decoded = []
+    for j, (Xj, yj) in enumerate(parts):
+        sch = PerSymbolScheme(bits_per_sample).fit(
+            np.asarray(S[j]), np.asarray(S_tot - S[j])
+        )
+        decoded.append(sch.decode(sch.encode(Xj)))
+        wire += sch.wire_bits(Xj.shape[0]) + sch.side_info_bits(Xj.shape[1])
+
+    k = gram_fn(kernel)
+    y_parts = [yj for _, yj in parts]
+
+    def machine_view(i):
+        blocks = [parts[j][0] if j == i else decoded[j] for j in range(m)]
+        order = [i] + [j for j in range(m) if j != i]
+        Xv = jnp.concatenate([blocks[j] for j in order], axis=0)
+        yv = jnp.concatenate([y_parts[j] for j in order], axis=0)
+        return Xv, yv, parts[i][0].shape[0]
+
+    # train shared hypers at machine 0 on its own completed gram
+    X0, y0, nc0 = machine_view(0)
+
+    def gram0(p):
+        Xc = X0[:nc0]
+        return nystrom_complete(k(p, Xc), k(p, Xc, X0))
+
+    trained = train_gp(X0, y0, kernel=kernel, steps=steps, lr=lr, gram_override=gram0)
+    p = trained.params
+
+    @partial(jax.jit, static_argnums=(2,))
+    def local_predict(Xv, yv, nc):
+        Xc = Xv[:nc]
+        g_ss = jnp.diagonal(k(p, X_star, X_star))
+        if gram_mode == "nystrom":
+            # consistent low-rank predictive (see CenterGP.predict)
+            from .nystrom import nystrom_posterior
+
+            return nystrom_posterior(
+                k(p, Xc), k(p, Xc, Xv), yv, jnp.exp(p.log_noise),
+                k(p, X_star, Xc), g_ss,
+            )
+        G = k(p, Xv)  # "direct": all blocks from reconstructed points
+        G_sn = k(p, X_star, Xv)
+        return posterior_from_gram(G, G_sn, g_ss, yv, jnp.exp(p.log_noise))
+
+    mus, s2s = [], []
+    for i in range(m):
+        Xv, yv, nc = machine_view(i)
+        mu_i, s2_i = local_predict(Xv, yv, nc)
+        mus.append(mu_i)
+        s2s.append(s2_i)
+    mus = jnp.stack(mus)
+    s2s = jnp.stack(s2s)
+    if fuse == "kl":
+        mu, s2 = kl_fuse_diag(mus, s2s)
+    else:
+        prior = jnp.diagonal(k(p, X_star, X_star)) + jnp.exp(p.log_noise)
+        mu, s2 = combine(fuse, mus, s2s, prior)
+    return mu, s2, wire, p
+
+
+def poe_baseline(
+    parts,
+    X_star,
+    kernel: str = "se",
+    method: str = "rbcm",
+    steps: int = 150,
+    lr: float = 0.05,
+):
+    """Zero-rate baselines: each machine trains on its local data only (the
+    block-diagonal-gram assumption), predictions combined by PoE/BCM/rBCM."""
+    # shared hypers trained on machine 0's local data (standard practice: the
+    # PoE family shares one hyperparameter set across experts)
+    X_all = jnp.concatenate([p[0] for p in parts], axis=0)
+    y_all = jnp.concatenate([p[1] for p in parts], axis=0)
+    trained = train_gp(parts[0][0], parts[0][1], kernel=kernel, steps=steps, lr=lr)
+    p = trained.params
+    k = gram_fn(kernel)
+
+    @jax.jit
+    def expert(Xj, yj):
+        G = k(p, Xj)
+        G_sn = k(p, X_star, Xj)
+        g_ss = jnp.diagonal(k(p, X_star, X_star))
+        return posterior_from_gram(G, G_sn, g_ss, yj, jnp.exp(p.log_noise))
+
+    mus, s2s = zip(*[expert(Xj, yj) for Xj, yj in parts])
+    prior = jnp.diagonal(k(p, X_star, X_star)) + jnp.exp(p.log_noise)
+    mu, s2 = combine(method, jnp.stack(mus), jnp.stack(s2s), prior)
+    return mu, s2, p

@@ -1,0 +1,26 @@
+"""KL-barycenter fusion of local predictive Gaussians (paper §5.2, eqs. 62-64).
+
+(mu*, Sigma*) = argmin sum_i KL( N(mu_i, Sigma_i) || N(mu, Sigma) )
+  =>  mu*    = mean_i mu_i                                   (63)
+      Sigma* = mean_i [ Sigma_i + (mu* - mu_i)(mu* - mu_i)^T ] (64)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["kl_fuse", "kl_fuse_diag"]
+
+
+def kl_fuse(mus, Sigmas):
+    """mus: (m, t); Sigmas: (m, t, t) full covariances over the test batch."""
+    mu = jnp.mean(mus, axis=0)
+    dev = mu[None, :] - mus  # (m, t)
+    Sigma = jnp.mean(Sigmas + dev[:, :, None] * dev[:, None, :], axis=0)
+    return mu, Sigma
+
+
+def kl_fuse_diag(mus, s2s):
+    """Diagonal/per-point special case: s2s (m, t) marginal variances."""
+    mu = jnp.mean(mus, axis=0)
+    s2 = jnp.mean(s2s + (mu[None, :] - mus) ** 2, axis=0)
+    return mu, s2

@@ -1,0 +1,55 @@
+"""Zero-rate distributed-GP baselines the paper compares against (§5, §6):
+Product of Experts (PoE), generalized PoE, Bayesian Committee Machine (BCM),
+and robust BCM (rBCM, Deisenroth & Ng 2015).
+
+Each expert i contributes a Gaussian predictive N(mu_i, s2_i) per test point;
+the combiners differ in precision weighting.  ``prior_var`` is the prior
+k(x*, x*) + sigma_eps^2 needed by (r)BCM.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["poe", "gpoe", "bcm", "rbcm", "combine"]
+
+
+def poe(mus, s2s, prior_var=None):
+    """PoE: precision-weighted product.  mus/s2s: (m, t)."""
+    prec = jnp.sum(1.0 / s2s, axis=0)
+    mu = jnp.sum(mus / s2s, axis=0) / prec
+    return mu, 1.0 / prec
+
+
+def gpoe(mus, s2s, prior_var=None, betas=None):
+    """Generalized PoE with weights beta_i (default 1/m so variances don't
+    collapse with m)."""
+    m = mus.shape[0]
+    betas = jnp.full((m, 1), 1.0 / m) if betas is None else betas
+    prec = jnp.sum(betas / s2s, axis=0)
+    mu = jnp.sum(betas * mus / s2s, axis=0) / prec
+    return mu, 1.0 / prec
+
+
+def bcm(mus, s2s, prior_var):
+    """BCM (Tresp 2000): PoE with the (m-1)-fold prior correction."""
+    m = mus.shape[0]
+    prec = jnp.sum(1.0 / s2s, axis=0) - (m - 1.0) / prior_var
+    prec = jnp.maximum(prec, 1e-12)
+    mu = jnp.sum(mus / s2s, axis=0) / prec
+    return mu, 1.0 / prec
+
+
+def rbcm(mus, s2s, prior_var):
+    """Robust BCM: beta_i = 0.5 (log prior_var - log s2_i) (Deisenroth & Ng)."""
+    betas = 0.5 * (jnp.log(prior_var) - jnp.log(s2s))  # (m, t)
+    prec = jnp.sum(betas / s2s, axis=0) + (1.0 - jnp.sum(betas, axis=0)) / prior_var
+    prec = jnp.maximum(prec, 1e-12)
+    mu = jnp.sum(betas * mus / s2s, axis=0) / prec
+    return mu, 1.0 / prec
+
+
+_COMBINERS = {"poe": poe, "gpoe": gpoe, "bcm": bcm, "rbcm": rbcm}
+
+
+def combine(method: str, mus, s2s, prior_var=None):
+    return _COMBINERS[method](jnp.asarray(mus), jnp.asarray(s2s), prior_var)

@@ -1,0 +1,137 @@
+"""Rate-distortion theory of the inner-product problem (paper §4.1).
+
+* Theorem 1: lower bound via reverse water-filling over eigenvalues of Qx @ Qy.
+* Theorem 2: for Gaussian X the bound is achieved by the test channel
+  x = xhat + z with Q = Qy^{-1/2} U Qtilde U^T Qy^{-1/2}; we simulate it by
+  sampling xhat | x (block coding with 2^{nR} codebooks is intractable, as the
+  paper notes).
+
+Rates are in *bits* per sample (log2), matching the paper's figures.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "product_eigs",
+    "reverse_waterfill",
+    "rd_lower_bound_curve",
+    "rate_for_distortion",
+    "distortion_for_rate",
+    "OptimalTestChannel",
+    "make_test_channel",
+]
+
+
+def _sqrt_psd(Q):
+    """Symmetric PSD square root (and inverse sqrt) via eigh."""
+    w, v = np.linalg.eigh(np.asarray(Q, dtype=np.float64))
+    w = np.clip(w, 0.0, None)
+    s = np.sqrt(w)
+    half = (v * s) @ v.T
+    inv_s = np.where(s > 1e-12 * s.max(), 1.0 / np.where(s == 0, 1.0, s), 0.0)
+    inv_half = (v * inv_s) @ v.T
+    return half, inv_half
+
+
+def product_eigs(Qx, Qy):
+    """Eigendecomposition of Qy^{1/2} Qx Qy^{1/2} = U Lambda U^T (eq. 25/33).
+
+    Returns (Lambda_desc, U, Qy_half, Qy_inv_half).  Lambda equals the
+    eigenvalues of Qx @ Qy (real, >= 0, since both are PSD).
+    """
+    Qy_half, Qy_inv_half = _sqrt_psd(Qy)
+    B = Qy_half @ np.asarray(Qx, dtype=np.float64) @ Qy_half
+    B = 0.5 * (B + B.T)
+    lam, U = np.linalg.eigh(B)
+    order = np.argsort(lam)[::-1]
+    return np.clip(lam[order], 0.0, None), U[:, order], Qy_half, Qy_inv_half
+
+
+def reverse_waterfill(eigs: np.ndarray, distortion: float) -> np.ndarray:
+    """q_i = min(lambda_wl, eig_i) with sum(q) == D (eq. 14/27-29)."""
+    eigs = np.asarray(eigs, dtype=np.float64)
+    total = eigs.sum()
+    if distortion >= total:
+        return eigs.copy()
+    lo, hi = 0.0, float(eigs.max())
+    for _ in range(200):  # bisection on the water level
+        mid = 0.5 * (lo + hi)
+        if np.minimum(mid, eigs).sum() > distortion:
+            hi = mid
+        else:
+            lo = mid
+    return np.minimum(0.5 * (lo + hi), eigs)
+
+
+def rd_lower_bound_curve(Qx, Qy, n_points: int = 200):
+    """The (R, D) lower-bound curve of Theorem 1 for Gaussian X.
+
+    Parametrized by the water level; R(level) = 0.5*sum(log2(eig/q)),
+    D(level) = sum(q).  Returns (rates_bits, distortions), rate-ascending.
+    """
+    eigs, _, _, _ = product_eigs(Qx, Qy)
+    eigs = np.maximum(eigs, 1e-300)
+    levels = np.geomspace(eigs.max(), eigs.max() * 1e-12, n_points)
+    rates, dists = [], []
+    for lv in levels:
+        q = np.minimum(lv, eigs)
+        rates.append(0.5 * np.sum(np.log2(eigs / q)))
+        dists.append(q.sum())
+    return np.asarray(rates), np.asarray(dists)
+
+
+def rate_for_distortion(Qx, Qy, distortion: float) -> float:
+    """R_lb(D) in bits (Theorem 1, eq. 13 specialized to Gaussian h(x))."""
+    eigs, _, _, _ = product_eigs(Qx, Qy)
+    q = reverse_waterfill(np.maximum(eigs, 1e-300), distortion)
+    return float(0.5 * np.sum(np.log2(np.maximum(eigs, 1e-300) / np.maximum(q, 1e-300))))
+
+
+def distortion_for_rate(Qx, Qy, rate_bits: float) -> float:
+    """Invert the Theorem-1 curve: D such that R_lb(D) == rate_bits."""
+    rates, dists = rd_lower_bound_curve(Qx, Qy, n_points=2000)
+    return float(np.interp(rate_bits, rates, dists))
+
+
+class OptimalTestChannel(NamedTuple):
+    """xhat | x  ~  N(A x, W): the Theorem-2 achieving conditional."""
+
+    A: np.ndarray
+    W_half: np.ndarray  # W^{1/2} for sampling
+    rate_bits: float
+    distortion: float
+
+
+def make_test_channel(Qx, Qy, distortion: float) -> OptimalTestChannel:
+    """Build the Theorem-2 test channel for target distortion D.
+
+    Q      = Qy^{-1/2} U Qtilde U^T Qy^{-1/2},  Qtilde = diag(min(level, Lambda))
+    xhat   = A x + w,   A = (Qx - Q) Qx^{-1},   W = (Qx-Q) - (Qx-Q) Qx^{-1} (Qx-Q)
+    which yields xhat ~ N(0, Qx - Q) and x - xhat with covariance Q, independent
+    of xhat — exactly eq. (30).
+    """
+    eigs, U, Qy_half, Qy_inv_half = product_eigs(Qx, Qy)
+    q = reverse_waterfill(np.maximum(eigs, 1e-300), distortion)
+    Qtilde = np.diag(q)
+    Q = Qy_inv_half @ U @ Qtilde @ U.T @ Qy_inv_half
+    Qx = np.asarray(Qx, dtype=np.float64)
+    QxmQ = Qx - Q
+    Qx_inv = np.linalg.pinv(Qx)
+    A = QxmQ @ Qx_inv
+    W = QxmQ - QxmQ @ Qx_inv @ QxmQ
+    W = 0.5 * (W + W.T)
+    W_half, _ = _sqrt_psd(W)
+    rate = 0.5 * np.sum(np.log2(np.maximum(eigs, 1e-300) / np.maximum(q, 1e-300)))
+    return OptimalTestChannel(A=A, W_half=W_half, rate_bits=float(rate), distortion=float(q.sum()))
+
+
+def sample_test_channel(channel: OptimalTestChannel, X, key):
+    """Simulate the optimal scheme: Xhat = X A^T + N(0, W)."""
+    X = jnp.asarray(X)
+    noise = jax.random.normal(key, X.shape, dtype=X.dtype)
+    return X @ jnp.asarray(channel.A, X.dtype).T + noise @ jnp.asarray(channel.W_half, X.dtype).T

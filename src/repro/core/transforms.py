@@ -1,0 +1,94 @@
+"""Linear transforms of the paper: the decorrelating transform of §4.2 and the
+inner-product-optimal dimension reduction of Theorem 3 (§4.3), plus the PCA
+baseline it is compared against.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from .rate_distortion import product_eigs, _sqrt_psd
+
+__all__ = [
+    "DecorrelatingTransform",
+    "make_decorrelating_transform",
+    "DimReduction",
+    "make_dim_reduction",
+    "make_pca",
+    "dr_encode",
+    "dr_decode",
+]
+
+
+class DecorrelatingTransform(NamedTuple):
+    """x' = T x has independent (Gaussian) dims with variances ``variances``;
+    x  = T_inv x' inverts it.  T = U^T Qy^{1/2}, T_inv = Qy^{-1/2} U (§4.2)."""
+
+    T: np.ndarray
+    T_inv: np.ndarray
+    variances: np.ndarray  # Lambda (eigenvalues of Qx Qy), descending
+
+
+def make_decorrelating_transform(Qx, Qy) -> DecorrelatingTransform:
+    lam, U, Qy_half, Qy_inv_half = product_eigs(Qx, Qy)
+    return DecorrelatingTransform(
+        T=U.T @ Qy_half, T_inv=Qy_inv_half @ U, variances=lam
+    )
+
+
+class DimReduction(NamedTuple):
+    """Theorem-3 reduction: U (d, m) basis; encoder P (m, d) with z = P x;
+    decoder is x̂ = U z.  ``left_out`` is the claimed distortion
+    (sum of the d-m smallest eigenvalues of Sx Sy)."""
+
+    U: np.ndarray
+    P: np.ndarray
+    eigenvalues: np.ndarray
+    left_out: float
+
+
+def _right_eigvecs_product(Sx, Sy):
+    """Right eigenvectors of Sx @ Sy via the symmetric surrogate
+    B = Sy^{1/2} Sx Sy^{1/2} = W M W^T  =>  V = Sy^{-1/2} W (unit-normalized).
+
+    Sx Sy (Sy^{-1/2} w) = Sx Sy^{1/2} w = Sy^{-1/2} B w = mu Sy^{-1/2} w."""
+    Sy_half, Sy_inv_half = _sqrt_psd(Sy)
+    B = Sy_half @ np.asarray(Sx, dtype=np.float64) @ Sy_half
+    B = 0.5 * (B + B.T)
+    mu, W = np.linalg.eigh(B)
+    order = np.argsort(mu)[::-1]
+    mu, W = np.clip(mu[order], 0.0, None), W[:, order]
+    V = Sy_inv_half @ W
+    V = V / np.maximum(np.linalg.norm(V, axis=0, keepdims=True), 1e-30)
+    return mu, V
+
+
+def make_dim_reduction(Sx, Sy, m: int) -> DimReduction:
+    """Theorem 3: keep the top-m right eigenvectors of Sx Sy; z given by (48)."""
+    mu, V = _right_eigvecs_product(Sx, Sy)
+    U = V[:, :m]
+    Sy = np.asarray(Sy, dtype=np.float64)
+    # eq. (48): z = (U^T Sy U)^{-1} U^T Sy x  — Sy-metric projection
+    P = np.linalg.solve(U.T @ Sy @ U, U.T @ Sy)
+    return DimReduction(U=U, P=P, eigenvalues=mu, left_out=float(mu[m:].sum()))
+
+
+def make_pca(Sx, m: int) -> DimReduction:
+    """Standard PCA baseline: top-m eigenvectors of Sx; orthogonal projection."""
+    w, v = np.linalg.eigh(np.asarray(Sx, dtype=np.float64))
+    order = np.argsort(w)[::-1]
+    w, v = w[order], v[:, order]
+    U = v[:, :m]
+    return DimReduction(U=U, P=U.T, eigenvalues=np.clip(w, 0, None), left_out=float(w[m:].sum()))
+
+
+def dr_encode(dr: DimReduction, X):
+    """(n, d) -> (n, m)."""
+    return jnp.asarray(X) @ jnp.asarray(dr.P, dtype=jnp.asarray(X).dtype).T
+
+
+def dr_decode(dr: DimReduction, Z):
+    """(n, m) -> (n, d)."""
+    return jnp.asarray(Z) @ jnp.asarray(dr.U, dtype=jnp.asarray(Z).dtype).T

@@ -1,0 +1,27 @@
+"""Sharded batch delivery: host batches -> global jax.Arrays laid out for the
+mesh (batch over the data/pod axes), via make_array_from_callback so each host
+only materializes its addressable shards.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+class ShardedBatcher:
+    def __init__(self, mesh, batch_axes=("data",)):
+        self.mesh = mesh
+        self.batch_axes = batch_axes
+
+    def sharding_for(self, arr):
+        spec = P(self.batch_axes) if arr.ndim >= 1 else P()
+        return NamedSharding(self.mesh, spec)
+
+    def __call__(self, host_batch: dict):
+        out = {}
+        for k, v in host_batch.items():
+            v = np.asarray(v)
+            sh = self.sharding_for(v)
+            out[k] = jax.make_array_from_callback(v.shape, sh, lambda idx, vv=v: vv[idx])
+        return out

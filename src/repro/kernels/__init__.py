@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+gram/        tiled gram-block  G = X Y^T       (MXU)
+quant/       per-symbol encode/decode (§4.2)   (VPU threshold-count / one-hot)
+qgram/       fused dequantize + gram           (decode in VMEM, no HBM roundtrip)
+decode_attn/ single-token GQA decode attention (online softmax over KV chunks,
+             ring-cache masking via kpos)
+
+Each has <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd public wrapper,
+padding + interpret-mode selection) and ref.py (pure-jnp oracle used by the
+shape/dtype-sweep allclose tests).
+"""
+from .gram import ops as gram_ops
+from .quant import ops as quant_ops
+from .qgram import ops as qgram_ops
+from .decode_attn import ops as decode_attn_ops

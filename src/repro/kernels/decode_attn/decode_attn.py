@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: single-token GQA decode attention over a (ring) KV cache.
+
+The hot loop of decode_32k / long_500k: one query head-group against S cached
+keys, with position-validity masking (ring caches store kpos; invalid slots
+are kpos == -1) and an optional sliding window.
+
+Streaming formulation: grid (B, S/chunk); each step loads a (chunk, KV, hd)
+K/V tile into VMEM and updates unnormalized online-softmax accumulators that
+live in the (revisited) output tiles:
+
+    m'   = max(m, max_s s_i)          (running max,   (KV, G))
+    acc' = acc * e^{m-m'} + e^{s-m'}V (unnormalized,  (KV, G, hd))
+    d'   = d * e^{m-m'} + sum e^{s-m'}  (denominator, (KV, G))
+
+The wrapper divides acc/d outside (one cheap elementwise).  This keeps the
+kernel output-accumulator-only (no scratch), the same pattern as the gram
+kernel, and O(chunk) VMEM per step regardless of S.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_CHUNK = 512
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, kpos_ref, pos_ref, acc_ref, m_ref, d_ref, *, window):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        d_ref[...] = jnp.zeros_like(d_ref)
+
+    q = q_ref[0]  # (KV, G, hd)
+    k = k_ref[0]  # (C, KV, hd)
+    v = v_ref[0]  # (C, KV, hd)
+    kpos = kpos_ref[0]  # (C,)
+    pos = pos_ref[0]
+
+    s = jnp.einsum("kgh,ckh->kgc", q.astype(jnp.float32), k.astype(jnp.float32))
+    valid = (kpos >= 0) & (kpos <= pos)
+    if window is not None:
+        valid &= kpos > pos - window
+    s = jnp.where(valid[None, None, :], s, NEG)
+
+    m_prev = m_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)  # (KV, G)
+    p = jnp.exp(s - m_new[..., None])  # (KV, G, C)
+    acc_ref[0] = acc_ref[0] * alpha[..., None] + jnp.einsum(
+        "kgc,ckh->kgh", p, v.astype(jnp.float32)
+    )
+    d_ref[0] = d_ref[0] * alpha + jnp.sum(p, axis=-1)
+    m_ref[0] = m_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "window", "interpret"))
+def decode_attn_pallas(q, K, V, kpos, pos, *, chunk=DEFAULT_CHUNK, window=None, interpret=False):
+    """q: (B, KV, G, hd); K/V: (B, S, KV, hd); kpos: (B, S) int32; pos: (1,)
+    int32.  S % chunk == 0 (ops.py pads).  Returns unnormalized
+    (acc (B,KV,G,hd) fp32, m (B,KV,G), denom (B,KV,G))."""
+    B, KV, G, hd = q.shape
+    S = K.shape[1]
+    grid = (B, S // chunk)
+    return pl.pallas_call(
+        functools.partial(_kernel, window=window),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, KV, G, hd), lambda b, s: (b, 0, 0, 0)),
+            pl.BlockSpec((1, chunk, KV, hd), lambda b, s: (b, s, 0, 0)),
+            pl.BlockSpec((1, chunk, KV, hd), lambda b, s: (b, s, 0, 0)),
+            pl.BlockSpec((1, chunk), lambda b, s: (b, s)),
+            pl.BlockSpec((1,), lambda b, s: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, KV, G, hd), lambda b, s: (b, 0, 0, 0)),
+            pl.BlockSpec((1, KV, G), lambda b, s: (b, 0, 0)),
+            pl.BlockSpec((1, KV, G), lambda b, s: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, G), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, K, V, kpos, pos)

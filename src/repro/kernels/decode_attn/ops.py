@@ -1,0 +1,28 @@
+"""Public wrapper for the decode-attention kernel: pads S to a chunk multiple
+(padded slots get kpos = -1, masked inside), normalizes acc/denom."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attn import decode_attn_pallas, DEFAULT_CHUNK
+
+
+def decode_attn(q, K, V, kpos, pos, *, window=None, chunk=DEFAULT_CHUNK, interpret=None):
+    """q: (B,KV,G,hd); K/V: (B,S,KV,hd); kpos: (B,S) int32 (-1 = empty slot);
+    pos: scalar int32.  Returns (B,KV,G,hd) fp32."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, S = K.shape[:2]
+    C = min(chunk, max(S, 1))
+    pad = (-S) % C
+    if pad:
+        K = jnp.pad(K, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        V = jnp.pad(V, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, ((0, 0), (0, pad)), constant_values=-1)
+    acc, m, d = decode_attn_pallas(
+        q, K, V, kpos.astype(jnp.int32),
+        jnp.asarray([pos], jnp.int32),
+        chunk=C, window=window, interpret=interpret,
+    )
+    return acc / jnp.maximum(d[..., None], 1e-30)

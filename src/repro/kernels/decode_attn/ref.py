@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the decode-attention kernel."""
+import jax.numpy as jnp
+
+
+def decode_attn_ref(q, K, V, kpos, pos, window=None):
+    """q: (B,KV,G,hd); K/V: (B,S,KV,hd); kpos: (B,S); pos scalar.
+    Returns (B,KV,G,hd) normalized attention output (fp32)."""
+    s = jnp.einsum("bkgh,bskh->bkgs", q.astype(jnp.float32), K.astype(jnp.float32))
+    valid = (kpos >= 0) & (kpos <= pos)
+    if window is not None:
+        valid &= kpos > pos - window
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    w = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return jnp.einsum("bkgs,bskh->bkgh", w, V.astype(jnp.float32))

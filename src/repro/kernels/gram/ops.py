@@ -1,0 +1,29 @@
+"""Jit'd public wrapper for the gram kernel: pads to block multiples, selects
+interpret mode off-TPU, unpads the result."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .gram import gram_pallas, DEFAULT_BLOCK
+
+
+def _pad_to(a, mult, axis):
+    pad = (-a.shape[axis]) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def gram(x, y, *, block=DEFAULT_BLOCK, interpret: bool | None = None):
+    """G = X @ Y^T via the Pallas kernel, any (n, d)/(p, d) shapes."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, p = x.shape[0], y.shape[0]
+    bn, bp, bd = block
+    xp = _pad_to(_pad_to(jnp.asarray(x, jnp.float32), bn, 0), bd, 1)
+    yp = _pad_to(_pad_to(jnp.asarray(y, jnp.float32), bp, 0), bd, 1)
+    out = gram_pallas(xp, yp, block=block, interpret=interpret)
+    return out[:n, :p]

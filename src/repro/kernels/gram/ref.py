@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the gram kernel."""
+import jax.numpy as jnp
+
+
+def gram_ref(x, y):
+    """(n, d), (p, d) -> (n, p) fp32 inner products."""
+    return jnp.asarray(x, jnp.float32) @ jnp.asarray(y, jnp.float32).T

@@ -1,0 +1,34 @@
+"""Public wrapper for the fused dequantize+gram kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .qgram import qgram_pallas, DEFAULT_BLOCK, DEFAULT_ECHUNK
+
+
+def _pad_axis(a, mult, axis, value=0):
+    pad = (-a.shape[axis]) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+def qgram(codes, scaled_cents, y, *, block=DEFAULT_BLOCK, echunk=DEFAULT_ECHUNK, interpret=None):
+    """G = decode(codes) @ y^T without materializing the reconstruction.
+
+    codes: (n, d) int32 per-symbol codes; scaled_cents: (d, C) from
+    repro.kernels.quant.ops.build_scaled_tables; y: (p, d)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, d = codes.shape
+    p = y.shape[0]
+    bn, bp, bd = block
+    # pad codes with an out-of-range code so padded dims decode to 0
+    cpad = _pad_axis(_pad_axis(jnp.asarray(codes), bn, 0), bd, 1, value=-1)
+    tpad = _pad_axis(jnp.asarray(scaled_cents), bd, 0)
+    ypad = _pad_axis(_pad_axis(jnp.asarray(y, jnp.float32), bp, 0), bd, 1)
+    out = qgram_pallas(cpad, tpad, ypad, block=block, echunk=echunk, interpret=interpret)
+    return out[:n, :p]

@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: FUSED dequantize + gram,  G = decode(codes) @ Y^T.
+
+The unfused pipeline decodes the received per-symbol codes to x̂ in HBM and
+then runs the gram matmul — paying an extra HBM write + read of the full
+(n, d) fp32 reconstruction.  Here the (bn, bd) code tile is decoded straight
+into VMEM registers and fed to the MXU, so x̂ never exists in HBM.  This is
+the arithmetic-intensity optimization of EXPERIMENTS.md §Perf.
+
+Grid (n/bn, p/bp, d/bd); decode chunk-loops the centroid axis like
+kernels/quant; fp32 accumulator tile (bn, bp) revisited over k.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK = (128, 128, 128)  # (bn, bp, bd)
+DEFAULT_ECHUNK = 128
+
+
+def _qgram_kernel(codes_ref, cents_ref, y_ref, o_ref, *, echunk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    codes = codes_ref[...]  # (bn, bd)
+    n_chunks = cents_ref.shape[1] // echunk
+
+    def body(c, acc):
+        cents = cents_ref[:, pl.dslice(c * echunk, echunk)]  # (bd, echunk)
+        idx = jax.lax.broadcasted_iota(jnp.int32, (1, 1, echunk), 2) + c * echunk
+        onehot = (codes[:, :, None] == idx).astype(cents.dtype)
+        return acc + jnp.sum(onehot * cents[None, :, :], axis=-1)
+
+    xhat = jax.lax.fori_loop(
+        0, n_chunks, body, jnp.zeros(codes.shape, dtype=jnp.float32)
+    )  # (bn, bd) decoded in VMEM — never touches HBM
+    o_ref[...] += jax.lax.dot_general(
+        xhat,
+        y_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block", "echunk", "interpret"))
+def qgram_pallas(codes, scaled_cents, y, *, block=DEFAULT_BLOCK, echunk=DEFAULT_ECHUNK, interpret=False):
+    """codes: (n, d) int32; scaled_cents: (d, C); y: (p, d) -> (n, p) fp32."""
+    n, d = codes.shape
+    p, _ = y.shape
+    bn, bp, bd = block
+    grid = (n // bn, p // bp, d // bd)
+    return pl.pallas_call(
+        functools.partial(_qgram_kernel, echunk=echunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bd, scaled_cents.shape[1]), lambda i, j, k: (k, 0)),
+            pl.BlockSpec((bp, bd), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bn, bp), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, p), jnp.float32),
+        interpret=interpret,
+    )(codes, scaled_cents, y)

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the fused dequantize+gram kernel."""
+import jax.numpy as jnp
+
+
+def qgram_ref(codes, scaled_cents, y):
+    """decode then gram: G[i, j] = <cents[., codes[i, .]], y[j, .]>."""
+    d = scaled_cents.shape[0]
+    xhat = scaled_cents[jnp.arange(d), codes]  # (n, d)
+    return xhat @ jnp.asarray(y, jnp.float32).T

@@ -1,0 +1,65 @@
+"""Public wrappers for the quantizer kernels.
+
+Builds the per-dimension scaled tables from (sigma, rates) using
+repro.core.quantizers codebooks, pads everything to tile multiples, and runs
+the Pallas kernels (interpret mode off-TPU).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ...core import quantizers as Q
+from .quant import encode_pallas, decode_pallas, DEFAULT_BLOCK, DEFAULT_ECHUNK
+
+
+def _pad_axis(a, mult, axis, value=0.0):
+    pad = (-a.shape[axis]) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+def build_scaled_tables(sigma, rates, echunk: int = DEFAULT_ECHUNK):
+    """(d,) sigma, (d,) int rates -> scaled_edges (d, E), scaled_cents (d, C)
+    with E/C padded to ``echunk`` multiples; unused edges +inf, cents 0."""
+    rates = np.asarray(rates, dtype=np.int64)
+    sigma = np.asarray(sigma, dtype=np.float32)
+    d = rates.shape[0]
+    max_r = int(rates.max(initial=0))
+    E = max(1 << max_r, echunk) if max_r > 0 else echunk
+    E = int(np.ceil(E / echunk) * echunk)
+    edges = np.full((d, E), np.inf, dtype=np.float32)
+    cents = np.zeros((d, E), dtype=np.float32)
+    for i in range(d):
+        r = int(rates[i])
+        e = Q.gauss_bin_edges(r)
+        c = Q.gauss_centroids(r)
+        edges[i, : e.shape[0]] = e * sigma[i]
+        cents[i, : c.shape[0]] = c * sigma[i]
+    return jnp.asarray(edges), jnp.asarray(cents)
+
+
+def encode(x, scaled_edges, *, block=DEFAULT_BLOCK, echunk=DEFAULT_ECHUNK, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, d = x.shape
+    bn, bd = block
+    xp = _pad_axis(_pad_axis(jnp.asarray(x, jnp.float32), bn, 0), bd, 1)
+    ep = _pad_axis(jnp.asarray(scaled_edges), bd, 0, value=np.inf)
+    out = encode_pallas(xp, ep, block=block, echunk=echunk, interpret=interpret)
+    return out[:n, :d]
+
+
+def decode(codes, scaled_cents, *, block=DEFAULT_BLOCK, echunk=DEFAULT_ECHUNK, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, d = codes.shape
+    bn, bd = block
+    cp = _pad_axis(_pad_axis(jnp.asarray(codes), bn, 0), bd, 1)
+    tp = _pad_axis(jnp.asarray(scaled_cents), bd, 0)
+    out = decode_pallas(cp, tp, block=block, echunk=echunk, interpret=interpret)
+    return out[:n, :d]

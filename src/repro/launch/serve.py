@@ -1,0 +1,61 @@
+"""Batched decode serving driver: prefill a prompt batch, then autoregressively
+decode with the per-family cache machinery.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --reduce \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduce", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    from ..configs import get_config
+    from ..models import make_decode_step
+    from ..models.steps import init_train_state
+    from ..models.decode import init_decode_state
+
+    cfg = get_config(args.arch)
+    if args.reduce:
+        cfg = cfg.reduced()
+    params, _ = init_train_state(jax.random.PRNGKey(0), cfg)
+    B = args.batch
+    max_len = args.prompt_len + args.gen
+    state = init_decode_state(cfg, B, max_len)
+    step = jax.jit(make_decode_step(cfg))
+
+    rng = jax.random.PRNGKey(1)
+    prompt = jax.random.randint(rng, (B, args.prompt_len), 0, cfg.vocab_size, jnp.int32)
+
+    # prefill via repeated decode steps (cache-exact; a batched prefill kernel
+    # is the prefill_32k dry-run path)
+    t0 = time.time()
+    tok = prompt[:, :1]
+    for p in range(args.prompt_len):
+        tok = prompt[:, p][:, None]
+        nxt, state = step(params, state, tok, jnp.int32(p))
+    out = [nxt]
+    for g in range(args.gen - 1):
+        nxt, state = step(params, state, nxt, jnp.int32(args.prompt_len + g))
+        out.append(nxt)
+    toks = jnp.concatenate(out, axis=1)
+    dt = time.time() - t0
+    n_steps = args.prompt_len + args.gen - 1
+    print(f"arch={cfg.name} batch={B} steps={n_steps} "
+          f"{dt:.2f}s total, {1e3*dt/n_steps:.1f} ms/step")
+    print("generated token ids (first row):", toks[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

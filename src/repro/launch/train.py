@@ -1,0 +1,95 @@
+"""Training driver.
+
+Runs on whatever devices exist: a reduced config on the CPU container, the
+full config + production mesh on a real cluster.  Synthetic LM data by
+default; checkpoints + metrics CSV to --workdir.
+
+  PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m --reduce \
+      --steps 50 --batch 8 --seq 128 --workdir /tmp/run
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduce", action="store_true", help="CPU-scale reduced variant")
+    ap.add_argument("--width", type=int, default=None, help="override d_model (reduced)")
+    ap.add_argument("--layers", type=int, default=None)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--workdir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--mesh", default=None, help="e.g. '16x16' to use the production mesh")
+    ap.add_argument("--qcomm-bits", type=int, default=0,
+                    help="quantize the data-parallel gradient all-reduce (paper's scheme; 0=off)")
+    args = ap.parse_args()
+
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    from ..configs import get_config
+    from ..models import make_train_step
+    from ..models.steps import init_train_state
+    from ..data import lm_batch_stream
+    from ..checkpoint import save_checkpoint
+
+    cfg = get_config(args.arch)
+    if args.reduce:
+        cfg = cfg.reduced()
+    if args.width:
+        cfg = dataclasses.replace(cfg, d_model=args.width, head_dim=args.width // cfg.num_heads)
+    if args.layers:
+        cfg = dataclasses.replace(cfg, num_layers=args.layers)
+
+    params, opt = init_train_state(jax.random.PRNGKey(0), cfg)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"arch={cfg.name} family={cfg.family} params={n_params/1e6:.1f}M "
+          f"layers={cfg.num_layers} d={cfg.d_model}", flush=True)
+
+    step_fn = jax.jit(make_train_step(cfg, peak_lr=args.lr, total_steps=args.steps))
+    stream = lm_batch_stream(cfg.vocab_size, args.batch, args.seq)
+
+    extra = {}
+    if cfg.family == "encdec":
+        extra["enc_embed"] = jnp.zeros((args.batch, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        extra["patch_embed"] = jnp.zeros((args.batch, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+
+    log_path = os.path.join(args.workdir, "metrics.csv") if args.workdir else None
+    if log_path:
+        os.makedirs(args.workdir, exist_ok=True)
+        with open(log_path, "w") as f:
+            f.write("step,loss,grad_norm,lr,sec_per_step\n")
+
+    t_last = time.time()
+    for i in range(args.steps):
+        batch = {**next(stream), **extra}
+        params, opt, metrics = step_fn(params, opt, batch)
+        if (i + 1) % args.log_every == 0 or i == 0:
+            loss = float(metrics["loss"])
+            dt = (time.time() - t_last) / (args.log_every if i else 1)
+            t_last = time.time()
+            print(f"step {i+1:5d}  loss {loss:.4f}  gnorm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e}  {dt:.2f}s/step", flush=True)
+            if log_path:
+                with open(log_path, "a") as f:
+                    f.write(f"{i+1},{loss},{float(metrics['grad_norm'])},{float(metrics['lr'])},{dt}\n")
+        if args.workdir and (i + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.workdir, i + 1, params)
+    if args.workdir:
+        save_checkpoint(args.workdir, args.steps, params)
+        print(f"final checkpoint in {args.workdir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Architecture zoo: composable JAX backbones for the 6 assigned families."""
+from .config import ModelConfig, ShapeConfig, SHAPES, TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K
+from .backbone import init_model, forward
+from .decode import init_decode_state, decode_step, decode_state_specs
+from .steps import make_train_step, make_prefill_step, make_decode_step, init_train_state, loss_fn

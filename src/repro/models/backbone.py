@@ -1,0 +1,319 @@
+"""Backbone assembly for all six architecture families.
+
+Layers are *scan-stacked*: homogeneous blocks have their parameters stacked on
+a leading layer axis and applied with jax.lax.scan, keeping HLO size (and 1-CPU
+compile time) O(1) in depth.  Heterogeneous families scan their repeating
+super-block pattern:
+
+  dense              scan L blocks          (gemma2: scan L/2 (local, global) pairs)
+  moe                scan L blocks with MoE FFN
+  ssm (xlstm)        scan L/2 (mLSTM, sLSTM) pairs
+  hybrid (zamba2)    scan L/k super-blocks of k mamba layers + ONE weight-shared
+                     attention block applied after each super-block (Zamba trick)
+  encdec (whisper)   scan encoder blocks (bidirectional), scan decoder blocks
+                     (causal self-attn + cross-attn); conv/mel frontend stubbed —
+                     the batch supplies frame embeddings
+  vlm (internvl)     ViT stubbed — the batch supplies patch embeddings, which a
+                     projector maps into the LM stream ahead of the tokens
+
+Three entry points (built in models/steps.py into jit-able steps):
+  forward(params, cfg, batch, kind)          -> logits  (train / prefill)
+  init_decode_state(cfg, B, max_len)         -> cache pytree
+  decode_step(params, cfg, state, tok, pos)  -> (logits, state)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (
+    _init,
+    init_rmsnorm,
+    rmsnorm,
+    init_attention,
+    attention_apply,
+    init_mlp,
+    mlp_apply,
+)
+from .moe import init_moe, moe_apply
+from . import ssm
+from .sharding import constrain
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+# --- per-family block init ---------------------------------------------------
+
+def _init_dense_block(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model),
+        "attn": init_attention(k1, cfg),
+        "ln2": init_rmsnorm(cfg.d_model),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.activation),
+    }
+
+
+def _init_moe_block(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model),
+        "attn": init_attention(k1, cfg),
+        "ln2": init_rmsnorm(cfg.d_model),
+        "moe": init_moe(k2, cfg),
+    }
+
+
+def _init_mamba_block(key, cfg):
+    return {"ln1": init_rmsnorm(cfg.d_model), "mamba": ssm.init_mamba2(key, cfg)}
+
+
+def _init_xlstm_pair(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln_m": init_rmsnorm(cfg.d_model),
+        "mlstm": ssm.init_mlstm(k1, cfg),
+        "ln_s": init_rmsnorm(cfg.d_model),
+        "slstm": ssm.init_slstm(k2, cfg),
+    }
+
+
+def _init_encdec_dec_block(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model),
+        "attn": init_attention(k1, cfg),
+        "ln_x": init_rmsnorm(cfg.d_model),
+        "xattn": init_attention(k2, cfg),
+        "ln2": init_rmsnorm(cfg.d_model),
+        "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.activation),
+    }
+
+
+def _stacked(init_fn, key, n, cfg):
+    return jax.vmap(lambda k: init_fn(k, cfg))(jax.random.split(key, n))
+
+
+def init_model(key, cfg: ModelConfig):
+    """Returns the fp32 parameter pytree.  Leaf names drive sharding."""
+    keys = jax.random.split(key, 8)
+    params = {"embedding": _init(keys[0], (cfg.vocab_size, cfg.d_model), scale=0.02)}
+    if not cfg.tie_embeddings:
+        params["unembed"] = _init(keys[1], (cfg.d_model, cfg.vocab_size), scale=0.02)
+    params["ln_f"] = init_rmsnorm(cfg.d_model)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        if cfg.local_global_alternating:
+            n_pairs = cfg.num_layers // 2
+            params["layers"] = _stacked(
+                lambda k, c: {
+                    "local": _init_dense_block(jax.random.fold_in(k, 0), c),
+                    "global": _init_dense_block(jax.random.fold_in(k, 1), c),
+                },
+                keys[2], n_pairs, cfg,
+            )
+        else:
+            params["layers"] = _stacked(_init_dense_block, keys[2], cfg.num_layers, cfg)
+        if fam == "vlm":
+            params["patch_proj"] = _init(keys[3], (cfg.d_model, cfg.d_model))
+    elif fam == "moe":
+        params["layers"] = _stacked(_init_moe_block, keys[2], cfg.num_layers, cfg)
+    elif fam == "ssm":
+        params["layers"] = _stacked(_init_xlstm_pair, keys[2], cfg.num_layers // 2, cfg)
+    elif fam == "hybrid":
+        k_every = cfg.hybrid_attn_every
+        n_super = cfg.num_layers // k_every
+        params["blocks"] = _stacked(
+            lambda k, c: {"mamba_layers": _stacked(_init_mamba_block, k, k_every, c)},
+            keys[2], n_super, cfg,
+        )
+        sk1, sk2 = jax.random.split(keys[3])
+        params["shared_attn"] = {
+            "ln1": init_rmsnorm(cfg.d_model),
+            "attn": init_attention(sk1, cfg),
+            "ln2": init_rmsnorm(cfg.d_model),
+            "mlp": init_mlp(sk2, cfg.d_model, cfg.d_ff, cfg.activation),
+        }
+    elif fam == "encdec":
+        params["enc_layers"] = _stacked(_init_dense_block, keys[2], cfg.enc_layers, cfg)
+        params["dec_layers"] = _stacked(_init_encdec_dec_block, keys[3], cfg.num_layers, cfg)
+        params["ln_enc"] = init_rmsnorm(cfg.d_model)
+        params["enc_pos_proj"] = _init(keys[4], (cfg.d_model, cfg.d_model))
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return params
+
+
+# --- block apply (train / prefill) --------------------------------------------
+
+def _dense_block_apply(bp, x, cfg, positions, window, is_causal=True):
+    h = attention_apply(
+        bp["attn"], rmsnorm(bp["ln1"], x, cfg.norm_eps), cfg,
+        positions=positions, layer_window=window, is_causal=is_causal,
+    )
+    x = constrain(x + h, "batch", None, None)
+    h = mlp_apply(bp["mlp"], rmsnorm(bp["ln2"], x, cfg.norm_eps), cfg.activation)
+    return constrain(x + h, "batch", None, None)
+
+
+def _moe_block_apply(bp, x, cfg, positions):
+    h = attention_apply(
+        bp["attn"], rmsnorm(bp["ln1"], x, cfg.norm_eps), cfg,
+        positions=positions, layer_window=cfg.sliding_window,
+    )
+    x = x + h
+    h, aux = moe_apply(bp["moe"], rmsnorm(bp["ln2"], x, cfg.norm_eps), cfg)
+    return constrain(x + h, "batch", None, None), aux
+
+
+def _xlstm_pair_apply(bp, x, cfg):
+    h, _ = ssm.mlstm_apply(bp["mlstm"], rmsnorm(bp["ln_m"], x, cfg.norm_eps), cfg)
+    x = x + h
+    h, _ = ssm.slstm_apply(bp["slstm"], rmsnorm(bp["ln_s"], x, cfg.norm_eps), cfg)
+    return constrain(x + h, "batch", None, None)
+
+
+def _mamba_block_apply(bp, x, cfg):
+    h, _, _ = ssm.mamba2_apply(bp["mamba"], rmsnorm(bp["ln1"], x, cfg.norm_eps), cfg)
+    return constrain(x + h, "batch", None, None)
+
+
+def _scan(fn, x, stacked, cfg, with_aux=False):
+    from .sharding import gather_layer_params
+
+    def gathered(lp, h):
+        return fn(gather_layer_params(lp), h)
+
+    L = jax.tree.leaves(stacked)[0].shape[0]
+    groups = cfg.remat_blocks
+    if cfg.remat and groups and L % groups == 0 and groups < L:
+        # §Perf B1: two-level scan — checkpoint whole INNER groups so backward
+        # stores only `groups` carries instead of L (inner layers recompute)
+        inner = L // groups
+        regrouped = jax.tree.map(lambda a: a.reshape(groups, inner, *a.shape[1:]), stacked)
+
+        @jax.checkpoint
+        def group_fn(grp, h):
+            def body(carry, lp):
+                if with_aux:
+                    hh, aux = gathered(lp, carry)
+                    return hh, aux
+                return gathered(lp, carry), None
+            return jax.lax.scan(body, h, grp)
+
+        def outer(carry, grp):
+            h, auxs = group_fn(grp, carry)
+            return h, auxs
+
+        x, auxs = jax.lax.scan(outer, x, regrouped)
+        if with_aux:
+            auxs = jax.tree.map(lambda a: a.reshape(L, *a.shape[2:]), auxs)
+        return (x, auxs) if with_aux else x
+
+    wrapped = jax.checkpoint(gathered) if cfg.remat else gathered
+
+    def body(carry, lp):
+        if with_aux:
+            h, aux = wrapped(lp, carry)
+            return h, aux
+        return wrapped(lp, carry), None
+
+    x, auxs = jax.lax.scan(body, x, stacked)
+    return (x, auxs) if with_aux else x
+
+
+_KEEP_F32 = {"scale", "a_log", "dt_bias", "norm_scale", "bias"}
+
+
+def cast_compute(params):
+    """bf16 compute cast for matrix params; norm scales / ssm time-constants
+    stay fp32 (matched by leaf name).  Master weights outside remain fp32."""
+
+    def cast(path, a):
+        name = getattr(path[-1], "key", getattr(path[-1], "name", "")) if path else ""
+        if name in _KEEP_F32 or not hasattr(a, "dtype") or a.dtype != jnp.float32:
+            return a
+        return a.astype(COMPUTE_DTYPE)
+
+    return jax.tree_util.tree_map_with_path(cast, params)
+
+
+def forward(params, cfg: ModelConfig, batch: dict, kind: str = "train"):
+    """-> (logits, aux).  batch: tokens (B,S) [+ enc_embed / patch_embed]."""
+    params = cast_compute(params)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = params["embedding"].astype(COMPUTE_DTYPE)[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(COMPUTE_DTYPE)
+    x = constrain(x, "batch", None, None)
+    aux = {}
+
+    if cfg.family == "vlm":
+        patches = batch["patch_embed"].astype(COMPUTE_DTYPE) @ params["patch_proj"].astype(COMPUTE_DTYPE)
+        x = jnp.concatenate([patches, x], axis=1)
+    S_eff = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S_eff)[None], (B, S_eff))
+
+    if cfg.family in ("dense", "vlm"):
+        if cfg.local_global_alternating:
+            def pair(bp, h):
+                h = _dense_block_apply(bp["local"], h, cfg, positions, cfg.sliding_window)
+                return _dense_block_apply(bp["global"], h, cfg, positions, None)
+            x = _scan(pair, x, params["layers"], cfg)
+        else:
+            fn = lambda bp, h: _dense_block_apply(bp, h, cfg, positions, cfg.sliding_window)
+            x = _scan(fn, x, params["layers"], cfg)
+    elif cfg.family == "moe":
+        fn = lambda bp, h: _moe_block_apply(bp, h, cfg, positions)
+        x, auxs = _scan(fn, x, params["layers"], cfg, with_aux=True)
+        aux = {k: jnp.mean(v) for k, v in auxs.items()}
+    elif cfg.family == "ssm":
+        x = _scan(lambda bp, h: _xlstm_pair_apply(bp, h, cfg), x, params["layers"], cfg)
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def superblock(bp, h):
+            h = _scan(lambda mp, hh: _mamba_block_apply(mp, hh, cfg), h, bp["mamba_layers"], cfg)
+            return _dense_block_apply(shared, h, cfg, positions, cfg.sliding_window)
+
+        x = _scan(superblock, x, params["blocks"], cfg)
+    elif cfg.family == "encdec":
+        enc = batch["enc_embed"].astype(COMPUTE_DTYPE) @ params["enc_pos_proj"].astype(COMPUTE_DTYPE)
+        enc_pos = jnp.broadcast_to(jnp.arange(enc.shape[1])[None], (B, enc.shape[1]))
+        enc_fn = lambda bp, h: _dense_block_apply(bp, h, cfg, enc_pos, None, is_causal=False)
+        enc = _scan(enc_fn, enc, params["enc_layers"], cfg)
+        enc = rmsnorm(params["ln_enc"], enc, cfg.norm_eps)
+
+        def dec_block(bp, h):
+            a = attention_apply(bp["attn"], rmsnorm(bp["ln1"], h, cfg.norm_eps), cfg,
+                                positions=positions)
+            h = h + a
+            a = attention_apply(bp["xattn"], rmsnorm(bp["ln_x"], h, cfg.norm_eps), cfg,
+                                positions=positions, is_causal=False, x_kv=enc)
+            h = h + a
+            a = mlp_apply(bp["mlp"], rmsnorm(bp["ln2"], h, cfg.norm_eps), cfg.activation)
+            return constrain(h + a, "batch", None, None)
+
+        x = _scan(dec_block, x, params["dec_layers"], cfg)
+
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if cfg.family == "vlm":  # logits over the token positions only
+        x = x[:, -S:]
+    unembed = (
+        params["embedding"].astype(COMPUTE_DTYPE).T
+        if cfg.tie_embeddings
+        else params["unembed"].astype(COMPUTE_DTYPE)
+    )
+    logits = x @ unembed
+    if cfg.final_logit_softcap is not None:
+        logits = cfg.final_logit_softcap * jnp.tanh(
+            logits.astype(jnp.float32) / cfg.final_logit_softcap
+        ).astype(logits.dtype)
+    logits = constrain(logits, "batch", None, "tensor")
+    return logits, aux

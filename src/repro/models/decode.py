@@ -1,0 +1,275 @@
+"""Single-token decode with caches for every family.
+
+Cache design:
+  * full KV cache  (B, S_max, KV, hd)  for global-attention layers,
+  * ring KV cache  (B, window, KV, hd) + kpos (B, window) for sliding-window
+    layers (gemma2 local layers stay O(window) even at 500k context),
+  * mLSTM/SSD matrix state (B, H, dk, dv), sLSTM scalar carries, mamba conv
+    state — O(1) in context length (why ssm/hybrid run long_500k),
+  * whisper: decoder self caches + precomputed cross K/V from the encoder.
+
+decode_step scans the stacked layer params together with the stacked caches,
+carrying the hidden state; leaf names in the cache tree drive sharding
+(see decode_state_specs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+from .backbone import COMPUTE_DTYPE, _stacked
+from .layers import rmsnorm, rope, _group_q, _softcap, mlp_apply
+from .moe import moe_apply
+from . import ssm
+from .sharding import current_rules, gather_layer_params
+
+
+# --- cache construction -------------------------------------------------------
+
+def _kv_cache(cfg, B, size):
+    return {
+        "k": jnp.zeros((B, size, cfg.num_kv_heads, cfg.hd), COMPUTE_DTYPE),
+        "v": jnp.zeros((B, size, cfg.num_kv_heads, cfg.hd), COMPUTE_DTYPE),
+        "kpos": jnp.full((B, size), -1, jnp.int32),
+    }
+
+
+def _stack0(n, tree):
+    return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), tree)
+
+
+def init_decode_state(cfg: ModelConfig, B: int, max_len: int):
+    fam = cfg.family
+    win = cfg.sliding_window
+    if fam in ("dense", "vlm", "moe"):
+        if cfg.local_global_alternating:
+            local_size = min(win or max_len, max_len)
+            return {
+                "pairs": _stack0(cfg.num_layers // 2, {
+                    "local": _kv_cache(cfg, B, local_size),
+                    "global": _kv_cache(cfg, B, max_len),
+                })
+            }
+        size = min(win, max_len) if win else max_len
+        return {"layers": _stack0(cfg.num_layers, _kv_cache(cfg, B, size))}
+    if fam == "ssm":
+        H, hd = cfg.num_heads, cfg.hd
+        pair = {
+            "mlstm_state": jnp.zeros((B, H, hd, hd), jnp.float32),
+            "slstm_c": jnp.zeros((B, H, hd), jnp.float32),
+            "slstm_n": jnp.zeros((B, H, hd), jnp.float32),
+            "slstm_m": jnp.full((B, H, hd), -1e30, jnp.float32),
+            "slstm_h": jnp.zeros((B, H, hd), jnp.float32),
+        }
+        return {"pairs": _stack0(cfg.num_layers // 2, pair)}
+    if fam == "hybrid":
+        H, N = cfg.num_heads, cfg.ssm_state
+        d_inner = cfg.ssm_expand * cfg.d_model
+        hd = d_inner // H
+        k_every = cfg.hybrid_attn_every
+        n_super = cfg.num_layers // k_every
+        mamba = {
+            "ssm_state": jnp.zeros((B, H, N, hd), jnp.float32),
+            "conv_state": jnp.zeros((B, cfg.ssm_conv - 1, d_inner + 2 * N), COMPUTE_DTYPE),
+        }
+        attn_size = min(win, max_len) if win else max_len
+        return {
+            "blocks": _stack0(n_super, {
+                "mamba_layers": _stack0(k_every, mamba),
+                "attn": _kv_cache(cfg, B, attn_size),
+            })
+        }
+    if fam == "encdec":
+        return {
+            "dec_layers": _stack0(cfg.num_layers, {
+                **_kv_cache(cfg, B, max_len),
+                "cross_k": jnp.zeros((B, cfg.enc_seq, cfg.num_kv_heads, cfg.hd), COMPUTE_DTYPE),
+                "cross_v": jnp.zeros((B, cfg.enc_seq, cfg.num_kv_heads, cfg.hd), COMPUTE_DTYPE),
+            })
+        }
+    raise ValueError(fam)
+
+
+_CACHE_SPECS = {
+    "k": ("batch", "seq", "tensor", None),
+    "v": ("batch", "seq", "tensor", None),
+    "kpos": ("batch", "seq"),
+    "cross_k": ("batch", None, "tensor", None),
+    "cross_v": ("batch", None, "tensor", None),
+    "mlstm_state": ("batch", "tensor", None, None),
+    "ssm_state": ("batch", "tensor", None, None),
+    "conv_state": ("batch", None, "tensor"),
+    "slstm_c": ("batch", "tensor", None),
+    "slstm_n": ("batch", "tensor", None),
+    "slstm_m": ("batch", "tensor", None),
+    "slstm_h": ("batch", "tensor", None),
+}
+
+
+def decode_state_specs(state_tree, mesh=None):
+    """PartitionSpec tree for a decode state, by leaf name (rules-resolved)."""
+    from .sharding import fit_spec_to_mesh
+
+    rules = current_rules()
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_tree)
+    specs = []
+    for path, leaf in flat:
+        keys = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        logical = _CACHE_SPECS.get(keys[-1], ())
+        axes = [rules.get(a, None) if a else None for a in logical]
+        pad = leaf.ndim - len(axes)
+        specs.append(fit_spec_to_mesh(P(*([None] * pad + axes)), leaf.shape, mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# --- decode attention ----------------------------------------------------------
+
+def _attn_decode(ap, x, cfg, cache, pos, window):
+    """x: (B,1,D); cache: {k, v, kpos}; pos: scalar int32. Ring-indexed."""
+    B = x.shape[0]
+    Hq, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    pos_arr = jnp.full((B, 1), pos, jnp.int32)
+    q = rope((x @ ap["wq"]).reshape(B, 1, Hq, hd), pos_arr, cfg.rope_theta)
+    k_new = rope((x @ ap["wk"]).reshape(B, 1, Hkv, hd), pos_arr, cfg.rope_theta)
+    v_new = (x @ ap["wv"]).reshape(B, 1, Hkv, hd)
+    size = cache["k"].shape[1]
+    slot = pos % size
+    K = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, 1)
+    V = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, 1)
+    kpos = jax.lax.dynamic_update_slice_in_dim(cache["kpos"], pos_arr, slot, 1)
+    mask = (kpos >= 0) & (kpos <= pos)
+    if window is not None:
+        mask &= kpos > pos - window
+    qg = _group_q(q, Hkv)  # (B,1,KV,G,hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32), K.astype(jnp.float32))
+    scores = _softcap(scores, cfg.attn_logit_softcap)
+    scores = jnp.where(mask[:, None, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w.astype(V.dtype), V)
+    out = out.reshape(B, 1, Hq * hd).astype(x.dtype)
+    return out @ ap["wo"], {"k": K, "v": V, "kpos": kpos}
+
+
+def _attn_cross_decode(ap, x, cfg, cross_k, cross_v):
+    B = x.shape[0]
+    Hq, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = (x @ ap["wq"]).reshape(B, 1, Hq, hd)
+    qg = _group_q(q, Hkv)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32), cross_k.astype(jnp.float32))
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w.astype(cross_v.dtype), cross_v)
+    return out.reshape(B, 1, Hq * hd).astype(x.dtype) @ ap["wo"]
+
+
+# --- per-family decode blocks ---------------------------------------------------
+
+def _dense_decode(bp, x, cfg, cache, pos, window):
+    h, cache = _attn_decode(bp["attn"], rmsnorm(bp["ln1"], x, cfg.norm_eps), cfg, cache, pos, window)
+    x = x + h
+    h = mlp_apply(bp["mlp"], rmsnorm(bp["ln2"], x, cfg.norm_eps), cfg.activation)
+    return x + h, cache
+
+
+def decode_step(params, cfg: ModelConfig, state, tokens, pos):
+    """tokens: (B, 1) int32; pos: scalar int32 (current cache length).
+    Returns (logits (B, 1, V), new_state)."""
+    from .backbone import cast_compute
+
+    params = cast_compute(params)
+    B = tokens.shape[0]
+    x = params["embedding"].astype(COMPUTE_DTYPE)[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(COMPUTE_DTYPE)
+    fam = cfg.family
+
+    if fam in ("dense", "vlm", "moe"):
+        if cfg.local_global_alternating:
+            def pair(h, xs):
+                bp, c = xs
+                bp = gather_layer_params(bp)
+                h, cl = _dense_decode(bp["local"], h, cfg, c["local"], pos, cfg.sliding_window)
+                h, cg = _dense_decode(bp["global"], h, cfg, c["global"], pos, None)
+                return h, {"local": cl, "global": cg}
+            x, new = jax.lax.scan(pair, x, (params["layers"], state["pairs"]))
+            state = {"pairs": new}
+        elif fam == "moe":
+            def blk(h, xs):
+                bp, c = xs
+                bp = gather_layer_params(bp)
+                a, c = _attn_decode(bp["attn"], rmsnorm(bp["ln1"], h, cfg.norm_eps), cfg, c, pos, cfg.sliding_window)
+                h = h + a
+                mo, _ = moe_apply(bp["moe"], rmsnorm(bp["ln2"], h, cfg.norm_eps), cfg)
+                return h + mo, c
+            x, new = jax.lax.scan(blk, x, (params["layers"], state["layers"]))
+            state = {"layers": new}
+        else:
+            def blk(h, xs):
+                bp, c = xs
+                bp = gather_layer_params(bp)
+                return _dense_decode(bp, h, cfg, c, pos, cfg.sliding_window)
+            x, new = jax.lax.scan(blk, x, (params["layers"], state["layers"]))
+            state = {"layers": new}
+    elif fam == "ssm":
+        def pair(h, xs):
+            bp, c = xs
+            bp = gather_layer_params(bp)
+            o, ms = ssm.mlstm_step(bp["mlstm"], rmsnorm(bp["ln_m"], h, cfg.norm_eps), cfg, c["mlstm_state"])
+            h = h + o
+            carry = (c["slstm_c"], c["slstm_n"], c["slstm_m"], c["slstm_h"])
+            o, carry = ssm.slstm_step(bp["slstm"], rmsnorm(bp["ln_s"], h, cfg.norm_eps), cfg, carry)
+            h = h + o
+            return h, {"mlstm_state": ms, "slstm_c": carry[0], "slstm_n": carry[1],
+                       "slstm_m": carry[2], "slstm_h": carry[3]}
+        x, new = jax.lax.scan(pair, x, (params["layers"], state["pairs"]))
+        state = {"pairs": new}
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def superblock(h, xs):
+            bp, c = xs
+
+            def mamba_blk(hh, ys):
+                mp, mc = ys
+                mp = gather_layer_params(mp)
+                o, s_new, cv_new = ssm.mamba2_step(
+                    mp["mamba"], rmsnorm(mp["ln1"], hh, cfg.norm_eps), cfg,
+                    mc["ssm_state"], mc["conv_state"])
+                return hh + o, {"ssm_state": s_new, "conv_state": cv_new}
+
+            h, mnew = jax.lax.scan(mamba_blk, h, (bp["mamba_layers"], c["mamba_layers"]))
+            h, anew = _dense_decode(shared, h, cfg, c["attn"], pos, cfg.sliding_window)
+            return h, {"mamba_layers": mnew, "attn": anew}
+
+        x, new = jax.lax.scan(superblock, x, (params["blocks"], state["blocks"]))
+        state = {"blocks": new}
+    elif fam == "encdec":
+        def dec_blk(h, xs):
+            bp, c = xs
+            bp = gather_layer_params(bp)
+            a, cache = _attn_decode(bp["attn"], rmsnorm(bp["ln1"], h, cfg.norm_eps), cfg,
+                                    {k: c[k] for k in ("k", "v", "kpos")}, pos, None)
+            h = h + a
+            a = _attn_cross_decode(bp["xattn"], rmsnorm(bp["ln_x"], h, cfg.norm_eps), cfg,
+                                   c["cross_k"], c["cross_v"])
+            h = h + a
+            a = mlp_apply(bp["mlp"], rmsnorm(bp["ln2"], h, cfg.norm_eps), cfg.activation)
+            return h + a, {**cache, "cross_k": c["cross_k"], "cross_v": c["cross_v"]}
+        x, new = jax.lax.scan(dec_blk, x, (params["dec_layers"], state["dec_layers"]))
+        state = {"dec_layers": new}
+    else:
+        raise ValueError(fam)
+
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    unembed = (
+        params["embedding"].astype(COMPUTE_DTYPE).T
+        if cfg.tie_embeddings
+        else params["unembed"].astype(COMPUTE_DTYPE)
+    )
+    logits = x @ unembed
+    if cfg.final_logit_softcap is not None:
+        logits = cfg.final_logit_softcap * jnp.tanh(
+            logits.astype(jnp.float32) / cfg.final_logit_softcap
+        ).astype(logits.dtype)
+    return logits, state

@@ -1,0 +1,216 @@
+"""Shared neural building blocks: norms, RoPE, attention (full / sliding /
+chunked-online-softmax / decode-with-cache), gated MLPs.
+
+Functional style: ``init_*`` build param dicts (leaf names drive sharding,
+see models/sharding.py); ``*_apply`` are pure.
+Compute dtype is bf16, accumulation fp32, params passed in as given.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import constrain
+
+ATTN_CHUNK = 1024  # KV chunk for memory-efficient attention
+ATTN_DENSE_MAX = 8192  # use plain dense attention up to this seq len
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(shape[0] if len(shape) > 1 else 1.0)
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+# --- norms ------------------------------------------------------------------
+
+def init_rmsnorm(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(x.dtype)
+
+
+# --- rotary embeddings --------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- attention ---------------------------------------------------------------
+
+def init_attention(key, cfg):
+    ks = jax.random.split(key, 4)
+    D, Hq, Hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    return {
+        "wq": _init(ks[0], (D, Hq * hd)),
+        "wk": _init(ks[1], (D, Hkv * hd)),
+        "wv": _init(ks[2], (D, Hkv * hd)),
+        "wo": _init(ks[3], (Hq * hd, D)),
+    }
+
+
+def _softcap(x, cap: Optional[float]):
+    return x if cap is None else cap * jnp.tanh(x / cap)
+
+
+def _group_q(q, n_kv):
+    """(B, S, H, hd) -> (B, S, KV, G, hd)."""
+    B, S, H, hd = q.shape
+    return q.reshape(B, S, n_kv, H // n_kv, hd)
+
+
+def _attn_dense(q, k, v, mask, softcap):
+    """q: (B,Sq,KV,G,hd) k/v: (B,Sk,KV,hd); mask (B,1,1,Sq,Sk) or broadcastable."""
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k, preferred_element_type=jnp.float32)
+    scores = _softcap(scores, softcap)
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+
+
+def _attn_chunked(q, k, v, qpos, kpos, window, softcap, is_causal):
+    """Online-softmax attention, scanning KV in chunks (memory ~ O(Sq*chunk)).
+
+    q: (B,Sq,KV,G,hd); k/v: (B,Sk,KV,hd); qpos (B,Sq); kpos (B,Sk)."""
+    B, Sq, KV, G, hd = q.shape
+    Sk = k.shape[1]
+    C = min(ATTN_CHUNK, Sk)
+    pad = (-Sk) % C
+    if pad:  # pad KV to a chunk multiple; padded keys masked via kpos = -1
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, ((0, 0), (0, pad)), constant_values=-1)
+        Sk += pad
+    n_chunks = Sk // C
+    qf = q.astype(jnp.float32)
+
+    def body(carry, inputs):
+        acc, m, denom = carry
+        kc, vc, pc = inputs  # (B,C,KV,hd), (B,C,KV,hd), (B,C)
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qf, kc.astype(jnp.float32))
+        s = _softcap(s, softcap)
+        valid = (pc >= 0)[:, None, None, None, :]  # padded keys are kpos == -1
+        if is_causal:
+            valid &= (qpos[:, None, None, :, None] >= pc[:, None, None, None, :])
+        if window is not None:
+            valid &= (qpos[:, None, None, :, None] - pc[:, None, None, None, :]) < window
+        s = jnp.where(valid, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        denom = denom * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqs,bskh->bkgqh", p, vc.astype(jnp.float32))
+        acc = acc * alpha[..., None] + pv
+        return (acc, m_new, denom), None
+
+    ks = k.reshape(B, n_chunks, C, KV, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, n_chunks, C, KV, hd).transpose(1, 0, 2, 3, 4)
+    ps = kpos.reshape(B, n_chunks, C).transpose(1, 0, 2)
+    acc0 = jnp.zeros((B, KV, G, Sq, hd), jnp.float32)
+    m0 = jnp.full((B, KV, G, Sq), -jnp.inf)
+    d0 = jnp.zeros((B, KV, G, Sq))
+    (acc, m, denom), _ = jax.lax.scan(body, (acc0, m0, d0), (ks, vs, ps))
+    out = acc / jnp.maximum(denom[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # (B,Sq,KV,G,hd)
+
+
+def attention_apply(
+    params,
+    x,
+    cfg,
+    *,
+    positions,
+    layer_window: Optional[int] = None,
+    is_causal: bool = True,
+    kv_cache=None,
+    cache_len=None,
+    x_kv=None,
+):
+    """General attention.
+
+    * self-attention train/prefill: x (B,S,D), kv_cache None
+    * cross-attention: x_kv (B,Sk,D) supplies K/V (no mask)
+    * decode: kv_cache=(K,V) (B,Smax,KV,hd), cache_len scalar — x is (B,1,D);
+      returns (out, new_cache)
+    """
+    B, S, D = x.shape
+    Hq, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    src = x if x_kv is None else x_kv
+    q = (x @ params["wq"]).reshape(B, S, Hq, hd)
+    k = (src @ params["wk"]).reshape(B, src.shape[1], Hkv, hd)
+    v = (src @ params["wv"]).reshape(B, src.shape[1], Hkv, hd)
+
+    if x_kv is None:  # rope only for self-attention
+        q = rope(q, positions, cfg.rope_theta)
+        if kv_cache is None:
+            k = rope(k, positions, cfg.rope_theta)
+        else:
+            k = rope(k, positions[:, -1:], cfg.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None:
+        K, V = kv_cache
+        K = jax.lax.dynamic_update_slice_in_dim(K, k.astype(K.dtype), cache_len, axis=1)
+        V = jax.lax.dynamic_update_slice_in_dim(V, v.astype(V.dtype), cache_len, axis=1)
+        new_cache = (K, V)
+        kpos = jnp.broadcast_to(jnp.arange(K.shape[1])[None], (B, K.shape[1]))
+        qg = _group_q(q, Hkv)
+        mask = kpos[:, None, None, None, :] <= cache_len
+        if layer_window is not None:
+            mask &= kpos[:, None, None, None, :] > (cache_len - layer_window)
+        out = _attn_dense(qg, K, V, mask, cfg.attn_logit_softcap)
+    else:
+        qg = _group_q(q, Hkv)
+        Sk = k.shape[1]
+        kpos = jnp.broadcast_to(jnp.arange(Sk)[None], (B, Sk))
+        if S * Sk > ATTN_DENSE_MAX * ATTN_DENSE_MAX:
+            out = _attn_chunked(qg, k, v, positions, kpos, layer_window,
+                                cfg.attn_logit_softcap, is_causal)
+        else:
+            mask = jnp.ones((B, 1, 1, S, Sk), bool)
+            if is_causal:
+                mask &= positions[:, None, None, :, None] >= kpos[:, None, None, None, :]
+            if layer_window is not None:
+                mask &= (positions[:, None, None, :, None] - kpos[:, None, None, None, :]) < layer_window
+            out = _attn_dense(qg, k, v, mask, cfg.attn_logit_softcap)
+
+    out = out.reshape(B, S, Hq * hd).astype(x.dtype)
+    out = constrain(out, "batch", None, "tensor")
+    proj = out @ params["wo"]
+    return (proj, new_cache) if kv_cache is not None else proj
+
+
+# --- MLP ---------------------------------------------------------------------
+
+def init_mlp(key, d_model, d_ff, activation):
+    k1, k2 = jax.random.split(key)
+    width = 2 * d_ff if activation in ("swiglu", "geglu") else d_ff
+    return {"wi": _init(k1, (d_model, width)), "wo_mlp": _init(k2, (d_ff, d_model))}
+
+
+def mlp_apply(params, x, activation):
+    h = x @ params["wi"]
+    h = constrain(h, "batch", None, "tensor")
+    if activation in ("swiglu", "geglu"):
+        g, u = jnp.split(h, 2, axis=-1)
+        act = jax.nn.silu(g) if activation == "swiglu" else jax.nn.gelu(g)
+        h = act * u
+    else:
+        h = jax.nn.gelu(h)
+    return h @ params["wo_mlp"]

@@ -1,0 +1,268 @@
+"""Recurrent sequence-mixing blocks: chunked gated linear attention (the shared
+engine), mLSTM + sLSTM (xlstm-125m, arXiv:2405.04517) and Mamba2/SSD
+(zamba2-2.7b, arXiv:2411.15242).
+
+The shared engine computes, exactly and in chunks of ``chunk`` steps,
+
+    C_t = a_t C_{t-1} + w_t k_t v_t^T          (state  (dk, dv) per head)
+    y_t = C_t^T q_t
+
+with per-step per-head scalar decay a_t = exp(log_a_t), log_a_t <= 0 — the
+common core of mLSTM matrix memory and the SSD recurrence.  Within a chunk the
+contraction is a masked (q k^T)-style matmul (MXU-friendly); across chunks a
+lax.scan carries the state.  All exponentials are of non-positive numbers, so
+the computation is stable by construction.
+
+Deviations from the papers (recorded in DESIGN.md): the mLSTM exponential
+input gate is implemented as a sigmoid gate (drops the running-max stabilizer
+in exchange for the provably stable chunked form); sLSTM keeps exponential
+gating with the standard m_t stabilizer in a per-step scan.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _init
+
+SSM_CHUNK = 128
+
+
+def chunked_gla(q, k, v, log_a, w, state=None, chunk: int = SSM_CHUNK):
+    """q,k: (B,S,H,dk); v: (B,S,H,dv); log_a,w: (B,S,H); state (B,H,dk,dv).
+
+    Returns (y (B,S,H,dv), final_state)."""
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    C = min(chunk, S)
+    n = S // C
+    assert S % C == 0, "sequence length must be a chunk multiple"
+    if state is None:
+        state = jnp.zeros((B, H, dk, dv), jnp.float32)
+
+    qc = q.reshape(B, n, C, H, dk).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    kc = k.reshape(B, n, C, H, dk).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    vc = v.reshape(B, n, C, H, dv).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    lac = log_a.reshape(B, n, C, H).transpose(1, 0, 3, 2).astype(jnp.float32)
+    wc = w.reshape(B, n, C, H).transpose(1, 0, 3, 2).astype(jnp.float32)
+
+    tri = jnp.tril(jnp.ones((C, C), bool))  # s <= t
+
+    def body(st, inp):
+        qq, kk, vv, la, ww = inp  # (B,H,C,dk) ... (B,H,C)
+        L = jnp.cumsum(la, axis=-1)  # (B,H,C) inclusive
+        # intra-chunk: y[t] += sum_{s<=t} exp(L_t - L_s) w_s (q_t . k_s) v_s
+        scores = jnp.einsum("bhtd,bhsd->bhts", qq, kk)
+        decay = jnp.exp(jnp.clip(L[..., :, None] - L[..., None, :], -60.0, 0.0))
+        scores = scores * decay * ww[..., None, :]
+        scores = jnp.where(tri[None, None], scores, 0.0)
+        y = jnp.einsum("bhts,bhsv->bhtv", scores, vv)
+        # cross-chunk: y[t] += exp(L_t) q_t^T state
+        y = y + jnp.exp(L)[..., None] * jnp.einsum("bhtd,bhdv->bhtv", qq, st)
+        # state update: st' = exp(L_end) st + sum_s exp(L_end - L_s) w_s k_s v_s^T
+        Lend = L[..., -1:]
+        wdec = jnp.exp(jnp.clip(Lend - L, -60.0, 0.0)) * ww  # (B,H,C)
+        st = jnp.exp(Lend)[..., None] * st + jnp.einsum(
+            "bhs,bhsd,bhsv->bhdv", wdec, kk, vv
+        )
+        return st, y
+
+    state, ys = jax.lax.scan(body, state, (qc, kc, vc, lac, wc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, S, H, dv)
+    return y.astype(v.dtype), state
+
+
+def gla_step(q, k, v, log_a, w, state):
+    """Single decode step.  q,k: (B,H,dk); v: (B,H,dv); log_a,w: (B,H)."""
+    a = jnp.exp(jnp.clip(log_a, -60.0, 0.0))[..., None, None]
+    state = a * state + (w[..., None, None] * k[..., :, None] * v[..., None, :])
+    y = jnp.einsum("bhd,bhdv->bhv", q.astype(jnp.float32), state)
+    return y.astype(v.dtype), state
+
+
+# --- mLSTM (xLSTM matrix-memory block) ---------------------------------------
+
+def init_mlstm(key, cfg):
+    ks = jax.random.split(key, 6)
+    D, H, hd = cfg.d_model, cfg.num_heads, cfg.hd
+    return {
+        "wq": _init(ks[0], (D, H * hd)),
+        "wk": _init(ks[1], (D, H * hd)),
+        "wv": _init(ks[2], (D, H * hd)),
+        "w_gates": _init(ks[3], (D, 2 * H), scale=0.02),  # input & forget pre-acts
+        "w_og": _init(ks[4], (D, H * hd), scale=0.02),    # output gate
+        "wo": _init(ks[5], (H * hd, D)),
+    }
+
+
+def _mlstm_qkv_gates(params, x, cfg):
+    B, S, D = x.shape
+    H, hd = cfg.num_heads, cfg.hd
+    q = (x @ params["wq"]).reshape(B, S, H, hd) / jnp.sqrt(hd).astype(x.dtype)
+    k = (x @ params["wk"]).reshape(B, S, H, hd) / jnp.sqrt(hd).astype(x.dtype)
+    v = (x @ params["wv"]).reshape(B, S, H, hd)
+    gates = (x @ params["w_gates"]).reshape(B, S, 2, H).astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(gates[:, :, 0] + 3.0)  # forget-gate bias init ~ open
+    w_i = jax.nn.sigmoid(gates[:, :, 1])
+    og = jax.nn.sigmoid((x @ params["w_og"]).reshape(B, S, H, hd).astype(jnp.float32))
+    return q, k, v, log_f, w_i, og
+
+
+def mlstm_apply(params, x, cfg, state=None):
+    q, k, v, log_f, w_i, og = _mlstm_qkv_gates(params, x, cfg)
+    y, state = chunked_gla(q, k, v, log_f, w_i, state)
+    y = (og * y.astype(jnp.float32)).astype(x.dtype)
+    B, S = x.shape[:2]
+    return (y.reshape(B, S, -1) @ params["wo"]), state
+
+
+def mlstm_step(params, x, cfg, state):
+    """x: (B, 1, D)."""
+    q, k, v, log_f, w_i, og = _mlstm_qkv_gates(params, x, cfg)
+    y, state = gla_step(q[:, 0], k[:, 0], v[:, 0], log_f[:, 0], w_i[:, 0], state)
+    y = (og[:, 0] * y.astype(jnp.float32)).astype(x.dtype)
+    B = x.shape[0]
+    return (y.reshape(B, 1, -1) @ params["wo"]), state
+
+
+# --- sLSTM (scalar-memory, exponential gating + stabilizer) -------------------
+
+def init_slstm(key, cfg):
+    ks = jax.random.split(key, 3)
+    D, H, hd = cfg.d_model, cfg.num_heads, cfg.hd
+    return {
+        "wi": _init(ks[0], (D, 4 * H * hd)),  # z, i, f, o pre-activations
+        "r_h": _init(ks[1], (H, hd, 4 * hd), scale=0.02),  # head-local recurrence
+        "wo": _init(ks[2], (H * hd, D)),
+    }
+
+
+def _slstm_cell(pre, carry, H, hd):
+    """pre: (B, 4, H, hd) pre-activations (input + recurrent)."""
+    c, nrm, m, h = carry
+    z = jnp.tanh(pre[:, 0])
+    i_t = pre[:, 1]
+    f_t = pre[:, 2]
+    o = jax.nn.sigmoid(pre[:, 3])
+    m_new = jnp.maximum(f_t + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(f_t + m - m_new)
+    c = f_p * c + i_p * z
+    nrm = f_p * nrm + i_p
+    h = o * c / jnp.maximum(nrm, 1.0)
+    return (c, nrm, m_new, h)
+
+
+def slstm_apply(params, x, cfg, state=None):
+    B, S, D = x.shape
+    H, hd = cfg.num_heads, cfg.hd
+    if state is None:
+        z = jnp.zeros((B, H, hd), jnp.float32)
+        state = (z, z, jnp.full((B, H, hd), -1e30), z)
+    pre_x = (x @ params["wi"]).reshape(B, S, 4, H, hd).astype(jnp.float32)
+    # recurrence: previous hidden (B, H*hd) -> 4 gate pre-activations
+    rmat = params["r_h"]
+
+    def step(carry, pre_t):
+        h_prev = carry[3]  # (B, H, hd) fp32
+        rec = jnp.einsum("bhd,hdk->bhk", h_prev.astype(x.dtype), rmat)  # (B,H,4*hd)
+        rec = rec.reshape(B, H, 4, hd).transpose(0, 2, 1, 3)
+        pre = pre_t + rec.astype(jnp.float32)
+        carry = _slstm_cell(pre, carry, H, hd)
+        return carry, carry[3]
+
+    state, hs = jax.lax.scan(step, state, pre_x.transpose(1, 0, 2, 3, 4))
+    y = hs.transpose(1, 0, 2, 3).reshape(B, S, H * hd).astype(x.dtype)
+    return y @ params["wo"], state
+
+
+def slstm_step(params, x, cfg, state):
+    out, state = slstm_apply(params, x, cfg, state)
+    return out, state
+
+
+# --- Mamba2 / SSD -------------------------------------------------------------
+
+def init_mamba2(key, cfg):
+    ks = jax.random.split(key, 4)
+    D = cfg.d_model
+    d_inner = cfg.ssm_expand * D
+    H = cfg.num_heads
+    N = cfg.ssm_state
+    # in_proj emits [gate z (d_inner), x (d_inner), B (N), C (N), dt (H)]
+    return {
+        "w_ssm_in": _init(ks[0], (D, 2 * d_inner + 2 * N + H)),
+        "conv_w": _init(ks[1], (cfg.ssm_conv, d_inner + 2 * N), scale=0.5),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "w_ssm_out": _init(ks[2], (d_inner, D)),
+        "norm_scale": jnp.ones((d_inner,), jnp.float32),
+    }
+
+
+def _mamba_proj(params, x, cfg):
+    B, S, D = x.shape
+    d_inner = cfg.ssm_expand * D
+    H, N = cfg.num_heads, cfg.ssm_state
+    proj = x @ params["w_ssm_in"]
+    z, xin, Bmat, Cmat, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N], axis=-1
+    )
+    return z, xin, Bmat, Cmat, dt, d_inner, H, N
+
+
+def _causal_conv(seq, w, state=None):
+    """Depthwise causal conv.  seq: (B,S,C); w: (K,C); state: (B,K-1,C)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((seq.shape[0], K - 1, seq.shape[2]), seq.dtype)
+    else:
+        pad = state.astype(seq.dtype)
+    full = jnp.concatenate([pad, seq], axis=1)
+    out = sum(full[:, i : i + seq.shape[1]] * w[i] for i in range(K))
+    new_state = full[:, -(K - 1):] if K > 1 else state
+    return jax.nn.silu(out), new_state
+
+
+def mamba2_apply(params, x, cfg, state=None, conv_state=None):
+    B, S, D = x.shape
+    z, xin, Bm, Cm, dt, d_inner, H, N = _mamba_proj(params, x, cfg)
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, params["conv_w"], conv_state)
+    xin, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    hd = d_inner // H
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    log_a = -jnp.exp(params["a_log"])[None, None] * dt  # <= 0
+    # SSD == GLA with q=C, k=B (shared across heads), v=x*dt
+    q = jnp.broadcast_to(Cm[:, :, None, :], (B, S, H, N))
+    k = jnp.broadcast_to(Bm[:, :, None, :], (B, S, H, N))
+    v = (xin.reshape(B, S, H, hd).astype(jnp.float32) * dt[..., None]).astype(x.dtype)
+    y, state = chunked_gla(q, k, v, log_a, jnp.ones_like(dt), state)
+    y = y.reshape(B, S, d_inner)
+    # gated RMS norm then out-projection
+    yf = y.astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+    y = (yf * params["norm_scale"]).astype(x.dtype) * jax.nn.silu(z)
+    return y @ params["w_ssm_out"], state, conv_state
+
+
+def mamba2_step(params, x, cfg, state, conv_state):
+    B = x.shape[0]
+    z, xin, Bm, Cm, dt, d_inner, H, N = _mamba_proj(params, x, cfg)
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, params["conv_w"], conv_state)
+    xin, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    hd = d_inner // H
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])[:, 0]  # (B,H)
+    log_a = -jnp.exp(params["a_log"])[None] * dt
+    q = jnp.broadcast_to(Cm[:, 0, None, :], (B, H, N))
+    k = jnp.broadcast_to(Bm[:, 0, None, :], (B, H, N))
+    v = (xin[:, 0].reshape(B, H, hd).astype(jnp.float32) * dt[..., None]).astype(x.dtype)
+    y, state = gla_step(q, k, v, log_a, jnp.ones_like(dt), state)
+    y = y.reshape(B, 1, d_inner)
+    yf = y.astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+    y = (yf * params["norm_scale"]).astype(x.dtype) * jax.nn.silu(z)
+    return y @ params["w_ssm_out"], state, conv_state

@@ -1,0 +1,2 @@
+from .adamw import AdamWState, adamw_init, adamw_update
+from .schedules import cosine_warmup

@@ -1,0 +1,1 @@
+from .hlo_cost import analyze_hlo, HloCost

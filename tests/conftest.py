@@ -1,0 +1,18 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def rand_cov(rng, d, scale=1.0):
+    A = rng.normal(size=(d, d))
+    return scale * (A @ A.T) / d
+
+
+@pytest.fixture
+def cov_pair(rng):
+    d = 12
+    return rand_cov(rng, d), rand_cov(rng, d), d

@@ -1,0 +1,71 @@
+"""Quantized collectives on an 8-device host mesh (subprocess so the main
+pytest process keeps 1 device, per the dry-run isolation rule)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.comm import q_all_gather, q_psum
+
+mesh = jax.make_mesh((8,), ("m",), axis_types=(jax.sharding.AxisType.Auto,))
+rng = np.random.default_rng(0)
+d, n_loc = 12, 64
+X = (rng.normal(size=(8 * n_loc, d)) @ (rng.normal(size=(d, d)) / np.sqrt(d))).astype(np.float32)
+
+f = jax.shard_map(lambda x: q_all_gather(x, "m", 36), mesh=mesh,
+                  in_specs=P("m", None), out_specs=P("m", None))
+out = np.asarray(jax.jit(f)(X))
+view0 = out[:8]
+own_exact = float(np.abs(view0[0] - X[:n_loc]).max())
+others = float(np.mean((view0[1:].reshape(-1, d) - X[n_loc:8 * n_loc]) ** 2))
+raw_var = float(np.mean(X ** 2))
+
+errs = {}
+g = rng.normal(size=(4096,)).astype(np.float32)
+G = np.stack([g * (i + 1) for i in range(8)])
+for bits in (4, 8):
+    f2 = jax.shard_map(lambda x, b=bits: q_psum(x[0], "m", b), mesh=mesh,
+                       in_specs=P("m", None), out_specs=P(), check_vma=False)
+    s = np.asarray(jax.jit(f2)(G))
+    true = G.sum(0)
+    errs[bits] = float(np.linalg.norm(s - true) / np.linalg.norm(true))
+
+print(json.dumps({"own_exact": own_exact, "others_mse": others,
+                  "raw_var": raw_var, "psum_err": errs}))
+"""
+
+
+@pytest.fixture(scope="module")
+def comm_results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True, env=env,
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_q_all_gather_own_block_exact(comm_results):
+    assert comm_results["own_exact"] < 1e-5
+
+
+def test_q_all_gather_peers_within_rate_distortion(comm_results):
+    # 36 bits over 12 dims = 3 bits/dim: distortion well below signal power
+    assert comm_results["others_mse"] < 0.5 * comm_results["raw_var"]
+    assert comm_results["others_mse"] > 0  # actually quantized, not copied
+
+
+def test_q_psum_error_decreases_with_bits(comm_results):
+    errs = comm_results["psum_err"]
+    assert errs["8"] < errs["4"] < 0.5
+    assert errs["8"] < 0.1

@@ -1,0 +1,58 @@
+"""Decode-attention Pallas kernel vs oracle: shape/window/ring sweeps."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.decode_attn.ops import decode_attn
+from repro.kernels.decode_attn.ref import decode_attn_ref
+
+
+CASES = [
+    # B, S, KV, G, hd, window, pos
+    (2, 100, 2, 3, 16, None, 80),
+    (1, 512, 4, 1, 32, None, 511),
+    (2, 300, 1, 4, 8, 64, 250),
+    (3, 64, 2, 2, 16, 16, 10),
+    (1, 7, 1, 1, 4, None, 3),  # tiny, heavy padding
+]
+
+
+@pytest.mark.parametrize("B,S,KV,G,hd,window,pos", CASES)
+def test_matches_ref(B, S, KV, G, hd, window, pos):
+    rng = np.random.default_rng(S)
+    q = jnp.asarray(rng.normal(size=(B, KV, G, hd)), jnp.float32)
+    K = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    V = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    kpos = np.broadcast_to(np.arange(S), (B, S)).copy()
+    kpos[:, pos + 1:] = -1
+    kpos = jnp.asarray(kpos)
+    out = decode_attn(q, K, V, kpos, pos, window=window, chunk=64, interpret=True)
+    ref = decode_attn_ref(q, K, V, kpos, pos, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+def test_ring_cache_order_invariance():
+    """A ring cache stores entries in slot order != position order; the kernel
+    must only care about kpos values."""
+    rng = np.random.default_rng(0)
+    B, S, KV, G, hd = 1, 32, 1, 2, 8
+    q = jnp.asarray(rng.normal(size=(B, KV, G, hd)), jnp.float32)
+    K = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    V = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    kpos = jnp.asarray(np.arange(S)[None], jnp.int32)
+    out1 = decode_attn(q, K, V, kpos, 31, interpret=True)
+    perm = np.random.default_rng(1).permutation(S)
+    out2 = decode_attn(q, K[:, perm], V[:, perm], kpos[:, perm], 31, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-4, atol=1e-5)
+
+
+def test_bf16_inputs():
+    rng = np.random.default_rng(2)
+    B, S, KV, G, hd = 2, 128, 2, 2, 16
+    q = jnp.asarray(rng.normal(size=(B, KV, G, hd)), jnp.bfloat16)
+    K = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.bfloat16)
+    V = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.bfloat16)
+    kpos = jnp.asarray(np.arange(S)[None].repeat(B, 0), jnp.int32)
+    out = decode_attn(q, K, V, kpos, S - 1, interpret=True)
+    ref = decode_attn_ref(q, K, V, kpos, S - 1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-2, atol=2e-2)

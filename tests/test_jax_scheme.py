@@ -1,0 +1,57 @@
+"""Traceable scheme (core.jax_scheme) must match the host-side scheme."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantizers as Q
+from repro.core import jax_scheme
+from repro.core.schemes import PerSymbolScheme
+from repro.core.distortion import distortion_quadratic
+
+
+def _cov(rng, d):
+    A = rng.normal(size=(d, d))
+    return (A @ A.T / d).astype(np.float32)
+
+
+def test_traceable_greedy_equals_heap_greedy():
+    rng = np.random.default_rng(0)
+    d = 14
+    Qx, Qy = _cov(rng, d), _cov(rng, d)
+    for bits in [0, 7, 30, 64]:
+        st = jax_scheme.fit_scheme(jnp.asarray(Qx), jnp.asarray(Qy), bits, 8)
+        host = PerSymbolScheme(bits, max_bits_per_dim=8).fit(Qx, Qy)
+        # same multiset of rates against matching variances (eigh order may
+        # differ on degenerate eigenvalues; compare sorted-by-variance)
+        v_j = np.asarray(st["sigma"]) ** 2
+        v_h = host._tr.variances
+        np.testing.assert_allclose(np.sort(v_j), np.sort(v_h), rtol=5e-3)  # fp32 eigh vs fp64
+        r_j = np.asarray(st["rates"])[np.argsort(v_j)]
+        r_h = np.asarray(host.rates)[np.argsort(v_h)]
+        assert r_j.sum() == r_h.sum()
+        exp_j = float(np.sum(np.sort(v_j) * [Q.unit_distortion(int(r)) for r in r_j]))
+        assert exp_j == jax.numpy.allclose(exp_j, host.expected_distortion, rtol=1e-3) or True
+        np.testing.assert_allclose(exp_j, host.expected_distortion, rtol=1e-3)
+
+
+def test_traceable_roundtrip_distortion():
+    rng = np.random.default_rng(1)
+    d, n, bits = 10, 3000, 40
+    Qx, Qy = _cov(rng, d), _cov(rng, d)
+    X = rng.multivariate_normal(np.zeros(d), Qx, size=n).astype(np.float32)
+    st = jax_scheme.fit_scheme(jnp.asarray(Qx), jnp.asarray(Qy), bits, 8)
+    tables = Q.build_codebook_tables(8)
+    codes = jax_scheme.encode(st, jnp.asarray(X), tables)
+    Xh = jax_scheme.decode(st, codes, tables)
+    emp = float(distortion_quadratic(X, Xh, Qy))
+    host = PerSymbolScheme(bits, max_bits_per_dim=8).fit(Qx, Qy)
+    assert abs(emp - host.expected_distortion) / host.expected_distortion < 0.2
+
+
+def test_fit_scheme_is_jittable_and_shardmap_safe():
+    rng = np.random.default_rng(2)
+    d = 6
+    Qx, Qy = _cov(rng, d), _cov(rng, d)
+    out = jax.jit(lambda a, b: jax_scheme.fit_scheme(a, b, 12, 6))(
+        jnp.asarray(Qx), jnp.asarray(Qy))
+    assert int(out["rates"].sum()) == 12

@@ -1,0 +1,105 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import quantizers as Q
+from repro.kernels.gram.ops import gram
+from repro.kernels.gram.ref import gram_ref
+from repro.kernels.quant.ops import encode, decode, build_scaled_tables
+from repro.kernels.quant.ref import encode_ref, decode_ref
+from repro.kernels.qgram.ops import qgram
+from repro.kernels.qgram.ref import qgram_ref
+
+
+GRAM_SHAPES = [
+    (8, 4, 8),        # tiny, all padding
+    (128, 128, 128),  # exact single tile
+    (130, 20, 50),    # ragged every axis
+    (256, 384, 128),  # multi-tile
+    (1, 1, 1),        # degenerate
+]
+
+
+@pytest.mark.parametrize("n,d,p", GRAM_SHAPES)
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_gram_matches_ref(n, d, p, dtype):
+    rng = np.random.default_rng(n * 1000 + d)
+    x = rng.normal(size=(n, d)).astype(dtype)
+    y = rng.normal(size=(p, d)).astype(dtype)
+    out = np.asarray(gram(x, y, interpret=True))
+    ref = np.asarray(gram_ref(x, y))
+    np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3)
+    assert out.shape == (n, p) and out.dtype == np.float32
+
+
+@pytest.mark.parametrize("block", [(128, 128, 128), (256, 128, 128)])
+def test_gram_block_shapes(block):
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(100, 40)).astype(np.float32)
+    y = rng.normal(size=(60, 40)).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(gram(x, y, block=block, interpret=True)),
+        np.asarray(gram_ref(x, y)), rtol=1e-5, atol=1e-4,
+    )
+
+
+def _tables(rng, d, total_bits, max_bits=8):
+    var = rng.uniform(0.05, 4.0, size=d)
+    rates = Q.allocate_bits_greedy(var, total_bits, max_bits)
+    sigma = np.sqrt(var).astype(np.float32)
+    return sigma, rates, build_scaled_tables(sigma, rates)
+
+
+@pytest.mark.parametrize("n,d,bits", [(64, 8, 24), (200, 20, 60), (128, 128, 200), (3, 5, 0)])
+def test_quant_encode_decode_match_ref(n, d, bits):
+    rng = np.random.default_rng(d)
+    sigma, rates, (edges, cents) = _tables(rng, d, bits)
+    x = (rng.normal(size=(n, d)) * sigma).astype(np.float32)
+    ce = np.asarray(encode(x, edges, interpret=True))
+    cr = np.asarray(encode_ref(jnp.asarray(x), edges))
+    np.testing.assert_array_equal(ce, cr)
+    xe = np.asarray(decode(jnp.asarray(ce), cents, interpret=True))
+    xr = np.asarray(decode_ref(jnp.asarray(cr), cents))
+    np.testing.assert_allclose(xe, xr, rtol=1e-6)
+
+
+def test_quant_kernel_agrees_with_core_quantizers():
+    rng = np.random.default_rng(7)
+    d = 16
+    sigma, rates, (edges, cents) = _tables(rng, d, 48)
+    x = (rng.normal(size=(100, d)) * sigma).astype(np.float32)
+    et, ct = Q.build_codebook_tables(int(max(rates.max(), 1)))
+    c_core = Q.quantize(jnp.asarray(x), jnp.asarray(sigma), jnp.asarray(rates), et)
+    c_kern = encode(x, edges, interpret=True)
+    np.testing.assert_array_equal(np.asarray(c_core), np.asarray(c_kern))
+    x_core = Q.dequantize(c_core, jnp.asarray(sigma), jnp.asarray(rates), ct)
+    x_kern = decode(c_kern, cents, interpret=True)
+    np.testing.assert_allclose(np.asarray(x_core), np.asarray(x_kern), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("n,d,p,bits", [(64, 8, 32, 24), (130, 20, 33, 60), (128, 128, 128, 256)])
+def test_qgram_fused_matches_ref(n, d, p, bits):
+    rng = np.random.default_rng(n + d)
+    sigma, rates, (edges, cents) = _tables(rng, d, bits)
+    x = (rng.normal(size=(n, d)) * sigma).astype(np.float32)
+    y = rng.normal(size=(p, d)).astype(np.float32)
+    codes = encode(x, edges, interpret=True)
+    out = np.asarray(qgram(codes, cents, y, interpret=True))
+    ref = np.asarray(qgram_ref(jnp.asarray(codes), cents, jnp.asarray(y)))
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-3)
+
+
+def test_qgram_equals_decode_then_gram():
+    """The fusion must be exactly decode∘gram."""
+    rng = np.random.default_rng(9)
+    d = 12
+    sigma, rates, (edges, cents) = _tables(rng, d, 36)
+    x = (rng.normal(size=(70, d)) * sigma).astype(np.float32)
+    y = rng.normal(size=(40, d)).astype(np.float32)
+    codes = encode(x, edges, interpret=True)
+    xhat = decode(codes, cents, interpret=True)
+    fused = np.asarray(qgram(codes, cents, y, interpret=True))
+    twostep = np.asarray(gram(xhat, y, interpret=True))
+    np.testing.assert_allclose(fused, twostep, rtol=1e-4, atol=1e-3)

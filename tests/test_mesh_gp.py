@@ -1,0 +1,58 @@
+"""Mesh-native broadcast GP (core.mesh_gp): the §5.2 protocol with devices as
+machines and repro.comm as the wire — 8-device subprocess."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np, jax
+from repro.core.mesh_gp import broadcast_gp_mesh
+from repro.core.gp import train_gp
+
+mesh = jax.make_mesh((8,), ("m",), axis_types=(jax.sharding.AxisType.Auto,))
+rng = np.random.default_rng(0)
+d, n, t = 8, 320, 100
+W = rng.normal(size=(d, 2))
+f = lambda Z: np.sin(Z @ W[:, 0]) + 0.4 * (Z @ W[:, 1])
+X = rng.normal(size=(n, d)).astype(np.float32)
+y = (f(X) + 0.05 * rng.normal(size=n)).astype(np.float32)
+Xt = rng.normal(size=(t, d)).astype(np.float32)
+yt = f(Xt)
+sm = lambda mu: float(np.mean((yt - np.asarray(mu)) ** 2) / np.var(yt))
+
+full = train_gp(X, y, kernel="se", steps=100)
+out = {"full": sm(full.predict(Xt)[0])}
+for bits in (4, 32):
+    mu, s2 = broadcast_gp_mesh(mesh, "m", X, y, Xt, full.params,
+                               kernel="se", bits_per_sample=bits)
+    out[str(bits)] = {"smse": sm(mu), "var_pos": bool(np.all(np.asarray(s2) > 0))}
+print(json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                         text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_high_rate_matches_full_gp(results):
+    assert results["32"]["smse"] < 1.15 * results["full"] + 0.02
+
+
+def test_rate_monotone(results):
+    assert results["32"]["smse"] <= results["4"]["smse"] * 1.05
+
+
+def test_variances_positive(results):
+    assert results["32"]["var_pos"] and results["4"]["var_pos"]

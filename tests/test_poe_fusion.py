@@ -1,0 +1,93 @@
+"""PoE/BCM/rBCM combiners and KL-barycenter fusion (eqs. 62-64)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.poe import poe, gpoe, bcm, rbcm, combine
+from repro.core.fusion import kl_fuse, kl_fuse_diag
+
+
+def test_single_expert_identity():
+    mus = jnp.asarray([[1.0, -2.0]])
+    s2s = jnp.asarray([[0.5, 2.0]])
+    for fn in (poe, gpoe):
+        mu, s2 = fn(mus, s2s)
+        np.testing.assert_allclose(mu, mus[0], rtol=1e-6)
+        np.testing.assert_allclose(s2, s2s[0], rtol=1e-6)
+    mu, s2 = bcm(mus, s2s, prior_var=jnp.asarray([4.0, 4.0]))
+    np.testing.assert_allclose(mu, mus[0], rtol=1e-6)
+
+
+def test_poe_precision_weighting():
+    mus = jnp.asarray([[0.0], [2.0]])
+    s2s = jnp.asarray([[1.0], [1.0]])
+    mu, s2 = poe(mus, s2s)
+    assert float(mu[0]) == pytest.approx(1.0)
+    assert float(s2[0]) == pytest.approx(0.5)
+    # tighter expert dominates
+    s2s = jnp.asarray([[0.01], [1.0]])
+    mu, _ = poe(mus, s2s)
+    assert abs(float(mu[0])) < 0.1
+
+
+def test_bcm_removes_prior_overcount():
+    # two identical experts that know nothing (s2 == prior) must return prior
+    prior = jnp.asarray([3.0])
+    mus = jnp.asarray([[0.0], [0.0]])
+    s2s = jnp.asarray([[3.0], [3.0]])
+    _, s2 = bcm(mus, s2s, prior)
+    assert float(s2[0]) == pytest.approx(3.0, rel=1e-5)
+    # plain PoE would (wrongly) halve the variance
+    _, s2p = poe(mus, s2s)
+    assert float(s2p[0]) == pytest.approx(1.5, rel=1e-5)
+
+
+def test_rbcm_uninformative_expert_is_ignored():
+    prior = jnp.asarray([2.0])
+    mus = jnp.asarray([[5.0], [0.0]])
+    s2s = jnp.asarray([[2.0], [0.1]])  # expert 0 has prior variance: beta_0 = 0
+    mu, _ = rbcm(mus, s2s, prior)
+    assert abs(float(mu[0])) < 0.2
+
+
+def test_combine_dispatch():
+    mus = jnp.zeros((3, 4))
+    s2s = jnp.ones((3, 4))
+    for name in ["poe", "gpoe", "bcm", "rbcm"]:
+        mu, s2 = combine(name, mus, s2s, prior_var=jnp.full((4,), 2.0))
+        assert mu.shape == (4,) and s2.shape == (4,)
+
+
+def test_kl_fusion_formulas():
+    rng = np.random.default_rng(0)
+    m, t = 5, 3
+    mus = rng.normal(size=(m, t)).astype(np.float32)
+    s2s = rng.uniform(0.5, 2.0, size=(m, t)).astype(np.float32)
+    mu, s2 = kl_fuse_diag(jnp.asarray(mus), jnp.asarray(s2s))
+    np.testing.assert_allclose(np.asarray(mu), mus.mean(0), rtol=1e-5)
+    ref = s2s.mean(0) + ((mus.mean(0)[None] - mus) ** 2).mean(0)
+    np.testing.assert_allclose(np.asarray(s2), ref, rtol=1e-5)
+    # full-covariance version agrees on the diagonal
+    Sig = np.stack([np.diag(s) for s in s2s]).astype(np.float32)
+    mu2, Sig2 = kl_fuse(jnp.asarray(mus), jnp.asarray(Sig))
+    np.testing.assert_allclose(np.asarray(mu2), mus.mean(0), rtol=1e-5)
+    np.testing.assert_allclose(np.diagonal(np.asarray(Sig2)), ref, rtol=1e-5)
+
+
+def test_kl_fusion_is_the_barycenter_optimum():
+    """(63)-(64) minimize sum_i KL(N_i || N): check by perturbation."""
+    rng = np.random.default_rng(1)
+    mus = rng.normal(size=(4, 1)).astype(np.float64)
+    s2s = rng.uniform(0.5, 1.5, size=(4, 1)).astype(np.float64)
+
+    def obj(mu, s2):
+        return sum(
+            0.5 * (np.log(s2 / s) + (s + (m - mu) ** 2) / s2 - 1.0)
+            for m, s in zip(mus[:, 0], s2s[:, 0])
+        )
+
+    mu_star, s2_star = kl_fuse_diag(jnp.asarray(mus), jnp.asarray(s2s))
+    base = obj(float(mu_star[0]), float(s2_star[0]))
+    for dm in [-0.05, 0.05]:
+        assert obj(float(mu_star[0]) + dm, float(s2_star[0])) > base
+        assert obj(float(mu_star[0]), float(s2_star[0]) * (1 + dm)) > base

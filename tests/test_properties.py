@@ -1,0 +1,73 @@
+"""Extra hypothesis property tests on system invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantizers as Q
+from repro.core.schemes import PerSymbolScheme
+from repro.core.rate_distortion import reverse_waterfill
+from repro.core.fusion import kl_fuse_diag
+from repro.core.poe import poe, bcm
+
+
+@given(st.integers(1, 6), st.integers(0, 10000))
+@settings(max_examples=25, deadline=None)
+def test_quantizer_idempotent(rate, seed):
+    """Quantizing an already-quantized value is the identity (codes are fixed
+    points of encode∘decode)."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(50, 1)).astype(np.float32)
+    rates = np.array([rate], np.int32)
+    sigma = jnp.asarray([1.0], jnp.float32)
+    edges, cents = Q.build_codebook_tables(rate)
+    c1 = Q.quantize(jnp.asarray(x), sigma, jnp.asarray(rates), edges)
+    xh = Q.dequantize(c1, sigma, jnp.asarray(rates), cents)
+    c2 = Q.quantize(xh, sigma, jnp.asarray(rates), edges)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_scheme_deterministic(seed):
+    rng = np.random.default_rng(seed)
+    d = 6
+    A = rng.normal(size=(d, d)); Qx = A @ A.T / d
+    B = rng.normal(size=(d, d)); Qy = B @ B.T / d
+    X = rng.normal(size=(40, d)).astype(np.float32)
+    s1 = PerSymbolScheme(18).fit(Qx, Qy)
+    s2 = PerSymbolScheme(18).fit(Qx, Qy)
+    np.testing.assert_array_equal(np.asarray(s1.encode(X)), np.asarray(s2.encode(X)))
+
+
+@given(st.lists(st.floats(0.01, 10.0), min_size=2, max_size=12), st.floats(0.01, 1.0))
+@settings(max_examples=30, deadline=None)
+def test_waterfill_monotone_in_D(eigs, frac):
+    eigs = np.asarray(eigs)
+    D1 = frac * eigs.sum() * 0.5
+    D2 = frac * eigs.sum()
+    q1 = reverse_waterfill(eigs, D1)
+    q2 = reverse_waterfill(eigs, D2)
+    assert np.all(q1 <= q2 + 1e-9)  # more budget -> (weakly) more distortion per dim
+
+
+@given(st.integers(0, 500))
+@settings(max_examples=20, deadline=None)
+def test_fusion_mean_within_expert_range(seed):
+    rng = np.random.default_rng(seed)
+    mus = rng.normal(size=(5, 3)).astype(np.float32)
+    s2s = rng.uniform(0.1, 2.0, size=(5, 3)).astype(np.float32)
+    mu, s2 = kl_fuse_diag(jnp.asarray(mus), jnp.asarray(s2s))
+    assert np.all(np.asarray(mu) <= mus.max(0) + 1e-6)
+    assert np.all(np.asarray(mu) >= mus.min(0) - 1e-6)
+    assert np.all(np.asarray(s2) > 0)
+
+
+@given(st.integers(0, 500))
+@settings(max_examples=20, deadline=None)
+def test_poe_variance_never_exceeds_best_expert(seed):
+    rng = np.random.default_rng(seed)
+    mus = jnp.asarray(rng.normal(size=(4, 6)), jnp.float32)
+    s2s = jnp.asarray(rng.uniform(0.1, 3.0, size=(4, 6)), jnp.float32)
+    _, s2 = poe(mus, s2s)
+    assert np.all(np.asarray(s2) <= np.asarray(s2s).min(0) + 1e-6)

@@ -1,0 +1,100 @@
+"""Unit + property tests for the per-symbol quantizer (paper §4.2)."""
+import itertools
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantizers as Q
+
+
+def test_bin_edges_are_quantiles():
+    for r in [1, 2, 3, 6]:
+        e = Q.gauss_bin_edges(r)
+        assert e.shape == (2**r - 1,)
+        assert np.all(np.diff(e) > 0)
+        # symmetric
+        np.testing.assert_allclose(e, -e[::-1], atol=1e-12)
+
+
+def test_centroids_zero_mean_and_symmetric():
+    for r in [1, 2, 5]:
+        c = Q.gauss_centroids(r)
+        assert c.shape == (2**r,)
+        np.testing.assert_allclose(c.mean(), 0.0, atol=1e-12)
+        np.testing.assert_allclose(c, -c[::-1], atol=1e-10)
+
+
+def test_r1_centroids_match_half_normal():
+    # 1-bit quantizer of N(0,1): centroids +- sqrt(2/pi)
+    c = Q.gauss_centroids(1)
+    np.testing.assert_allclose(sorted(c), [-np.sqrt(2 / np.pi), np.sqrt(2 / np.pi)], rtol=1e-9)
+
+
+def test_unit_distortion_decreasing():
+    es = [Q.unit_distortion(r) for r in range(11)]
+    assert es[0] == pytest.approx(1.0)
+    assert all(a > b for a, b in zip(es, es[1:]))
+
+
+def test_distortion_matches_empirical():
+    rng = np.random.default_rng(3)
+    u = rng.normal(size=400_000)
+    for r in [1, 2, 4]:
+        edges = Q.gauss_bin_edges(r)
+        cents = Q.gauss_centroids(r)
+        codes = np.searchsorted(edges, u)
+        emp = np.mean((u - cents[codes]) ** 2)
+        assert emp == pytest.approx(Q.unit_distortion(r), rel=0.02)
+
+
+def test_greedy_matches_bruteforce_small():
+    rng = np.random.default_rng(1)
+    var = rng.uniform(0.1, 3.0, size=3)
+    R = 6
+
+    def total_e(alloc):
+        return sum(Q.expected_distortion(v, r) for v, r in zip(var, alloc))
+
+    best = min(
+        (a for a in itertools.product(range(R + 1), repeat=3) if sum(a) == R),
+        key=total_e,
+    )
+    greedy = Q.allocate_bits_greedy(var, R)
+    assert sum(greedy) == R
+    assert total_e(greedy) == pytest.approx(total_e(best), rel=1e-9)
+
+
+@given(
+    st.lists(st.floats(0.01, 10.0), min_size=2, max_size=8),
+    st.integers(0, 32),
+)
+@settings(max_examples=30, deadline=None)
+def test_greedy_allocates_all_bits_to_larger_variances_first(vars_, R):
+    var = np.asarray(vars_)
+    rates = Q.allocate_bits_greedy(var, R, max_bits=12)
+    assert rates.sum() == min(R, 12 * len(var))
+    # monotone: a dimension with strictly larger variance never gets fewer bits
+    order = np.argsort(-var)
+    sorted_rates = rates[order]
+    sorted_vars = var[order]
+    for i in range(len(var) - 1):
+        if sorted_vars[i] > sorted_vars[i + 1] + 1e-12:
+            assert sorted_rates[i] >= sorted_rates[i + 1]
+
+
+@given(st.integers(0, 6), st.floats(0.1, 5.0))
+@settings(max_examples=20, deadline=None)
+def test_quantize_dequantize_roundtrip_bounded(rate, sigma):
+    rng = np.random.default_rng(rate)
+    x = (rng.normal(size=(200, 1)) * sigma).astype(np.float32)
+    rates = np.array([rate], dtype=np.int32)
+    edges, cents = Q.build_codebook_tables(max(rate, 1))
+    codes = Q.quantize(jnp.asarray(x), jnp.asarray([sigma], jnp.float32), jnp.asarray(rates), edges)
+    assert int(codes.max()) <= 2**rate - 1 and int(codes.min()) >= 0
+    xh = Q.dequantize(codes, jnp.asarray([sigma], jnp.float32), jnp.asarray(rates), cents)
+    emp = float(np.mean((x - np.asarray(xh)) ** 2))
+    # within 4x of the theoretical distortion (finite sample) and never worse
+    # than the zero-rate distortion by a wide margin
+    assert emp <= 4.0 * max(Q.expected_distortion(sigma**2, rate), 1e-6) + 0.05 * sigma**2

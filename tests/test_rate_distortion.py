@@ -1,0 +1,66 @@
+"""Theorem 1 / Theorem 2 tests."""
+import numpy as np
+import jax
+import pytest
+
+from repro.core import rate_distortion as rd
+from repro.core.distortion import distortion_quadratic
+from repro.core.schemes import PerSymbolScheme
+
+
+def _cov(rng, d):
+    A = rng.normal(size=(d, d))
+    return A @ A.T / d
+
+
+def test_waterfill_sums_to_D():
+    rng = np.random.default_rng(0)
+    eigs = rng.uniform(0.1, 4.0, size=10)
+    for D in [0.1, 1.0, eigs.sum() * 0.5]:
+        q = rd.reverse_waterfill(eigs, D)
+        assert np.all(q <= eigs + 1e-12)
+        assert q.sum() == pytest.approx(D, rel=1e-4)
+
+
+def test_waterfill_saturates_at_total():
+    eigs = np.array([1.0, 2.0])
+    q = rd.reverse_waterfill(eigs, 10.0)
+    np.testing.assert_allclose(q, eigs)
+
+
+def test_rd_curve_monotone_decreasing():
+    rng = np.random.default_rng(1)
+    Qx, Qy = _cov(rng, 8), _cov(rng, 8)
+    rates, dists = rd.rd_lower_bound_curve(Qx, Qy)
+    assert np.all(np.diff(rates) >= -1e-9)
+    assert np.all(np.diff(dists) <= 1e-9)
+    # zero rate -> full distortion = sum of eigenvalues = tr(QxQy)
+    assert dists[0] == pytest.approx(np.trace(Qx @ Qy), rel=1e-6)
+
+
+def test_test_channel_achieves_target_distortion():
+    rng = np.random.default_rng(2)
+    d = 10
+    Qx, Qy = _cov(rng, d), _cov(rng, d)
+    D_target = 0.25 * np.trace(Qx @ Qy)
+    ch = rd.make_test_channel(Qx, Qy, D_target)
+    assert ch.distortion == pytest.approx(D_target, rel=1e-3)
+    X = rng.multivariate_normal(np.zeros(d), Qx, size=4000).astype(np.float32)
+    Xh = rd.sample_test_channel(ch, X, jax.random.PRNGKey(0))
+    emp = float(distortion_quadratic(X, Xh, Qy))
+    assert emp == pytest.approx(D_target, rel=0.08)
+
+
+def test_per_symbol_respects_lower_bound():
+    """No practical scheme may beat the Theorem-1 bound (paper Fig. 2)."""
+    rng = np.random.default_rng(3)
+    d = 10
+    Qx, Qy = _cov(rng, d), _cov(rng, d)
+    X = rng.multivariate_normal(np.zeros(d), Qx, size=3000).astype(np.float32)
+    for R in [5, 15, 30]:
+        ps = PerSymbolScheme(R).fit(Qx, Qy)
+        emp = float(distortion_quadratic(X, ps.roundtrip(X), Qy))
+        lb = rd.distortion_for_rate(Qx, Qy, R)
+        assert emp >= 0.95 * lb  # small slack for sampling noise
+        # and within a constant factor of optimal (the paper's 'near optimal')
+        assert emp <= 16.0 * lb + 1e-3

@@ -1,0 +1,62 @@
+"""Known-answer tests for the trip-count-aware HLO cost parser."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.roofline import analyze_hlo
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_matmul_flops():
+    x = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    w = jax.ShapeDtypeStruct((32, 16), jnp.float32)
+    c = analyze_hlo(_compile_text(lambda a, b: a @ b, x, w))
+    assert c.flops == pytest.approx(2 * 64 * 32 * 16, rel=0.01)
+
+
+def test_scan_multiplies_by_trip_count():
+    """XLA cost_analysis counts while bodies once; our parser must not."""
+    def f(x, w):
+        def body(c, wi):
+            return c @ wi, None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((10, 128, 128), jnp.float32)
+    compiled = jax.jit(f).lower(x, w).compile()
+    parsed = analyze_hlo(compiled.as_text())
+    expected = 10 * 2 * 128**3
+    assert parsed.flops == pytest.approx(expected, rel=0.02)
+    # and confirm the builtin undercounts (the reason this module exists)
+    xla = compiled.cost_analysis().get("flops", 0)
+    assert xla < 0.2 * expected
+
+
+def test_nested_scan():
+    def g(x, ws):
+        def outer(c, wouter):
+            def inner(ci, wi):
+                return ci @ wi, None
+            c2, _ = jax.lax.scan(inner, c, wouter)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, ws)
+        return y
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((5, 10, 128, 128), jnp.float32)
+    c = analyze_hlo(_compile_text(g, x, ws))
+    assert c.flops == pytest.approx(50 * 2 * 128**3, rel=0.02)
+
+
+def test_bytes_nonzero_and_scale_with_loop():
+    def f(x):
+        def body(c, _):
+            return jnp.tanh(c) * 2.0, None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+    x = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    c = analyze_hlo(_compile_text(f, x))
+    # at least 7 x (read + write) of the 4 MB buffer
+    assert c.bytes >= 7 * 2 * 4 * 1024 * 1024 * 0.9

@@ -1,0 +1,85 @@
+"""Scheme-level API tests + eq.(6)==eq.(7) property."""
+import numpy as np
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.schemes import PerSymbolScheme, OptimalScheme, DimReductionScheme, PCAScheme
+from repro.core.distortion import distortion_pairwise, distortion_quadratic, second_moment
+
+
+def _data(seed, d=10, n=2000):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(d, d)); Qx = A @ A.T / d
+    B = rng.normal(size=(d, d)); Qy = B @ B.T / d
+    X = rng.multivariate_normal(np.zeros(d), Qx, size=n).astype(np.float32)
+    Y = rng.multivariate_normal(np.zeros(d), Qy, size=n).astype(np.float32)
+    return Qx, Qy, X, Y
+
+
+@given(st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_eq6_equals_eq7(seed):
+    rng = np.random.default_rng(seed)
+    n, d = 50, 6
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    Xh = rng.normal(size=(n, d)).astype(np.float32)
+    Y = rng.normal(size=(n, d)).astype(np.float32)
+    Sy = second_moment(Y)
+    a = float(distortion_pairwise(X, Xh, Y))
+    b = float(distortion_quadratic(X, Xh, Sy))
+    assert a == pytest.approx(b, rel=1e-4)
+
+
+def test_per_symbol_empirical_matches_expected():
+    Qx, Qy, X, Y = _data(0)
+    # finite-sample variance of the empirical distortion grows with rate
+    # (fewer effective samples per bin), hence the rate-dependent tolerance
+    for R, rel in [(8, 0.15), (30, 0.2), (60, 0.35)]:
+        ps = PerSymbolScheme(R).fit(Qx, Qy)
+        emp = float(distortion_quadratic(X, ps.roundtrip(X), Qy))
+        assert emp == pytest.approx(ps.expected_distortion, rel=rel)
+
+
+def test_distortion_decreases_with_rate():
+    Qx, Qy, X, _ = _data(1)
+    errs = []
+    for R in [5, 10, 20, 40, 80]:
+        ps = PerSymbolScheme(R).fit(Qx, Qy)
+        errs.append(float(distortion_quadratic(X, ps.roundtrip(X), Qy)))
+    assert all(a > b for a, b in zip(errs, errs[1:]))
+
+
+def test_scheme_ordering_optimal_persym_dr():
+    """Paper Fig. 2 ordering: optimal <= per-symbol << dim-reduction (at equal
+    wire budget, DR coefficients cost 16 bits each)."""
+    Qx, Qy, X, _ = _data(2)
+    R = 48
+    ps = PerSymbolScheme(R).fit(Qx, Qy)
+    e_ps = float(distortion_quadratic(X, ps.roundtrip(X), Qy))
+    opt = OptimalScheme(R).fit(Qx, Qy)
+    e_opt = float(distortion_quadratic(X, opt.roundtrip(X, jax.random.PRNGKey(0)), Qy))
+    dr = DimReductionScheme(R // 16).fit(Qx, Qy)  # same bits on the wire
+    e_dr = float(distortion_quadratic(X, dr.roundtrip(X), Qy))
+    assert e_opt <= e_ps * 1.05
+    assert e_ps < e_dr
+
+
+def test_wire_accounting():
+    Qx, Qy, X, _ = _data(3)
+    n, d = X.shape
+    ps = PerSymbolScheme(24).fit(Qx, Qy)
+    assert ps.wire_bits(n) == 24 * n
+    assert ps.side_info_bits(d) == 2 * d * d * 32
+    dr = DimReductionScheme(4).fit(Qx, Qy)
+    assert dr.wire_bits(n) == 16 * (4 * n + 4 * d)
+    pc = PCAScheme(4).fit(Qx)
+    assert pc.side_info_bits(d) == 0
+
+
+def test_codes_are_small_ints():
+    Qx, Qy, X, _ = _data(4)
+    ps = PerSymbolScheme(30, max_bits_per_dim=6).fit(Qx, Qy)
+    codes = np.asarray(ps.encode(X))
+    assert codes.dtype == np.int32
+    assert codes.min() >= 0 and codes.max() < 2**6

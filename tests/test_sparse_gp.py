@@ -1,0 +1,62 @@
+"""Titsias SGPR tests (paper Fig. 7 substrate)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.gp import init_params, se_gram, nlml_from_gram, train_gp
+from repro.core.sparse_gp import elbo, train_sgpr
+from repro.core.schemes import PerSymbolScheme
+from repro.core.distortion import second_moment
+
+
+def _problem(seed=0, n=200, d=3):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    y = (np.sin(X @ np.ones(d)) + 0.1 * rng.normal(size=n)).astype(np.float32)
+    return X, y
+
+
+def test_elbo_lower_bounds_exact_marginal_likelihood():
+    X, y = _problem()
+    p = init_params(a=1.0, b=2.0, noise=0.1)
+    G = se_gram(p, jnp.asarray(X))
+    exact_lml = -float(nlml_from_gram(G, jnp.asarray(y), float(jnp.exp(p.log_noise))))
+    for m in [5, 20, 80]:
+        Z = jnp.asarray(X[:m])
+        bound = float(elbo(p, Z, jnp.asarray(X), jnp.asarray(y), "se"))
+        assert bound <= exact_lml + 1e-2
+    # bound tightens as m grows to n (Z == X makes Qnn == Knn)
+    b_all = float(elbo(p, jnp.asarray(X), jnp.asarray(X), jnp.asarray(y), "se"))
+    assert b_all == pytest.approx(exact_lml, abs=0.5)
+
+
+def test_sgpr_training_improves_elbo_and_predicts():
+    X, y = _problem(1)
+    sg0 = train_sgpr(X, y, 15, steps=0)
+    sg = train_sgpr(X, y, 15, steps=150)
+    e0 = float(elbo(sg0.params, sg0.Z, jnp.asarray(X), jnp.asarray(y), "se"))
+    e1 = float(elbo(sg.params, sg.Z, jnp.asarray(X), jnp.asarray(y), "se"))
+    assert e1 > e0
+    mu, var = sg.predict(X[:30])
+    assert np.mean((np.asarray(mu) - y[:30]) ** 2) < 0.2 * np.var(y)
+    assert np.all(np.asarray(var) > 0)
+
+
+def test_quantized_inducing_points_degrade_gracefully():
+    """Fig.-7 mechanism: quantizing Z at a few bits/dim should barely move the
+    predictions (inducing sets are small, so bits are cheap)."""
+    X, y = _problem(2)
+    sg = train_sgpr(X, y, 12, steps=120)
+    Z = np.asarray(sg.Z)
+    Q = np.cov(Z.T) + 1e-3 * np.eye(Z.shape[1])
+    S = np.asarray(second_moment(jnp.asarray(X)))
+    sch = PerSymbolScheme(8 * Z.shape[1]).fit(Q, S)  # 8 bits/dim
+    Zq = np.asarray(sch.roundtrip(Z))
+    mu0, _ = sg.predict(X[:50])
+    import dataclasses
+    sgq = dataclasses.replace(sg, Z=jnp.asarray(Zq))
+    mu1, _ = sgq.predict(X[:50])
+    base = float(np.mean((np.asarray(mu0) - y[:50]) ** 2))
+    quant = float(np.mean((np.asarray(mu1) - y[:50]) ** 2))
+    assert quant < 2.5 * base + 0.05

@@ -1,0 +1,106 @@
+"""End-to-end behaviour tests for the full system."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models import make_train_step, make_decode_step
+from repro.models.steps import init_train_state
+from repro.models.decode import init_decode_state
+from repro.data import lm_batch_stream, regression_dataset, DATASET_SPECS
+from repro.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+
+
+def test_lm_training_loss_decreases_end_to_end():
+    cfg = get_config("xlstm-125m").reduced()
+    params, opt = init_train_state(jax.random.PRNGKey(0), cfg)
+    step = jax.jit(make_train_step(cfg, peak_lr=1e-3, warmup=5, total_steps=40))
+    stream = lm_batch_stream(cfg.vocab_size, batch=4, seq=64, seed=1)
+    first = last = None
+    for i in range(25):
+        params, opt, m = step(params, opt, next(stream))
+        if i == 0:
+            first = float(m["loss"])
+        last = float(m["loss"])
+    assert last < first - 0.1, (first, last)
+
+
+def test_decode_after_training_runs_greedy(tmp_path):
+    cfg = get_config("gemma2-2b").reduced()
+    params, _ = init_train_state(jax.random.PRNGKey(1), cfg)
+    state = init_decode_state(cfg, 2, 32)
+    step = jax.jit(make_decode_step(cfg))
+    tok = jnp.zeros((2, 1), jnp.int32)
+    toks = []
+    for pos in range(8):
+        tok, state = step(params, state, tok, jnp.int32(pos))
+        toks.append(np.asarray(tok))
+    toks = np.concatenate(toks, 1)
+    assert toks.shape == (2, 8)
+    assert (toks >= 0).all() and (toks < cfg.vocab_size).all()
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_config("xlstm-125m").reduced()
+    params, opt = init_train_state(jax.random.PRNGKey(2), cfg)
+    d = str(tmp_path)
+    save_checkpoint(d, 7, params)
+    assert latest_step(d) == 7
+    restored = restore_checkpoint(d, 7, params)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_regression_data_matches_paper_specs():
+    for name, (n_tr, n_te, d) in DATASET_SPECS.items():
+        X_tr, y_tr, X_te, y_te = regression_dataset(name)
+        assert X_tr.shape == (n_tr, d) and X_te.shape == (n_te, d)
+        # normalized as in the paper: zero-mean unit-variance inputs
+        np.testing.assert_allclose(X_tr.mean(0), 0.0, atol=1e-4)
+        np.testing.assert_allclose(X_tr.std(0), 1.0, atol=1e-3)
+        assert abs(float(y_tr.mean())) < 1e-4 * max(1.0, np.abs(y_tr).max())
+
+
+def test_train_driver_cli(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "xlstm-125m",
+         "--reduce", "--steps", "6", "--batch", "2", "--seq", "32",
+         "--workdir", str(tmp_path), "--ckpt-every", "6", "--log-every", "2"],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "loss" in out.stdout
+    assert latest_step(str(tmp_path)) == 6
+    assert os.path.exists(os.path.join(str(tmp_path), "metrics.csv"))
+
+
+def test_serve_driver_cli():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "xlstm-125m",
+         "--reduce", "--batch", "2", "--prompt-len", "8", "--gen", "4"],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "generated token ids" in out.stdout
+
+
+def test_dryrun_cli_single_combo():
+    """The dry-run entry point itself, on the cheapest real combo."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "xlstm-125m",
+         "--shape", "long_500k"],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert out.returncode == 0, (out.stdout[-1000:], out.stderr[-2000:])
+    assert "dom=" in out.stdout

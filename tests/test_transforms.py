@@ -1,0 +1,81 @@
+"""Decorrelating transform (§4.2) and Theorem-3 dimension reduction tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.transforms import (
+    make_decorrelating_transform,
+    make_dim_reduction,
+    make_pca,
+    dr_encode,
+    dr_decode,
+)
+from repro.core.distortion import distortion_quadratic, second_moment
+
+
+def _cov(rng, d, scale=1.0):
+    A = rng.normal(size=(d, d))
+    return scale * A @ A.T / d
+
+
+def test_decorrelating_transform_diagonalizes():
+    rng = np.random.default_rng(0)
+    d = 8
+    Qx, Qy = _cov(rng, d), _cov(rng, d)
+    tr = make_decorrelating_transform(Qx, Qy)
+    cov_xp = tr.T @ Qx @ tr.T.T
+    np.testing.assert_allclose(cov_xp, np.diag(tr.variances), atol=1e-8)
+    # inverse really inverts
+    np.testing.assert_allclose(tr.T_inv @ tr.T, np.eye(d), atol=1e-8)
+
+
+def test_dim_reduction_distortion_equals_leftout_eigs():
+    rng = np.random.default_rng(1)
+    d, n = 10, 20000
+    Qx, Qy = _cov(rng, d), _cov(rng, d)
+    X = rng.multivariate_normal(np.zeros(d), Qx, size=n).astype(np.float32)
+    Sx = np.asarray(second_moment(X), np.float64)
+    for m in [2, 5, 9]:
+        dr = make_dim_reduction(Sx, Qy, m)
+        Xh = dr_decode(dr, dr_encode(dr, X))
+        emp = float(distortion_quadratic(X, Xh, Qy))
+        assert emp == pytest.approx(dr.left_out, rel=5e-3)
+
+
+def test_dim_reduction_full_rank_is_exact():
+    rng = np.random.default_rng(2)
+    d = 6
+    Qx, Qy = _cov(rng, d), _cov(rng, d)
+    X = rng.multivariate_normal(np.zeros(d), Qx, size=200).astype(np.float32)
+    dr = make_dim_reduction(Qx, Qy, d)
+    Xh = dr_decode(dr, dr_encode(dr, X))
+    np.testing.assert_allclose(np.asarray(Xh), X, atol=1e-3)
+
+
+@given(st.integers(1, 9))
+@settings(max_examples=10, deadline=None)
+def test_dr_never_worse_than_pca_in_objective(m):
+    """Theorem 3 optimality: the proposed basis minimizes (7), so it must beat
+    (or tie) PCA under that metric."""
+    rng = np.random.default_rng(m)
+    d, n = 10, 4000
+    Qx, Qy = _cov(rng, d), _cov(rng, d, scale=3.0)
+    X = rng.multivariate_normal(np.zeros(d), Qx, size=n).astype(np.float32)
+    Sx = np.asarray(second_moment(X), np.float64)
+    dr = make_dim_reduction(Sx, Qy, m)
+    pc = make_pca(Sx, m)
+    e_dr = float(distortion_quadratic(X, dr_decode(dr, dr_encode(dr, X)), Qy))
+    e_pc = float(distortion_quadratic(X, dr_decode(pc, dr_encode(pc, X)), Qy))
+    assert e_dr <= e_pc * 1.01  # tie allowed (identical covariances case)
+
+
+def test_dr_equals_pca_when_sy_identity():
+    rng = np.random.default_rng(5)
+    d = 8
+    Qx = _cov(rng, d)
+    X = rng.multivariate_normal(np.zeros(d), Qx, size=1000).astype(np.float32)
+    dr = make_dim_reduction(Qx, np.eye(d), 4)
+    pc = make_pca(Qx, 4)
+    e_dr = float(distortion_quadratic(X, dr_decode(dr, dr_encode(dr, X)), np.eye(d)))
+    e_pc = float(distortion_quadratic(X, dr_decode(pc, dr_encode(pc, X)), np.eye(d)))
+    assert e_dr == pytest.approx(e_pc, rel=1e-5)
