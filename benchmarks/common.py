@@ -10,6 +10,9 @@ import time
 
 import numpy as np
 
+# every emit() lands here so benchmarks/run.py --json can write BENCH_*.json
+RESULTS: list = []
+
 
 def timed(fn, *args, repeats=3, **kw):
     fn(*args, **kw)  # warmup / compile
@@ -21,6 +24,7 @@ def timed(fn, *args, repeats=3, **kw):
 
 
 def emit(name: str, us_per_call: float, **derived):
+    RESULTS.append({"name": name, "us_per_call": float(us_per_call), "derived": derived})
     kv = "|".join(f"{k}={v:.6g}" if isinstance(v, float) else f"{k}={v}" for k, v in derived.items())
     print(f"{name},{us_per_call:.1f},{kv}", flush=True)
 

@@ -1,0 +1,175 @@
+"""Perf-regression harness for the distributed-GP hot path (EXPERIMENTS.md §Perf).
+
+Times old-vs-new on three axes so the speedups are recorded numbers:
+
+* ``train_gp``: legacy per-step jit dispatch loop vs the single lax.scan
+  program (dispatch counts are structural: ``steps`` host dispatches vs 1);
+* ``broadcast_gp`` with m=8: serial host protocol (scipy scheme fit + one
+  dense solve per machine) vs the vmapped padded-shard protocol;
+* quantized gram assembly: unfused (decode X̂ to HBM, then matmul) vs the
+  fused dequantize+gram Pallas kernel (int codes straight to the MXU).
+
+Run standalone to write BENCH_hotpath.json:
+  PYTHONPATH=src python -m benchmarks.hotpath_bench [--full]
+or through the driver: PYTHONPATH=src python -m benchmarks.run --json --only hotpath
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .common import timed, emit
+
+
+def _problem(n, d, m, seed=0):
+    from repro.core import split_machines
+
+    rng = np.random.default_rng(seed)
+    W = rng.normal(size=(d, 2))
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    y = (np.sin(X @ W[:, 0]) + 0.4 * (X @ W[:, 1]) + 0.05 * rng.normal(size=n)).astype(
+        np.float32
+    )
+    Xt = rng.normal(size=(max(n // 6, 16), d)).astype(np.float32)
+    parts = split_machines(X, y, m, jax.random.PRNGKey(seed))
+    return X, y, jnp.asarray(Xt), parts
+
+
+def _warm_train_dispatch(X, y, steps: int, lr: float = 0.05):
+    """Warm-cache dispatch-overhead measurement: train_gp's OWN Adam step
+    (via gp.make_adam_step, so the benchmark always times the shipped update
+    rule), but with the jitted programs built ONCE and reused across timed
+    calls — train_gp builds fresh closures per call, so timing it always
+    includes trace+compile.  Loop issues ``steps`` cached dispatches; scan
+    issues one."""
+    from repro.core.gp import gram_fn, init_params, make_adam_step, nlml_from_gram
+
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    k = gram_fn("se")
+
+    def loss(p):
+        return nlml_from_gram(k(p, X), y, jnp.exp(p.log_noise))
+
+    step = make_adam_step(loss, lr)
+    jstep = jax.jit(step)
+
+    @jax.jit
+    def scan_run(p, m, v):
+        def body(carry, i):
+            return step(i, *carry), None
+
+        (p, m, v), _ = jax.lax.scan(body, (p, m, v), jnp.arange(steps, dtype=jnp.float32))
+        return p
+
+    p0 = init_params()
+    m0 = jax.tree.map(jnp.zeros_like, p0)
+    v0 = jax.tree.map(jnp.zeros_like, p0)
+
+    def run_loop():
+        p, m, v = p0, m0, v0
+        for i in range(steps):
+            p, m, v = jstep(jnp.float32(i), p, m, v)
+        return jax.block_until_ready(p)
+
+    def run_scan():
+        return jax.block_until_ready(scan_run(p0, m0, v0))
+
+    _, us_loop = timed(run_loop)  # timed() warms once -> repeats hit the cache
+    _, us_scan = timed(run_scan)
+    return us_loop, us_scan
+
+
+def main(quick: bool = True):
+    from repro.core import train_gp, broadcast_gp
+    from repro.core.distributed_gp import pad_parts, _run_wire_protocol
+    from repro.kernels.gram.ops import gram as gram_kernel
+    from repro.kernels.qgram.ops import qgram
+    from repro.kernels.quant.ops import decode as quant_decode
+
+    n, d, m = (240, 6, 8) if quick else (1000, 21, 40)
+    steps = 30 if quick else 150
+    X, y, Xt, parts = _problem(n, d, m)
+
+    # ---- train_gp: per-step dispatch loop vs one scanned program ----
+    # Cold rows: a fresh train_gp call re-traces + re-compiles (what a fresh
+    # experiment pays).  Block on the returned params so async device
+    # execution is inside the measured window.
+    _, us_loop = timed(
+        lambda: jax.block_until_ready(train_gp(X, y, steps=steps, impl="loop").params),
+        repeats=1,
+    )
+    _, us_scan = timed(
+        lambda: jax.block_until_ready(train_gp(X, y, steps=steps, impl="scan").params),
+        repeats=1,
+    )
+    emit("hotpath/train_gp_loop", us_loop, host_dispatches=steps, includes_compile=1)
+    emit(
+        "hotpath/train_gp_scan",
+        us_scan,
+        host_dispatches=1,
+        dispatch_ratio=steps,  # structural: loop issues `steps` jit calls, scan 1
+        speedup=us_loop / us_scan,
+        includes_compile=1,
+    )
+    us_loop_w, us_scan_w = _warm_train_dispatch(X, y, steps)
+    emit("hotpath/train_gp_loop_warm", us_loop_w, host_dispatches=steps)
+    emit(
+        "hotpath/train_gp_scan_warm",
+        us_scan_w,
+        host_dispatches=1,
+        speedup=us_loop_w / us_scan_w,
+    )
+
+    # ---- broadcast_gp m=8: serial host protocol vs vmapped shards ----
+    _, us_host = timed(
+        lambda: jax.block_until_ready(
+            broadcast_gp(parts, 24, Xt, steps=steps, impl="host", train_impl="loop")[0]
+        ),
+        repeats=1,
+    )
+    _, us_bat = timed(
+        lambda: jax.block_until_ready(broadcast_gp(parts, 24, Xt, steps=steps)[0]),
+        repeats=1,
+    )
+    emit(f"hotpath/broadcast_gp_m{m}_host", us_host)
+    emit(f"hotpath/broadcast_gp_m{m}_batched", us_bat, speedup=us_host / us_bat)
+
+    # ---- quantized gram: unfused decode->HBM->matmul vs fused qgram ----
+    shards = pad_parts(parts)
+    ws = _run_wire_protocol(shards.X, shards.mask, 24, 12, "broadcast", 0)
+    codes = np.asarray(ws.codes[1])
+    codes = jnp.asarray(np.where(codes < 0, 0, codes))
+    cents = ws.scaled_cents[1]
+    Y = jnp.asarray(np.random.default_rng(1).normal(size=(n, d)).astype(np.float32))
+
+    def unfused():
+        xhat = quant_decode(codes, cents)  # X̂ materialized (the HBM round-trip)
+        return gram_kernel(xhat, Y)
+
+    def fused():
+        return qgram(codes, cents, Y)
+
+    ref, us_unfused = timed(lambda: jax.block_until_ready(unfused()))
+    out, us_fused = timed(lambda: jax.block_until_ready(fused()))
+    err = float(jnp.max(jnp.abs(ref - out)))
+    emit("hotpath/qgram_unfused", us_unfused)
+    emit("hotpath/qgram_fused", us_fused, speedup=us_unfused / us_fused, max_abs_err=err)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from . import common
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default="BENCH_hotpath.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(quick=not args.full)
+    with open(args.out, "w") as f:
+        json.dump(common.RESULTS, f, indent=1)
+    print(f"# wrote {args.out}")

@@ -3,10 +3,14 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
 
   PYTHONPATH=src python -m benchmarks.run          # quick pass (CI scale)
   PYTHONPATH=src python -m benchmarks.run --full   # paper-scale settings
+  PYTHONPATH=src python -m benchmarks.run --json   # + write BENCH_<name>.json
+                                                   # (us/call per benchmark row;
+                                                   #  see EXPERIMENTS.md §Perf)
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -14,13 +18,17 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_<name>.json per selected benchmark")
     ap.add_argument("--only", default=None,
-                    help="comma list of: fig2,fig3,fig4,fig56,fig7,kernels,ablation_bits,roofline")
+                    help="comma list of: fig2,fig3,fig4,fig56,fig7,kernels,"
+                         "ablation_bits,roofline,hotpath")
     args = ap.parse_args()
     quick = not args.full
 
     from . import fig2_distortion, fig3_pca, fig4_gp1d, fig56_regression, fig7_sparse
-    from . import kernels_bench, roofline, ablation_bits
+    from . import kernels_bench, roofline, ablation_bits, hotpath_bench
+    from . import common
 
     benches = {
         "fig2": lambda: fig2_distortion.main(quick=quick),
@@ -31,12 +39,19 @@ def main() -> None:
         "kernels": lambda: kernels_bench.main(quick=quick),
         "ablation_bits": lambda: ablation_bits.main(quick=quick),
         "roofline": lambda: roofline.main(),
+        "hotpath": lambda: hotpath_bench.main(quick=quick),
     }
     selected = args.only.split(",") if args.only else list(benches)
     print("name,us_per_call,derived")
     for name in selected:
         t0 = time.time()
+        start = len(common.RESULTS)
         benches[name]()
+        if args.json:
+            rows = common.RESULTS[start:]
+            with open(f"BENCH_{name}.json", "w") as f:
+                json.dump(rows, f, indent=1)
+            print(f"# wrote BENCH_{name}.json ({len(rows)} rows)", flush=True)
         print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
 
 

@@ -49,11 +49,16 @@ def q_all_gather(x, axis_name: str, bits_per_sample: int, max_bits: int = 8):
 
     S_loc = x.T @ x / n_loc
     S_tot = jax.lax.psum(S_loc, axis_name)
-    state = jax_scheme.fit_scheme(S_loc, S_tot - S_loc, bits_per_sample, max_bits)
-    tables = Q.build_codebook_tables(max_bits)
+    # cap per-dim rates (and therefore codebook tables) at the max ALLOCATED
+    # rate: greedy bit loading never hands one dimension more than
+    # bits_per_sample bits, so a full 2^max_bits table only inflates the
+    # (n, d, 2^cap) quantize/dequantize broadcast temporaries
+    cap = jax_scheme.codebook_cap(bits_per_sample, max_bits)
+    state = jax_scheme.fit_scheme(S_loc, S_tot - S_loc, bits_per_sample, cap)
+    tables = jax_scheme.scheme_tables(bits_per_sample, max_bits)
 
     codes = jax_scheme.encode(state, x, tables)
-    codes_small = codes.astype(jnp.uint8 if max_bits <= 8 else jnp.int32)
+    codes_small = codes.astype(jnp.uint8 if cap <= 8 else jnp.int32)
 
     all_codes = jax.lax.all_gather(codes_small, axis_name)  # (m, n_loc, d) int8 wire
     all_Tinv = jax.lax.all_gather(state["T_inv"], axis_name)  # side info O(d^2)

@@ -1,0 +1,95 @@
+"""Version guards for the jax API surface this repo targets.
+
+The codebase is written against the current jax API (``jax.shard_map``,
+``jax.make_mesh(..., axis_types=...)``, ``jax.set_mesh``,
+``jax.sharding.get_abstract_mesh``); older releases (<= 0.4.x) spell these
+``jax.experimental.shard_map.shard_map(check_rep=...)``, plain ``make_mesh``,
+``with mesh:`` and the thread-resources physical mesh.  Everything that needs
+one of these goes through this module so the rest of the tree stays written
+against the new spelling.
+"""
+from __future__ import annotations
+
+import contextlib
+from functools import partial
+
+import jax
+
+__all__ = [
+    "shard_map",
+    "make_mesh",
+    "set_mesh",
+    "get_abstract_mesh",
+    "cost_analysis_dict",
+]
+
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _old_shard_map
+
+    def shard_map(f=None, /, *, mesh, in_specs, out_specs, check_vma=True, **kw):
+        """New-style ``jax.shard_map``: keyword mesh/specs, ``check_vma``
+        (mapped to the old ``check_rep``)."""
+        if f is None:
+            return partial(
+                shard_map, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_vma=check_vma, **kw,
+            )
+        return _old_shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=check_vma, **kw,
+        )
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+    """``jax.make_mesh`` with ``axis_types`` dropped when unsupported.
+
+    ``axis_types`` may be ``"auto"``/``"explicit"`` strings or actual
+    ``jax.sharding.AxisType`` members; on jax without AxisType every mesh is
+    implicitly Auto, which is what this repo uses everywhere.
+    """
+    AxisType = getattr(jax.sharding, "AxisType", None)
+    if AxisType is None:
+        return jax.make_mesh(axis_shapes, axis_names, **kw)
+    if axis_types is None:
+        axis_types = (AxisType.Auto,) * len(axis_names)
+    axis_types = tuple(
+        getattr(AxisType, t.capitalize()) if isinstance(t, str) else t
+        for t in axis_types
+    )
+    return jax.make_mesh(axis_shapes, axis_names, axis_types=axis_types, **kw)
+
+
+def set_mesh(mesh):
+    """``jax.set_mesh`` context manager; on old jax, entering the Mesh sets the
+    thread-resources env, which is what ``get_abstract_mesh`` falls back to."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh  # Mesh is itself a context manager on 0.4.x
+
+
+def get_abstract_mesh():
+    """Current mesh (abstract on new jax, physical thread-resources mesh on
+    old jax — both expose ``.shape``, ``.axis_names`` and work as the ``mesh=``
+    argument of :func:`shard_map`)."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    from jax._src import mesh as mesh_lib
+
+    return mesh_lib.thread_resources.env.physical_mesh
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict.
+
+    Old jax returns a one-element list of per-device dicts; new jax returns the
+    dict directly; either may be None on some backends.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost or {})

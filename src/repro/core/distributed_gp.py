@@ -13,13 +13,27 @@ Two protocols:
   Nyström gram (own block exact), forms a local predictive, and the per-point
   predictives are fused with the KL barycenter (eqs. 62-64).
 
-Two execution modes:
+Execution modes:
 
-* ``m`` simulated machines on one host (vmapped / python-loop) — bit-exact
-  protocol semantics, used for the paper's 40-machine experiments;
+* ``impl="batched"`` (default) — machines live on uniform padded shards
+  ``(m, n_pad, d)`` with validity masks; scheme fitting
+  (core.jax_scheme.fit_scheme), encode/decode, per-machine Nyström
+  predictives, and PoE experts all run under ``jax.vmap`` — one batched
+  eigh/Cholesky instead of m serial ones, and the whole wire protocol is ONE
+  compiled program;
+* ``impl="host"`` — the original serial reference/oracle: one host-side scipy
+  ``PerSymbolScheme`` fit and one dense Cholesky per machine.  Protocol
+  semantics (own block exact, wire-bit accounting) are identical; the batched
+  path is locked to it by tests/test_batched_protocol.py;
 * a ``shard_map`` mode where machines are devices along a mesh axis and the
-  wire is a real ``jax.lax.all_gather`` of int8 codes (see repro.comm) — the
-  production path, shared with the transformer GP head.
+  wire is a real ``jax.lax.all_gather`` of int8 codes (core.mesh_gp +
+  repro.comm) — the production path, shared with the transformer GP head.
+
+``gram_backend="pallas"`` routes gram assembly through the Pallas tiled-gram
+kernel (kernels/gram) and — for reconstructed blocks — feeds the int wire
+codes straight to the fused dequantize+gram kernel (kernels/qgram), so X̂
+never round-trips through HBM for the big matmuls (SE kernels ride the same
+inner products via ‖x−x'‖² = |x|² + |x'|² − 2⟨x,x'⟩).
 
 Targets y are transmitted unquantized (scalars; the paper quantizes inputs
 only).
@@ -28,21 +42,35 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable, Sequence
+from typing import Callable, NamedTuple, Sequence
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from .distortion import second_moment
-from .schemes import PerSymbolScheme, DimReductionScheme
-from .gp import GPParams, init_params, gram_fn, nlml_from_gram, posterior_from_gram, train_gp
-from .nystrom import nystrom_complete, nystrom_posterior
+from . import jax_scheme
+from . import quantizers as Q
+from .schemes import PerSymbolScheme
+from .gp import (
+    GPParams,
+    init_params,
+    gram_fn,
+    kernel_from_inner,
+    prior_diag,
+    nlml_from_gram,
+    posterior_from_gram,
+    train_gp,
+)
+from .nystrom import nystrom_complete, nystrom_cross, nystrom_posterior
 from .fusion import kl_fuse_diag
 from .poe import combine
 
 __all__ = [
     "split_machines",
+    "pad_parts",
+    "PaddedShards",
+    "WireState",
     "quantize_to_center",
     "single_center_gp",
     "broadcast_gp",
@@ -59,14 +87,108 @@ def split_machines(X, y, m: int, key) -> list[tuple[jnp.ndarray, jnp.ndarray]]:
     return [(jnp.asarray(X)[c], jnp.asarray(y)[c]) for c in chunks]
 
 
-def quantize_to_center(parts, bits_per_sample: int, center: int = 0):
-    """Run the single-center wire protocol; returns
-    (X_recon, y_all, wire_bits, n_center, sq_norms).
+# --------------------------------------------------------------------------
+# uniform padded shards — the layout every vmapped protocol stage runs on
+# --------------------------------------------------------------------------
 
-    X_recon stacks the center's exact block first, then every machine's decoded
-    points, matching the paper's gram-row layout.  ``sq_norms`` carries each
-    point's EXACT |x|² (an O(32 n)-bit extra the Snelson–Ghahramani/FITC
-    diagonal correction needs; included in the wire accounting)."""
+
+class PaddedShards(NamedTuple):
+    """(m, n_pad, d) machine shards; invalid rows are zero with mask 0."""
+
+    X: jnp.ndarray  # (m, n_pad, d)
+    y: jnp.ndarray  # (m, n_pad)
+    mask: jnp.ndarray  # (m, n_pad) float32 validity
+    lengths: tuple  # per-machine true row counts (python ints)
+
+
+def pad_parts(parts) -> PaddedShards:
+    m = len(parts)
+    d = parts[0][0].shape[1]
+    lengths = tuple(int(p[0].shape[0]) for p in parts)
+    n_pad = max(lengths)
+    X = np.zeros((m, n_pad, d), np.float32)
+    y = np.zeros((m, n_pad), np.float32)
+    mask = np.zeros((m, n_pad), np.float32)
+    for j, (Xj, yj) in enumerate(parts):
+        X[j, : lengths[j]] = np.asarray(Xj, np.float32)
+        y[j, : lengths[j]] = np.asarray(yj, np.float32)
+        mask[j, : lengths[j]] = 1.0
+    return PaddedShards(jnp.asarray(X), jnp.asarray(y), jnp.asarray(mask), lengths)
+
+
+class WireState(NamedTuple):
+    """Everything the wire protocol produced, for every machine at once."""
+
+    codes: jnp.ndarray  # (m, n_pad, d) int32; padded rows = -1 (decode to 0)
+    decoded: jnp.ndarray  # (m, n_pad, d) reconstructions; padded rows zero
+    T_inv: jnp.ndarray  # (m, d, d) decorrelating inverses
+    rates: jnp.ndarray  # (m, d) int32 per-dim bit allocation
+    sigma: jnp.ndarray  # (m, d)
+    scaled_cents: jnp.ndarray  # (m, d, C) qgram decode tables
+
+
+@partial(jax.jit, static_argnames=("total_bits", "max_bits", "mode", "center"))
+def _run_wire_protocol(X, mask, total_bits: int, max_bits: int, mode: str, center: int):
+    """Fit + encode + decode for EVERY machine under one jit: a single batched
+    eigh pair (fit), one batched quantize and one batched dequantize.
+
+    mode="center": every machine targets the center's covariance (§5.1);
+    mode="broadcast": machine j targets the sum of the others' (§5.2)."""
+    m, n_pad, d = X.shape
+    n = jnp.maximum(mask.sum(axis=1), 1.0)
+    S = jnp.einsum("mnd,mne->mde", X, X) / n[:, None, None]  # padded rows are 0
+    if mode == "center":
+        Qy = jnp.broadcast_to(S[center], (m, d, d))
+    elif mode == "broadcast":
+        Qy = jnp.sum(S, axis=0)[None] - S
+    else:
+        raise ValueError(f"unknown wire mode {mode!r}")
+    cap = jax_scheme.codebook_cap(total_bits, max_bits)
+    tables = jax_scheme.scheme_tables(total_bits, max_bits)
+    states = jax_scheme.fit_scheme_batched(S, Qy, total_bits, cap)
+    codes = jax.vmap(lambda st, x: jax_scheme.encode(st, x, tables))(states, X)
+    decoded = jax.vmap(lambda st, c: jax_scheme.decode(st, c, tables))(states, codes)
+    decoded = decoded * mask[..., None]
+    codes = jnp.where(mask[..., None] > 0, codes, -1)
+    cents = jax.vmap(lambda st: jax_scheme.scaled_centroids(st, tables))(states)
+    return WireState(
+        codes, decoded, states["T_inv"], states["rates"], states["sigma"], cents
+    )
+
+
+def _wire_bits(rates, lengths, d: int, skip=None) -> int:
+    """Paper §4 accounting: R bits/sample on the wire + O(2 d²) fp32 side info
+    per transmitting machine."""
+    rates = np.asarray(rates)
+    total = 0
+    for j, n_j in enumerate(lengths):
+        if j == skip:
+            continue
+        total += int(rates[j].sum()) * n_j + 2 * d * d * 32
+    return total
+
+
+def _mask_gram(G, mask_r, mask_c=None, pin_diag=True):
+    """Zero padded rows/cols; optionally pin their diagonal to 1 so Cholesky
+    stays SPD.  A point with k(·, pad)=0, y_pad=0 contributes nothing to the
+    posterior, which makes the padded program bit-compatible with the
+    unpadded one."""
+    mask_c = mask_r if mask_c is None else mask_c
+    Gm = G * (mask_r[:, None] * mask_c[None, :])
+    if pin_diag:
+        Gm = Gm + jnp.diag(1.0 - mask_r)
+    return Gm
+
+
+# --------------------------------------------------------------------------
+# §5.1 single-center protocol
+# --------------------------------------------------------------------------
+
+
+def _quantize_to_center_host(
+    parts, bits_per_sample: int, center: int = 0, max_bits: int = Q.DEFAULT_MAX_BITS
+):
+    """Serial reference protocol: host-side scipy PerSymbolScheme per machine."""
     S_c = second_moment(parts[center][0])
     Xs, ys, sqs, wire = [], [], [], 0
     for j, (Xj, yj) in enumerate(parts):
@@ -74,7 +196,9 @@ def quantize_to_center(parts, bits_per_sample: int, center: int = 0):
             Xs.append(Xj)
         else:
             S_j = second_moment(Xj)
-            sch = PerSymbolScheme(bits_per_sample).fit(np.asarray(S_j), np.asarray(S_c))
+            sch = PerSymbolScheme(bits_per_sample, max_bits).fit(
+                np.asarray(S_j), np.asarray(S_c)
+            )
             Xs.append(sch.decode(sch.encode(Xj)))
             wire += sch.wire_bits(Xj.shape[0]) + sch.side_info_bits(Xj.shape[1])
             # (the optional FITC diagonal costs an extra 32 bits/point of
@@ -89,6 +213,44 @@ def quantize_to_center(parts, bits_per_sample: int, center: int = 0):
     return X_recon, y_all, wire, n_center, sq_norms
 
 
+def _quantize_to_center_batched(parts, bits_per_sample: int, center: int, max_bits: int):
+    """Batched §5.1 wire: one vmapped fit/encode/decode, then assemble the
+    center's gram-row layout (exact center block first)."""
+    shards = pad_parts(parts)
+    m, _, d = shards.X.shape
+    wire_state = _run_wire_protocol(
+        shards.X, shards.mask, bits_per_sample, max_bits, "center", center
+    )
+    wire = _wire_bits(wire_state.rates, shards.lengths, d, skip=center)
+    order = [center] + [j for j in range(m) if j != center]
+    blocks = [parts[center][0]] + [
+        wire_state.decoded[j, : shards.lengths[j]] for j in order[1:]
+    ]
+    X_recon = jnp.concatenate(blocks, axis=0)
+    y_all = jnp.concatenate([parts[j][1] for j in order], axis=0)
+    sq_norms = jnp.concatenate(
+        [jnp.sum(jnp.asarray(parts[j][0]) ** 2, axis=-1) for j in order], axis=0
+    )
+    return X_recon, y_all, wire, shards.lengths[center], sq_norms, shards, wire_state, order
+
+
+def quantize_to_center(
+    parts, bits_per_sample: int, center: int = 0, impl: str = "batched",
+    max_bits: int = Q.DEFAULT_MAX_BITS,
+):
+    """Run the single-center wire protocol; returns
+    (X_recon, y_all, wire_bits, n_center, sq_norms).
+
+    X_recon stacks the center's exact block first, then every machine's decoded
+    points, matching the paper's gram-row layout.  ``sq_norms`` carries each
+    point's EXACT |x|² (an O(32 n)-bit extra the Snelson–Ghahramani/FITC
+    diagonal correction needs; included in the wire accounting)."""
+    if impl == "host":
+        return _quantize_to_center_host(parts, bits_per_sample, center, max_bits)
+    out = _quantize_to_center_batched(parts, bits_per_sample, center, max_bits)
+    return out[:5]
+
+
 @dataclasses.dataclass
 class CenterGP:
     kernel: str
@@ -99,14 +261,87 @@ class CenterGP:
     wire_bits: int
     gram_mode: str = "nystrom"
     sq_norms: jnp.ndarray | None = None  # exact |x|^2 for the FITC diagonal
+    gram_backend: str = "xla"
+    wire: WireState | None = None  # int codes + tables (pallas/qgram path)
+    block_order: tuple | None = None  # non-center machine ids, X_recon order
+    block_lengths: tuple | None = None  # their true row counts
+    _ip_cache: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    def __post_init__(self):
+        if self.gram_backend == "pallas":
+            if self.wire is None:
+                raise ValueError(
+                    'gram_backend="pallas" requires the batched wire protocol '
+                    "(int codes) — use impl=\"batched\""
+                )
+            # materialize the inner-product cache NOW, outside any jit trace:
+            # a cache miss inside train_gp's scan would store a leaked tracer
+            self.warm_ip()
 
     def _exact_diag(self, params):
         """k(x_i, x_i) from the EXACT squared norms the machines shipped."""
-        if self.kernel == "linear":
-            return jnp.exp(params.log_a) * self.sq_norms + jnp.exp(params.log_b)
-        return jnp.full_like(self.sq_norms, jnp.exp(params.log_a))  # SE: constant
+        return prior_diag(self.kernel, params, self.sq_norms)
+
+    # -- pallas/qgram inner-product assembly --------------------------------
+
+    def _ip_rows(self, Y):
+        """⟨x_i, y_j⟩ for every x in X_recon layout: (N, p).
+
+        Center rows via the Pallas tiled gram on exact points; reconstructed
+        rows straight from int codes via the fused dequantize+gram kernel —
+        X̂ = dequant(codes) @ T_inv^T, so ⟨x̂, y⟩ = qgram(codes, Y @ T_inv)."""
+        from ..kernels.gram.ops import gram as gram_kernel
+        from ..kernels.qgram.ops import qgram_batched
+
+        idx = list(self.block_order[1:])
+        codes = self.wire.codes[jnp.asarray(idx)]
+        cents = self.wire.scaled_cents[jnp.asarray(idx)]
+        T_inv = self.wire.T_inv[jnp.asarray(idx)]
+        Xc = self.X_recon[: self.n_center]
+        top = gram_kernel(Xc, Y)  # (n_c, p)
+        proj = jnp.einsum("pd,mde->mpe", Y, T_inv)  # Y in each decorrelated basis
+        blocks = qgram_batched(codes, cents, proj)  # (m-1, n_pad, p)
+        rows = [top] + [blocks[i, : self.block_lengths[j]] for i, j in enumerate(idx)]
+        return jnp.concatenate(rows, axis=0)
+
+    def _ip(self, key: str):
+        """Cached param-independent inner products (pallas backend): computed
+        once with the kernels, then reused as constants by every training step
+        and prediction."""
+        if key not in self._ip_cache:
+            Xc = self.X_recon[: self.n_center]
+            if key == "KN":
+                self._ip_cache[key] = self._ip_rows(Xc).T  # (n_c, N)
+            elif key == "NN":
+                self._ip_cache[key] = self._ip_rows(self.X_recon)  # (N, N)
+            elif key == "sq":
+                self._ip_cache[key] = jnp.sum(self.X_recon**2, axis=-1)
+        return self._ip_cache[key]
+
+    def warm_ip(self):
+        """Materialize the inner-product cache eagerly (before train_gp's scan
+        traces _gram) so the Pallas kernels run once, not once per trace."""
+        if self.gram_backend != "pallas":
+            return self
+        self._ip("sq")
+        self._ip("NN" if self.gram_mode == "direct" else "KN")
+        return self
+
+    def _gram_pallas(self, params):
+        sq = self._ip("sq")
+        K = self.n_center
+        if self.gram_mode == "direct":
+            return kernel_from_inner(self.kernel, params, self._ip("NN"), sq, sq)
+        ip_KN = self._ip("KN")
+        G_KK = kernel_from_inner(self.kernel, params, ip_KN[:, :K], sq[:K], sq[:K])
+        G_KN = kernel_from_inner(self.kernel, params, ip_KN, sq[:K], sq)
+        if self.gram_mode == "nystrom_fitc" and self.sq_norms is not None:
+            return nystrom_complete(G_KK, G_KN, exact_diag=self._exact_diag(params))
+        return nystrom_complete(G_KK, G_KN)
 
     def _gram(self, params):
+        if self.gram_backend == "pallas":
+            return self._gram_pallas(params)
         k = gram_fn(self.kernel)
         if self.gram_mode == "direct":
             # beyond-paper: all blocks straight from the reconstructed points;
@@ -121,16 +356,25 @@ class CenterGP:
             return nystrom_complete(G_KK, G_KN, exact_diag=self._exact_diag(params))
         return nystrom_complete(G_KK, G_KN)
 
+
     def predict(self, X_star):
+        if self.gram_backend == "pallas":
+            return self._predict_pallas(X_star)
         k = gram_fn(self.kernel)
         g_ss = jnp.diagonal(k(self.params, X_star, X_star))
         noise = jnp.exp(self.params.log_noise)
         if self.gram_mode == "nystrom_fitc":
             # dense path: the FITC-corrected gram is full-rank (the exact
             # diagonal acts as per-point noise), so the direct predictive is
-            # well-conditioned
-            G = self._gram(self.params)
-            G_sn = k(self.params, X_star, self.X_recon)
+            # well-conditioned.  The test cross-covariance must still pass
+            # through the Nyström map — the raw k(x*, x) against a
+            # Nyström-structured train gram badly mis-weights y-components
+            # outside the rank-K span (was the out-of-range seed bug).
+            Xc = self.X_recon[: self.n_center]
+            G_KK = k(self.params, Xc)
+            G_KN = k(self.params, Xc, self.X_recon)
+            G = nystrom_complete(G_KK, G_KN, exact_diag=self._exact_diag(self.params))
+            G_sn = nystrom_cross(G_KK, G_KN, k(self.params, X_star, Xc))
             return posterior_from_gram(G, G_sn, g_ss, self.y, noise)
         if self.gram_mode == "nystrom":
             # consistent low-rank predictive: the test cross-covariances must
@@ -145,6 +389,36 @@ class CenterGP:
         G_sn = k(self.params, X_star, self.X_recon)
         return posterior_from_gram(G, G_sn, g_ss, self.y, noise)
 
+    def _predict_pallas(self, X_star):
+        from ..kernels.gram.ops import gram as gram_kernel
+
+        X_star = jnp.asarray(X_star, jnp.float32)
+        p = self.params
+        sq = self._ip("sq")
+        sq_star = jnp.sum(X_star**2, -1)
+        K = self.n_center
+        Xc = self.X_recon[:K]
+        g_ss = prior_diag(self.kernel, p, sq_star)
+        noise = jnp.exp(p.log_noise)
+        ip_KN = self._ip("KN")
+        G_KK = kernel_from_inner(self.kernel, p, ip_KN[:, :K], sq[:K], sq[:K])
+        if self.gram_mode == "nystrom":
+            ip_sK = gram_kernel(X_star, Xc)
+            G_sK = kernel_from_inner(self.kernel, p, ip_sK, sq_star, sq[:K])
+            G_KN = kernel_from_inner(self.kernel, p, ip_KN, sq[:K], sq)
+            return nystrom_posterior(G_KK, G_KN, self.y, noise, G_sK, g_ss)
+        G = self._gram_pallas(p)
+        if self.gram_mode == "nystrom_fitc":
+            # FITC-consistent test covariance (see the xla path)
+            ip_sK = gram_kernel(X_star, Xc)
+            G_sK = kernel_from_inner(self.kernel, p, ip_sK, sq_star, sq[:K])
+            G_KN = kernel_from_inner(self.kernel, p, ip_KN, sq[:K], sq)
+            G_sn = nystrom_cross(G_KK, G_KN, G_sK)
+        else:
+            ip_sN = self._ip_rows(X_star).T  # (t, N)
+            G_sn = kernel_from_inner(self.kernel, p, ip_sN, sq_star, sq)
+        return posterior_from_gram(G, G_sn, g_ss, self.y, noise)
+
 
 def single_center_gp(
     parts,
@@ -154,10 +428,29 @@ def single_center_gp(
     lr: float = 0.05,
     params: GPParams | None = None,
     gram_mode: str = "nystrom",
+    impl: str = "batched",
+    gram_backend: str = "xla",
+    max_bits: int = Q.DEFAULT_MAX_BITS,
+    train_impl: str = "scan",
 ) -> CenterGP:
     """Full §5.1 protocol: quantize-in, Nyström-complete, train hypers on the
-    completed gram by marginal likelihood, return a predictor."""
-    X_recon, y_all, wire, n_c, sq_norms = quantize_to_center(parts, bits_per_sample)
+    completed gram by marginal likelihood, return a predictor.
+
+    ``impl="batched"`` runs the wire protocol vmapped over machines inside one
+    jit; ``impl="host"`` is the serial scipy reference.  ``train_impl="scan"``
+    makes hyperparameter training one compiled lax.scan program."""
+    wire_state = None
+    order = None
+    lengths = None
+    if impl == "host":
+        X_recon, y_all, wire, n_c, sq_norms = _quantize_to_center_host(
+            parts, bits_per_sample, 0, max_bits
+        )
+    else:
+        (X_recon, y_all, wire, n_c, sq_norms, shards, wire_state, order) = (
+            _quantize_to_center_batched(parts, bits_per_sample, 0, max_bits)
+        )
+        lengths = shards.lengths
     if gram_mode == "nystrom_fitc":  # exact |x|^2 side-channel (32 bits/point)
         wire += 32 * (X_recon.shape[0] - n_c)
     model = CenterGP(
@@ -169,6 +462,10 @@ def single_center_gp(
         wire_bits=wire,
         gram_mode=gram_mode,
         sq_norms=sq_norms,
+        gram_backend=gram_backend,
+        wire=wire_state,
+        block_order=tuple(order) if order is not None else None,
+        block_lengths=lengths,
     )
     trained = train_gp(
         X_recon,
@@ -178,27 +475,23 @@ def single_center_gp(
         steps=steps,
         lr=lr,
         gram_override=model._gram,
+        impl=train_impl,
     )
     model.params = trained.params
     return model
 
 
-def broadcast_gp(
-    parts,
-    bits_per_sample: int,
-    X_star,
-    kernel: str = "se",
-    steps: int = 150,
-    lr: float = 0.05,
-    fuse: str = "kl",
-    gram_mode: str = "nystrom",
+# --------------------------------------------------------------------------
+# §5.2 broadcast protocol
+# --------------------------------------------------------------------------
+
+
+def _broadcast_gp_host(
+    parts, bits_per_sample, X_star, kernel, steps, lr, fuse, gram_mode, train_impl,
+    max_bits=Q.DEFAULT_MAX_BITS,
 ):
-    """Full §5.2 protocol.  Hyperparameters are trained once (at machine 0, on
-    its Nyström view) and shared — a cheap O(#hypers) extra broadcast; the
-    paper trains per-machine, which is embarrassingly parallel on a real
-    cluster but m-times serial here.  Returns fused (mean, var) at X_star plus
-    total wire bits.
-    """
+    """Serial reference §5.2: one scipy scheme fit and one dense solve per
+    machine (m host dispatches)."""
     m = len(parts)
     S = [second_moment(Xj) for Xj, _ in parts]
     S_tot = sum(S)
@@ -206,7 +499,7 @@ def broadcast_gp(
     wire = 0
     decoded = []
     for j, (Xj, yj) in enumerate(parts):
-        sch = PerSymbolScheme(bits_per_sample).fit(
+        sch = PerSymbolScheme(bits_per_sample, max_bits).fit(
             np.asarray(S[j]), np.asarray(S_tot - S[j])
         )
         decoded.append(sch.decode(sch.encode(Xj)))
@@ -229,7 +522,9 @@ def broadcast_gp(
         Xc = X0[:nc0]
         return nystrom_complete(k(p, Xc), k(p, Xc, X0))
 
-    trained = train_gp(X0, y0, kernel=kernel, steps=steps, lr=lr, gram_override=gram0)
+    trained = train_gp(
+        X0, y0, kernel=kernel, steps=steps, lr=lr, gram_override=gram0, impl=train_impl
+    )
     p = trained.params
 
     @partial(jax.jit, static_argnums=(2,))
@@ -238,8 +533,6 @@ def broadcast_gp(
         g_ss = jnp.diagonal(k(p, X_star, X_star))
         if gram_mode == "nystrom":
             # consistent low-rank predictive (see CenterGP.predict)
-            from .nystrom import nystrom_posterior
-
             return nystrom_posterior(
                 k(p, Xc), k(p, Xc, Xv), yv, jnp.exp(p.log_noise),
                 k(p, X_star, Xc), g_ss,
@@ -264,6 +557,192 @@ def broadcast_gp(
     return mu, s2, wire, p
 
 
+def _view_inner_products(shards: PaddedShards, wire: WireState, X_star, backend: str):
+    """The inner-product tensors every machine view is assembled from.
+
+    A (m, n, n): exact own-block products Xs_i Xs_i^T
+    B (m, m, n, n): B[j, i] = X̂_j Xs_i^T (decoded j against exact i)
+    C (m, t, n): X_star Xs_i^T
+
+    backend="pallas" computes A/C with the tiled gram kernel and B straight
+    from int codes with the fused dequantize+gram kernel."""
+    X = shards.X
+    X_star = jnp.asarray(X_star, jnp.float32)
+    if backend == "pallas":
+        from ..kernels.gram.ops import gram as gram_kernel
+        from ..kernels.qgram.ops import qgram
+
+        A = jax.vmap(lambda a: gram_kernel(a, a))(X)
+        proj = jnp.einsum("ind,jde->jine", X, wire.T_inv)  # (m_j, m_i, n, d)
+        B = jax.vmap(
+            lambda c, t, ys: jax.vmap(lambda yy: qgram(c, t, yy))(ys)
+        )(wire.codes, wire.scaled_cents, proj)
+        C = jax.vmap(lambda a: gram_kernel(X_star, a))(X)
+        return A, B, C
+    A = jnp.einsum("ind,imd->inm", X, X)
+    B = jnp.einsum("jnd,imd->jinm", wire.decoded, X)
+    C = jnp.einsum("td,ind->itn", X_star, X)
+    return A, B, C
+
+
+def broadcast_gp(
+    parts,
+    bits_per_sample: int,
+    X_star,
+    kernel: str = "se",
+    steps: int = 150,
+    lr: float = 0.05,
+    fuse: str = "kl",
+    gram_mode: str = "nystrom",
+    impl: str = "batched",
+    gram_backend: str = "xla",
+    max_bits: int = Q.DEFAULT_MAX_BITS,
+    train_impl: str = "scan",
+):
+    """Full §5.2 protocol.  Hyperparameters are trained once (at machine 0, on
+    its Nyström view) and shared — a cheap O(#hypers) extra broadcast; the
+    paper trains per-machine, which is embarrassingly parallel on a real
+    cluster but m-times serial here.  Returns fused (mean, var) at X_star plus
+    total wire bits.
+
+    The default ``impl="batched"`` runs every machine's scheme fit, decode,
+    and Nyström predictive under jax.vmap on padded shards — one batched
+    Cholesky for all m local predictives instead of m serial ones."""
+    if impl == "host":
+        if gram_backend == "pallas":
+            raise ValueError('gram_backend="pallas" requires impl="batched"')
+        return _broadcast_gp_host(
+            parts, bits_per_sample, X_star, kernel, steps, lr, fuse, gram_mode,
+            train_impl, max_bits,
+        )
+    m = len(parts)
+    shards = pad_parts(parts)
+    _, n_pad, d = shards.X.shape
+    X_star = jnp.asarray(X_star, jnp.float32)
+    wire_state = _run_wire_protocol(
+        shards.X, shards.mask, bits_per_sample, max_bits, "broadcast", 0
+    )
+    wire = _wire_bits(wire_state.rates, shards.lengths, d)
+
+    A, B, C = _view_inner_products(shards, wire_state, X_star, gram_backend)
+    sq_exact = jnp.sum(shards.X**2, -1)  # (m, n)
+    sq_dec = jnp.sum(wire_state.decoded**2, -1)
+    sq_star = jnp.sum(X_star**2, -1)
+
+    # ---- train shared hypers at machine 0 on its completed Nyström gram ----
+    # (unpadded slices; the inner products are param-independent constants, so
+    # the 150-step scan only re-does the cheap kernel map + Cholesky)
+    L = shards.lengths
+    n0 = L[0]
+    ip_KK0 = A[0][:n0, :n0]
+    ip_KN0 = jnp.concatenate(
+        [ip_KK0] + [B[j, 0][: L[j], :n0].T for j in range(1, m)], axis=1
+    )
+    sq0 = sq_exact[0][:n0]
+    sq_cols0 = jnp.concatenate([sq0] + [sq_dec[j][: L[j]] for j in range(1, m)])
+    y0 = jnp.concatenate([p[1] for p in parts], axis=0)
+    X0 = jnp.concatenate(
+        [parts[0][0]] + [wire_state.decoded[j, : L[j]] for j in range(1, m)], axis=0
+    )
+
+    def gram0(p):
+        G_KK = kernel_from_inner(kernel, p, ip_KK0, sq0, sq0)
+        G_KN = kernel_from_inner(kernel, p, ip_KN0, sq0, sq_cols0)
+        return nystrom_complete(G_KK, G_KN)
+
+    trained = train_gp(
+        X0, y0, kernel=kernel, steps=steps, lr=lr, gram_override=gram0, impl=train_impl
+    )
+    p = trained.params
+    noise = jnp.exp(p.log_noise)
+
+    # ---- every machine's local predictive under ONE vmap ----
+    mask_flat = shards.mask.reshape(-1)  # column layout is block j at slot j
+    y_flat = (shards.y * shards.mask).reshape(-1)
+    g_ss = prior_diag(kernel, p, sq_star)
+
+    def local_predict(i):
+        mask_i = shards.mask[i]
+        # own (exact) block is the Nyström center; peers are reconstructions
+        ip_KK = A[i]
+        blocks = B[:, i].transpose(0, 2, 1)  # block j: Xs_i X̂_j^T (n, n)
+        blocks = blocks.at[i].set(ip_KK)  # own block exact
+        ip_KN = jnp.moveaxis(blocks, 0, 1).reshape(n_pad, m * n_pad)
+        sq_cols = sq_dec.at[i].set(sq_exact[i]).reshape(-1)
+        G_KK = _mask_gram(
+            kernel_from_inner(kernel, p, ip_KK, sq_exact[i], sq_exact[i]), mask_i
+        )
+        G_KN = kernel_from_inner(kernel, p, ip_KN, sq_exact[i], sq_cols) * (
+            mask_i[:, None] * mask_flat[None, :]
+        )
+        G_sK = kernel_from_inner(kernel, p, C[i], sq_star, sq_exact[i]) * mask_i[None, :]
+        return nystrom_posterior(G_KK, G_KN, y_flat, noise, G_sK, g_ss)
+
+    if gram_mode == "nystrom":
+        mus, s2s = jax.vmap(local_predict)(jnp.arange(m))
+    else:
+        mus, s2s = _direct_views_predict(
+            kernel, p, shards, wire_state, A, B, C, X_star,
+            sq_exact, sq_dec, sq_star, y_flat, mask_flat, g_ss, noise, gram_backend,
+        )
+    if fuse == "kl":
+        mu, s2 = kl_fuse_diag(mus, s2s)
+    else:
+        prior = g_ss + noise
+        mu, s2 = combine(fuse, mus, s2s, prior)
+    return mu, s2, wire, p
+
+
+def _direct_views_predict(
+    kernel, p, shards, wire, A, B, C, X_star, sq_exact, sq_dec, sq_star,
+    y_flat, mask_flat, g_ss, noise, backend,
+):
+    """gram_mode="direct" batched predictives: the full (N, N) view grams.
+
+    Needs two extra tensors only this mode consumes (computed here, not in
+    _view_inner_products, so the default nystrom path never pays for them):
+    D[j] = X̂_j [X̂_0..X̂_m]^T (decoded-vs-decoded) and E[j] = X_star X̂_j^T —
+    both straight from codes under the pallas backend."""
+    m, n_pad, d = shards.X.shape
+    dec_flat = wire.decoded.reshape(m * n_pad, d)
+    if backend == "pallas":
+        from ..kernels.qgram.ops import qgram_batched
+
+        proj = jnp.einsum("nd,jde->jne", dec_flat, wire.T_inv)
+        D = qgram_batched(wire.codes, wire.scaled_cents, proj)  # (m, n_pad, m*n_pad)
+        proj_star = jnp.einsum("td,jde->jte", X_star, wire.T_inv)
+        E = qgram_batched(wire.codes, wire.scaled_cents, proj_star).transpose(0, 2, 1)
+    else:
+        D = jnp.einsum("jnd,Nd->jnN", wire.decoded, dec_flat)
+        E = jnp.einsum("td,jnd->jtn", X_star, wire.decoded)
+
+    def view(i):
+        mask_i = shards.mask[i]
+        own_cols = B[:, i].transpose(0, 2, 1)  # block j: Xs_i X̂_j^T
+        own_cols = own_cols.at[i].set(A[i])
+        row_i = jnp.moveaxis(own_cols, 0, 1).reshape(n_pad, m * n_pad)
+        # non-own rows: decoded-vs-decoded, with column block i swapped to
+        # decoded-vs-exact (B[r, i])
+        rows = D.reshape(m, n_pad, m, n_pad).at[:, :, i, :].set(B[:, i])
+        rows = rows.reshape(m, n_pad, m * n_pad).at[i].set(row_i)
+        ip_NN = rows.reshape(m * n_pad, m * n_pad)
+        sq_cols = sq_dec.at[i].set(sq_exact[i]).reshape(-1)
+        G = _mask_gram(
+            kernel_from_inner(kernel, p, ip_NN, sq_cols, sq_cols), mask_flat
+        )
+        star_cols = E.at[i].set(C[i])  # (m, t, n_pad); block i exact
+        ip_sN = jnp.moveaxis(star_cols, 0, 1).reshape(-1, m * n_pad)
+        G_sn = kernel_from_inner(kernel, p, ip_sN, sq_star, sq_cols) * mask_flat[None, :]
+        return posterior_from_gram(G, G_sn, g_ss, y_flat, noise)
+
+    return jax.vmap(view)(jnp.arange(m))
+
+
+# --------------------------------------------------------------------------
+# zero-rate baselines
+# --------------------------------------------------------------------------
+
+
 def poe_baseline(
     parts,
     X_star,
@@ -271,25 +750,59 @@ def poe_baseline(
     method: str = "rbcm",
     steps: int = 150,
     lr: float = 0.05,
+    impl: str = "batched",
+    gram_backend: str = "xla",
+    train_impl: str = "scan",
 ):
     """Zero-rate baselines: each machine trains on its local data only (the
-    block-diagonal-gram assumption), predictions combined by PoE/BCM/rBCM."""
+    block-diagonal-gram assumption), predictions combined by PoE/BCM/rBCM.
+
+    ``impl="batched"`` runs all m experts' posteriors under one vmapped
+    Cholesky on padded shards."""
     # shared hypers trained on machine 0's local data (standard practice: the
     # PoE family shares one hyperparameter set across experts)
-    X_all = jnp.concatenate([p[0] for p in parts], axis=0)
-    y_all = jnp.concatenate([p[1] for p in parts], axis=0)
-    trained = train_gp(parts[0][0], parts[0][1], kernel=kernel, steps=steps, lr=lr)
+    trained = train_gp(
+        parts[0][0], parts[0][1], kernel=kernel, steps=steps, lr=lr, impl=train_impl
+    )
     p = trained.params
     k = gram_fn(kernel)
+    noise = jnp.exp(p.log_noise)
+    X_star = jnp.asarray(X_star, jnp.float32)
 
-    @jax.jit
-    def expert(Xj, yj):
-        G = k(p, Xj)
-        G_sn = k(p, X_star, Xj)
-        g_ss = jnp.diagonal(k(p, X_star, X_star))
-        return posterior_from_gram(G, G_sn, g_ss, yj, jnp.exp(p.log_noise))
+    if impl == "host":
+        if gram_backend == "pallas":
+            raise ValueError('gram_backend="pallas" requires impl="batched"')
 
-    mus, s2s = zip(*[expert(Xj, yj) for Xj, yj in parts])
-    prior = jnp.diagonal(k(p, X_star, X_star)) + jnp.exp(p.log_noise)
-    mu, s2 = combine(method, jnp.stack(mus), jnp.stack(s2s), prior)
-    return mu, s2, p
+        @jax.jit
+        def expert(Xj, yj):
+            G = k(p, Xj)
+            G_sn = k(p, X_star, Xj)
+            g_ss = jnp.diagonal(k(p, X_star, X_star))
+            return posterior_from_gram(G, G_sn, g_ss, yj, noise)
+
+        mus, s2s = zip(*[expert(Xj, yj) for Xj, yj in parts])
+        mus, s2s = jnp.stack(mus), jnp.stack(s2s)
+        prior = jnp.diagonal(k(p, X_star, X_star)) + noise
+        return (*combine(method, mus, s2s, prior), p)
+
+    shards = pad_parts(parts)
+    sq_exact = jnp.sum(shards.X**2, -1)
+    sq_star = jnp.sum(X_star**2, -1)
+    if gram_backend == "pallas":
+        from ..kernels.gram.ops import gram as gram_kernel
+
+        A = jax.vmap(lambda a: gram_kernel(a, a))(shards.X)
+        Cstar = jax.vmap(lambda a: gram_kernel(X_star, a))(shards.X)
+    else:
+        A = jnp.einsum("ind,imd->inm", shards.X, shards.X)
+        Cstar = jnp.einsum("td,ind->itn", X_star, shards.X)
+    g_ss = prior_diag(kernel, p, sq_star)
+
+    def expert(ipA, ipC, sqj, yj, mask_j):
+        G = _mask_gram(kernel_from_inner(kernel, p, ipA, sqj, sqj), mask_j)
+        G_sn = kernel_from_inner(kernel, p, ipC, sq_star, sqj) * mask_j[None, :]
+        return posterior_from_gram(G, G_sn, g_ss, yj * mask_j, noise)
+
+    mus, s2s = jax.vmap(expert)(A, Cstar, sq_exact, shards.y, shards.mask)
+    prior = g_ss + noise
+    return (*combine(method, mus, s2s, prior), p)

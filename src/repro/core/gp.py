@@ -15,6 +15,7 @@ quantization-estimated grams straight in.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, NamedTuple
 
 import jax
@@ -24,14 +25,31 @@ __all__ = [
     "GPParams",
     "linear_gram",
     "se_gram",
+    "kernel_from_inner",
+    "prior_diag",
     "gram_fn",
     "posterior_from_gram",
     "nlml_from_gram",
     "GPModel",
+    "make_adam_step",
     "train_gp",
 ]
 
 _JITTER = 1e-6
+
+
+def _inner_products(X, X2, backend: str):
+    """X @ X2^T, optionally through the Pallas tiled-gram kernel.
+
+    Every kernel in this module consumes inner products only, so this is the
+    single routing point for ``gram_backend``."""
+    if backend == "pallas":
+        from ..kernels.gram.ops import gram as gram_kernel
+
+        return gram_kernel(X, X2)
+    if backend != "xla":
+        raise ValueError(f"unknown gram backend {backend!r}")
+    return X @ X2.T
 
 
 class GPParams(NamedTuple):
@@ -55,33 +73,60 @@ def init_params(a=1.0, b=1.0, noise=0.1) -> GPParams:
     )
 
 
-def linear_gram(params: GPParams, X, X2=None):
+def linear_gram(params: GPParams, X, X2=None, *, backend: str = "xla"):
     """Paper eq. (4): k(x, x') = a <x, x'> + b.  Consumes inner products only."""
     X2 = X if X2 is None else X2
-    return jnp.exp(params.log_a) * (X @ X2.T) + jnp.exp(params.log_b)
+    return jnp.exp(params.log_a) * _inner_products(X, X2, backend) + jnp.exp(params.log_b)
 
 
-def _sqdist(X, X2):
+def _sqdist(X, X2, backend: str = "xla"):
     n1 = jnp.sum(X**2, -1, keepdims=True)
     n2 = jnp.sum(X2**2, -1, keepdims=True)
-    return jnp.maximum(n1 + n2.T - 2.0 * (X @ X2.T), 0.0)
+    return jnp.maximum(n1 + n2.T - 2.0 * _inner_products(X, X2, backend), 0.0)
 
 
-def se_gram(params: GPParams, X, X2=None):
+def se_gram(params: GPParams, X, X2=None, *, backend: str = "xla"):
     """Paper eq. (65): k = s exp(-||x - x'||^2 / l^2).
 
     Note ||x-x'||^2 = |x|^2 + |x'|^2 - 2<x,x'> — also inner-product based, which
     is why the paper's quantized-inner-product machinery covers RBF kernels."""
     X2 = X if X2 is None else X2
-    return jnp.exp(params.log_a) * jnp.exp(-_sqdist(X, X2) / jnp.exp(params.log_b))
+    return jnp.exp(params.log_a) * jnp.exp(
+        -_sqdist(X, X2, backend) / jnp.exp(params.log_b)
+    )
 
 
-def gram_fn(kernel: str) -> Callable:
+def kernel_from_inner(kernel: str, params: GPParams, ip, sq_x, sq_x2):
+    """Gram block from precomputed inner products ``ip = X @ X2^T`` and squared
+    norms — the form the fused dequantize+gram (qgram) path produces."""
     if kernel == "linear":
-        return linear_gram
+        return jnp.exp(params.log_a) * ip + jnp.exp(params.log_b)
     if kernel == "se":
-        return se_gram
+        sq = jnp.maximum(sq_x[:, None] + sq_x2[None, :] - 2.0 * ip, 0.0)
+        return jnp.exp(params.log_a) * jnp.exp(-sq / jnp.exp(params.log_b))
     raise ValueError(f"unknown kernel {kernel!r}")
+
+
+def prior_diag(kernel: str, params: GPParams, sq_x):
+    """Prior variances k(x, x) from squared norms: the kernel-diagonal
+    special case every predictive needs (linear: a|x|²+b; SE: constant s)."""
+    if kernel == "linear":
+        return jnp.exp(params.log_a) * sq_x + jnp.exp(params.log_b)
+    if kernel == "se":
+        return jnp.full_like(jnp.asarray(sq_x), jnp.exp(params.log_a))
+    raise ValueError(f"unknown kernel {kernel!r}")
+
+
+def gram_fn(kernel: str, backend: str = "xla") -> Callable:
+    if kernel == "linear":
+        fn = linear_gram
+    elif kernel == "se":
+        fn = se_gram
+    else:
+        raise ValueError(f"unknown kernel {kernel!r}")
+    if backend == "xla":
+        return fn
+    return functools.partial(fn, backend=backend)
 
 
 def posterior_from_gram(G, G_star_n, g_star_star, y, noise_var):
@@ -125,9 +170,10 @@ class GPModel:
     params: GPParams
     X: jnp.ndarray
     y: jnp.ndarray
+    gram_backend: str = "xla"
 
     def predict(self, X_star):
-        k = gram_fn(self.kernel)
+        k = gram_fn(self.kernel, self.gram_backend)
         G = k(self.params, self.X)
         G_sn = k(self.params, X_star, self.X)
         g_ss = jnp.diagonal(k(self.params, X_star, X_star))
@@ -136,38 +182,18 @@ class GPModel:
         )
 
     def nlml(self):
-        G = gram_fn(self.kernel)(self.params, self.X)
+        G = gram_fn(self.kernel, self.gram_backend)(self.params, self.X)
         return nlml_from_gram(G, self.y, jnp.exp(self.params.log_noise))
 
 
-def train_gp(
-    X,
-    y,
-    kernel: str = "se",
-    params: GPParams | None = None,
-    steps: int = 200,
-    lr: float = 0.05,
-    gram_override: Callable | None = None,
-) -> GPModel:
-    """Maximize marginal likelihood with Adam.
-
-    ``gram_override(params) -> G`` lets distributed variants train on an
-    externally assembled (e.g. Nyström-completed, quantized) gram matrix."""
-    X = jnp.asarray(X)
-    y = jnp.asarray(y)
-    params = params or init_params()
-    k = gram_fn(kernel)
-
-    def loss(p):
-        G = gram_override(p) if gram_override is not None else k(p, X)
-        return nlml_from_gram(G, y, jnp.exp(p.log_noise))
-
-    # minimal inline Adam (repro.optim is for the NN stack; keep core standalone)
-    m = jax.tree.map(jnp.zeros_like, params)
-    v = jax.tree.map(jnp.zeros_like, params)
+def make_adam_step(loss: Callable, lr: float) -> Callable:
+    """One Adam update ``step(i, params, m, v) -> (params, m, v)`` for the
+    given scalar loss — minimal inline Adam (repro.optim is for the NN stack;
+    keep core standalone).  Shared by train_gp and the warm-dispatch rows of
+    benchmarks/hotpath_bench.py so the benchmark always times the shipped
+    update rule."""
     b1, b2, eps = 0.9, 0.999, 1e-8
 
-    @jax.jit
     def step(i, p, m, v):
         g = jax.grad(loss)(p)
         m = jax.tree.map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
@@ -178,6 +204,63 @@ def train_gp(
         p = jax.tree.map(lambda a, mm, vv: a - lr * mm / (jnp.sqrt(vv) + eps), p, mh, vh)
         return p, m, v
 
-    for i in range(steps):
-        params, m, v = step(jnp.float32(i), params, m, v)
-    return GPModel(kernel=kernel, params=params, X=X, y=y)
+    return step
+
+
+def train_gp(
+    X,
+    y,
+    kernel: str = "se",
+    params: GPParams | None = None,
+    steps: int = 200,
+    lr: float = 0.05,
+    gram_override: Callable | None = None,
+    impl: str = "scan",
+    gram_backend: str = "xla",
+) -> GPModel:
+    """Maximize marginal likelihood with Adam.
+
+    ``gram_override(params) -> G`` lets distributed variants train on an
+    externally assembled (e.g. Nyström-completed, quantized) gram matrix.
+
+    ``impl="scan"`` (default) runs the whole optimizer loop as ONE compiled
+    ``jax.lax.scan`` program — one trace, one device dispatch for all
+    ``steps``.  ``impl="loop"`` keeps the legacy per-step jit dispatch
+    (O(steps) host round-trips); it exists as the baseline for
+    benchmarks/hotpath_bench.py.
+
+    ``gram_backend="pallas"`` computes the training gram's inner products
+    with the tiled Pallas kernel (differentiable via its custom VJP)."""
+    X = jnp.asarray(X)
+    y = jnp.asarray(y)
+    params = params or init_params()
+    k = gram_fn(kernel, gram_backend)
+
+    def loss(p):
+        G = gram_override(p) if gram_override is not None else k(p, X)
+        return nlml_from_gram(G, y, jnp.exp(p.log_noise))
+
+    step = make_adam_step(loss, lr)
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+
+    if impl == "loop":
+        jstep = jax.jit(step)
+        for i in range(steps):
+            params, m, v = jstep(jnp.float32(i), params, m, v)
+    elif impl == "scan":
+
+        @jax.jit
+        def run(p, m, v):
+            def body(carry, i):
+                return step(i, *carry), None
+
+            (p, m, v), _ = jax.lax.scan(
+                body, (p, m, v), jnp.arange(steps, dtype=jnp.float32)
+            )
+            return p, m, v
+
+        params, m, v = run(params, m, v)
+    else:
+        raise ValueError(f"unknown train impl {impl!r}")
+    return GPModel(kernel=kernel, params=params, X=X, y=y, gram_backend=gram_backend)

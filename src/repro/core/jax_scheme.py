@@ -20,7 +20,16 @@ import jax.numpy as jnp
 
 from . import quantizers as Q
 
-__all__ = ["fit_scheme", "encode", "decode", "SchemeState"]
+__all__ = [
+    "fit_scheme",
+    "fit_scheme_batched",
+    "encode",
+    "decode",
+    "codebook_cap",
+    "scheme_tables",
+    "scaled_centroids",
+    "SchemeState",
+]
 
 
 def _unit_distortion_table(max_bits: int) -> jnp.ndarray:
@@ -55,7 +64,10 @@ def fit_scheme(Qx, Qy, total_bits: int, max_bits: int = 8):
         gain = lam * (e_cur - e_nxt)
         gain = jnp.where(rates >= max_bits, -jnp.inf, gain)
         j = jnp.argmax(gain)
-        return rates.at[j].add(1)
+        # no dimension gains anything (all capped, or only zero-variance dims
+        # left — their gain is 0): stop allocating, matching the host heap's
+        # `neg_g >= 0` early exit so wire-bit accounting stays identical
+        return rates.at[j].add((gain[j] > 0.0).astype(jnp.int32))
 
     # init derived from lam so the carry inherits lam's varying-manual-axes
     # (vma) type under shard_map — a literal zeros() would be vma-unvarying
@@ -63,6 +75,32 @@ def fit_scheme(Qx, Qy, total_bits: int, max_bits: int = 8):
     rates0 = (lam * 0.0).astype(jnp.int32)
     rates = jax.lax.fori_loop(0, total_bits, body, rates0)
     return {"T": T, "T_inv": T_inv, "sigma": jnp.sqrt(lam), "rates": rates}
+
+
+def fit_scheme_batched(Qxs, Qys, total_bits: int, max_bits: int = 8):
+    """vmapped :func:`fit_scheme` over a leading machine axis: one batched eigh
+    pair instead of m serial ones.  Qxs/Qys: (m, d, d)."""
+    return jax.vmap(lambda qx, qy: fit_scheme(qx, qy, total_bits, max_bits))(Qxs, Qys)
+
+
+def codebook_cap(total_bits: int, max_bits: int) -> int:
+    """Largest rate any dimension can be allocated: greedy allocation hands out
+    ``total_bits`` bits in total, so tables never need more than
+    ``min(max_bits, total_bits)`` rows — capping here keeps the padded
+    quantize/dequantize broadcasts at (n, d, 2^cap) instead of (n, d, 2^max)."""
+    return max(min(max_bits, total_bits), 0)
+
+
+def scheme_tables(total_bits: int, max_bits: int):
+    """Codebook tables sized to the max *allocatable* rate (see codebook_cap)."""
+    return Q.build_codebook_tables(codebook_cap(total_bits, max_bits))
+
+
+def scaled_centroids(state, tables):
+    """Per-dimension centroid tables at each dim's allocated rate, scaled by its
+    sigma: (d, C) — the table the fused dequantize+gram (qgram) kernel eats."""
+    _, cents = tables
+    return cents[state["rates"]] * state["sigma"][:, None]
 
 
 def encode(state, X, tables):

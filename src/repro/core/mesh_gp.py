@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..comm import q_all_gather
+from ..compat import shard_map
 from .gp import GPParams, gram_fn, posterior_from_gram
 from .fusion import kl_fuse_diag
 
@@ -69,7 +70,7 @@ def broadcast_gp_mesh(
         s2s = jax.lax.all_gather(s2_i, axis)
         return kl_fuse_diag(mus, s2s)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body,
         mesh=mesh,
         in_specs=(P(axis, None), P(axis), P(None, None)),

@@ -15,7 +15,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["nystrom_complete", "nystrom_posterior"]
+__all__ = ["nystrom_complete", "nystrom_cross", "nystrom_posterior"]
 
 _JITTER = 1e-6
 
@@ -32,6 +32,19 @@ def nystrom_complete(G_KK, G_KN, exact_diag=None):
     if exact_diag is not None:
         Ghat = Ghat + jnp.diag(jnp.maximum(exact_diag - jnp.diagonal(Ghat), 0.0))
     return Ghat
+
+
+def nystrom_cross(G_KK, G_KN, G_star_K):
+    """Test-train covariance through the SAME Nyström map:
+    Q_*N = G_*K G_KK^{-1} G_KN (Quiñonero-Candela & Rasmussen's FITC test
+    covariance).  Pairing the raw k(x*, x) cross-covariance with a
+    Nyström-structured train gram amplifies y-components outside the rank-K
+    span — see CenterGP.predict."""
+    K = G_KK.shape[0]
+    L = jnp.linalg.cholesky(G_KK + _JITTER * jnp.trace(G_KK) / K * jnp.eye(K, dtype=G_KK.dtype))
+    W = jax.scipy.linalg.solve_triangular(L, G_KN, lower=True)  # (K, N)
+    B = jax.scipy.linalg.solve_triangular(L, G_star_K.T, lower=True)  # (K, t)
+    return B.T @ W
 
 
 def nystrom_posterior(G_KK, G_KN, y, noise_var, G_star_K, g_star_star, exact_diag=None):

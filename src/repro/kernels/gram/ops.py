@@ -1,5 +1,11 @@
 """Jit'd public wrapper for the gram kernel: pads to block multiples, selects
-interpret mode off-TPU, unpads the result."""
+interpret mode off-TPU, unpads the result.
+
+``gram`` carries a custom VJP (dX = g @ Y, dY = g^T @ X — both themselves gram
+products, routed back through the kernel), so kernels that consume it stay
+differentiable end-to-end when hyperparameter training runs with
+``gram_backend="pallas"``.
+"""
 from __future__ import annotations
 
 import jax
@@ -17,8 +23,7 @@ def _pad_to(a, mult, axis):
     return jnp.pad(a, widths)
 
 
-def gram(x, y, *, block=DEFAULT_BLOCK, interpret: bool | None = None):
-    """G = X @ Y^T via the Pallas kernel, any (n, d)/(p, d) shapes."""
+def _gram_impl(x, y, block, interpret):
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     n, p = x.shape[0], y.shape[0]
@@ -27,3 +32,28 @@ def gram(x, y, *, block=DEFAULT_BLOCK, interpret: bool | None = None):
     yp = _pad_to(_pad_to(jnp.asarray(y, jnp.float32), bp, 0), bd, 1)
     out = gram_pallas(xp, yp, block=block, interpret=interpret)
     return out[:n, :p]
+
+
+@jax.custom_vjp
+def _gram_vjp(x, y):
+    return _gram_impl(x, y, DEFAULT_BLOCK, None)
+
+
+def _gram_fwd(x, y):
+    return _gram_vjp(x, y), (x, y)
+
+
+def _gram_bwd(res, g):
+    x, y = res
+    # d(X Y^T)/dX . g = g @ Y;  d/dY . g = g^T @ X — both are gram products
+    return _gram_vjp(g, y.T), _gram_vjp(g.T, x.T)
+
+
+_gram_vjp.defvjp(_gram_fwd, _gram_bwd)
+
+
+def gram(x, y, *, block=DEFAULT_BLOCK, interpret: bool | None = None):
+    """G = X @ Y^T via the Pallas kernel, any (n, d)/(p, d) shapes."""
+    if block == DEFAULT_BLOCK and interpret is None:
+        return _gram_vjp(jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.float32))
+    return _gram_impl(x, y, block, interpret)

@@ -28,7 +28,18 @@ def qgram(codes, scaled_cents, y, *, block=DEFAULT_BLOCK, echunk=DEFAULT_ECHUNK,
     bn, bp, bd = block
     # pad codes with an out-of-range code so padded dims decode to 0
     cpad = _pad_axis(_pad_axis(jnp.asarray(codes), bn, 0), bd, 1, value=-1)
-    tpad = _pad_axis(jnp.asarray(scaled_cents), bd, 0)
+    tpad = _pad_axis(_pad_axis(jnp.asarray(scaled_cents), bd, 0), echunk, 1)
     ypad = _pad_axis(_pad_axis(jnp.asarray(y, jnp.float32), bp, 0), bd, 1)
     out = qgram_pallas(cpad, tpad, ypad, block=block, echunk=echunk, interpret=interpret)
     return out[:n, :p]
+
+
+def qgram_batched(codes, scaled_cents, y, **kw):
+    """vmapped fused dequantize+gram over a leading machine axis.
+
+    codes: (m, n, d) int32 (pad rows with -1 so they decode to 0);
+    scaled_cents: (m, d, C) per-machine tables; y: (p, d) shared or (m, p, d)
+    per-machine.  Returns (m, n, p)."""
+    if y.ndim == 2:
+        return jax.vmap(lambda c, t: qgram(c, t, y, **kw))(codes, scaled_cents)
+    return jax.vmap(lambda c, t, yy: qgram(c, t, yy, **kw))(codes, scaled_cents, y)

@@ -11,10 +11,15 @@ Shape skips (documented in DESIGN.md / EXPERIMENTS.md):
 """
 # The VERY FIRST lines, before ANY other import: 512 placeholder devices.
 import os
+import re as _re
 
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+# drop any inherited device-count override (e.g. from the test harness) —
+# repeated XLA flags are last-wins, so a stale one would defeat ours
+_flags = _re.sub(
+    r"--xla_force_host_platform_device_count=\d+\s*", "",
+    os.environ.get("XLA_FLAGS", ""),
 )
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + _flags
 
 import argparse
 import json
@@ -39,6 +44,7 @@ from ..models.sharding import (
 )
 from .mesh import make_production_mesh, PEAK_FLOPS_BF16, HBM_BW, ICI_BW
 from ..roofline import analyze_hlo
+from ..compat import set_mesh, cost_analysis_dict
 
 LONG_CONTEXT_OK = {"xlstm-125m", "zamba2-2.7b", "gemma2-2b"}
 
@@ -206,13 +212,13 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True):
     n_chips = mesh.devices.size
     t0 = time.time()
     fn, args, rules, donate = build_lowerable(arch, shape_name, mesh, multi_pod)
-    with jax.set_mesh(mesh), logical_rules(rules):
+    with set_mesh(mesh), logical_rules(rules):
         lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = cost_analysis_dict(compiled)
         # trip-count-aware walk of the optimized HLO (XLA's cost_analysis
         # counts while bodies once — see repro.roofline.hlo_cost)
         parsed = analyze_hlo(compiled.as_text())

@@ -7,14 +7,13 @@ so both meshes can be built on the CPU container.
 """
 from __future__ import annotations
 
-import jax
+from ..compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=axis_types)
+    return make_mesh(shape, axes)
 
 
 # TPU v5e hardware constants used by the roofline analysis

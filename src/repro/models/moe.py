@@ -25,6 +25,7 @@ from jax.sharding import PartitionSpec as P
 
 from .layers import _init, mlp_apply, init_mlp
 from .sharding import constrain, current_rules, _mesh_sizes
+from ..compat import shard_map, get_abstract_mesh
 
 
 def init_moe(key, cfg):
@@ -117,7 +118,7 @@ def moe_apply(params, x, cfg):
         w_in = _pad_experts(params["w_in_e"], n_pad)
         w_out = _pad_experts(params["w_out_e"], n_pad)
         E_loc = (E + n_pad) // n_model
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = get_abstract_mesh()
 
         def body(xt_l, ei_l, gv_l, w_in_l, w_out_l):
             off = jax.lax.axis_index(model_ax) * E_loc
@@ -126,7 +127,7 @@ def moe_apply(params, x, cfg):
             keep = jax.lax.psum(keep.astype(jnp.int32), model_ax)
             return combined, keep
 
-        combined, keep_ct = jax.shard_map(
+        combined, keep_ct = shard_map(
             body,
             mesh=mesh,
             in_specs=(

@@ -44,7 +44,9 @@ def resolve(*logical_names) -> P:
 
 def _mesh_sizes():
     try:
-        am = jax.sharding.get_abstract_mesh()
+        from ..compat import get_abstract_mesh
+
+        am = get_abstract_mesh()
         return dict(am.shape) if am.axis_names else None
     except Exception:
         return None

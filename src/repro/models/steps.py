@@ -16,6 +16,7 @@ from .config import ModelConfig
 from .backbone import forward, init_model
 from .decode import decode_step as _decode_step, init_decode_state
 from ..optim import AdamWState, adamw_init, adamw_update, cosine_warmup
+from ..compat import shard_map, get_abstract_mesh
 
 MOE_AUX_WEIGHT = 0.01
 ROUTER_Z_WEIGHT = 1e-3
@@ -89,7 +90,7 @@ def make_train_step(
             from ..comm import q_psum
             from .sharding import tree_param_specs
 
-            mesh = jax.sharding.get_abstract_mesh()
+            mesh = get_abstract_mesh()
             n_pods = dict(mesh.shape).get(pod_axis, 1)
 
             # stage 1: per-pod gradients (manual over the pod axis only; NO
@@ -149,7 +150,7 @@ def make_train_step(
                 return q_psum(g_l[0], pod_axis, qcomm_bits) / n_pods
 
             grads = jax.tree.map(
-                lambda g, sp: jax.shard_map(
+                lambda g, sp: shard_map(
                     reduce_leaf,
                     mesh=mesh,
                     in_specs=prepend(sp),

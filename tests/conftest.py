@@ -1,3 +1,15 @@
+import os
+
+# Give in-process tests a multi-device CPU platform.  This must run before the
+# first jax import (conftest is imported before any test module).  Subprocess
+# tests (test_comm / test_mesh_gp / test_qcomm) overwrite XLA_FLAGS themselves,
+# and repro.launch.dryrun strips inherited device-count flags before forcing
+# its own 512, so this never leaks into them.
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+    ).strip()
+
 import numpy as np
 import pytest
 

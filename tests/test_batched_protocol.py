@@ -1,0 +1,163 @@
+"""Locks the vmapped padded-shard protocol to the serial seed protocol's
+semantics, and the Pallas gram backend to the reference path.
+
+Semantics locked:
+  * own / center block is EXACT (bit-identical to the local data);
+  * wire-bit accounting identical to the host scipy PerSymbolScheme path;
+  * decoded reconstructions, trained predictors, and fused predictives match
+    the serial implementation within float tolerance;
+  * gram_backend="pallas" (interpret mode on CPU) matches the reference path
+    to <= 1e-4 max-abs on the paper-scale smoke problem.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import split_machines, single_center_gp, broadcast_gp, poe_baseline
+from repro.core.distributed_gp import (
+    quantize_to_center,
+    pad_parts,
+    _run_wire_protocol,
+)
+
+
+def _problem(seed=0, n=234, d=6, n_test=60):
+    # n is deliberately NOT divisible by the machine counts used below, so the
+    # padded-shard machinery (masks, -1 code sentinels, pinned diagonals) is
+    # genuinely exercised by every equivalence check
+    rng = np.random.default_rng(seed)
+    W = rng.normal(size=(d, 2))
+    f = lambda Z: np.sin(Z @ W[:, 0]) + 0.4 * (Z @ W[:, 1])
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    y = (f(X) + 0.05 * rng.normal(size=n)).astype(np.float32)
+    Xt = rng.normal(size=(n_test, d)).astype(np.float32)
+    return X, y, jnp.asarray(Xt)
+
+
+def test_center_protocol_matches_serial():
+    X, y, _ = _problem(0)
+    parts = split_machines(X, y, 5, jax.random.PRNGKey(0))
+    Xb, yb, wire_b, nc_b, sq_b = quantize_to_center(parts, 16, impl="batched")
+    Xh, yh, wire_h, nc_h, sq_h = quantize_to_center(parts, 16, impl="host")
+    # identical wire-bit accounting
+    assert wire_b == wire_h
+    assert nc_b == nc_h
+    # own (center) block exact
+    np.testing.assert_array_equal(np.asarray(Xb[:nc_b]), np.asarray(parts[0][0]))
+    # targets unquantized and identically ordered; exact |x|^2 side channel
+    np.testing.assert_array_equal(np.asarray(yb), np.asarray(yh))
+    np.testing.assert_allclose(np.asarray(sq_b), np.asarray(sq_h), rtol=1e-6)
+    # reconstructions match the serial scipy scheme within float tolerance
+    np.testing.assert_allclose(np.asarray(Xb), np.asarray(Xh), atol=5e-4)
+
+
+def test_broadcast_wire_accounting_and_own_blocks():
+    X, y, _ = _problem(1)
+    parts = split_machines(X, y, 4, jax.random.PRNGKey(1))
+    shards = pad_parts(parts)
+    ws = _run_wire_protocol(shards.X, shards.mask, 24, 12, "broadcast", 0)
+    # greedy allocation hands out exactly R bits per sample on every machine
+    rates = np.asarray(ws.rates)
+    assert (rates.sum(axis=1) == 24).all()
+    # padded rows decode to exactly zero and carry the -1 sentinel code
+    for j, n_j in enumerate(shards.lengths):
+        assert np.all(np.asarray(ws.codes[j, n_j:]) == -1)
+        assert np.all(np.asarray(ws.decoded[j, n_j:]) == 0.0)
+
+
+def test_batched_end_to_end_matches_serial():
+    X, y, Xt = _problem(2)
+    parts = split_machines(X, y, 5, jax.random.PRNGKey(2))
+    m_b = single_center_gp(parts, 16, kernel="se", steps=15)
+    m_h = single_center_gp(parts, 16, kernel="se", steps=15, impl="host",
+                           train_impl="loop")
+    assert m_b.wire_bits == m_h.wire_bits
+    mu_b, v_b = m_b.predict(Xt)
+    mu_h, v_h = m_h.predict(Xt)
+    np.testing.assert_allclose(np.asarray(mu_b), np.asarray(mu_h), atol=2e-3)
+    np.testing.assert_allclose(np.asarray(v_b), np.asarray(v_h), atol=2e-3)
+
+    mu_b, s2_b, w_b, _ = broadcast_gp(parts, 24, Xt, kernel="se", steps=15)
+    mu_h, s2_h, w_h, _ = broadcast_gp(parts, 24, Xt, kernel="se", steps=15,
+                                      impl="host", train_impl="loop")
+    assert w_b == w_h
+    np.testing.assert_allclose(np.asarray(mu_b), np.asarray(mu_h), atol=2e-3)
+    np.testing.assert_allclose(np.asarray(s2_b), np.asarray(s2_h), atol=2e-3)
+
+    mu_b, s2_b, _ = poe_baseline(parts, Xt, kernel="se", steps=15)
+    mu_h, s2_h, _ = poe_baseline(parts, Xt, kernel="se", steps=15, impl="host",
+                                 train_impl="loop")
+    np.testing.assert_allclose(np.asarray(mu_b), np.asarray(mu_h), atol=2e-3)
+    np.testing.assert_allclose(np.asarray(s2_b), np.asarray(s2_h), atol=2e-3)
+
+
+@pytest.mark.parametrize("gram_mode", ["nystrom", "nystrom_fitc", "direct"])
+def test_pallas_backend_matches_reference_center(gram_mode):
+    X, y, Xt = _problem(3, n=201, d=6)
+    parts = split_machines(X, y, 4, jax.random.PRNGKey(3))
+    m_p = single_center_gp(parts, 16, kernel="se", steps=5, gram_mode=gram_mode,
+                           gram_backend="pallas")
+    m_x = single_center_gp(parts, 16, kernel="se", steps=5, gram_mode=gram_mode)
+    mu_p, v_p = m_p.predict(Xt)
+    mu_x, v_x = m_x.predict(Xt)
+    assert float(jnp.max(jnp.abs(mu_p - mu_x))) <= 1e-4
+    assert float(jnp.max(jnp.abs(v_p - v_x))) <= 1e-4
+
+
+@pytest.mark.parametrize("gram_mode", ["nystrom", "direct"])
+def test_pallas_backend_matches_reference_broadcast(gram_mode):
+    X, y, Xt = _problem(4, n=158, d=6)
+    parts = split_machines(X, y, 4, jax.random.PRNGKey(4))
+    mu_p, s2_p, w_p, _ = broadcast_gp(parts, 24, Xt, kernel="se", steps=5,
+                                      gram_mode=gram_mode, gram_backend="pallas")
+    mu_x, s2_x, w_x, _ = broadcast_gp(parts, 24, Xt, kernel="se", steps=5,
+                                      gram_mode=gram_mode)
+    assert w_p == w_x
+    assert float(jnp.max(jnp.abs(mu_p - mu_x))) <= 1e-4
+    assert float(jnp.max(jnp.abs(s2_p - s2_x))) <= 1e-4
+
+
+def test_bit_allocation_parity_with_zero_variance_dims():
+    """The fori_loop allocator must stop exactly where the host heap stops:
+    once every positive-variance dim is capped, zero-variance dims get NO
+    bits (their gain is 0), keeping wire-bit accounting identical."""
+    from repro.core import jax_scheme
+    from repro.core import quantizers as Q
+
+    d = 3
+    lam = np.array([4.0, 1.0, 0.0])
+    Qx = np.diag(lam).astype(np.float32)
+    Qy = np.eye(d, dtype=np.float32)
+    state = jax_scheme.fit_scheme(jnp.asarray(Qx), jnp.asarray(Qy), 30, 12)
+    host = Q.allocate_bits_greedy(lam, 30, 12)
+    np.testing.assert_array_equal(np.sort(np.asarray(state["rates"])), np.sort(host))
+    assert int(np.asarray(state["rates"]).sum()) == int(host.sum()) == 24
+
+
+def test_train_gp_pallas_backend_matches_xla():
+    """Full training through the Pallas gram (exercises the kernel's custom
+    VJP: grads of the NLML flow through the tiled gram product)."""
+    X, y, Xt = _problem(6, n=96, d=4)
+    from repro.core import train_gp
+
+    m_p = train_gp(X, y, kernel="se", steps=5, gram_backend="pallas")
+    m_x = train_gp(X, y, kernel="se", steps=5)
+    for a, b in zip(m_p.params, m_x.params):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+    mu_p, _ = m_p.predict(Xt)
+    mu_x, _ = m_x.predict(Xt)
+    assert float(jnp.max(jnp.abs(mu_p - mu_x))) <= 1e-4
+
+
+def test_scan_training_matches_loop():
+    X, y, Xt = _problem(5, n=120, d=4)
+    from repro.core import train_gp
+
+    m_s = train_gp(X, y, kernel="se", steps=25, impl="scan")
+    m_l = train_gp(X, y, kernel="se", steps=25, impl="loop")
+    for a, b in zip(m_s.params, m_l.params):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    mu_s, _ = m_s.predict(Xt)
+    mu_l, _ = m_l.predict(Xt)
+    np.testing.assert_allclose(np.asarray(mu_s), np.asarray(mu_l), atol=1e-4)

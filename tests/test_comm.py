@@ -14,13 +14,14 @@ import json
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.comm import q_all_gather, q_psum
+from repro.compat import shard_map, make_mesh
 
-mesh = jax.make_mesh((8,), ("m",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("m",))
 rng = np.random.default_rng(0)
 d, n_loc = 12, 64
 X = (rng.normal(size=(8 * n_loc, d)) @ (rng.normal(size=(d, d)) / np.sqrt(d))).astype(np.float32)
 
-f = jax.shard_map(lambda x: q_all_gather(x, "m", 36), mesh=mesh,
+f = shard_map(lambda x: q_all_gather(x, "m", 36), mesh=mesh,
                   in_specs=P("m", None), out_specs=P("m", None))
 out = np.asarray(jax.jit(f)(X))
 view0 = out[:8]
@@ -32,7 +33,7 @@ errs = {}
 g = rng.normal(size=(4096,)).astype(np.float32)
 G = np.stack([g * (i + 1) for i in range(8)])
 for bits in (4, 8):
-    f2 = jax.shard_map(lambda x, b=bits: q_psum(x[0], "m", b), mesh=mesh,
+    f2 = shard_map(lambda x, b=bits: q_psum(x[0], "m", b), mesh=mesh,
                        in_specs=P("m", None), out_specs=P(), check_vma=False)
     s = np.asarray(jax.jit(f2)(G))
     true = G.sum(0)

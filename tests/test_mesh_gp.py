@@ -13,9 +13,10 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import numpy as np, jax
 from repro.core.mesh_gp import broadcast_gp_mesh
+from repro.compat import make_mesh
 from repro.core.gp import train_gp
 
-mesh = jax.make_mesh((8,), ("m",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("m",))
 rng = np.random.default_rng(0)
 d, n, t = 8, 320, 100
 W = rng.normal(size=(d, 2))

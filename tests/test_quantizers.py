@@ -4,6 +4,7 @@ import itertools
 import numpy as np
 import jax.numpy as jnp
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import quantizers as Q

@@ -1,6 +1,7 @@
 """Decorrelating transform (§4.2) and Theorem-3 dimension reduction tests."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
 from repro.core.transforms import (
