@@ -1,0 +1,123 @@
+"""Fit-once/serve-many benchmark (EXPERIMENTS.md §Serve): cold fit vs warm
+predict at paper scale (m=40 machines), query throughput, streaming update
+cost, and the structural serve-path checks.
+
+Rows (written to BENCH_serve.json via benchmarks/run.py --json, or standalone):
+
+* ``serve/cold_fit_predict_m40`` — one full fit() (wire protocol + training +
+  factorization, includes trace/compile) plus a first predict(): what a fresh
+  experiment pays, and what the legacy pipeline re-paid on EVERY call;
+* ``serve/predict_warm_m40`` — the cached-program serve loop: per-query-batch
+  latency and queries/sec against the fitted artifact.  ``retraces_warm_loop``
+  and ``cholesky_eqns``/``eigh_eqns`` are the structural proof that warm
+  serving does no scheme refit and no Cholesky refactorization;
+* ``serve/update_stream_m40`` — streaming n_new points through the frozen
+  codebooks (rank-k factor growth) + the one retrace the next predict pays;
+* ``serve/save_load_roundtrip`` — artifact checkpoint round-trip wall clock;
+  ``bitwise_equal=1`` is asserted, not just recorded.
+
+Run standalone to write BENCH_serve.json:
+  PYTHONPATH=src python -m benchmarks.serve_bench [--full]
+or through the driver: PYTHONPATH=src python -m benchmarks.run --json --only serve
+"""
+from __future__ import annotations
+
+import json
+import tempfile
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .common import timed, emit
+
+
+def _problem(n, d, m, seed=0):
+    from repro.core import split_machines
+
+    rng = np.random.default_rng(seed)
+    W = rng.normal(size=(d, 2))
+    f = lambda Z: np.sin(Z @ W[:, 0]) + 0.4 * (Z @ W[:, 1])
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    y = (f(X) + 0.05 * rng.normal(size=n)).astype(np.float32)
+    parts = split_machines(X, y, m, jax.random.PRNGKey(seed))
+    return parts, f
+
+
+def main(quick: bool = True) -> None:
+    from repro.core import fit, predict, update, save_artifact, load_artifact
+    from repro.core.distributed_gp import predict_op_counts, serve_trace_count
+
+    # paper scale is 40 machines (§6); quick mode shrinks n/steps, not m
+    m = 40
+    n, d, steps = (1200, 8, 30) if quick else (4000, 12, 100)
+    t_batch, bits = 128, 24
+    parts, _ = _problem(n, d, m)
+    rng = np.random.default_rng(1)
+    Xq = rng.normal(size=(t_batch, d)).astype(np.float32)
+
+    # ---- cold: full protocol + first query (includes trace+compile) ----
+    t0 = time.perf_counter()
+    art = fit(parts, bits, "center", steps=steps)
+    jax.block_until_ready(predict(art, Xq))
+    us_cold = (time.perf_counter() - t0) * 1e6
+    emit("serve/cold_fit_predict_m40", us_cold, n=n, d=d, m=m,
+         wire_kbits=art.wire_bits / 1e3, includes_compile=1)
+
+    # ---- warm serve loop: cached program, cached factors ----
+    c0 = serve_trace_count("center")
+    _, us_warm = timed(lambda: jax.block_until_ready(predict(art, Xq)), repeats=20)
+    retraces = serve_trace_count("center") - c0
+    ops = predict_op_counts(art, Xq)
+    assert retraces == 0, f"warm predict retraced {retraces}x"
+    assert ops == {"cholesky": 0, "eigh": 0}, f"warm predict refactorizes: {ops}"
+    assert us_warm < us_cold, "warm predict must beat cold fit+predict"
+    emit("serve/predict_warm_m40", us_warm, qps=t_batch / (us_warm / 1e6),
+         batch=t_batch, speedup_vs_cold=us_cold / us_warm,
+         retraces_warm_loop=retraces,
+         cholesky_eqns=ops["cholesky"], eigh_eqns=ops["eigh"])
+
+    # ---- streaming update: frozen codebooks, rank-k factor growth ----
+    n_new = 16
+    Xn = rng.normal(size=(n_new, d)).astype(np.float32)
+    yn = np.zeros(n_new, np.float32)
+    t0 = time.perf_counter()
+    art_u = update(art, Xn, yn, machine=1)
+    jax.block_until_ready(art_u.factors["alpha"])
+    us_update = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    jax.block_until_ready(predict(art_u, Xq))  # the one retrace growth pays
+    us_regrow = (time.perf_counter() - t0) * 1e6
+    emit("serve/update_stream_m40", us_update, n_new=n_new,
+         wire_bits_added=art_u.wire_bits - art.wire_bits,
+         first_predict_after_us=us_regrow)
+
+    # ---- checkpoint round-trip: bitwise-identical serving ----
+    mu0, v0 = predict(art, Xq)
+    with tempfile.TemporaryDirectory() as td:
+        t0 = time.perf_counter()
+        save_artifact(art, td)
+        art2 = load_artifact(td)
+        us_ckpt = (time.perf_counter() - t0) * 1e6
+        mu1, v1 = predict(art2, Xq)
+    bitwise = bool(
+        np.array_equal(np.asarray(mu0), np.asarray(mu1))
+        and np.array_equal(np.asarray(v0), np.asarray(v1))
+    )
+    assert bitwise, "loaded artifact must predict bitwise-identically"
+    emit("serve/save_load_roundtrip", us_ckpt, bitwise_equal=int(bitwise))
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    from .common import RESULTS
+
+    main(quick=not args.full)
+    with open("BENCH_serve.json", "w") as fjson:
+        json.dump(RESULTS, fjson, indent=1)
+    print(f"# wrote BENCH_serve.json ({len(RESULTS)} rows)")

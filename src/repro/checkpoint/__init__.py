@@ -1,1 +1,7 @@
-from .ckpt import save_checkpoint, restore_checkpoint, latest_step
+from .ckpt import (
+    save_checkpoint,
+    restore_checkpoint,
+    latest_step,
+    save_artifact,
+    load_artifact_arrays,
+)

@@ -2,9 +2,15 @@
 
 Restore is sharding-aware: pass ``shardings`` (a matching pytree of
 NamedShardings or None) and leaves are device_put into place.
+
+Artifact checkpoints (:func:`save_artifact` / :func:`load_artifact_arrays`)
+pair the npz with a sidecar json of static metadata, so a registered-dataclass
+pytree like ``core.distributed_gp.FittedProtocol`` can be restored WITHOUT the
+original object as a template (the caller rebuilds from metadata + key paths).
 """
 from __future__ import annotations
 
+import json
 import os
 import re
 
@@ -12,11 +18,20 @@ import numpy as np
 import jax
 
 
+def _key_str(k):
+    # DictKey has .key, GetAttrKey (registered dataclasses) has .name,
+    # SequenceKey (tuples/namedtuples) has .idx
+    for attr in ("key", "name", "idx"):
+        if hasattr(k, attr):
+            return str(getattr(k, attr))
+    return str(k)
+
+
 def _flatten(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
     for path, leaf in flat:
-        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        key = "/".join(_key_str(k) for k in path)
         out[key] = np.asarray(leaf)
     return out, treedef
 
@@ -52,7 +67,36 @@ def restore_checkpoint(directory: str, step: int, like_tree, shardings=None):
     )
     leaves = []
     for (pathk, leaf), sh in zip(flat, shard_flat):
-        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in pathk)
+        key = "/".join(_key_str(k) for k in pathk)
         arr = data[key]
         leaves.append(jax.device_put(arr, sh) if sh is not None else arr)
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_artifact(directory: str, step: int, tree, meta: dict) -> str:
+    """Checkpoint a pytree PLUS a json of static metadata, atomically.
+
+    The npz carries the array leaves (same key-path layout as
+    :func:`save_checkpoint`); ``meta`` must be json-serializable and carry
+    whatever the caller needs to rebuild the object without a template
+    (:func:`load_artifact_arrays` hands both back)."""
+    path = save_checkpoint(directory, step, tree)
+    meta_path = os.path.join(directory, f"meta_{step:08d}.json")
+    tmp = meta_path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(meta, f, indent=1)
+    os.replace(tmp, meta_path)
+    return path
+
+
+def load_artifact_arrays(directory: str, step: int | None = None):
+    """(meta, {key_path: np.ndarray}) for an artifact checkpoint; ``step=None``
+    loads the latest."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    with open(os.path.join(directory, f"meta_{step:08d}.json")) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(directory, f"ckpt_{step:08d}.npz"))
+    return meta, {k: data[k] for k in data.files}

@@ -17,6 +17,12 @@ from .distributed_gp import (
     single_center_gp,
     broadcast_gp,
     poe_baseline,
+    FittedProtocol,
+    fit,
+    predict,
+    update,
+    save_artifact,
+    load_artifact,
 )
 
 __all__ = [
@@ -26,4 +32,5 @@ __all__ = [
     "GPModel", "GPParams", "train_gp", "init_params",
     "SGPR", "train_sgpr",
     "split_machines", "single_center_gp", "broadcast_gp", "poe_baseline",
+    "FittedProtocol", "fit", "predict", "update", "save_artifact", "load_artifact",
 ]

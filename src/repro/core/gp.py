@@ -28,6 +28,8 @@ __all__ = [
     "kernel_from_inner",
     "prior_diag",
     "gram_fn",
+    "posterior_factors",
+    "posterior_apply",
     "posterior_from_gram",
     "nlml_from_gram",
     "GPModel",
@@ -129,6 +131,29 @@ def gram_fn(kernel: str, backend: str = "xla") -> Callable:
     return functools.partial(fn, backend=backend)
 
 
+def posterior_factors(G, y, noise_var):
+    """Fit-time half of the dense GP predictive: factorize the train gram ONCE
+    into ``{"L": chol(G + noise I), "alpha": (G + noise I)^{-1} y}``.
+    :func:`posterior_apply` serves any number of query batches from these with
+    triangular solves only (the ``FittedProtocol`` serve-path invariant)."""
+    n = G.shape[0]
+    noise = jnp.asarray(noise_var)
+    noise = jnp.broadcast_to(noise, (n,)) if noise.ndim <= 1 else noise
+    K = G + jnp.diag(noise + _JITTER)
+    L = jnp.linalg.cholesky(K)
+    alpha = jax.scipy.linalg.cho_solve((L, True), y)
+    return {"L": L, "alpha": alpha}
+
+
+def posterior_apply(factors, G_star_n, g_star_star):
+    """Query-time half: O(t n^2) solves against cached :func:`posterior_factors`
+    — no Cholesky factorization."""
+    mean = G_star_n @ factors["alpha"]
+    V = jax.scipy.linalg.solve_triangular(factors["L"], G_star_n.T, lower=True)
+    var = g_star_star - jnp.sum(V**2, axis=0)
+    return mean, jnp.maximum(var, 1e-12)
+
+
 def posterior_from_gram(G, G_star_n, g_star_star, y, noise_var):
     """Posterior mean/variance given gram blocks (paper eqs. 2-3; eq. 3's sign
     typo fixed: the data term is SUBTRACTED).
@@ -137,16 +162,9 @@ def posterior_from_gram(G, G_star_n, g_star_star, y, noise_var):
     variances at test points; y: (n,); noise_var: scalar or per-point (n,)
     (heteroscedastic, used by pseudo-point aggregation).
     Returns (mean (t,), var (t,))."""
-    n = G.shape[0]
-    noise = jnp.asarray(noise_var)
-    noise = jnp.broadcast_to(noise, (n,)) if noise.ndim <= 1 else noise
-    K = G + jnp.diag(noise + _JITTER)
-    L = jnp.linalg.cholesky(K)
-    alpha = jax.scipy.linalg.cho_solve((L, True), y)
-    mean = G_star_n @ alpha
-    V = jax.scipy.linalg.solve_triangular(L, G_star_n.T, lower=True)  # (n, t)
-    var = g_star_star - jnp.sum(V**2, axis=0)
-    return mean, jnp.maximum(var, 1e-12)
+    return posterior_apply(
+        posterior_factors(G, y, noise_var), G_star_n, g_star_star
+    )
 
 
 def nlml_from_gram(G, y, noise_var):

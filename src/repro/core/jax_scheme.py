@@ -25,6 +25,7 @@ __all__ = [
     "fit_scheme_batched",
     "encode",
     "decode",
+    "roundtrip",
     "codebook_cap",
     "scheme_tables",
     "scaled_centroids",
@@ -114,6 +115,17 @@ def decode(state, codes, tables):
     _, cents = tables
     Xp = Q.dequantize(codes, state["sigma"], state["rates"], cents)
     return Xp @ state["T_inv"].T
+
+
+def roundtrip(state, X, tables):
+    """Encode-then-decode NEW symbols with an already-fitted (frozen) scheme
+    state: ``(codes, X̂)``.  This is the streaming-serve path
+    (``distributed_gp.update``): the codebooks/transform fitted once at
+    protocol-fit time are reused, so only the new symbols' wire bits
+    (``rates.sum()`` per point) are spent — no scheme refit, no new side
+    info."""
+    codes = encode(state, X, tables)
+    return codes, decode(state, codes, tables)
 
 
 SchemeState = dict

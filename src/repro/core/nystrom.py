@@ -15,7 +15,17 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["nystrom_complete", "nystrom_cross", "nystrom_posterior"]
+__all__ = [
+    "nystrom_complete",
+    "nystrom_cross",
+    "nystrom_posterior",
+    "nystrom_factors",
+    "nystrom_apply",
+    "nystrom_kinv",
+    "chol_update",
+    "chol_update_rank",
+    "chol_append",
+]
 
 _JITTER = 1e-6
 
@@ -47,36 +57,113 @@ def nystrom_cross(G_KK, G_KN, G_star_K):
     return B.T @ W
 
 
+def nystrom_kinv(W, L_M, s2, v):
+    """(Ghat + s2 I)^{-1} v in woodbury form:
+    (s2 I + W^T W)^{-1} = (I - W^T (s2 I + W W^T)^{-1} W) / s2."""
+    t = W @ v
+    t = jax.scipy.linalg.cho_solve((L_M, True), t)
+    return (v - W.T @ t) / s2
+
+
+def nystrom_factors(G_KK, G_KN, y, noise_var):
+    """Fit-time factorization of the Nyström predictive — everything
+    query-independent, computed ONCE:
+
+      L_KK = chol(G_KK + jitter)          (K, K)
+      W    = L_KK^{-1} G_KN               (K, N)
+      L_M  = chol(s2 I + W W^T)           (K, K)
+      alpha = (Ghat + s2 I)^{-1} y        (N,)
+
+    Returned as a dict of arrays so the factor set round-trips through
+    ``repro.checkpoint`` with stable key paths.  :func:`nystrom_apply`
+    consumes it per query batch with NO further factorization (triangular
+    solves only) — the serve-path invariant ``FittedProtocol`` relies on."""
+    K = G_KK.shape[0]
+    L = jnp.linalg.cholesky(G_KK + _JITTER * jnp.trace(G_KK) / K * jnp.eye(K, dtype=G_KK.dtype))
+    W = jax.scipy.linalg.solve_triangular(L, G_KN, lower=True)  # (K, N)
+    s2 = noise_var + _JITTER
+    M = s2 * jnp.eye(K, dtype=W.dtype) + W @ W.T
+    Lm = jnp.linalg.cholesky(M)
+    alpha = nystrom_kinv(W, Lm, s2, y)
+    return {"L_KK": L, "W": W, "L_M": Lm, "alpha": alpha}
+
+
+def nystrom_apply(factors, G_star_K, g_star_star, noise_var):
+    """Query-time half of the Nyström predictive: O(t N K) triangular solves
+    against cached :func:`nystrom_factors` — no Cholesky factorization."""
+    L, W, Lm, alpha = factors["L_KK"], factors["W"], factors["L_M"], factors["alpha"]
+    s2 = noise_var + _JITTER
+    # test cross-covariances via the same Nyström map: G_*N = G_*K G_KK^{-1} G_KN
+    B = jax.scipy.linalg.solve_triangular(L, G_star_K.T, lower=True)  # (K, t)
+    G_sN = B.T @ W  # (t, N)
+    mean = G_sN @ alpha
+    V = jax.vmap(lambda v: nystrom_kinv(W, Lm, s2, v), in_axes=1, out_axes=1)(G_sN.T)
+    var = g_star_star - jnp.sum(G_sN.T * V, axis=0)
+    return mean, jnp.maximum(var, 1e-12)
+
+
 def nystrom_posterior(G_KK, G_KN, y, noise_var, G_star_K, g_star_star, exact_diag=None):
-    """GP posterior with the Nyström gram, solved in O(N K^2) woodbury form.
+    """GP posterior with the Nyström gram, solved in O(N K^2) woodbury form:
+    factorize (:func:`nystrom_factors`) then apply (:func:`nystrom_apply`).
 
     Ghat + s^2 I = s^2 I + W^T W with W = L^{-1} G_KN — avoid forming N x N when
     no exact_diag correction is requested.
     """
-    K = G_KK.shape[0]
     if exact_diag is not None:
         # fall back to the dense path (still fine for the paper's N ~ 1e3)
         Ghat = nystrom_complete(G_KK, G_KN, exact_diag)
         from .gp import posterior_from_gram
 
         return posterior_from_gram(Ghat, G_star_K, g_star_star, y, noise_var)
-    L = jnp.linalg.cholesky(G_KK + _JITTER * jnp.trace(G_KK) / K * jnp.eye(K, dtype=G_KK.dtype))
-    W = jax.scipy.linalg.solve_triangular(L, G_KN, lower=True)  # (K, N)
-    s2 = noise_var + _JITTER
-    # (s2 I + W^T W)^{-1} = (I - W^T (s2 I + W W^T)^{-1} W) / s2
-    M = s2 * jnp.eye(K, dtype=W.dtype) + W @ W.T
-    Lm = jnp.linalg.cholesky(M)
+    f = nystrom_factors(G_KK, G_KN, y, noise_var)
+    return nystrom_apply(f, G_star_K, g_star_star, noise_var)
 
-    def kinv(v):  # (Ghat + s2 I)^{-1} v
-        t = W @ v
-        t = jax.scipy.linalg.cho_solve((Lm, True), t)
-        return (v - W.T @ t) / s2
 
-    alpha = kinv(y)
-    # test cross-covariances via the same Nyström map: G_*N = G_*K G_KK^{-1} G_KN
-    B = jax.scipy.linalg.solve_triangular(L, G_star_K.T, lower=True)  # (K, t)
-    G_sN = B.T @ W  # (t, N)
-    mean = G_sN @ alpha
-    V = jax.vmap(kinv, in_axes=1, out_axes=1)(G_sN.T)  # (N, t)
-    var = g_star_star - jnp.sum(G_sN.T * V, axis=0)
-    return mean, jnp.maximum(var, 1e-12)
+# --------------------------------------------------------------------------
+# streaming rank-k factor maintenance (FittedProtocol.update)
+# --------------------------------------------------------------------------
+
+
+def chol_update(L, x):
+    """Rank-1 Cholesky update: chol(L L^T + x x^T) in O(K^2) — the classic
+    Givens sweep, written as a fori_loop so it jits and vmaps."""
+    K = L.shape[0]
+    idx = jnp.arange(K)
+
+    def body(k, carry):
+        L, x = carry
+        Lkk, xk = L[k, k], x[k]
+        r = jnp.sqrt(Lkk * Lkk + xk * xk)
+        c, s = r / Lkk, xk / Lkk
+        below = idx > k
+        col = L[:, k]
+        newcol = jnp.where(below, (col + s * x) / c, col).at[k].set(r)
+        x = jnp.where(below, c * x - s * newcol, x)
+        return L.at[:, k].set(newcol), x
+
+    L, _ = jax.lax.fori_loop(0, K, body, (L, x))
+    return L
+
+
+def chol_update_rank(L, V):
+    """Rank-k update chol(L L^T + V V^T): scan of rank-1 sweeps over the
+    columns of V (k, n_new) — O(n_new K^2), never refactorizes the K x K."""
+    L, _ = jax.lax.scan(lambda Lc, v: (chol_update(Lc, v), None), L, V.T)
+    return L
+
+
+def chol_append(L, C_on, C_nn):
+    """Grow a Cholesky factor by appended rows/cols WITHOUT refactorizing the
+    existing block: given L = chol(A) and the bordered matrix
+    [[A, C_on], [C_on^T, C_nn]], return its (n+k, n+k) factor
+
+        [[L, 0], [X^T, chol(S)]],   X = L^{-1} C_on,  S = C_nn - X^T X.
+
+    Only the NEW k x k Schur block is factorized — O(n k^2 + k^3)."""
+    X = jax.scipy.linalg.solve_triangular(L, C_on, lower=True)  # (n, k)
+    S = C_nn - X.T @ X
+    Ls = jnp.linalg.cholesky(S)
+    n, k = C_on.shape
+    top = jnp.concatenate([L, jnp.zeros((n, k), L.dtype)], axis=1)
+    bot = jnp.concatenate([X.T, Ls], axis=1)
+    return jnp.concatenate([top, bot], axis=0)

@@ -1,0 +1,263 @@
+"""The fit-once/serve-many artifact (core.distributed_gp.FittedProtocol).
+
+Locks the serving contract:
+  * checkpoint save/load reproduces predict() outputs BITWISE;
+  * warm predict() is structurally factorization-free (zero cholesky/eigh
+    equations in its jaxpr) and never retraces on a warm loop;
+  * streaming update() equals a from-scratch factor build on the concatenated
+    data exactly (rank-k updates are algebra, not approximation), and tracks a
+    full protocol refit within tolerance;
+  * the wire-bit ledger charges only the new symbols at the frozen codebook's
+    rate (zero for points landing on the center / a PoE expert's own data).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    split_machines, fit, predict, update, save_artifact, load_artifact,
+)
+from repro.core import jax_scheme
+from repro.core.gp import gram_fn
+from repro.core.nystrom import (
+    nystrom_posterior, chol_update_rank, chol_append,
+)
+from repro.core.distributed_gp import predict_op_counts, serve_trace_count
+
+
+def _problem(seed=0, n=160, d=5, n_test=40):
+    rng = np.random.default_rng(seed)
+    W = rng.normal(size=(d, 2))
+    f = lambda Z: np.sin(Z @ W[:, 0]) + 0.4 * (Z @ W[:, 1])
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    y = (f(X) + 0.05 * rng.normal(size=n)).astype(np.float32)
+    Xt = rng.normal(size=(n_test, d)).astype(np.float32)
+    return X, y, jnp.asarray(Xt), f
+
+
+def _fit_any(protocol, gram_mode, parts, bits, steps=8):
+    if protocol == "poe":
+        return fit(parts, 0, "poe", steps=steps, method="rbcm")
+    return fit(parts, bits, protocol, steps=steps, gram_mode=gram_mode)
+
+
+# --------------------------------------------------------------------------
+# persistence
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "protocol,gram_mode",
+    [
+        ("center", "nystrom"),
+        ("center", "nystrom_fitc"),
+        ("center", "direct"),
+        ("broadcast", "nystrom"),
+        ("broadcast", "direct"),
+        ("poe", "dense"),
+    ],
+)
+def test_artifact_roundtrip_is_bitwise(tmp_path, protocol, gram_mode):
+    X, y, Xt, _ = _problem(0)
+    parts = split_machines(X, y, 4, jax.random.PRNGKey(0))
+    art = _fit_any(protocol, gram_mode, parts, 16)
+    mu0, v0 = predict(art, Xt)
+    save_artifact(art, str(tmp_path))
+    art2 = load_artifact(str(tmp_path))
+    assert art2.wire_bits == art.wire_bits
+    assert art2.lengths == art.lengths
+    mu1, v1 = predict(art2, Xt)
+    np.testing.assert_array_equal(np.asarray(mu0), np.asarray(mu1))
+    np.testing.assert_array_equal(np.asarray(v0), np.asarray(v1))
+
+
+def test_artifact_roundtrip_after_update_is_bitwise(tmp_path):
+    X, y, Xt, f = _problem(1)
+    parts = split_machines(X, y, 4, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(9)
+    Xn = rng.normal(size=(10, X.shape[1])).astype(np.float32)
+    yn = f(Xn).astype(np.float32)
+    art = update(fit(parts, 16, "center", steps=6), Xn, yn, machine=2)
+    mu0, v0 = predict(art, Xt)
+    save_artifact(art, str(tmp_path), step=3)
+    art2 = load_artifact(str(tmp_path))  # latest-step discovery
+    np.testing.assert_array_equal(np.asarray(mu0), np.asarray(predict(art2, Xt)[0]))
+
+
+def test_load_artifact_respects_shardings(tmp_path):
+    X, y, Xt, _ = _problem(2)
+    parts = split_machines(X, y, 3, jax.random.PRNGKey(2))
+    art = fit(parts, 8, "center", steps=4)
+    mu0, _ = predict(art, Xt)
+    save_artifact(art, str(tmp_path))
+    dev = jax.devices()[0]
+    art2 = load_artifact(str(tmp_path), shardings=dev)
+    for leaf in jax.tree_util.tree_leaves(art2):
+        assert dev in leaf.devices()
+    np.testing.assert_array_equal(np.asarray(mu0), np.asarray(predict(art2, Xt)[0]))
+
+
+# --------------------------------------------------------------------------
+# warm-serve structure: no refit, no refactorization, no retrace
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("protocol", ["center", "broadcast", "poe"])
+def test_warm_predict_is_factorization_free(protocol):
+    X, y, Xt, _ = _problem(3)
+    parts = split_machines(X, y, 4, jax.random.PRNGKey(3))
+    art = _fit_any(protocol, "nystrom", parts, 16)
+    counts = predict_op_counts(art, Xt)
+    assert counts == {"cholesky": 0, "eigh": 0}
+
+
+def test_warm_predict_does_not_retrace():
+    X, y, Xt, _ = _problem(4)
+    parts = split_machines(X, y, 4, jax.random.PRNGKey(4))
+    art = fit(parts, 16, "center", steps=4)
+    predict(art, Xt)  # trace once
+    c0 = serve_trace_count("center")
+    for _ in range(3):
+        predict(art, Xt)
+    assert serve_trace_count("center") == c0
+    # a grown artifact retraces exactly once, then is warm again
+    rng = np.random.default_rng(0)
+    Xn = rng.normal(size=(6, X.shape[1])).astype(np.float32)
+    art2 = update(art, Xn, np.zeros(6, np.float32), machine=1)
+    predict(art2, Xt)
+    c1 = serve_trace_count("center")
+    assert c1 == c0 + 1
+    predict(art2, Xt)
+    assert serve_trace_count("center") == c1
+
+
+# --------------------------------------------------------------------------
+# streaming update
+# --------------------------------------------------------------------------
+
+
+def test_update_center_matches_scratch_factor_build_exactly():
+    """The rank-k factor updates are exact algebra: an updated artifact must
+    match a posterior built from scratch on [old reconstruction; new decode]
+    to float tolerance."""
+    X, y, Xt, f = _problem(5)
+    parts = split_machines(X, y, 4, jax.random.PRNGKey(5))
+    art = fit(parts, 16, "center", steps=8)
+    rng = np.random.default_rng(1)
+    Xn = rng.normal(size=(12, X.shape[1])).astype(np.float32)
+    yn = (f(Xn) + 0.05 * rng.normal(size=12)).astype(np.float32)
+    art_u = update(art, Xn, yn, machine=1)
+    mu_u, v_u = predict(art_u, Xt)
+
+    # scratch: re-encode with the SAME frozen scheme, full nystrom_posterior
+    w = art.wire
+    state = {"T": w.T[1], "T_inv": w.T_inv[1], "sigma": w.sigma[1],
+             "rates": w.rates[1]}
+    tables = jax_scheme.scheme_tables(art.bits_per_sample, art.max_bits)
+    _, dec = jax_scheme.roundtrip(state, jnp.asarray(Xn), tables)
+    X2 = jnp.concatenate([art.data["X_recon"], dec])
+    y2 = jnp.concatenate([art.y, jnp.asarray(yn)])
+    k = gram_fn("se")
+    p = art.params
+    Xc = art.data["Xc"]
+    g_ss = jnp.full(Xt.shape[0], jnp.exp(p.log_a))
+    mu_s, v_s = nystrom_posterior(
+        k(p, Xc), k(p, Xc, X2), y2, jnp.exp(p.log_noise), k(p, Xt, Xc), g_ss
+    )
+    np.testing.assert_allclose(np.asarray(mu_u), np.asarray(mu_s), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(v_u), np.asarray(v_s), atol=1e-4)
+
+
+def test_update_tracks_full_refit_within_tolerance():
+    """Frozen-codebook streaming vs a full protocol refit on the concatenated
+    data (scheme refit + everything): at a healthy rate the two predictions
+    must agree closely — the artifact does not drift from the protocol."""
+    X, y, Xt, f = _problem(6, n=200)
+    d = X.shape[1]
+    parts = split_machines(X, y, 4, jax.random.PRNGKey(6))
+    art = fit(parts, 48, "center", steps=20)
+    rng = np.random.default_rng(2)
+    Xn = rng.normal(size=(15, d)).astype(np.float32)
+    yn = (f(Xn) + 0.05 * rng.normal(size=15)).astype(np.float32)
+    art_u = update(art, Xn, yn, machine=1)
+    mu_u, _ = predict(art_u, Xt)
+
+    parts2 = list(parts)
+    parts2[1] = (
+        jnp.concatenate([parts[1][0], jnp.asarray(Xn)]),
+        jnp.concatenate([parts[1][1], jnp.asarray(yn)]),
+    )
+    art_refit = fit(parts2, 48, "center", steps=0, params=art.params)
+    mu_r, _ = predict(art_refit, Xt)
+    err = float(jnp.max(jnp.abs(mu_u - mu_r)))
+    spread = float(jnp.std(jnp.asarray(y)))
+    assert err < 0.05 * max(spread, 1.0)
+
+
+@pytest.mark.parametrize("protocol", ["broadcast", "poe"])
+def test_update_improves_or_holds_other_protocols(protocol):
+    X, y, Xt, f = _problem(7, n=180)
+    yt = f(np.asarray(Xt))
+    parts = split_machines(X, y, 4, jax.random.PRNGKey(7))
+    art = _fit_any(protocol, "nystrom", parts, 24, steps=15)
+    rng = np.random.default_rng(3)
+    Xn = rng.normal(size=(30, X.shape[1])).astype(np.float32)
+    yn = (f(Xn) + 0.05 * rng.normal(size=30)).astype(np.float32)
+    art_u = update(art, Xn, yn, machine=1)
+    mu0, v0 = predict(art, Xt)
+    mu1, v1 = predict(art_u, Xt)
+    assert np.all(np.isfinite(np.asarray(mu1))) and np.all(np.asarray(v1) > 0)
+    e0 = float(np.mean((yt - np.asarray(mu0)) ** 2) / np.var(yt))
+    e1 = float(np.mean((yt - np.asarray(mu1)) ** 2) / np.var(yt))
+    assert e1 < e0 * 1.25 + 0.02  # more data must not meaningfully hurt
+
+
+def test_update_wire_ledger_accounting():
+    X, y, _, f = _problem(8)
+    parts = split_machines(X, y, 5, jax.random.PRNGKey(8))
+    rng = np.random.default_rng(4)
+    Xn = rng.normal(size=(9, X.shape[1])).astype(np.float32)
+    yn = np.zeros(9, np.float32)
+    art = fit(parts, 16, "center", steps=2)
+    # machine j pays its frozen allocation per point; the center pays nothing
+    rate_j = int(np.asarray(art.wire.rates[2]).sum())
+    assert update(art, Xn, yn, machine=2).wire_bits == art.wire_bits + 9 * rate_j
+    assert update(art, Xn, yn, machine=0).wire_bits == art.wire_bits
+    # FITC additionally ships 32 bits/point of exact |x|^2
+    art_f = fit(parts, 16, "center", steps=2, gram_mode="nystrom_fitc")
+    rate_f = int(np.asarray(art_f.wire.rates[2]).sum())
+    assert (
+        update(art_f, Xn, yn, machine=2).wire_bits
+        == art_f.wire_bits + 9 * (rate_f + 32)
+    )
+    # PoE stays a zero-rate baseline under streaming
+    art_p = fit(parts, 0, "poe", steps=2)
+    assert update(art_p, Xn, yn, machine=3).wire_bits == 0
+
+
+# --------------------------------------------------------------------------
+# the rank-k cholesky primitives themselves
+# --------------------------------------------------------------------------
+
+
+def test_chol_update_rank_matches_refactorization():
+    rng = np.random.default_rng(0)
+    A = rng.normal(size=(6, 6)).astype(np.float32)
+    A = A @ A.T + 6 * np.eye(6, dtype=np.float32)
+    V = rng.normal(size=(6, 3)).astype(np.float32)
+    L = jnp.linalg.cholesky(jnp.asarray(A))
+    L_up = chol_update_rank(L, jnp.asarray(V))
+    L_ref = jnp.linalg.cholesky(jnp.asarray(A + V @ V.T))
+    np.testing.assert_allclose(np.asarray(L_up), np.asarray(L_ref), atol=1e-4)
+
+
+def test_chol_append_matches_refactorization():
+    rng = np.random.default_rng(1)
+    M = rng.normal(size=(9, 9)).astype(np.float32)
+    M = M @ M.T + 9 * np.eye(9, dtype=np.float32)
+    A, C_on, C_nn = M[:6, :6], M[:6, 6:], M[6:, 6:]
+    L = jnp.linalg.cholesky(jnp.asarray(A))
+    L_app = chol_append(L, jnp.asarray(C_on), jnp.asarray(C_nn))
+    L_ref = jnp.linalg.cholesky(jnp.asarray(M))
+    np.testing.assert_allclose(np.asarray(L_app), np.asarray(L_ref), atol=1e-4)
