@@ -1,0 +1,134 @@
+"""Machines-as-devices scaling benchmark (EXPERIMENTS.md §Mesh): the
+impl="mesh" execution path on 2 -> 8 forced host devices.
+
+Rows (written to BENCH_mesh.json via benchmarks/run.py --json, or standalone):
+
+* ``mesh/fit_<protocol>_m<k>`` — one full fit(impl="mesh") wall clock
+  (wire collectives + training + sharded factor build, includes
+  trace/compile) with the wire-bit ledger and its fp32 all-gather baseline;
+* ``mesh/predict_<protocol>_m<k>`` — the warm shard_map serve loop
+  (per-query-batch latency; psum/KL fusion epilogue on the mesh);
+* ``mesh/conformance_m<k>`` — max |mesh - batched| prediction deviation on
+  the shared problem, asserted small (the in-benchmark cross-impl check).
+
+The machine mesh needs one device per machine, so the measurement runs in a
+subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` —
+exactly how tests/test_conformance.py gets its devices in-process, and how a
+real deployment would see one process per accelerator.
+
+Run standalone:  PYTHONPATH=src python -m benchmarks.mesh_bench [--full]
+or through the driver: PYTHONPATH=src python -m benchmarks.run --json --only mesh
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from .common import emit
+
+_SCRIPT = r"""
+import json, os, time
+import numpy as np
+import jax, jax.numpy as jnp
+
+quick = os.environ.get("MESH_BENCH_QUICK", "1") == "1"
+from repro.core import split_machines, fit, predict
+
+rng = np.random.default_rng(0)
+d = 8
+n_per = 40 if quick else 250
+rows = []
+for m in (2, 4, 8):
+    n = m * n_per
+    W = rng.normal(size=(d, 2))
+    f = lambda Z: np.sin(Z @ W[:, 0]) + 0.4 * (Z @ W[:, 1])
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    y = (f(X) + 0.05 * rng.normal(size=n)).astype(np.float32)
+    Xt = rng.normal(size=(64, d)).astype(np.float32)
+    parts = split_machines(X, y, m, jax.random.PRNGKey(0))
+    steps = 10 if quick else 60
+    for protocol, bits in (("broadcast", 24), ("center", 24)):
+        t0 = time.perf_counter()
+        art = fit(parts, bits, protocol, steps=steps, impl="mesh")
+        mu, _ = predict(art, Xt)
+        jax.block_until_ready(mu)
+        t_fit = time.perf_counter() - t0
+        # fp32 baseline: every transmitting machine ships raw floats
+        tx = art.lengths[1:] if protocol == "center" else art.lengths
+        fp32_bits = sum(32 * d * n_j for n_j in tx)
+        rows.append({
+            "name": f"mesh/fit_{protocol}_m{m}",
+            "us_per_call": t_fit * 1e6,
+            "derived": {"m": m, "n": n, "d": d, "bits": bits,
+                        "wire_kbits": art.wire_bits / 1e3,
+                        "fp32_baseline_kbits": fp32_bits / 1e3,
+                        "wire_vs_fp32": art.wire_bits / fp32_bits},
+        })
+        # warm serve loop (trace once, then measure)
+        predict(art, Xt)
+        reps = 5 if quick else 20
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            mu, s2 = predict(art, Xt)
+        jax.block_until_ready(mu)
+        t_warm = (time.perf_counter() - t0) / reps
+        rows.append({
+            "name": f"mesh/predict_{protocol}_m{m}",
+            "us_per_call": t_warm * 1e6,
+            "derived": {"m": m, "batch": 64,
+                        "qps": 64 / t_warm},
+        })
+    # cross-impl conformance on the shared problem
+    art_b = fit(parts, 24, "broadcast", steps=steps)
+    art_m = fit(parts, 24, "broadcast", steps=steps, impl="mesh")
+    mu_b, _ = predict(art_b, Xt)
+    mu_m, _ = predict(art_m, Xt)
+    dev = float(jnp.max(jnp.abs(mu_b - mu_m)))
+    assert dev < 1e-2, f"mesh/batched divergence {dev}"
+    assert art_b.wire_bits == art_m.wire_bits
+    rows.append({
+        "name": f"mesh/conformance_m{m}",
+        "us_per_call": 0.0,
+        "derived": {"m": m, "max_abs_mu_dev": dev,
+                    "wire_bits_equal": 1},
+    })
+print("MESH_BENCH_JSON " + json.dumps(rows))
+"""
+
+
+def main(quick: bool = True) -> None:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else [])
+    )
+    from repro.compat import host_device_count_flags
+
+    env["XLA_FLAGS"] = host_device_count_flags(8, env.get("XLA_FLAGS", ""))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env["MESH_BENCH_QUICK"] = "1" if quick else "0"
+    out = subprocess.run(
+        [sys.executable, "-c", _SCRIPT],
+        capture_output=True, text=True, env=env, timeout=3600,
+    )
+    if out.returncode != 0:
+        raise RuntimeError(f"mesh_bench subprocess failed:\n{out.stderr[-3000:]}")
+    line = [l for l in out.stdout.splitlines() if l.startswith("MESH_BENCH_JSON ")][-1]
+    for row in json.loads(line[len("MESH_BENCH_JSON "):]):
+        emit(row["name"], row["us_per_call"], **row["derived"])
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    main(quick=not args.full)
+    from .common import RESULTS
+
+    with open("BENCH_mesh.json", "w") as f:
+        json.dump(RESULTS, f, indent=1)
+    print("# wrote BENCH_mesh.json")

@@ -32,7 +32,10 @@ def _flatten(tree):
     out = {}
     for path, leaf in flat:
         key = "/".join(_key_str(k) for k in path)
-        out[key] = np.asarray(leaf)
+        # device_get first: leaves sharded across a mesh (e.g. a
+        # FittedProtocol fit with impl="mesh") gather to one host array, so
+        # every checkpoint is a single-host artifact
+        out[key] = np.asarray(jax.device_get(leaf))
     return out, treedef
 
 

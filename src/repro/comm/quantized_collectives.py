@@ -2,23 +2,35 @@
 
 ``q_all_gather(x, axis_name, bits)`` — inside shard_map: every shard holds a
 local dataset block (n_loc, d) and wants every other shard's block for gram
-computation (the §5.2 broadcast model).  Instead of all-gathering fp32 (32d
-bits/sample), each shard
+computation.  Instead of all-gathering fp32 (32d bits/sample), each shard
 
-  1. computes its local second moment, psums to get the *other* shards' sum
-     (the paper's Qy for broadcast),
+  1. computes its local second moment and the target covariance Qy —
+     ``mode="broadcast"`` (§5.2): psum to get the *other* shards' sum;
+     ``mode="center"`` (§5.1): psum-select the center shard's covariance,
   2. fits the per-symbol scheme on-device (core.jax_scheme),
-  3. all-gathers the int8 codes (R bits/sample on the wire; the fp32
-     side-info — T_inv/sigma/rates, O(d^2) per shard — matches the paper's
+  3. all-gathers the int codes (R bits/sample on the wire; the fp32
+     side-info — T/T_inv/sigma/rates, O(d^2) per shard — matches the paper's
      O(d^2 + Rn) accounting),
   4. decodes every peer's block with the peer's tables and substitutes its own
      exact block.
+
+``mask`` marks valid rows of a padded shard (ragged machines on a uniform
+SPMD layout): masked rows are excluded from the moment estimate, decode to
+zero, carry the -1 sentinel code, and are NOT charged to the wire ledger.
+``return_state=True`` additionally returns everything the collective moved
+(gathered codes/side-info) plus ``wire_bits`` — the ledger computed from the
+actual payload: sum over transmitting shards of rates.sum() * n_valid plus
+2 d² fp32 of side info (the center shard transmits nothing in center mode).
 
 ``q_psum(g, axis_name, bits)`` — gradient compression for the cross-pod
 all-reduce: per-tensor Gaussian scalar quantization (equiprobable-bin codebook
 with on-the-fly sigma), all-gather codes + per-shard sigma, decode and sum.
 This is the paper's scheme with Qx = sigma^2 I (no covariance side-info), the
-natural degenerate case for i.i.d.-ish gradient entries.
+natural degenerate case for i.i.d.-ish gradient entries.  ``bits >= 32`` is
+the fp fallback: an exact ``lax.psum`` (the codebook would be wider than the
+payload).  Differentiating through ``q_psum`` uses a straight-through custom
+VJP — the backward pass is that of the exact psum, so the quantizer's
+zero-derivative staircase does not kill the gradient signal.
 """
 from __future__ import annotations
 
@@ -38,32 +50,70 @@ def wire_bits_all_gather(n_per_shard: int, d: int, bits: int, n_shards: int, fp_
     return quantized, baseline
 
 
-def q_all_gather(x, axis_name: str, bits_per_sample: int, max_bits: int = 8):
+def q_all_gather(
+    x,
+    axis_name: str,
+    bits_per_sample: int,
+    max_bits: int = 8,
+    *,
+    mask=None,
+    mode: str = "broadcast",
+    center: int = 0,
+    return_state: bool = False,
+):
     """x: (n_loc, d) per shard -> (m, n_loc, d) reconstructions of every
     shard's block (own block exact).  Must run inside shard_map with
     ``axis_name`` bound.
+
+    mask : optional (n_loc,) float validity of rows (padded/ragged shards);
+        None = every row valid (the original uniform-shard behavior).
+    mode : "broadcast" (§5.2, Qy = sum of the other shards' covariances) or
+        "center" (§5.1, every shard targets the covariance of shard
+        ``center``).
+    return_state : also return a dict of what the collective moved —
+        ``codes`` (m, n_loc, d) int32 with -1 on masked rows, ``decoded``
+        (m, n_loc, d) reconstructions WITHOUT the own-block substitution,
+        ``T``/``T_inv``/``sigma``/``rates`` side info per shard, ``mask``
+        (m, n_loc), and ``wire_bits`` — the int32 ledger of actual payload
+        bits (codes at each shard's allocated rate over its VALID rows +
+        2 d² fp32 side info; the center shard is not charged in center mode).
     """
     n_loc, d = x.shape
     m = jax.lax.psum(1, axis_name)
     idx = jax.lax.axis_index(axis_name)
 
-    S_loc = x.T @ x / n_loc
-    S_tot = jax.lax.psum(S_loc, axis_name)
+    if mask is None:
+        n_valid = jnp.float32(n_loc)
+        S_loc = x.T @ x / n_valid
+    else:
+        n_valid = jnp.maximum(mask.sum(), 1.0)
+        S_loc = jax_scheme.masked_second_moment(x, mask)
+    if mode == "center":
+        # psum-select: O(d^2) on the wire, the center's S to every shard
+        sel = (idx == center).astype(jnp.float32)
+        Qy = jax.lax.psum(S_loc * sel, axis_name)
+    elif mode == "broadcast":
+        Qy = jax.lax.psum(S_loc, axis_name) - S_loc
+    else:
+        raise ValueError(f"unknown q_all_gather mode {mode!r}")
     # cap per-dim rates (and therefore codebook tables) at the max ALLOCATED
     # rate: greedy bit loading never hands one dimension more than
     # bits_per_sample bits, so a full 2^max_bits table only inflates the
     # (n, d, 2^cap) quantize/dequantize broadcast temporaries
     cap = jax_scheme.codebook_cap(bits_per_sample, max_bits)
-    state = jax_scheme.fit_scheme(S_loc, S_tot - S_loc, bits_per_sample, cap)
+    state = jax_scheme.fit_scheme(S_loc, Qy, bits_per_sample, cap)
     tables = jax_scheme.scheme_tables(bits_per_sample, max_bits)
 
     codes = jax_scheme.encode(state, x, tables)
     codes_small = codes.astype(jnp.uint8 if cap <= 8 else jnp.int32)
 
-    all_codes = jax.lax.all_gather(codes_small, axis_name)  # (m, n_loc, d) int8 wire
-    all_Tinv = jax.lax.all_gather(state["T_inv"], axis_name)  # side info O(d^2)
+    all_codes = jax.lax.all_gather(codes_small, axis_name)  # (m, n_loc, d) int wire
+    all_T = jax.lax.all_gather(state["T"], axis_name)  # side info O(d^2)
+    all_Tinv = jax.lax.all_gather(state["T_inv"], axis_name)
     all_sigma = jax.lax.all_gather(state["sigma"], axis_name)
     all_rates = jax.lax.all_gather(state["rates"], axis_name)
+    mask_l = jnp.ones((n_loc,), jnp.float32) if mask is None else mask
+    all_mask = jax.lax.all_gather(mask_l, axis_name)
 
     def dec(codes_j, Tinv_j, sigma_j, rates_j):
         _, cents = tables
@@ -71,19 +121,35 @@ def q_all_gather(x, axis_name: str, bits_per_sample: int, max_bits: int = 8):
         return Xp @ Tinv_j.T
 
     xhat = jax.vmap(dec)(all_codes, all_Tinv, all_sigma, all_rates)
+    xhat = xhat * all_mask[..., None]  # masked rows decode to exactly zero
     # substitute own exact block
     own = jax.nn.one_hot(idx, m, dtype=x.dtype)[:, None, None]
-    return xhat * (1 - own) + x[None].astype(xhat.dtype) * own
+    view = xhat * (1 - own) + x[None].astype(xhat.dtype) * own
+    if not return_state:
+        return view
+
+    # the ledger, from what actually moved: each transmitting shard pays its
+    # allocated rate per VALID row plus 2 d^2 fp32 of side info
+    contrib = state["rates"].sum() * n_valid.astype(jnp.int32) + 2 * d * d * 32
+    if mode == "center":
+        contrib = contrib * (idx != center).astype(jnp.int32)
+    wire_bits = jax.lax.psum(contrib, axis_name)
+    all_codes_i32 = jnp.where(
+        all_mask[..., None] > 0, all_codes.astype(jnp.int32), -1
+    )
+    return view, {
+        "codes": all_codes_i32,
+        "decoded": xhat,
+        "T": all_T,
+        "T_inv": all_Tinv,
+        "sigma": all_sigma,
+        "rates": all_rates,
+        "mask": all_mask,
+        "wire_bits": wire_bits,
+    }
 
 
-def q_psum(g, axis_name: str, bits: int = 8):
-    """Quantized all-reduce of a flat tensor g (any shape): per-shard Gaussian
-    scalar quantization at ``bits`` bits/element, gather + decode + sum.
-    Unbiased-ish (centroid decoder); exactness increases with bits.
-
-    NOTE: the result is replicated across ``axis_name`` by construction
-    (sum of an all_gather), but shard_map's vma checker cannot infer that —
-    pass ``check_vma=False`` to the enclosing jax.shard_map."""
+def _q_psum_impl(g, axis_name: str, bits: int):
     flat = g.reshape(-1).astype(jnp.float32)
     sigma = jnp.sqrt(jnp.mean(flat * flat) + 1e-30)
     edges = jnp.asarray(Q.gauss_bin_edges(bits), jnp.float32) * sigma
@@ -93,3 +159,39 @@ def q_psum(g, axis_name: str, bits: int = 8):
     all_sigma = jax.lax.all_gather(sigma, axis_name)
     vals = cents[all_codes.astype(jnp.int32)] * all_sigma[:, None]
     return jnp.sum(vals, axis=0).reshape(g.shape).astype(g.dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _q_psum(g, axis_name: str, bits: int):
+    return _q_psum_impl(g, axis_name, bits)
+
+
+def _q_psum_fwd(g, axis_name, bits):
+    return _q_psum_impl(g, axis_name, bits), None
+
+
+def _q_psum_bwd(axis_name, bits, _, ct):
+    # straight-through: the backward pass of the EXACT psum.  y = psum(x) is
+    # replicated, and every shard's downstream use of y produces its own
+    # cotangent, so the adjoint sums them: grad_x = psum(ct).  (Returning ct
+    # un-summed would scale gradients by 1/m versus the exact reduce.)
+    return (jax.lax.psum(ct, axis_name),)
+
+
+_q_psum.defvjp(_q_psum_fwd, _q_psum_bwd)
+
+
+def q_psum(g, axis_name: str, bits: int = 8):
+    """Quantized all-reduce of a flat tensor g (any shape): per-shard Gaussian
+    scalar quantization at ``bits`` bits/element, gather + decode + sum.
+    Unbiased-ish (centroid decoder); exactness increases with bits.
+    ``bits >= 32`` falls back to the exact fp ``lax.psum`` (quantizing at or
+    above the payload width buys nothing).  Differentiable via a
+    straight-through custom VJP (backward = exact psum's backward).
+
+    NOTE: the result is replicated across ``axis_name`` by construction
+    (sum of an all_gather), but shard_map's vma checker cannot infer that —
+    pass ``check_vma=False`` to the enclosing jax.shard_map."""
+    if bits >= 32:
+        return jax.lax.psum(g, axis_name)
+    return _q_psum(g, axis_name, bits)

@@ -21,7 +21,34 @@ __all__ = [
     "set_mesh",
     "get_abstract_mesh",
     "cost_analysis_dict",
+    "host_device_count_flags",
+    "force_host_device_count",
 ]
+
+
+def host_device_count_flags(n: int, existing: str = "") -> str:
+    """An XLA_FLAGS string forcing ``n`` host platform devices, with any
+    inherited ``--xla_force_host_platform_device_count`` stripped first
+    (repeated XLA flags are last-wins, so a stale one would defeat ours) and
+    every other inherited flag preserved."""
+    import re
+
+    stripped = re.sub(
+        r"--xla_force_host_platform_device_count=\d+\s*", "", existing or ""
+    )
+    return (f"--xla_force_host_platform_device_count={n} " + stripped).strip()
+
+
+def force_host_device_count(n: int) -> None:
+    """Set XLA_FLAGS in os.environ to force ``n`` host devices — must run
+    before the jax backend initializes (first device query; importing jax is
+    fine).  Shared by launch/dryrun (512 placeholder devices), serve_gp
+    --mesh (one device per machine), and the mesh benchmark subprocess."""
+    import os
+
+    os.environ["XLA_FLAGS"] = host_device_count_flags(
+        n, os.environ.get("XLA_FLAGS", "")
+    )
 
 
 if hasattr(jax, "shard_map"):

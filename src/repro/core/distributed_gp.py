@@ -25,9 +25,15 @@ Execution modes:
   ``PerSymbolScheme`` fit and one dense Cholesky per machine.  Protocol
   semantics (own block exact, wire-bit accounting) are identical; the batched
   path is locked to it by tests/test_batched_protocol.py;
-* a ``shard_map`` mode where machines are devices along a mesh axis and the
-  wire is a real ``jax.lax.all_gather`` of int8 codes (core.mesh_gp +
-  repro.comm) — the production path, shared with the transformer GP head.
+* ``impl="mesh"`` — the production SPMD path: machines ARE devices along a
+  ``("machines",)`` mesh axis, the wire protocol runs as ONE
+  ``compat.shard_map`` program whose only inter-machine channel is
+  ``repro.comm.q_all_gather`` (int codes on the wire + O(d²) fp32 side info;
+  the ledger is computed from what the collective actually moves), per-machine
+  factors are built device-local and live SHARDED along the mesh axis, and
+  ``predict`` runs as one shard_map program with a psum/KL fusion epilogue
+  (broadcast/PoE; §5.1 serving is center-local by construction).  All three
+  impls are locked to each other by tests/test_conformance.py.
 
 ``gram_backend="pallas"`` routes gram assembly through the Pallas tiled-gram
 kernel (kernels/gram) and — for reconstructed blocks — feeds the int wire
@@ -68,13 +74,16 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
 from functools import partial
 from typing import Callable, NamedTuple, Sequence
 
 import numpy as np
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
 from .distortion import second_moment
 from . import jax_scheme
 from . import quantizers as Q
@@ -102,8 +111,8 @@ from .nystrom import (
     chol_append,
     _JITTER,
 )
-from .fusion import kl_fuse_diag
-from .poe import combine
+from .fusion import kl_fuse_diag, kl_fuse_diag_psum
+from .poe import combine, combine_psum
 
 __all__ = [
     "split_machines",
@@ -122,6 +131,9 @@ __all__ = [
     "single_center_gp",
     "broadcast_gp",
     "poe_baseline",
+    "broadcast_gp_mesh",
+    "machine_mesh",
+    "MESH_AXIS",
 ]
 
 
@@ -223,6 +235,129 @@ def _wire_bits(rates, lengths, d: int, skip=None) -> int:
     return total
 
 
+# --------------------------------------------------------------------------
+# impl="mesh": machines are devices, the collectives are the wire
+# --------------------------------------------------------------------------
+
+MESH_AXIS = "machines"
+
+
+def machine_mesh(m: int) -> Mesh:
+    """A 1-D ``("machines",)`` mesh over the first m local devices — the
+    execution substrate of ``impl="mesh"``.  On CPU, force placeholder
+    devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    (tests/conftest.py does; launch/serve_gp.py --mesh does it for you)."""
+    devs = jax.devices()
+    if m > len(devs):
+        raise ValueError(
+            f'impl="mesh" needs one device per machine: m={m} > '
+            f"{len(devs)} available devices (hint: "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={m})"
+        )
+    return Mesh(np.asarray(devs[:m]), (MESH_AXIS,))
+
+
+@functools.lru_cache(maxsize=None)
+def _mesh_wire_fn(m: int, total_bits: int, max_bits: int, mode: str, center: int):
+    """One compiled SPMD wire program per (m, R, mode): every device fits its
+    scheme, the int codes + O(d²) side info move through comm.q_all_gather,
+    and everything the collective moved comes back replicated."""
+    from ..comm import q_all_gather
+
+    mesh = machine_mesh(m)
+
+    def body(x_blk, mask_blk):
+        _, st = q_all_gather(
+            x_blk[0], MESH_AXIS, total_bits, max_bits, mask=mask_blk[0],
+            mode=mode, center=center, return_state=True,
+        )
+        return st
+
+    return jax.jit(shard_map(
+        body, mesh=mesh, in_specs=(P(MESH_AXIS), P(MESH_AXIS)),
+        out_specs=P(), check_vma=False,
+    ))
+
+
+def _run_wire_protocol_mesh(X, mask, total_bits: int, max_bits: int, mode: str, center: int):
+    """The wire protocol as a REAL device-mesh program (machines = devices
+    along ``MESH_AXIS``; ``comm.q_all_gather`` is the only inter-machine
+    channel).  Returns the same :class:`WireState` layout as
+    :func:`_run_wire_protocol` (replicated arrays) plus the wire-bit ledger
+    computed from what the collective actually moved — integer-equal to the
+    host oracle's §4 accounting (tests/test_conformance.py)."""
+    m, n_pad, d = X.shape
+    st = _mesh_wire_fn(m, total_bits, max_bits, mode, center)(X, mask)
+    tables = jax_scheme.scheme_tables(total_bits, max_bits)
+    cents = jax_scheme.scaled_centroids_batched(st["rates"], st["sigma"], tables)
+    ws = WireState(
+        st["codes"], st["decoded"], st["T_inv"], st["rates"], st["sigma"],
+        cents, st["T"],
+    )
+    return ws, int(st["wire_bits"])
+
+
+def _shard_machine_axis(tree, mesh: Mesh):
+    """device_put every leaf with its leading (machine) axis along the mesh."""
+    sh = NamedSharding(mesh, P(MESH_AXIS))
+    return jax.tree.map(lambda a: jax.device_put(a, sh), tree)
+
+
+@functools.lru_cache(maxsize=None)
+def _mesh_broadcast_factor_fn(m: int, kernel: str):
+    """Per-machine §5.2 Nyström factor build as ONE shard_map program: device i
+    assembles ITS view (own block exact, peers from the wire reconstructions)
+    and factorizes it locally; the factor set comes out SHARDED along the
+    mesh axis (out_specs P(MESH_AXIS))."""
+    mesh = machine_mesh(m)
+
+    def body(x_blk, mask_blk, dec, sq_dec, mask_flat, y_flat, p):
+        i = jax.lax.axis_index(MESH_AXIS)
+        x, mi = x_blk[0], mask_blk[0]
+        n_pad = x.shape[0]
+        noise = jnp.exp(p.log_noise)
+        sqx = jnp.sum(x**2, -1)
+        cols = dec.at[i].set(x)  # own (exact) block replaces its reconstruction
+        sq_cols = sq_dec.at[i].set(sqx).reshape(-1)
+        ip_KK = x @ x.T
+        ip_KN = jnp.moveaxis(
+            jnp.einsum("nd,jNd->jnN", x, cols), 0, 1
+        ).reshape(n_pad, m * n_pad)
+        G_KK = _mask_gram(kernel_from_inner(kernel, p, ip_KK, sqx, sqx), mi)
+        G_KN = kernel_from_inner(kernel, p, ip_KN, sqx, sq_cols) * (
+            mi[:, None] * mask_flat[None, :]
+        )
+        fac = nystrom_factors(G_KK, G_KN, y_flat, noise)
+        return jax.tree.map(lambda a: a[None], fac)
+
+    return jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(P(MESH_AXIS), P(MESH_AXIS), P(), P(), P(), P(), P()),
+        out_specs=P(MESH_AXIS), check_vma=False,
+    ))
+
+
+@functools.lru_cache(maxsize=None)
+def _mesh_poe_factor_fn(m: int, kernel: str):
+    """Zero-rate expert factorization, one dense Cholesky per device (own
+    shard only — no wire at all), factors sharded along the mesh axis."""
+    mesh = machine_mesh(m)
+
+    def body(x_blk, y_blk, mask_blk, p):
+        x, yj, mj = x_blk[0], y_blk[0], mask_blk[0]
+        noise = jnp.exp(p.log_noise)
+        sqj = jnp.sum(x**2, -1)
+        G = _mask_gram(kernel_from_inner(kernel, p, x @ x.T, sqj, sqj), mj)
+        fac = posterior_factors(G, yj * mj, noise)
+        return jax.tree.map(lambda a: a[None], fac)
+
+    return jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(P(MESH_AXIS), P(MESH_AXIS), P(MESH_AXIS), P()),
+        out_specs=P(MESH_AXIS), check_vma=False,
+    ))
+
+
 def _pallas_ip_rows(wire: WireState, block_order, lengths, Xc, Y):
     """⟨x_i, y_j⟩ for every x in the center gram-row layout (N, p): center rows
     via the Pallas tiled gram on exact points; reconstructed rows straight
@@ -288,15 +423,24 @@ def _quantize_to_center_host(
     return X_recon, y_all, wire, n_center, sq_norms
 
 
-def _quantize_to_center_batched(parts, bits_per_sample: int, center: int, max_bits: int):
+def _quantize_to_center_batched(
+    parts, bits_per_sample: int, center: int, max_bits: int, impl: str = "batched"
+):
     """Batched §5.1 wire: one vmapped fit/encode/decode, then assemble the
-    center's gram-row layout (exact center block first)."""
+    center's gram-row layout (exact center block first).  ``impl="mesh"``
+    runs the same wire as one shard_map program on a machines-as-devices
+    mesh (comm.q_all_gather is the channel; ledger from the actual payload)."""
     shards = pad_parts(parts)
     m, _, d = shards.X.shape
-    wire_state = _run_wire_protocol(
-        shards.X, shards.mask, bits_per_sample, max_bits, "center", center
-    )
-    wire = _wire_bits(wire_state.rates, shards.lengths, d, skip=center)
+    if impl == "mesh":
+        wire_state, wire = _run_wire_protocol_mesh(
+            shards.X, shards.mask, bits_per_sample, max_bits, "center", center
+        )
+    else:
+        wire_state = _run_wire_protocol(
+            shards.X, shards.mask, bits_per_sample, max_bits, "center", center
+        )
+        wire = _wire_bits(wire_state.rates, shards.lengths, d, skip=center)
     order = [center] + [j for j in range(m) if j != center]
     blocks = [parts[center][0]] + [
         wire_state.decoded[j, : shards.lengths[j]] for j in order[1:]
@@ -319,10 +463,17 @@ def quantize_to_center(
     X_recon stacks the center's exact block first, then every machine's decoded
     points, matching the paper's gram-row layout.  ``sq_norms`` carries each
     point's EXACT |x|² (an O(32 n)-bit extra the Snelson–Ghahramani/FITC
-    diagonal correction needs; included in the wire accounting)."""
+    diagonal correction needs; included in the wire accounting).
+
+    impl: "host" (serial scipy oracle), "batched" (one vmapped jit), or
+    "mesh" (machines are devices; the wire is comm.q_all_gather inside one
+    shard_map program) — all three produce integer-identical wire ledgers and
+    matching reconstructions (tests/test_conformance.py)."""
     if impl == "host":
         return _quantize_to_center_host(parts, bits_per_sample, center, max_bits)
-    out = _quantize_to_center_batched(parts, bits_per_sample, center, max_bits)
+    if impl not in ("batched", "mesh"):
+        raise ValueError(f"unknown impl {impl!r}")
+    out = _quantize_to_center_batched(parts, bits_per_sample, center, max_bits, impl)
     return out[:5]
 
 
@@ -552,7 +703,7 @@ def single_center_gp(
     return fit(
         parts, bits_per_sample, protocol="center", kernel=kernel, steps=steps,
         lr=lr, params=params, gram_mode=gram_mode, gram_backend=gram_backend,
-        max_bits=max_bits, train_impl=train_impl,
+        max_bits=max_bits, train_impl=train_impl, impl=impl,
     )
 
 
@@ -731,7 +882,7 @@ def broadcast_gp(
     art = fit(
         parts, bits_per_sample, protocol="broadcast", kernel=kernel, steps=steps,
         lr=lr, gram_mode=gram_mode, fuse=fuse, gram_backend=gram_backend,
-        max_bits=max_bits, train_impl=train_impl,
+        max_bits=max_bits, train_impl=train_impl, impl=impl,
     )
     mu, s2 = predict(art, X_star)
     return mu, s2, art.wire_bits, art.params
@@ -790,6 +941,7 @@ def poe_baseline(
     art = fit(
         parts, 0, protocol="poe", kernel=kernel, steps=steps, lr=lr,
         method=method, gram_backend=gram_backend, train_impl=train_impl,
+        impl=impl,
     )
     mu, s2 = predict(art, X_star)
     return mu, s2, art.params
@@ -806,7 +958,7 @@ def poe_baseline(
     meta_fields=[
         "protocol", "kernel", "gram_mode", "fuse", "gram_backend",
         "n_center", "lengths", "block_order", "bits_per_sample", "max_bits",
-        "wire_bits",
+        "wire_bits", "impl",
     ],
 )
 @dataclasses.dataclass
@@ -847,9 +999,13 @@ class FittedProtocol:
     protocol ("center" | "broadcast" | "poe"), kernel, gram_mode, fuse
     (fusion/combiner name), gram_backend, n_center (center's exact-block
     size K), lengths (per-machine true row counts), block_order (center's
-    gram-row machine order), bits_per_sample, max_bits, and wire_bits — the
+    gram-row machine order), bits_per_sample, max_bits, wire_bits — the
     paper's §4 ledger: R bits/sample per transmitted point + O(2d²) fp32
-    side info per machine, extended by every :func:`update`.
+    side info per machine, extended by every :func:`update` — and impl:
+    ``"batched"`` (single-host artifact) or ``"mesh"`` (machines-as-devices:
+    broadcast/PoE factors live sharded along the mesh axis and
+    :func:`predict` runs as one shard_map program with a psum/KL fusion
+    epilogue; a checkpoint round-trip yields the single-host artifact).
     """
 
     params: GPParams
@@ -868,6 +1024,7 @@ class FittedProtocol:
     bits_per_sample: int
     max_bits: int
     wire_bits: int
+    impl: str = "batched"
 
     # -- conveniences (the paper-facing entry points return artifacts) ------
 
@@ -917,6 +1074,7 @@ def fit(
     gram_backend: str = "xla",
     max_bits: int = Q.DEFAULT_MAX_BITS,
     train_impl: str = "scan",
+    impl: str = "batched",
 ) -> FittedProtocol:
     """Run a distributed-GP protocol ONCE and return the serving artifact.
 
@@ -936,32 +1094,41 @@ def fit(
     protocol="poe": the zero-rate baseline (``method``: poe/gpoe/bcm/rbcm);
     ``bits_per_sample`` is ignored and the wire ledger is 0.
 
+    impl="batched" (default) simulates the machines under one vmapped jit;
+    impl="mesh" puts machines on a real device mesh — the wire protocol,
+    factor builds, and (broadcast/PoE) predict run as shard_map programs
+    whose only inter-machine channel is ``repro.comm``, per-machine factors
+    come out sharded along the mesh axis, and the wire ledger is computed
+    from what the collectives actually move.
+
     Other knobs (``gram_mode``, ``gram_backend``, ``max_bits``,
     ``train_impl``) as in :func:`single_center_gp`.
     """
+    if impl not in ("batched", "mesh"):
+        raise ValueError(f'fit() impl must be "batched" or "mesh", got {impl!r}')
     if protocol == "center":
         return _fit_center(
             parts, bits_per_sample, kernel, steps, lr, params, gram_mode,
-            gram_backend, max_bits, train_impl,
+            gram_backend, max_bits, train_impl, impl,
         )
     if protocol == "broadcast":
         return _fit_broadcast(
             parts, bits_per_sample, kernel, steps, lr, gram_mode, fuse,
-            gram_backend, max_bits, train_impl,
+            gram_backend, max_bits, train_impl, impl,
         )
     if protocol == "poe":
         return _fit_poe(
-            parts, kernel, steps, lr, method, gram_backend, train_impl,
+            parts, kernel, steps, lr, method, gram_backend, train_impl, impl,
         )
     raise ValueError(f"unknown protocol {protocol!r}")
 
 
 def _fit_center(
     parts, bits, kernel, steps, lr, params, gram_mode, gram_backend, max_bits,
-    train_impl,
+    train_impl, impl="batched",
 ):
     (X_recon, y_all, wire, n_c, sq_norms, shards, wire_state, order) = (
-        _quantize_to_center_batched(parts, bits, 0, max_bits)
+        _quantize_to_center_batched(parts, bits, 0, max_bits, impl)
     )
     if gram_mode == "nystrom_fitc":  # exact |x|^2 side-channel (32 bits/point)
         wire += 32 * (X_recon.shape[0] - n_c)
@@ -1040,22 +1207,35 @@ def _fit_center(
         bits_per_sample=bits,
         max_bits=max_bits,
         wire_bits=int(wire),
+        impl=impl,
     )
 
 
 def _fit_broadcast(
     parts, bits, kernel, steps, lr, gram_mode, fuse, gram_backend, max_bits,
-    train_impl,
+    train_impl, impl="batched",
 ):
     m = len(parts)
     shards = pad_parts(parts)
     _, n_pad, d = shards.X.shape
-    wire_state = _run_wire_protocol(
-        shards.X, shards.mask, bits, max_bits, "broadcast", 0
-    )
-    wire = _wire_bits(wire_state.rates, shards.lengths, d)
+    if impl == "mesh":
+        if gram_mode != "nystrom":
+            raise NotImplementedError(
+                'impl="mesh" broadcast supports gram_mode="nystrom" only'
+            )
+        if gram_backend != "xla":
+            raise NotImplementedError(
+                'impl="mesh" assembles grams device-local (gram_backend="xla")'
+            )
+        wire_state, wire = _run_wire_protocol_mesh(
+            shards.X, shards.mask, bits, max_bits, "broadcast", 0
+        )
+    else:
+        wire_state = _run_wire_protocol(
+            shards.X, shards.mask, bits, max_bits, "broadcast", 0
+        )
+        wire = _wire_bits(wire_state.rates, shards.lengths, d)
 
-    A, B = _train_inner_products(shards, wire_state, gram_backend)
     sq_exact = jnp.sum(shards.X**2, -1)  # (m, n)
     sq_dec = jnp.sum(wire_state.decoded**2, -1)
 
@@ -1064,10 +1244,21 @@ def _fit_broadcast(
     # the 150-step scan only re-does the cheap kernel map + Cholesky)
     L = shards.lengths
     n0 = L[0]
-    ip_KK0 = A[0][:n0, :n0]
-    ip_KN0 = jnp.concatenate(
-        [ip_KK0] + [B[j, 0][: L[j], :n0].T for j in range(1, m)], axis=1
-    )
+    if impl == "mesh":
+        # machine-0-local training inputs, straight from the wire output (the
+        # batched A/B tensors below exist only to vmap the m simulated views)
+        X0s = jnp.asarray(parts[0][0], jnp.float32)
+        ip_KK0 = X0s @ X0s.T
+        X_cols0 = jnp.concatenate(
+            [X0s] + [wire_state.decoded[j, : L[j]] for j in range(1, m)], axis=0
+        )
+        ip_KN0 = X0s @ X_cols0.T
+    else:
+        A, B = _train_inner_products(shards, wire_state, gram_backend)
+        ip_KK0 = A[0][:n0, :n0]
+        ip_KN0 = jnp.concatenate(
+            [ip_KK0] + [B[j, 0][: L[j], :n0].T for j in range(1, m)], axis=1
+        )
     sq0 = sq_exact[0][:n0]
     sq_cols0 = jnp.concatenate([sq0] + [sq_dec[j][: L[j]] for j in range(1, m)])
     y0 = jnp.concatenate([p[1] for p in parts], axis=0)
@@ -1089,6 +1280,27 @@ def _fit_broadcast(
     # ---- factorize every machine's local predictive under ONE vmap ----
     mask_flat = shards.mask.reshape(-1)  # column layout is block j at slot j
     y_flat = (shards.y * shards.mask).reshape(-1)
+
+    if impl == "mesh":
+        # one shard_map program: device i assembles & factorizes ITS view;
+        # the factor set lives sharded along the mesh axis
+        mesh = machine_mesh(m)
+        factors = _mesh_broadcast_factor_fn(m, kernel)(
+            shards.X, shards.mask, wire_state.decoded, sq_dec, mask_flat,
+            y_flat, p,
+        )
+        data = _shard_machine_axis(
+            {"Xs": shards.X, "mask": shards.mask,
+             "sq_exact": sq_exact, "sq_dec": sq_dec},
+            mesh,
+        )
+        return FittedProtocol(
+            params=p, y=y_flat, factors=factors, data=data, wire=wire_state,
+            protocol="broadcast", kernel=kernel, gram_mode=gram_mode,
+            fuse=fuse, gram_backend=gram_backend, n_center=0,
+            lengths=shards.lengths, block_order=None, bits_per_sample=bits,
+            max_bits=max_bits, wire_bits=int(wire), impl="mesh",
+        )
 
     if gram_mode == "nystrom":
 
@@ -1155,7 +1367,8 @@ def _fit_broadcast(
     )
 
 
-def _fit_poe(parts, kernel, steps, lr, method, gram_backend, train_impl):
+def _fit_poe(parts, kernel, steps, lr, method, gram_backend, train_impl,
+             impl="batched"):
     # shared hypers trained on machine 0's local data (standard practice: the
     # PoE family shares one hyperparameter set across experts)
     trained = train_gp(
@@ -1165,6 +1378,24 @@ def _fit_poe(parts, kernel, steps, lr, method, gram_backend, train_impl):
     noise = jnp.exp(p.log_noise)
     shards = pad_parts(parts)
     sq_exact = jnp.sum(shards.X**2, -1)
+    m = len(parts)
+    if impl == "mesh":
+        if gram_backend != "xla":
+            raise NotImplementedError(
+                'impl="mesh" assembles grams device-local (gram_backend="xla")'
+            )
+        mesh = machine_mesh(m)
+        factors = _mesh_poe_factor_fn(m, kernel)(shards.X, shards.y, shards.mask, p)
+        data = _shard_machine_axis(
+            {"Xs": shards.X, "mask": shards.mask, "sq_exact": sq_exact}, mesh
+        )
+        return FittedProtocol(
+            params=p, y=shards.y * shards.mask, factors=factors, data=data,
+            wire=None, protocol="poe", kernel=kernel, gram_mode="dense",
+            fuse=method, gram_backend=gram_backend, n_center=0,
+            lengths=shards.lengths, block_order=None, bits_per_sample=0,
+            max_bits=0, wire_bits=0, impl="mesh",
+        )
     if gram_backend == "pallas":
         from ..kernels.gram.ops import gram as gram_kernel
 
@@ -1234,6 +1465,65 @@ def _predict_impl(art: FittedProtocol, X_star):
 _predict_jit = jax.jit(_predict_impl)
 
 
+def _predict_mesh_impl(art: FittedProtocol, X_star):
+    """Mesh serving: ONE shard_map program — each device applies ITS machine's
+    cached factors to the query batch (triangular solves only, exactly like
+    the batched path) and the predictives meet in a psum/KL fusion epilogue
+    (eqs. 62-64 as two psums; the PoE combiners as precision-weighted psums).
+    Factors/data stay sharded along the mesh axis throughout."""
+    _SERVE_TRACES[art.protocol] += 1  # runs at trace time only
+    m = len(art.lengths)
+    mesh = machine_mesh(m)
+    has_extra = "X_extra" in art.data
+
+    def body(fac, Xs_blk, mask_blk, sq_blk, em_blk, Xe, X_star, p):
+        fac_i = jax.tree.map(lambda a: a[0], fac)
+        Xi, mi, sqi = Xs_blk[0], mask_blk[0], sq_blk[0]
+        noise = jnp.exp(p.log_noise)
+        sq_star = jnp.sum(X_star**2, -1)
+        g_ss = prior_diag(art.kernel, p, sq_star)
+        G_sK = kernel_from_inner(
+            art.kernel, p, X_star @ Xi.T, sq_star, sqi
+        ) * mi[None, :]
+        if art.protocol == "broadcast":
+            mu_i, s2_i = nystrom_apply(fac_i, G_sK, g_ss, noise)
+            if art.fuse == "kl":
+                return kl_fuse_diag_psum(mu_i, s2_i, MESH_AXIS)
+            return combine_psum(art.fuse, mu_i, s2_i, g_ss + noise, MESH_AXIS)
+        # poe: streamed extras (update()) ride along as appended columns
+        G_sn = G_sK
+        if has_extra:
+            sq_e = jnp.sum(Xe**2, -1)
+            G_e = kernel_from_inner(art.kernel, p, X_star @ Xe.T, sq_star, sq_e)
+            G_sn = jnp.concatenate([G_sn, G_e * em_blk[0][None, :]], axis=1)
+        mu_i, s2_i = posterior_apply(fac_i, G_sn, g_ss)
+        return combine_psum(art.fuse, mu_i, s2_i, g_ss + noise, MESH_AXIS)
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(
+            P(MESH_AXIS), P(MESH_AXIS), P(MESH_AXIS), P(MESH_AXIS),
+            P(MESH_AXIS), P(), P(), P(),
+        ),
+        out_specs=(P(), P()), check_vma=False,
+    )
+    em = art.data["extra_mask"] if has_extra else art.data["mask"][:, :0]
+    Xe = art.data["X_extra"] if has_extra else X_star[:0]
+    return fn(
+        art.factors, art.data["Xs"], art.data["mask"], art.data["sq_exact"],
+        em, Xe, X_star, art.params,
+    )
+
+
+_predict_mesh_jit = jax.jit(_predict_mesh_impl)
+
+
+def _uses_mesh_predict(art: FittedProtocol) -> bool:
+    # §5.1 serving is center-local by construction (one factor set at the
+    # center, nothing to fuse) — center artifacts serve on the host path
+    return art.impl == "mesh" and art.protocol in ("broadcast", "poe")
+
+
 def predict(art: FittedProtocol, X_star):
     """Serve one query batch from a fitted artifact: (mean, var) at X_star.
 
@@ -1243,8 +1533,13 @@ def predict(art: FittedProtocol, X_star):
     refactorization, no hyperparameter step happens here — verify with
     :func:`predict_op_counts` / :func:`serve_trace_count`.  Retraces only
     when the artifact's shapes change (a fresh :func:`fit`, an
-    :func:`update`, or a new query-batch size)."""
-    return _predict_jit(art, jnp.asarray(X_star, jnp.float32))
+    :func:`update`, or a new query-batch size).  Mesh broadcast/PoE
+    artifacts serve through one shard_map program with a psum/KL fusion
+    epilogue instead (:func:`_predict_mesh_impl`)."""
+    X_star = jnp.asarray(X_star, jnp.float32)
+    if _uses_mesh_predict(art):
+        return _predict_mesh_jit(art, X_star)
+    return _predict_jit(art, X_star)
 
 
 def _predict_center(art, X_star, sq_star, g_ss, noise):
@@ -1365,6 +1660,12 @@ def update(art: FittedProtocol, X_new, y_new, machine: int = 0) -> FittedProtoco
         raise ValueError("update expects X_new (n_new, d), y_new (n_new,)")
     if not 0 <= machine < len(art.lengths):
         raise ValueError(f"machine {machine} out of range (m={len(art.lengths)})")
+    if art.impl == "mesh":
+        # the rank-k growth runs on host arrays (mixing mesh-sharded and
+        # fresh single-device operands in eager ops is ill-defined); the next
+        # mesh predict reshards the grown factors along the machine axis
+        pull = lambda t: jax.tree.map(lambda a: jnp.asarray(jax.device_get(a)), t)
+        art = dataclasses.replace(art, factors=pull(art.factors), data=pull(art.data))
     if art.protocol == "center":
         return _update_center(art, X_new, y_new, machine)
     if art.protocol == "broadcast":
@@ -1542,6 +1843,76 @@ def _update_poe(art, X_new, y_new, j):
 
 
 # --------------------------------------------------------------------------
+# legacy one-shot mesh entry point (absorbed from core.mesh_gp)
+# --------------------------------------------------------------------------
+
+
+def broadcast_gp_mesh(
+    mesh,
+    axis: str,
+    X,
+    y,
+    X_star,
+    params: GPParams,
+    *,
+    kernel: str = "se",
+    bits_per_sample: int = 32,
+    max_bits: int = 8,
+):
+    """One-shot §5.2 broadcast on a caller-supplied mesh: devices along
+    ``axis`` are machines, the wire is ``comm.q_all_gather`` (int codes),
+    each device solves its dense local view, and the per-point predictives
+    are KL-fused (eqs. 62-64) — all inside one jit/shard_map program.
+
+    This is the original ``core.mesh_gp`` prototype, kept for fixed-hyper
+    one-shot runs (no training, no serving artifact).  The first-class mesh
+    path is ``fit(..., impl="mesh")`` — it adds hyperparameter training,
+    Nyström factor caching sharded along the mesh axis, streaming
+    :func:`update`, and checkpointing.
+
+    X: (n, d) globally, sharded over ``axis`` on dim 0 (n % n_devices == 0);
+    y: (n,) likewise; X_star: (t, d) replicated.  Returns fused (mean, var).
+    """
+    from ..comm import q_all_gather
+
+    k = gram_fn(kernel)
+
+    def local_predict(X_all_blocks, y_all, own_idx, xs_l):
+        """One device's §5.2 view: own block exact, peers reconstructed."""
+        m, n_loc, d = X_all_blocks.shape
+        # reorder so the exact (own) block is first — matches the Nyström layout
+        order = jnp.argsort(
+            jnp.where(jnp.arange(m) == own_idx, -1, jnp.arange(m))
+        )
+        Xv = X_all_blocks[order].reshape(m * n_loc, d)
+        yv = y_all[order].reshape(m * n_loc)
+        G = k(params, Xv)
+        G_sn = k(params, xs_l, Xv)
+        g_ss = jnp.diagonal(k(params, xs_l, xs_l))
+        return posterior_from_gram(G, G_sn, g_ss, yv, jnp.exp(params.log_noise))
+
+    def body(x_l, y_l, xs_l):
+        idx = jax.lax.axis_index(axis)
+        # the paper's wire: quantized codes, own block exact (repro.comm)
+        x_blocks = q_all_gather(x_l, axis, bits_per_sample, max_bits)
+        y_all = jax.lax.all_gather(y_l, axis)  # targets are scalars (unquantized)
+        mu_i, s2_i = local_predict(x_blocks, y_all, idx, xs_l)
+        # KL-barycenter fusion (eqs. 62-64) across the machine axis
+        mus = jax.lax.all_gather(mu_i, axis)
+        s2s = jax.lax.all_gather(s2_i, axis)
+        return kl_fuse_diag(mus, s2s)
+
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis, None), P(axis), P(None, None)),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+    return jax.jit(fn)(X, y, X_star)
+
+
+# --------------------------------------------------------------------------
 # artifact persistence (repro.checkpoint) + serve-path introspection
 # --------------------------------------------------------------------------
 
@@ -1562,6 +1933,7 @@ def save_artifact(art: FittedProtocol, directory: str, step: int = 0) -> str:
         "block_order": list(art.block_order) if art.block_order is not None else None,
         "bits_per_sample": art.bits_per_sample, "max_bits": art.max_bits,
         "wire_bits": art.wire_bits, "has_wire": art.wire is not None,
+        "impl": art.impl,  # provenance; restore is always single-host
     }
     return _save(directory, step, art, meta)
 
@@ -1569,10 +1941,13 @@ def save_artifact(art: FittedProtocol, directory: str, step: int = 0) -> str:
 def load_artifact(directory: str, step: int | None = None, shardings=None) -> FittedProtocol:
     """Restore a :func:`save_artifact` checkpoint into a fresh artifact.
 
-    ``shardings``: optional — a single ``Sharding``/device applied to every
-    leaf, or a ``{leaf_key: sharding}`` dict (keys as in the npz:
-    ``factors/W``, ``data/Xc``, ``wire/codes``, ...) for per-leaf placement;
-    leaves are ``jax.device_put`` into place on restore."""
+    Always restores as a SINGLE-HOST artifact (``impl="batched"``): a mesh
+    fit's checkpoint round-trips to an equivalent host-serving artifact
+    (sharded factors were gathered at save time).  ``shardings``: optional —
+    a single ``Sharding``/device applied to every leaf, or a
+    ``{leaf_key: sharding}`` dict (keys as in the npz: ``factors/W``,
+    ``data/Xc``, ``wire/codes``, ...) for per-leaf placement; leaves are
+    ``jax.device_put`` into place on restore."""
     from ..checkpoint import load_artifact_arrays
 
     meta, arrays = load_artifact_arrays(directory, step)
@@ -1598,7 +1973,7 @@ def load_artifact(directory: str, step: int | None = None, shardings=None) -> Fi
         lengths=tuple(meta["lengths"]),
         block_order=tuple(meta["block_order"]) if meta["block_order"] is not None else None,
         bits_per_sample=meta["bits_per_sample"], max_bits=meta["max_bits"],
-        wire_bits=meta["wire_bits"],
+        wire_bits=meta["wire_bits"], impl="batched",
     )
 
 
@@ -1625,9 +2000,12 @@ def predict_op_counts(art: FittedProtocol, X_star, ops=("cholesky", "eigh")) -> 
     """Count primitives in the :func:`predict` program for this artifact —
     the structural serve-path check: a warm predict must contain ZERO
     ``cholesky`` (no refactorization) and ZERO ``eigh`` (no scheme refit)
-    equations.  benchmarks/serve_bench.py records these counts in
-    BENCH_serve.json and tests/test_serving.py locks them."""
-    jaxpr = jax.make_jaxpr(_predict_impl)(art, jnp.asarray(X_star, jnp.float32))
+    equations.  Mesh artifacts are checked on their actual shard_map serve
+    program (the walk descends into the shard_map body jaxpr).
+    benchmarks/serve_bench.py records these counts in BENCH_serve.json and
+    tests/test_serving.py locks them."""
+    fn = _predict_mesh_impl if _uses_mesh_predict(art) else _predict_impl
+    jaxpr = jax.make_jaxpr(fn)(art, jnp.asarray(X_star, jnp.float32))
     counts = {op: 0 for op in ops}
     for eqn in _walk_jaxpr(jaxpr.jaxpr):
         if eqn.primitive.name in counts:

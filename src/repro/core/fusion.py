@@ -6,9 +6,10 @@
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
-__all__ = ["kl_fuse", "kl_fuse_diag"]
+__all__ = ["kl_fuse", "kl_fuse_diag", "kl_fuse_diag_psum"]
 
 
 def kl_fuse(mus, Sigmas):
@@ -23,4 +24,14 @@ def kl_fuse_diag(mus, s2s):
     """Diagonal/per-point special case: s2s (m, t) marginal variances."""
     mu = jnp.mean(mus, axis=0)
     s2 = jnp.mean(s2s + (mu[None, :] - mus) ** 2, axis=0)
+    return mu, s2
+
+
+def kl_fuse_diag_psum(mu_i, s2_i, axis_name: str):
+    """:func:`kl_fuse_diag` as a mesh collective epilogue: each device holds
+    ITS machine's per-point predictive (mu_i, s2_i) (t,) and the barycenter is
+    two psums over ``axis_name`` (must run inside shard_map)."""
+    m = jax.lax.psum(1, axis_name)
+    mu = jax.lax.psum(mu_i, axis_name) / m
+    s2 = jax.lax.psum(s2_i + (mu - mu_i) ** 2, axis_name) / m
     return mu, s2

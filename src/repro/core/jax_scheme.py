@@ -29,8 +29,23 @@ __all__ = [
     "codebook_cap",
     "scheme_tables",
     "scaled_centroids",
+    "scaled_centroids_batched",
+    "masked_second_moment",
     "SchemeState",
 ]
+
+
+def masked_second_moment(X, mask=None):
+    """S = X_valid^T X_valid / n_valid for a padded shard: ``mask`` (n,) marks
+    valid rows; invalid rows contribute nothing to the moment estimate.  This
+    is the moment every wire-protocol scheme fit consumes (distributed_gp's
+    padded layout and repro.comm's ragged mesh shards share it)."""
+    X = X.astype(jnp.float32)
+    if mask is None:
+        return X.T @ X / X.shape[0]
+    Xm = X * mask[:, None]
+    n = jnp.maximum(mask.sum(), 1.0)
+    return Xm.T @ Xm / n
 
 
 def _unit_distortion_table(max_bits: int) -> jnp.ndarray:
@@ -102,6 +117,14 @@ def scaled_centroids(state, tables):
     sigma: (d, C) — the table the fused dequantize+gram (qgram) kernel eats."""
     _, cents = tables
     return cents[state["rates"]] * state["sigma"][:, None]
+
+
+def scaled_centroids_batched(rates, sigma, tables):
+    """:func:`scaled_centroids` over a leading machine axis: rates (m, d),
+    sigma (m, d) -> (m, d, C)."""
+    return jax.vmap(
+        lambda r, s: scaled_centroids({"rates": r, "sigma": s}, tables)
+    )(rates, sigma)
 
 
 def encode(state, X, tables):

@@ -1,80 +1,24 @@
-"""The §5.2 broadcast protocol directly on a DEVICE MESH (production path).
+"""DEPRECATED — merged into :mod:`repro.core.distributed_gp`.
 
-`distributed_gp` simulates m machines on one host; here machines ARE devices
-along a mesh axis and the wire is repro.comm.q_all_gather (int8 codes + O(d²)
-side info).  Each device ends up with every peer's reconstructed block (its
-own exact), builds its local gram view, computes its local GP predictive, and
-the per-point predictives are fused with the KL barycenter — all inside one
-jit/shard_map program.
-
-This is also what models/gp_head.py uses to put a communication-limited GP
-readout on transformer features.
+The one-shot mesh prototype that lived here is now
+``distributed_gp.broadcast_gp_mesh`` (unchanged semantics), and the
+first-class machines-as-devices execution path is
+``distributed_gp.fit(..., impl="mesh")`` / ``predict`` — one shard_map
+program per stage with ``repro.comm`` collectives as the wire, per-machine
+factors sharded along the mesh axis, streaming updates, and checkpointing.
+This module remains as an import shim only.
 """
 from __future__ import annotations
 
-from functools import partial
+import warnings
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-
-from ..comm import q_all_gather
-from ..compat import shard_map
-from .gp import GPParams, gram_fn, posterior_from_gram
-from .fusion import kl_fuse_diag
+from .distributed_gp import broadcast_gp_mesh
 
 __all__ = ["broadcast_gp_mesh"]
 
-
-def _local_predict(X_all_blocks, y_all, own_idx, X_star, params: GPParams, kernel: str):
-    """One device's §5.2 view: own block exact, peers reconstructed."""
-    m, n_loc, d = X_all_blocks.shape
-    # reorder so the exact (own) block is first — matches the Nyström layout
-    order = jnp.argsort(jnp.where(jnp.arange(m) == own_idx, -1, jnp.arange(m)))
-    Xv = X_all_blocks[order].reshape(m * n_loc, d)
-    yv = y_all[order].reshape(m * n_loc)
-    k = gram_fn(kernel)
-    G = k(params, Xv)
-    G_sn = k(params, X_star, Xv)
-    g_ss = jnp.diagonal(k(params, X_star, X_star))
-    return posterior_from_gram(G, G_sn, g_ss, yv, jnp.exp(params.log_noise))
-
-
-def broadcast_gp_mesh(
-    mesh,
-    axis: str,
-    X,
-    y,
-    X_star,
-    params: GPParams,
-    *,
-    kernel: str = "se",
-    bits_per_sample: int = 32,
-    max_bits: int = 8,
-):
-    """Run the broadcast protocol with devices along ``axis`` as machines.
-
-    X: (n, d) globally, sharded over ``axis`` on dim 0 (n % n_devices == 0);
-    y: (n,) likewise; X_star: (t, d) replicated.  Returns fused (mean, var).
-    """
-
-    def body(x_l, y_l, xs_l):
-        m = jax.lax.psum(1, axis)
-        idx = jax.lax.axis_index(axis)
-        # the paper's wire: quantized codes, own block exact (repro.comm)
-        x_blocks = q_all_gather(x_l, axis, bits_per_sample, max_bits)  # (m, n_loc, d)
-        y_all = jax.lax.all_gather(y_l, axis)  # targets are scalars (unquantized)
-        mu_i, s2_i = _local_predict(x_blocks, y_all, idx, xs_l, params, kernel)
-        # KL-barycenter fusion (eqs. 62-64) across the machine axis
-        mus = jax.lax.all_gather(mu_i, axis)
-        s2s = jax.lax.all_gather(s2_i, axis)
-        return kl_fuse_diag(mus, s2s)
-
-    fn = shard_map(
-        body,
-        mesh=mesh,
-        in_specs=(P(axis, None), P(axis), P(None, None)),
-        out_specs=(P(), P()),
-        check_vma=False,
-    )
-    return jax.jit(fn)(X, y, X_star)
+warnings.warn(
+    "repro.core.mesh_gp is deprecated: use repro.core.distributed_gp "
+    '(broadcast_gp_mesh, or the first-class fit(..., impl="mesh") path)',
+    DeprecationWarning,
+    stacklevel=2,
+)

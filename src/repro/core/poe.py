@@ -8,9 +8,10 @@ k(x*, x*) + sigma_eps^2 needed by (r)BCM.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
-__all__ = ["poe", "gpoe", "bcm", "rbcm", "combine"]
+__all__ = ["poe", "gpoe", "bcm", "rbcm", "combine", "combine_psum"]
 
 
 def poe(mus, s2s, prior_var=None):
@@ -53,3 +54,34 @@ _COMBINERS = {"poe": poe, "gpoe": gpoe, "bcm": bcm, "rbcm": rbcm}
 
 def combine(method: str, mus, s2s, prior_var=None):
     return _COMBINERS[method](jnp.asarray(mus), jnp.asarray(s2s), prior_var)
+
+
+def combine_psum(method: str, mu_i, s2_i, prior_var, axis_name: str):
+    """The PoE-family combiners as mesh collective epilogues: each device
+    holds ITS expert's (mu_i, s2_i) (t,) and every sum over experts becomes a
+    ``lax.psum`` over ``axis_name`` (must run inside shard_map).  Agrees with
+    :func:`combine` on the stacked predictives."""
+    m = jax.lax.psum(1, axis_name)
+    if method == "poe":
+        prec = jax.lax.psum(1.0 / s2_i, axis_name)
+        mu = jax.lax.psum(mu_i / s2_i, axis_name) / prec
+        return mu, 1.0 / prec
+    if method == "gpoe":
+        beta = 1.0 / m
+        prec = jax.lax.psum(beta / s2_i, axis_name)
+        mu = jax.lax.psum(beta * mu_i / s2_i, axis_name) / prec
+        return mu, 1.0 / prec
+    if method == "bcm":
+        prec = jax.lax.psum(1.0 / s2_i, axis_name) - (m - 1.0) / prior_var
+        prec = jnp.maximum(prec, 1e-12)
+        mu = jax.lax.psum(mu_i / s2_i, axis_name) / prec
+        return mu, 1.0 / prec
+    if method == "rbcm":
+        beta_i = 0.5 * (jnp.log(prior_var) - jnp.log(s2_i))
+        prec = jax.lax.psum(beta_i / s2_i, axis_name) + (
+            1.0 - jax.lax.psum(beta_i, axis_name)
+        ) / prior_var
+        prec = jnp.maximum(prec, 1e-12)
+        mu = jax.lax.psum(beta_i * mu_i / s2_i, axis_name) / prec
+        return mu, 1.0 / prec
+    raise ValueError(f"unknown combiner {method!r}")

@@ -8,18 +8,12 @@ Usage:
 Shape skips (documented in DESIGN.md / EXPERIMENTS.md):
   * long_500k only for sub-quadratic-state archs (ssm / hybrid / gemma2
     sliding window); skipped for pure full-attention archs.
-"""
-# The VERY FIRST lines, before ANY other import: 512 placeholder devices.
-import os
-import re as _re
 
-# drop any inherited device-count override (e.g. from the test harness) —
-# repeated XLA flags are last-wins, so a stale one would defeat ours
-_flags = _re.sub(
-    r"--xla_force_host_platform_device_count=\d+\s*", "",
-    os.environ.get("XLA_FLAGS", ""),
-)
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + _flags
+The 512 placeholder devices are forced only under __main__ (or an explicit
+force_placeholder_devices() call) — importing this module leaves the
+process's device configuration alone.
+"""
+import os
 
 import argparse
 import json
@@ -47,6 +41,19 @@ from ..roofline import analyze_hlo
 from ..compat import set_mesh, cost_analysis_dict
 
 LONG_CONTEXT_OK = {"xlstm-125m", "zamba2-2.7b", "gemma2-2b"}
+
+
+def force_placeholder_devices(n: int = 512) -> None:
+    """Force ``n`` placeholder host devices for the multi-pod dry-run.
+
+    Must run before the jax backend initializes (first device query).  This
+    is deliberately NOT done at import time: importing this module must not
+    stomp the process's device configuration (e.g. the test conftest's
+    8-device setting) — only the ``__main__`` entry point forces 512.
+    """
+    from ..compat import force_host_device_count
+
+    force_host_device_count(n)
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -315,4 +322,5 @@ def main():
 
 
 if __name__ == "__main__":
+    force_placeholder_devices()
     main()

@@ -1,0 +1,304 @@
+"""Cross-implementation conformance: the three wire-protocol execution paths
+— ``impl="host"`` (serial scipy oracle), ``impl="batched"`` (one vmapped jit),
+``impl="mesh"`` (machines are devices; the wire is ``repro.comm`` collectives
+inside shard_map programs) — driven through shared fixtures.
+
+Locked invariants:
+  * wire-bit ledgers are INTEGER-IDENTICAL across all three impls for all
+    three protocols (the mesh ledger is computed from what the collective
+    actually moves, the host ledger from the paper's §4 formula);
+  * reconstructions and predictions match across impls within float
+    tolerance (mesh vs batched is the same f32 math, so tight; vs the
+    float64 scipy oracle, looser);
+  * ``fit(impl="mesh")`` artifacts: factors live SHARDED along the machine
+    mesh axis, predict() is structurally factorization-free and retrace-free
+    warm, predictions match the single-host artifact, and the checkpoint
+    round-trips to a single-host artifact that serves identically;
+  * hypothesis sweeps over m, ragged shard sizes, d, bits ∈ {1..8, 32} and
+    kernel ∈ {se, linear} (skipped cleanly without the optional dev dep).
+
+The mesh paths run IN-PROCESS on the conftest's 8 forced host devices.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    split_machines, single_center_gp, broadcast_gp, poe_baseline,
+    fit, predict, update, save_artifact, load_artifact,
+)
+from repro.core.distributed_gp import (
+    quantize_to_center,
+    predict_op_counts,
+    serve_trace_count,
+    MESH_AXIS,
+)
+
+try:
+    import hypothesis
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dep (requirements-dev.txt)
+    hypothesis = None
+
+    def given(*a, **k):
+        def deco(f):
+            return pytest.mark.skip(
+                reason="hypothesis not installed (requirements-dev.txt)"
+            )(f)
+        return deco
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    class st:  # placeholder strategies, never drawn when skipped
+        integers = sampled_from = lists = staticmethod(lambda *a, **k: None)
+
+
+# --------------------------------------------------------------------------
+# shared fixtures
+# --------------------------------------------------------------------------
+
+
+def _ragged_parts(lengths, d, seed=0, n_test=24):
+    """Machine shards with EXPLICIT ragged sizes (exercises the padded-shard
+    masks / -1 sentinels / per-machine ledger slices on every impl)."""
+    rng = np.random.default_rng(seed)
+    W = rng.normal(size=(d, 2))
+    f = lambda Z: np.sin(Z @ W[:, 0]) + 0.4 * (Z @ W[:, 1])
+    parts = []
+    for n_j in lengths:
+        Xj = rng.normal(size=(n_j, d)).astype(np.float32)
+        yj = (f(Xj) + 0.05 * rng.normal(size=n_j)).astype(np.float32)
+        parts.append((jnp.asarray(Xj), jnp.asarray(yj)))
+    Xt = rng.normal(size=(n_test, d)).astype(np.float32)
+    return parts, jnp.asarray(Xt)
+
+
+def _problem(seed=0, n=180, d=6, m=4, n_test=30):
+    rng = np.random.default_rng(seed)
+    W = rng.normal(size=(d, 2))
+    f = lambda Z: np.sin(Z @ W[:, 0]) + 0.4 * (Z @ W[:, 1])
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    y = (f(X) + 0.05 * rng.normal(size=n)).astype(np.float32)
+    Xt = rng.normal(size=(n_test, d)).astype(np.float32)
+    parts = split_machines(X, y, m, jax.random.PRNGKey(seed))
+    return parts, jnp.asarray(Xt)
+
+
+def _max_abs(a, b):
+    return float(jnp.max(jnp.abs(jnp.asarray(a) - jnp.asarray(b)))) if np.size(np.asarray(a)) else 0.0
+
+
+# --------------------------------------------------------------------------
+# wire level: quantize_to_center across all three impls
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "lengths,d,bits",
+    [
+        ((37, 41, 29, 43), 6, 16),
+        ((12, 30, 18), 4, 1),       # 1 bit/sample: the minimum-rate edge
+        ((25, 25, 25, 25, 20), 5, 32),  # high rate, 5 machines
+    ],
+)
+def test_quantize_to_center_three_impls(lengths, d, bits):
+    parts, _ = _ragged_parts(lengths, d, seed=hash((lengths, d, bits)) % 2**31)
+    Xh, yh, wh, nch, sqh = quantize_to_center(parts, bits, impl="host")
+    Xb, yb, wb, ncb, sqb = quantize_to_center(parts, bits, impl="batched")
+    Xm, ym, wm, ncm, sqm = quantize_to_center(parts, bits, impl="mesh")
+    # ledger: exact integer equality, all three impls
+    assert wh == wb == wm
+    assert nch == ncb == ncm
+    np.testing.assert_array_equal(np.asarray(yb), np.asarray(yh))
+    np.testing.assert_array_equal(np.asarray(ym), np.asarray(yh))
+    # mesh and batched run the same f32 program (collectives vs vmap)
+    assert _max_abs(Xm, Xb) <= 1e-6
+    np.testing.assert_allclose(np.asarray(sqm), np.asarray(sqb), rtol=1e-6)
+    # both match the float64 scipy oracle within decode tolerance
+    np.testing.assert_allclose(np.asarray(Xb), np.asarray(Xh), atol=5e-4)
+    np.testing.assert_allclose(np.asarray(Xm), np.asarray(Xh), atol=5e-4)
+
+
+# --------------------------------------------------------------------------
+# protocol level: fit + predict across all three impls
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kernel", ["se", "linear"])
+def test_center_protocol_three_impls(kernel):
+    parts, Xt = _ragged_parts((31, 44, 27, 38), 6, seed=1)
+    m_h = single_center_gp(parts, 16, kernel=kernel, steps=10, impl="host",
+                           train_impl="loop")
+    m_b = single_center_gp(parts, 16, kernel=kernel, steps=10)
+    m_m = single_center_gp(parts, 16, kernel=kernel, steps=10, impl="mesh")
+    assert m_h.wire_bits == m_b.wire_bits == m_m.wire_bits
+    mu_h, v_h = m_h.predict(Xt)
+    mu_b, v_b = m_b.predict(Xt)
+    mu_m, v_m = m_m.predict(Xt)
+    assert _max_abs(mu_m, mu_b) <= 5e-4  # same f32 protocol, two substrates
+    assert _max_abs(v_m, v_b) <= 5e-4
+    np.testing.assert_allclose(np.asarray(mu_m), np.asarray(mu_h), atol=3e-3)
+    np.testing.assert_allclose(np.asarray(v_m), np.asarray(v_h), atol=3e-3)
+
+
+@pytest.mark.parametrize("kernel,fuse", [("se", "kl"), ("linear", "kl"), ("se", "rbcm")])
+def test_broadcast_protocol_three_impls(kernel, fuse):
+    parts, Xt = _ragged_parts((33, 41, 28, 36), 6, seed=2)
+    mu_h, s2_h, w_h, _ = broadcast_gp(parts, 24, Xt, kernel=kernel, steps=10,
+                                      fuse=fuse, impl="host", train_impl="loop")
+    mu_b, s2_b, w_b, _ = broadcast_gp(parts, 24, Xt, kernel=kernel, steps=10,
+                                      fuse=fuse)
+    mu_m, s2_m, w_m, _ = broadcast_gp(parts, 24, Xt, kernel=kernel, steps=10,
+                                      fuse=fuse, impl="mesh")
+    assert w_h == w_b == w_m
+    assert _max_abs(mu_m, mu_b) <= 1e-3
+    assert _max_abs(s2_m, s2_b) <= 1e-3
+    np.testing.assert_allclose(np.asarray(mu_m), np.asarray(mu_h), atol=5e-3)
+    np.testing.assert_allclose(np.asarray(s2_m), np.asarray(s2_h), atol=5e-3)
+    assert np.all(np.asarray(s2_m) > 0)
+
+
+@pytest.mark.parametrize("method", ["rbcm", "poe"])
+def test_poe_three_impls(method):
+    parts, Xt = _ragged_parts((26, 35, 30, 24), 5, seed=3)
+    mu_h, s2_h, _ = poe_baseline(parts, Xt, method=method, steps=10,
+                                 impl="host", train_impl="loop")
+    mu_b, s2_b, _ = poe_baseline(parts, Xt, method=method, steps=10)
+    mu_m, s2_m, _ = poe_baseline(parts, Xt, method=method, steps=10, impl="mesh")
+    assert _max_abs(mu_m, mu_b) <= 1e-3
+    assert _max_abs(s2_m, s2_b) <= 1e-3
+    np.testing.assert_allclose(np.asarray(mu_m), np.asarray(mu_h), atol=5e-3)
+    np.testing.assert_allclose(np.asarray(s2_m), np.asarray(s2_h), atol=5e-3)
+
+
+# --------------------------------------------------------------------------
+# the mesh serving artifact: sharded factors, shard_map serve, checkpointing
+# --------------------------------------------------------------------------
+
+
+def test_mesh_factors_sharded_along_machine_axis():
+    parts, _ = _problem(seed=4, m=4)
+    art = fit(parts, 24, "broadcast", steps=4, impl="mesh")
+    for leaf in jax.tree_util.tree_leaves(art.factors):
+        assert leaf.sharding.spec[0] == MESH_AXIS
+    assert art.data["Xs"].sharding.spec[0] == MESH_AXIS
+    art_p = fit(parts, 0, "poe", steps=4, impl="mesh")
+    for leaf in jax.tree_util.tree_leaves(art_p.factors):
+        assert leaf.sharding.spec[0] == MESH_AXIS
+
+
+@pytest.mark.parametrize("protocol", ["center", "broadcast", "poe"])
+def test_mesh_artifact_matches_single_host_and_roundtrips(tmp_path, protocol):
+    """The acceptance contract: fit(impl="mesh") serves within tolerance of
+    the single-host artifact, and its checkpoint round-trips to a single-host
+    artifact with identical ledger and matching predictions."""
+    parts, Xt = _problem(seed=5, m=4)
+    bits = 0 if protocol == "poe" else 20
+    art_b = fit(parts, bits, protocol, steps=6)
+    art_m = fit(parts, bits, protocol, steps=6, impl="mesh")
+    assert art_m.impl == "mesh"
+    assert art_m.wire_bits == art_b.wire_bits
+    mu_b, s2_b = predict(art_b, Xt)
+    mu_m, s2_m = predict(art_m, Xt)
+    assert _max_abs(mu_m, mu_b) <= 1e-3
+    assert _max_abs(s2_m, s2_b) <= 1e-3
+
+    d = str(tmp_path)
+    save_artifact(art_m, d)
+    art_l = load_artifact(d)
+    assert art_l.impl == "batched"  # checkpoints restore single-host
+    assert art_l.wire_bits == art_m.wire_bits
+    assert art_l.lengths == art_m.lengths
+    mu_l, s2_l = predict(art_l, Xt)
+    np.testing.assert_allclose(np.asarray(mu_l), np.asarray(mu_m), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s2_l), np.asarray(s2_m), atol=1e-5)
+
+
+def test_mesh_predict_structure_and_streaming():
+    """Warm mesh serving: zero cholesky/eigh equations in the shard_map serve
+    program, no retrace on a warm loop, exactly one after a streamed growth;
+    update() charges the frozen per-machine rate to the ledger."""
+    parts, Xt = _problem(seed=6, m=4)
+    art = fit(parts, 24, "broadcast", steps=4, impl="mesh")
+    assert predict_op_counts(art, Xt) == {"cholesky": 0, "eigh": 0}
+    predict(art, Xt)  # trace once
+    c0 = serve_trace_count("broadcast")
+    for _ in range(3):
+        predict(art, Xt)
+    assert serve_trace_count("broadcast") == c0
+    rng = np.random.default_rng(0)
+    Xn = rng.normal(size=(7, parts[0][0].shape[1])).astype(np.float32)
+    art2 = update(art, Xn, np.zeros(7, np.float32), machine=2)
+    rate2 = int(np.asarray(art.wire.rates[2]).sum())
+    assert art2.wire_bits == art.wire_bits + 7 * rate2
+    mu2, s22 = predict(art2, Xt)
+    assert serve_trace_count("broadcast") == c0 + 1
+    assert np.all(np.isfinite(np.asarray(mu2))) and np.all(np.asarray(s22) > 0)
+
+
+# --------------------------------------------------------------------------
+# hypothesis sweeps: m, ragged shard sizes, d, bits, kernel
+# --------------------------------------------------------------------------
+
+_BITS = st.sampled_from([1, 2, 3, 4, 5, 6, 7, 8, 32])
+
+
+@given(
+    lengths=st.lists(st.integers(8, 24), min_size=2, max_size=6),
+    d=st.integers(2, 6),
+    bits=_BITS,
+    seed=st.integers(0, 2**20),
+)
+@settings(max_examples=10, deadline=None)
+def test_hyp_wire_ledger_host_vs_batched(lengths, d, bits, seed):
+    """Sweep m (=len(lengths)), ragged shard sizes, d, bits: the batched wire
+    must reproduce the scipy oracle's ledger exactly and its reconstructions
+    within f32-vs-f64 decode tolerance."""
+    parts, _ = _ragged_parts(tuple(lengths), d, seed=seed)
+    Xh, yh, wh, nch, _ = quantize_to_center(parts, bits, impl="host")
+    Xb, yb, wb, ncb, _ = quantize_to_center(parts, bits, impl="batched")
+    assert wh == wb and nch == ncb
+    np.testing.assert_array_equal(np.asarray(yb), np.asarray(yh))
+    np.testing.assert_allclose(np.asarray(Xb), np.asarray(Xh), atol=5e-3)
+
+
+@given(
+    lengths=st.lists(st.integers(8, 16), min_size=2, max_size=4),
+    d=st.integers(2, 4),
+    bits=st.sampled_from([1, 4, 8, 32]),
+    seed=st.integers(0, 2**20),
+)
+@settings(max_examples=5, deadline=None)
+def test_hyp_wire_ledger_mesh(lengths, d, bits, seed):
+    """The mesh wire (real collectives) against both other impls: the ledger
+    computed from the collective's actual payload is integer-equal to the §4
+    formula, and the reconstructions are the batched ones."""
+    parts, _ = _ragged_parts(tuple(lengths), d, seed=seed)
+    _, _, wh, _, _ = quantize_to_center(parts, bits, impl="host")
+    Xb, _, wb, _, _ = quantize_to_center(parts, bits, impl="batched")
+    Xm, _, wm, _, _ = quantize_to_center(parts, bits, impl="mesh")
+    assert wm == wh == wb
+    assert _max_abs(Xm, Xb) <= 1e-6
+
+
+@given(
+    kernel=st.sampled_from(["se", "linear"]),
+    bits=st.sampled_from([4, 8, 32]),
+    m=st.integers(2, 4),
+    seed=st.integers(0, 2**20),
+)
+@settings(max_examples=6, deadline=None)
+def test_hyp_protocol_kernels_host_vs_batched(kernel, bits, m, seed):
+    """Kernel sweep at fixed hypers (steps=0): the full center protocol
+    (wire -> Nyström completion -> predictive) agrees across impls."""
+    parts, Xt = _problem(seed=seed, n=90, d=4, m=m, n_test=16)
+    m_h = single_center_gp(parts, bits, kernel=kernel, steps=0, impl="host",
+                           train_impl="loop")
+    art_b = single_center_gp(parts, bits, kernel=kernel, steps=0)
+    assert m_h.wire_bits == art_b.wire_bits
+    mu_h, v_h = m_h.predict(Xt)
+    mu_b, v_b = art_b.predict(Xt)
+    np.testing.assert_allclose(np.asarray(mu_b), np.asarray(mu_h), atol=5e-3)
+    np.testing.assert_allclose(np.asarray(v_b), np.asarray(v_h), atol=5e-3)

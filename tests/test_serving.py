@@ -237,6 +237,84 @@ def test_update_wire_ledger_accounting():
 
 
 # --------------------------------------------------------------------------
+# update edge cases: empty batches, bad machine indices, zero-cost locality
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("protocol", ["center", "broadcast", "poe"])
+def test_update_zero_point_batch_is_identity(protocol):
+    """A zero-row update must be a no-op: same predictions, same ledger,
+    same lengths (the rank-0 factor growth is degenerate but well-defined)."""
+    X, y, Xt, _ = _problem(10)
+    d = X.shape[1]
+    parts = split_machines(X, y, 4, jax.random.PRNGKey(10))
+    art = _fit_any(protocol, "nystrom", parts, 16, steps=4)
+    mu0, v0 = predict(art, Xt)
+    art_u = update(art, np.zeros((0, d), np.float32), np.zeros(0, np.float32),
+                   machine=1)
+    assert art_u.wire_bits == art.wire_bits
+    assert art_u.lengths == art.lengths
+    mu1, v1 = predict(art_u, Xt)
+    np.testing.assert_allclose(np.asarray(mu1), np.asarray(mu0), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v0), atol=1e-6)
+
+
+@pytest.mark.parametrize("protocol", ["center", "broadcast", "poe"])
+@pytest.mark.parametrize("machine", [-1, 4, 100])
+def test_update_out_of_range_machine_raises(protocol, machine):
+    X, y, _, _ = _problem(11)
+    parts = split_machines(X, y, 4, jax.random.PRNGKey(11))
+    art = _fit_any(protocol, "nystrom", parts, 16, steps=2)
+    Xn = np.zeros((3, X.shape[1]), np.float32)
+    with pytest.raises(ValueError, match="out of range"):
+        update(art, Xn, np.zeros(3, np.float32), machine=machine)
+
+
+def test_update_malformed_batch_raises():
+    X, y, _, _ = _problem(12)
+    parts = split_machines(X, y, 3, jax.random.PRNGKey(12))
+    art = fit(parts, 16, "center", steps=2)
+    d = X.shape[1]
+    with pytest.raises(ValueError, match="update expects"):
+        update(art, np.zeros((3, d), np.float32), np.zeros((4,), np.float32))
+    with pytest.raises(ValueError, match="update expects"):
+        update(art, np.zeros((d,), np.float32), np.zeros((1,), np.float32))
+
+
+def test_update_ledger_zero_for_locally_owned_data():
+    """Data that never crosses the wire costs nothing, for all three
+    protocols: the center's own points (§5.1), a PoE expert's own points
+    (zero-rate by construction), and a zero-rate broadcast artifact (frozen
+    rates are all zero, so streamed symbols carry no bits either)."""
+    X, y, _, f = _problem(13)
+    d = X.shape[1]
+    parts = split_machines(X, y, 4, jax.random.PRNGKey(13))
+    rng = np.random.default_rng(5)
+    Xn = rng.normal(size=(6, d)).astype(np.float32)
+    yn = f(Xn).astype(np.float32)
+
+    art_c = fit(parts, 16, "center", steps=2)
+    assert update(art_c, Xn, yn, machine=0).wire_bits == art_c.wire_bits
+
+    art_p = fit(parts, 0, "poe", steps=2)
+    for j in range(4):
+        assert update(art_p, Xn, yn, machine=j).wire_bits == 0
+
+    art_b = fit(parts, 0, "broadcast", steps=2)
+    assert int(np.asarray(art_b.wire.rates).sum()) == 0
+    assert (
+        update(art_b, Xn, yn, machine=2).wire_bits == art_b.wire_bits
+    )
+    # and a non-zero-rate broadcast DOES charge the frozen per-machine rate
+    art_b24 = fit(parts, 24, "broadcast", steps=2)
+    rate2 = int(np.asarray(art_b24.wire.rates[2]).sum())
+    assert (
+        update(art_b24, Xn, yn, machine=2).wire_bits
+        == art_b24.wire_bits + 6 * rate2
+    )
+
+
+# --------------------------------------------------------------------------
 # the rank-k cholesky primitives themselves
 # --------------------------------------------------------------------------
 
