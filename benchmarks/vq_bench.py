@@ -1,0 +1,67 @@
+"""Wire-scheme comparison at matched bit budgets: per-symbol (§4.2) vs the
+Theorem-2 optimal vector-quantization test channel (§4.1), m=8 machines.
+
+The paper's Fig. 2 compares the schemes on *distortion*; this benchmark
+compares them where it matters for the application — end-to-end distributed-GP
+regression error at the SAME wire-bit ledger — now that ``scheme="vq"`` is a
+runnable wire scheme behind ``DistributedGP`` rather than an offline curve.
+Expectation (paper §4): vq tracks the rate-distortion optimum, per-symbol
+pays a small near-optimality gap that shrinks as R grows.
+
+Rows: ``vq_<protocol>_R<bits>_<scheme>``, derived = smse | wire_kbits.
+Registered in benchmarks/run.py (``--only vq`` -> BENCH_vq.json).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from repro.core import DGPConfig, DistributedGP
+
+from .common import emit, smse, timed
+
+
+def main(quick: bool = True):
+    rng = np.random.default_rng(0)
+    n, d, m = (360, 6, 8) if quick else (2000, 8, 8)
+    steps = 20 if quick else 100
+    rates = (8, 16) if quick else (8, 16, 32, 64)
+    W = rng.normal(size=(d, 2))
+    f = lambda Z: np.sin(Z @ W[:, 0]) + 0.4 * (Z @ W[:, 1])
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    y = (f(X) + 0.05 * rng.normal(size=n)).astype(np.float32)
+    Xt = rng.normal(size=(300, d)).astype(np.float32)
+    yt = f(Xt)
+    key = jax.random.PRNGKey(0)
+
+    for protocol in ("center", "broadcast"):
+        for bits in rates:
+            ledgers = {}
+            for scheme in ("per_symbol", "vq"):
+                est = DistributedGP(DGPConfig(
+                    protocol=protocol, scheme=scheme, bits_per_sample=bits,
+                    steps=steps,
+                ))
+
+                def run():
+                    art = est.fit(X, y, m, key=key)
+                    mu, _ = est.predict(art, Xt)
+                    return art, np.asarray(jax.block_until_ready(mu))
+
+                (art, mu), us = timed(run, repeats=1)
+                ledgers[scheme] = art.wire_bits
+                emit(
+                    f"vq_{protocol}_R{bits}_{scheme}", us,
+                    smse=smse(yt, mu), wire_kbits=art.wire_bits / 1e3,
+                )
+            # matched budgets are the point of the comparison: the vq ledger
+            # (charged at the channel's achieved Theorem-1 rate) must sit
+            # within a few percent of per-symbol's at the same R
+            lo, hi = sorted(ledgers.values())
+            assert hi - lo <= 0.05 * hi, (
+                f"{protocol} R={bits}: ledgers not matched {ledgers}"
+            )
+
+
+if __name__ == "__main__":
+    main()

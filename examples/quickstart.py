@@ -9,7 +9,7 @@
 5. Fit once / serve many: checkpoint the fitted protocol artifact, reload it,
    serve queries from cached factors, and stream new points in.
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  python examples/quickstart.py  (PYTHONPATH=src if not installed)
 """
 import tempfile
 
@@ -17,10 +17,10 @@ import numpy as np
 import jax
 
 from repro.core import PerSymbolScheme, DimReductionScheme, OptimalScheme
+from repro.core import DGPConfig, DistributedGP
 from repro.core.rate_distortion import distortion_for_rate
 from repro.core.distortion import distortion_quadratic, second_moment
-from repro.core import split_machines, single_center_gp, poe_baseline, train_gp
-from repro.core import predict, update, save_artifact, load_artifact
+from repro.core import split_machines, train_gp
 
 rng = np.random.default_rng(0)
 d, n = 16, 2000
@@ -53,27 +53,32 @@ sm = lambda mu: float(np.mean((yt - np.asarray(mu)) ** 2) / np.var(yt))
 full = train_gp(X[:600], y[:600], kernel="se", steps=100)
 print(f"full GP           smse={sm(full.predict(Xt)[0]):.4f}")
 parts = split_machines(X[:600], y[:600], 8, jax.random.PRNGKey(0))
+# one validated config per protocol point — everything else is est.fit/predict
 for method in ("bcm", "rbcm"):
-    mu, _, _ = poe_baseline(parts, Xt, kernel="se", method=method, steps=100)
+    est = DistributedGP(DGPConfig(protocol="poe", fusion=method, bits_per_sample=0,
+                                  gram_mode="dense", steps=100))
+    mu, _ = est.predict(est.fit(parts=parts), Xt)
     print(f"{method:5s} (zero rate) smse={sm(mu):.4f}")
 for bits in (8, 32, 64):
-    m = single_center_gp(parts, bits, kernel="se", steps=100, gram_mode="direct")
-    print(f"quantized GP R={bits:3d} smse={sm(m.predict(Xt)[0]):.4f} "
+    est = DistributedGP(DGPConfig(protocol="center", bits_per_sample=bits,
+                                  gram_mode="direct", steps=100))
+    m = est.fit(parts=parts)
+    print(f"quantized GP R={bits:3d} smse={sm(est.predict(m, Xt)[0]):.4f} "
           f"(wire {m.wire_bits/1e3:.0f} kbit)")
 
 print("\n== fit once / serve many ==")
-# single_center_gp already returned the serving artifact: checkpoint it,
-# reload, and serve — predictions from the loaded copy are bitwise identical.
+# est.fit already returned the serving artifact: checkpoint it, reload, and
+# serve — predictions from the loaded copy are bitwise identical.
 with tempfile.TemporaryDirectory() as ckpt_dir:
-    save_artifact(m, ckpt_dir)
-    served = load_artifact(ckpt_dir)
-mu0, _ = predict(served, Xt)
+    est.save(m, ckpt_dir)
+    served = est.load(ckpt_dir)   # meta.json carries the DGPConfig
+mu0, _ = est.predict(served, Xt)
 print(f"loaded artifact     smse={sm(mu0):.4f} (bitwise-identical serve, "
       f"{served.wire_bits/1e3:.0f} kbit ledger)")
 # stream 50 new points into machine 3: its FROZEN codebook re-encodes only
 # the new symbols; factors grow by rank-k updates — no refit anywhere
 Xn = rng.multivariate_normal(np.zeros(d), Qx, size=50).astype(np.float32)
 yn = (f(Xn) + 0.05 * rng.normal(size=50)).astype(np.float32)
-served = update(served, Xn, yn, machine=3)
-print(f"after update(+50)   smse={sm(predict(served, Xt)[0]):.4f} "
+served = est.update(served, Xn, yn, machine=3)
+print(f"after update(+50)   smse={sm(est.predict(served, Xt)[0]):.4f} "
       f"(ledger {served.wire_bits/1e3:.0f} kbit)")

@@ -1,0 +1,4 @@
+"""repro — JAX/Pallas reproduction of "Learning of Gaussian Processes in
+Distributed and Communication Limited Systems" (arXiv:1705.02627), grown into
+a servable distributed-GP system.  See repro.core for the paper machinery and
+repro.core.api.DistributedGP for the front-door estimator."""

@@ -1,7 +1,10 @@
 """Architecture registry: one module per assigned architecture (exact values
 from the cited source), plus the paper's own GP experiment configs.
 
-``get_config(arch_id)`` returns the full ModelConfig; ``input_specs`` builds
+The LLM architecture modules themselves are quarantined under
+``repro.configs.legacy`` (they are seed-era transformer workloads, unrelated
+to the distributed-GP paper — see that package's docstring); ``get_config``
+resolves names into it transparently.  ``input_specs`` builds
 ShapeDtypeStruct stand-ins for every model input of a (config, shape) pair —
 weak-type-correct, shardable, no device allocation.
 """
@@ -31,14 +34,15 @@ ARCHS = [
 
 def get_config(arch_id: str) -> ModelConfig:
     mod_name = arch_id.replace("-", "_").replace(".", "_")
-    mod = importlib.import_module(f".{mod_name}", __package__)
+    mod = importlib.import_module(f".legacy.{mod_name}", __package__)
     return mod.CONFIG
 
 
 def list_archs():
     """Canonical assigned ids (e.g. 'qwen2-moe-a2.7b')."""
     return [
-        importlib.import_module(f".{a}", __package__).CONFIG.name for a in ARCHS
+        importlib.import_module(f".legacy.{a}", __package__).CONFIG.name
+        for a in ARCHS
     ]
 
 

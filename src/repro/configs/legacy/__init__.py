@@ -1,0 +1,14 @@
+"""Quarantined seed-era LLM architecture configs.
+
+These transformer/SSM/MoE model configs (gemma, whisper, arctic, ...) came
+with the seed repo's generic serving scaffold and are UNRELATED to the
+distributed-GP paper this repo reproduces — the GP system never reads them.
+They are kept (a) because the dryrun/roofline harness and its tests
+(tests/test_archs.py, tests/test_system.py) still exercise the transformer
+stack against them, and (b) as workload stand-ins for the LM-feature GP head
+example.  New GP work should not add configs here; the paper's own experiment
+configs live one level up (repro.configs.gp_paper).
+
+``repro.configs.get_config`` resolves names into this package transparently,
+so external callers are unaffected by the quarantine.
+"""

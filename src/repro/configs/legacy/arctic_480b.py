@@ -1,6 +1,6 @@
 """arctic-480b [moe] — 128 experts top-2 + dense residual branch
 [hf:Snowflake/snowflake-arctic-base]."""
-from ..models.config import ModelConfig
+from ...models.config import ModelConfig
 
 CONFIG = ModelConfig(
     name="arctic-480b", family="moe",

@@ -1,6 +1,6 @@
 """gemma2-2b [dense] — alternating local(4096)/global attention, logit
 softcapping [arXiv:2408.00118]."""
-from ..models.config import ModelConfig
+from ...models.config import ModelConfig
 
 CONFIG = ModelConfig(
     name="gemma2-2b", family="dense",

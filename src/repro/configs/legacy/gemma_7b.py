@@ -1,5 +1,5 @@
 """gemma-7b [dense] — GeGLU, head_dim 256, MQA on the 2b sibling [arXiv:2403.08295]."""
-from ..models.config import ModelConfig
+from ...models.config import ModelConfig
 
 CONFIG = ModelConfig(
     name="gemma-7b", family="dense",

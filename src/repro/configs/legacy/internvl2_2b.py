@@ -1,6 +1,6 @@
 """internvl2-2b [vlm] — InternLM2 decoder; InternViT frontend STUBBED
 (input_specs feeds (B, 256, d) patch embeddings) [arXiv:2404.16821]."""
-from ..models.config import ModelConfig
+from ...models.config import ModelConfig
 
 CONFIG = ModelConfig(
     name="internvl2-2b", family="vlm",

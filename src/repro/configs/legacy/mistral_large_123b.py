@@ -1,5 +1,5 @@
 """mistral-large-123b [dense] [hf:mistralai/Mistral-Large-Instruct-2407]."""
-from ..models.config import ModelConfig
+from ...models.config import ModelConfig
 
 CONFIG = ModelConfig(
     name="mistral-large-123b", family="dense",

@@ -1,6 +1,6 @@
 """qwen2-moe-a2.7b [moe] — 60 routed experts top-4 + 4 shared experts
 [hf:Qwen/Qwen1.5-MoE-A2.7B]."""
-from ..models.config import ModelConfig
+from ...models.config import ModelConfig
 
 CONFIG = ModelConfig(
     name="qwen2-moe-a2.7b", family="moe",

@@ -1,5 +1,5 @@
 """stablelm-12b [dense] [hf:stabilityai/stablelm-2-12b]."""
-from ..models.config import ModelConfig
+from ...models.config import ModelConfig
 
 CONFIG = ModelConfig(
     name="stablelm-12b", family="dense",

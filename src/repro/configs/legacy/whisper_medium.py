@@ -1,6 +1,6 @@
 """whisper-medium [audio] — enc-dec; conv/mel frontend STUBBED (input_specs
 feeds (B, 1500, d) frame embeddings) [arXiv:2212.04356]."""
-from ..models.config import ModelConfig
+from ...models.config import ModelConfig
 
 CONFIG = ModelConfig(
     name="whisper-medium", family="encdec",

@@ -1,6 +1,6 @@
 """zamba2-2.7b [hybrid] — Mamba2 backbone + weight-shared attention block
 every 6 layers (ssm_state 64) [arXiv:2411.15242]."""
-from ..models.config import ModelConfig
+from ...models.config import ModelConfig
 
 CONFIG = ModelConfig(
     name="zamba2-2.7b", family="hybrid",

@@ -4,33 +4,55 @@ Layers:
   quantizers / rate_distortion / transforms / distortion  — §4 math
   schemes                                                 — the 3 wire protocols
   gp / nystrom / poe / sparse_gp / fusion                 — GP substrate
-  distributed_gp                                          — §5 protocols
+  registry / config / api / protocols                     — §5 protocols behind
+                                                            the DistributedGP
+                                                            estimator facade
+
+The front door is ``DistributedGP(DGPConfig(...))``; the legacy module-level
+entry points (``single_center_gp`` & co.) remain as deprecated wrappers in
+``distributed_gp`` (see docs/migration.md).
 """
 from . import quantizers, rate_distortion, transforms, distortion, schemes
-from . import gp, nystrom, poe, sparse_gp, fusion, distributed_gp
+from . import gp, nystrom, poe, sparse_gp, fusion
+from . import registry, config, protocols, api, distributed_gp
 
 from .schemes import PerSymbolScheme, OptimalScheme, DimReductionScheme, PCAScheme
 from .gp import GPModel, GPParams, train_gp, init_params
 from .sparse_gp import SGPR, train_sgpr
-from .distributed_gp import (
+from .registry import (
+    KERNELS, SCHEMES, FUSIONS, PROTOCOLS,
+    register_kernel, register_scheme, register_fusion, register_protocol,
+    KernelSpec, SchemeSpec, FusionSpec, ProtocolSpec,
+)
+from .config import DGPConfig
+from .api import DistributedGP
+from .protocols import (
     split_machines,
+    FittedProtocol,
+    save_artifact,
+    load_artifact,
+)
+# legacy entry points: deprecated wrappers (warn once, then delegate)
+from .distributed_gp import (
     single_center_gp,
     broadcast_gp,
     poe_baseline,
-    FittedProtocol,
     fit,
     predict,
     update,
-    save_artifact,
-    load_artifact,
 )
 
 __all__ = [
     "quantizers", "rate_distortion", "transforms", "distortion", "schemes",
-    "gp", "nystrom", "poe", "sparse_gp", "fusion", "distributed_gp",
+    "gp", "nystrom", "poe", "sparse_gp", "fusion",
+    "registry", "config", "protocols", "api", "distributed_gp",
     "PerSymbolScheme", "OptimalScheme", "DimReductionScheme", "PCAScheme",
     "GPModel", "GPParams", "train_gp", "init_params",
     "SGPR", "train_sgpr",
+    "KERNELS", "SCHEMES", "FUSIONS", "PROTOCOLS",
+    "register_kernel", "register_scheme", "register_fusion", "register_protocol",
+    "KernelSpec", "SchemeSpec", "FusionSpec", "ProtocolSpec",
+    "DGPConfig", "DistributedGP",
     "split_machines", "single_center_gp", "broadcast_gp", "poe_baseline",
     "FittedProtocol", "fit", "predict", "update", "save_artifact", "load_artifact",
 ]

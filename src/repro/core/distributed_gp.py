@@ -1,118 +1,69 @@
-"""Distributed GP learning under communication limits (paper §5).
+"""DEPRECATED module-level entry points — the code moved to
+:mod:`repro.core.protocols`.
 
-Two protocols:
+The 2k-line monolith that lived here is now a package split along the
+paper's seams (``protocols/base.py`` shared wire/padding/ledger machinery,
+``center.py`` §5.1, ``broadcast.py`` §5.2, ``poe.py`` zero-rate baselines,
+``mesh.py`` the machines-as-devices shard_map substrate, ``wire.py`` the
+pluggable wire schemes), fronted by the registry-backed estimator API::
 
-* **single-center** (§5.1): machine 0 is the center.  It ships its local
-  second-moment S_c to every machine; machine j fits the per-symbol scheme to
-  (Qx=S_j, Qy=S_c), transmits int codes; the center decodes X̂_j, forms the
-  first-block rows of the gram matrix (its own block exact), Nyström-completes
-  (eq. 61), trains hyperparameters on the completed gram, and serves
-  predictions.
-* **broadcast** (§5.2): every machine broadcasts codes fitted against
-  Qy = sum of the *other* machines' covariances; each machine builds its own
-  Nyström gram (own block exact), forms a local predictive, and the per-point
-  predictives are fused with the KL barycenter (eqs. 62-64).
+    from repro.core import DGPConfig, DistributedGP
 
-Execution modes:
+    est = DistributedGP(DGPConfig(protocol="center", bits_per_sample=24))
+    art = est.fit(X, y, m=40)
+    mu, var = est.predict(art, X_query)
 
-* ``impl="batched"`` (default) — machines live on uniform padded shards
-  ``(m, n_pad, d)`` with validity masks; scheme fitting
-  (core.jax_scheme.fit_scheme), encode/decode, per-machine Nyström
-  predictives, and PoE experts all run under ``jax.vmap`` — one batched
-  eigh/Cholesky instead of m serial ones, and the whole wire protocol is ONE
-  compiled program;
-* ``impl="host"`` — the original serial reference/oracle: one host-side scipy
-  ``PerSymbolScheme`` fit and one dense Cholesky per machine.  Protocol
-  semantics (own block exact, wire-bit accounting) are identical; the batched
-  path is locked to it by tests/test_batched_protocol.py;
-* ``impl="mesh"`` — the production SPMD path: machines ARE devices along a
-  ``("machines",)`` mesh axis, the wire protocol runs as ONE
-  ``compat.shard_map`` program whose only inter-machine channel is
-  ``repro.comm.q_all_gather`` (int codes on the wire + O(d²) fp32 side info;
-  the ledger is computed from what the collective actually moves), per-machine
-  factors are built device-local and live SHARDED along the mesh axis, and
-  ``predict`` runs as one shard_map program with a psum/KL fusion epilogue
-  (broadcast/PoE; §5.1 serving is center-local by construction).  All three
-  impls are locked to each other by tests/test_conformance.py.
-
-``gram_backend="pallas"`` routes gram assembly through the Pallas tiled-gram
-kernel (kernels/gram) and — for reconstructed blocks — feeds the int wire
-codes straight to the fused dequantize+gram kernel (kernels/qgram), so X̂
-never round-trips through HBM for the big matmuls (SE kernels ride the same
-inner products via ‖x−x'‖² = |x|² + |x'|² − 2⟨x,x'⟩).
-
-Serving (fit once / serve many):
-
-The paper's economics are *amortized*: a machine spends a few bits per symbol
-ONCE, and the receiver then answers arbitrarily many GP queries from the
-reconstructed inner products.  The serving API makes that split explicit:
-
-* :func:`fit` runs the wire protocol + hyperparameter training + ONE
-  factorization and returns a :class:`FittedProtocol` — a checkpointable
-  pytree artifact holding the frozen scheme state (codebooks/transforms, int
-  wire codes), the decoded shards, the per-machine Nyström/Cholesky factors,
-  the fusion method, trained hypers, and the wire-bit ledger;
-* :func:`predict` is ONE jitted program per artifact: O(t)-per-query-batch
-  triangular solves against the cached factors — no scheme refit, no
-  Cholesky refactorization (verify with :func:`predict_op_counts`);
-* :func:`update` streams in new points: re-encodes ONLY the new symbols with
-  the frozen per-machine codebooks (charging ``rates.sum()`` bits each to the
-  ledger) and grows the factors by rank-k updates
-  (``nystrom.chol_update_rank`` / ``nystrom.chol_append``) instead of
-  refactorizing;
-* :func:`save_artifact` / :func:`load_artifact` round-trip the artifact
-  through ``repro.checkpoint`` — predictions from a loaded artifact are
-  bitwise identical to pre-save.
-
-``single_center_gp`` / ``broadcast_gp`` / ``poe_baseline`` (the paper-facing
-entry points) are thin ``fit()`` (+ ``predict()``) compositions.
-
-Targets y are transmitted unquantized (scalars; the paper quantizes inputs
-only).
+Everything importable from here keeps working: the classes/helpers are
+re-exports, and the seven legacy entry points (``quantize_to_center``,
+``single_center_gp``, ``broadcast_gp``, ``poe_baseline``, ``fit``,
+``predict``, ``update``) are thin wrappers that emit a single
+``DeprecationWarning`` (once per process per function) and delegate to the
+new implementations — numerics, signatures, and return types unchanged.
+See docs/migration.md for the old-call → ``DGPConfig`` mapping.
 """
 from __future__ import annotations
 
-import collections
-import dataclasses
 import functools
-from functools import partial
-from typing import Callable, NamedTuple, Sequence
+import warnings
 
-import numpy as np
-import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from .protocols import base as _base
+from .protocols import broadcast as _broadcast
+from .protocols import center as _center
+from .protocols import poe as _poe
 
-from ..compat import shard_map
-from .distortion import second_moment
-from . import jax_scheme
-from . import quantizers as Q
-from .schemes import PerSymbolScheme
-from .gp import (
-    GPParams,
-    init_params,
-    gram_fn,
-    kernel_from_inner,
-    prior_diag,
-    nlml_from_gram,
-    posterior_factors,
-    posterior_apply,
-    posterior_from_gram,
-    train_gp,
+# -- re-exports: every non-entry-point name keeps its old import path --------
+from .protocols.base import (  # noqa: F401
+    FittedProtocol,
+    PaddedShards,
+    WireState,
+    load_artifact,
+    pad_parts,
+    predict_op_counts,
+    save_artifact,
+    serve_trace_count,
+    split_machines,
+    _bump_length,
+    _mask_gram,
+    _reencode,
+    _wire_bits,
+    _SERVE_TRACES,
 )
-from .nystrom import (
-    nystrom_complete,
-    nystrom_cross,
-    nystrom_posterior,
-    nystrom_factors,
-    nystrom_apply,
-    nystrom_kinv,
-    chol_update_rank,
-    chol_append,
-    _JITTER,
+from .protocols.center import CenterGP, _pallas_ip_rows  # noqa: F401
+from .protocols.broadcast import (  # noqa: F401
+    HostBroadcastGP,
+    _decoded_inner_products,
+    _star_decoded_products,
+    _star_exact_products,
+    _train_inner_products,
 )
-from .fusion import kl_fuse_diag, kl_fuse_diag_psum
-from .poe import combine, combine_psum
+from .protocols.poe import HostPoEGP  # noqa: F401
+from .protocols.mesh import (  # noqa: F401
+    MESH_AXIS,
+    broadcast_gp_mesh,
+    machine_mesh,
+    _run_wire_protocol_mesh,
+)
+from .protocols.wire import _run_wire_protocol  # noqa: F401
 
 __all__ = [
     "split_machines",
@@ -136,1878 +87,67 @@ __all__ = [
     "MESH_AXIS",
 ]
 
-
-def split_machines(X, y, m: int, key) -> list[tuple[jnp.ndarray, jnp.ndarray]]:
-    """Random uniform split across m machines (paper §6: 'randomly distributed
-    across 40 machines')."""
-    n = X.shape[0]
-    perm = jax.random.permutation(key, n)
-    chunks = np.array_split(np.asarray(perm), m)
-    return [(jnp.asarray(X)[c], jnp.asarray(y)[c]) for c in chunks]
+# warn once per process per entry point (tests/test_deprecations.py asserts
+# exactly-once), without touching the global warning filters
+_WARNED: set[str] = set()
 
 
-# --------------------------------------------------------------------------
-# uniform padded shards — the layout every vmapped protocol stage runs on
-# --------------------------------------------------------------------------
-
-
-class PaddedShards(NamedTuple):
-    """(m, n_pad, d) machine shards; invalid rows are zero with mask 0."""
-
-    X: jnp.ndarray  # (m, n_pad, d)
-    y: jnp.ndarray  # (m, n_pad)
-    mask: jnp.ndarray  # (m, n_pad) float32 validity
-    lengths: tuple  # per-machine true row counts (python ints)
-
-
-def pad_parts(parts) -> PaddedShards:
-    m = len(parts)
-    d = parts[0][0].shape[1]
-    lengths = tuple(int(p[0].shape[0]) for p in parts)
-    n_pad = max(lengths)
-    X = np.zeros((m, n_pad, d), np.float32)
-    y = np.zeros((m, n_pad), np.float32)
-    mask = np.zeros((m, n_pad), np.float32)
-    for j, (Xj, yj) in enumerate(parts):
-        X[j, : lengths[j]] = np.asarray(Xj, np.float32)
-        y[j, : lengths[j]] = np.asarray(yj, np.float32)
-        mask[j, : lengths[j]] = 1.0
-    return PaddedShards(jnp.asarray(X), jnp.asarray(y), jnp.asarray(mask), lengths)
-
-
-class WireState(NamedTuple):
-    """Everything the wire protocol produced, for every machine at once.
-
-    This is the fit-once scheme state: ``(T, T_inv, sigma, rates)`` per machine
-    are the frozen codebooks/transforms that :func:`update` reuses to encode
-    NEW symbols without refitting (only their ``rates.sum()`` wire bits are
-    spent), and ``codes``/``scaled_cents`` feed the fused dequantize+gram
-    kernel under ``gram_backend="pallas"``."""
-
-    codes: jnp.ndarray  # (m, n_pad, d) int32; padded rows = -1 (decode to 0)
-    decoded: jnp.ndarray  # (m, n_pad, d) reconstructions; padded rows zero
-    T_inv: jnp.ndarray  # (m, d, d) decorrelating inverses
-    rates: jnp.ndarray  # (m, d) int32 per-dim bit allocation
-    sigma: jnp.ndarray  # (m, d)
-    scaled_cents: jnp.ndarray  # (m, d, C) qgram decode tables
-    T: jnp.ndarray  # (m, d, d) decorrelating forward transforms
-
-
-@partial(jax.jit, static_argnames=("total_bits", "max_bits", "mode", "center"))
-def _run_wire_protocol(X, mask, total_bits: int, max_bits: int, mode: str, center: int):
-    """Fit + encode + decode for EVERY machine under one jit: a single batched
-    eigh pair (fit), one batched quantize and one batched dequantize.
-
-    mode="center": every machine targets the center's covariance (§5.1);
-    mode="broadcast": machine j targets the sum of the others' (§5.2)."""
-    m, n_pad, d = X.shape
-    n = jnp.maximum(mask.sum(axis=1), 1.0)
-    S = jnp.einsum("mnd,mne->mde", X, X) / n[:, None, None]  # padded rows are 0
-    if mode == "center":
-        Qy = jnp.broadcast_to(S[center], (m, d, d))
-    elif mode == "broadcast":
-        Qy = jnp.sum(S, axis=0)[None] - S
-    else:
-        raise ValueError(f"unknown wire mode {mode!r}")
-    cap = jax_scheme.codebook_cap(total_bits, max_bits)
-    tables = jax_scheme.scheme_tables(total_bits, max_bits)
-    states = jax_scheme.fit_scheme_batched(S, Qy, total_bits, cap)
-    codes = jax.vmap(lambda st, x: jax_scheme.encode(st, x, tables))(states, X)
-    decoded = jax.vmap(lambda st, c: jax_scheme.decode(st, c, tables))(states, codes)
-    decoded = decoded * mask[..., None]
-    codes = jnp.where(mask[..., None] > 0, codes, -1)
-    cents = jax.vmap(lambda st: jax_scheme.scaled_centroids(st, tables))(states)
-    return WireState(
-        codes, decoded, states["T_inv"], states["rates"], states["sigma"], cents,
-        states["T"],
-    )
-
-
-def _wire_bits(rates, lengths, d: int, skip=None) -> int:
-    """Paper §4 accounting: R bits/sample on the wire + O(2 d²) fp32 side info
-    per transmitting machine."""
-    rates = np.asarray(rates)
-    total = 0
-    for j, n_j in enumerate(lengths):
-        if j == skip:
-            continue
-        total += int(rates[j].sum()) * n_j + 2 * d * d * 32
-    return total
-
-
-# --------------------------------------------------------------------------
-# impl="mesh": machines are devices, the collectives are the wire
-# --------------------------------------------------------------------------
-
-MESH_AXIS = "machines"
-
-
-def machine_mesh(m: int) -> Mesh:
-    """A 1-D ``("machines",)`` mesh over the first m local devices — the
-    execution substrate of ``impl="mesh"``.  On CPU, force placeholder
-    devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
-    (tests/conftest.py does; launch/serve_gp.py --mesh does it for you)."""
-    devs = jax.devices()
-    if m > len(devs):
-        raise ValueError(
-            f'impl="mesh" needs one device per machine: m={m} > '
-            f"{len(devs)} available devices (hint: "
-            f"XLA_FLAGS=--xla_force_host_platform_device_count={m})"
-        )
-    return Mesh(np.asarray(devs[:m]), (MESH_AXIS,))
-
-
-@functools.lru_cache(maxsize=None)
-def _mesh_wire_fn(m: int, total_bits: int, max_bits: int, mode: str, center: int):
-    """One compiled SPMD wire program per (m, R, mode): every device fits its
-    scheme, the int codes + O(d²) side info move through comm.q_all_gather,
-    and everything the collective moved comes back replicated."""
-    from ..comm import q_all_gather
-
-    mesh = machine_mesh(m)
-
-    def body(x_blk, mask_blk):
-        _, st = q_all_gather(
-            x_blk[0], MESH_AXIS, total_bits, max_bits, mask=mask_blk[0],
-            mode=mode, center=center, return_state=True,
-        )
-        return st
-
-    return jax.jit(shard_map(
-        body, mesh=mesh, in_specs=(P(MESH_AXIS), P(MESH_AXIS)),
-        out_specs=P(), check_vma=False,
-    ))
-
-
-def _run_wire_protocol_mesh(X, mask, total_bits: int, max_bits: int, mode: str, center: int):
-    """The wire protocol as a REAL device-mesh program (machines = devices
-    along ``MESH_AXIS``; ``comm.q_all_gather`` is the only inter-machine
-    channel).  Returns the same :class:`WireState` layout as
-    :func:`_run_wire_protocol` (replicated arrays) plus the wire-bit ledger
-    computed from what the collective actually moved — integer-equal to the
-    host oracle's §4 accounting (tests/test_conformance.py)."""
-    m, n_pad, d = X.shape
-    st = _mesh_wire_fn(m, total_bits, max_bits, mode, center)(X, mask)
-    tables = jax_scheme.scheme_tables(total_bits, max_bits)
-    cents = jax_scheme.scaled_centroids_batched(st["rates"], st["sigma"], tables)
-    ws = WireState(
-        st["codes"], st["decoded"], st["T_inv"], st["rates"], st["sigma"],
-        cents, st["T"],
-    )
-    return ws, int(st["wire_bits"])
-
-
-def _shard_machine_axis(tree, mesh: Mesh):
-    """device_put every leaf with its leading (machine) axis along the mesh."""
-    sh = NamedSharding(mesh, P(MESH_AXIS))
-    return jax.tree.map(lambda a: jax.device_put(a, sh), tree)
-
-
-@functools.lru_cache(maxsize=None)
-def _mesh_broadcast_factor_fn(m: int, kernel: str):
-    """Per-machine §5.2 Nyström factor build as ONE shard_map program: device i
-    assembles ITS view (own block exact, peers from the wire reconstructions)
-    and factorizes it locally; the factor set comes out SHARDED along the
-    mesh axis (out_specs P(MESH_AXIS))."""
-    mesh = machine_mesh(m)
-
-    def body(x_blk, mask_blk, dec, sq_dec, mask_flat, y_flat, p):
-        i = jax.lax.axis_index(MESH_AXIS)
-        x, mi = x_blk[0], mask_blk[0]
-        n_pad = x.shape[0]
-        noise = jnp.exp(p.log_noise)
-        sqx = jnp.sum(x**2, -1)
-        cols = dec.at[i].set(x)  # own (exact) block replaces its reconstruction
-        sq_cols = sq_dec.at[i].set(sqx).reshape(-1)
-        ip_KK = x @ x.T
-        ip_KN = jnp.moveaxis(
-            jnp.einsum("nd,jNd->jnN", x, cols), 0, 1
-        ).reshape(n_pad, m * n_pad)
-        G_KK = _mask_gram(kernel_from_inner(kernel, p, ip_KK, sqx, sqx), mi)
-        G_KN = kernel_from_inner(kernel, p, ip_KN, sqx, sq_cols) * (
-            mi[:, None] * mask_flat[None, :]
-        )
-        fac = nystrom_factors(G_KK, G_KN, y_flat, noise)
-        return jax.tree.map(lambda a: a[None], fac)
-
-    return jax.jit(shard_map(
-        body, mesh=mesh,
-        in_specs=(P(MESH_AXIS), P(MESH_AXIS), P(), P(), P(), P(), P()),
-        out_specs=P(MESH_AXIS), check_vma=False,
-    ))
-
-
-@functools.lru_cache(maxsize=None)
-def _mesh_poe_factor_fn(m: int, kernel: str):
-    """Zero-rate expert factorization, one dense Cholesky per device (own
-    shard only — no wire at all), factors sharded along the mesh axis."""
-    mesh = machine_mesh(m)
-
-    def body(x_blk, y_blk, mask_blk, p):
-        x, yj, mj = x_blk[0], y_blk[0], mask_blk[0]
-        noise = jnp.exp(p.log_noise)
-        sqj = jnp.sum(x**2, -1)
-        G = _mask_gram(kernel_from_inner(kernel, p, x @ x.T, sqj, sqj), mj)
-        fac = posterior_factors(G, yj * mj, noise)
-        return jax.tree.map(lambda a: a[None], fac)
-
-    return jax.jit(shard_map(
-        body, mesh=mesh,
-        in_specs=(P(MESH_AXIS), P(MESH_AXIS), P(MESH_AXIS), P()),
-        out_specs=P(MESH_AXIS), check_vma=False,
-    ))
-
-
-def _pallas_ip_rows(wire: WireState, block_order, lengths, Xc, Y):
-    """⟨x_i, y_j⟩ for every x in the center gram-row layout (N, p): center rows
-    via the Pallas tiled gram on exact points; reconstructed rows straight
-    from int codes via the fused dequantize+gram kernel —
-    X̂ = dequant(codes) @ T_inv^T, so ⟨x̂, y⟩ = qgram(codes, Y @ T_inv).
-    Shared by the CenterGP fit-time builder and the FittedProtocol serve path."""
-    from ..kernels.gram.ops import gram as gram_kernel
-    from ..kernels.qgram.ops import qgram_batched
-
-    idx = list(block_order[1:])
-    codes = wire.codes[jnp.asarray(idx)]
-    cents = wire.scaled_cents[jnp.asarray(idx)]
-    T_inv = wire.T_inv[jnp.asarray(idx)]
-    top = gram_kernel(Xc, Y)  # (n_c, p)
-    proj = jnp.einsum("pd,mde->mpe", Y, T_inv)  # Y in each decorrelated basis
-    blocks = qgram_batched(codes, cents, proj)  # (m-1, n_pad, p)
-    rows = [top] + [blocks[i, : lengths[j]] for i, j in enumerate(idx)]
-    return jnp.concatenate(rows, axis=0)
-
-
-def _mask_gram(G, mask_r, mask_c=None, pin_diag=True):
-    """Zero padded rows/cols; optionally pin their diagonal to 1 so Cholesky
-    stays SPD.  A point with k(·, pad)=0, y_pad=0 contributes nothing to the
-    posterior, which makes the padded program bit-compatible with the
-    unpadded one."""
-    mask_c = mask_r if mask_c is None else mask_c
-    Gm = G * (mask_r[:, None] * mask_c[None, :])
-    if pin_diag:
-        Gm = Gm + jnp.diag(1.0 - mask_r)
-    return Gm
-
-
-# --------------------------------------------------------------------------
-# §5.1 single-center protocol
-# --------------------------------------------------------------------------
-
-
-def _quantize_to_center_host(
-    parts, bits_per_sample: int, center: int = 0, max_bits: int = Q.DEFAULT_MAX_BITS
-):
-    """Serial reference protocol: host-side scipy PerSymbolScheme per machine."""
-    S_c = second_moment(parts[center][0])
-    Xs, ys, sqs, wire = [], [], [], 0
-    for j, (Xj, yj) in enumerate(parts):
-        if j == center:
-            Xs.append(Xj)
-        else:
-            S_j = second_moment(Xj)
-            sch = PerSymbolScheme(bits_per_sample, max_bits).fit(
-                np.asarray(S_j), np.asarray(S_c)
-            )
-            Xs.append(sch.decode(sch.encode(Xj)))
-            wire += sch.wire_bits(Xj.shape[0]) + sch.side_info_bits(Xj.shape[1])
-            # (the optional FITC diagonal costs an extra 32 bits/point of
-            #  exact |x|^2 — accounted by the caller when gram_mode uses it)
-        ys.append(yj)
-        sqs.append(jnp.sum(jnp.asarray(Xj) ** 2, axis=-1))
-    order = [center] + [j for j in range(len(parts)) if j != center]
-    X_recon = jnp.concatenate([Xs[j] for j in order], axis=0)
-    y_all = jnp.concatenate([ys[j] for j in order], axis=0)
-    sq_norms = jnp.concatenate([sqs[j] for j in order], axis=0)
-    n_center = parts[center][0].shape[0]
-    return X_recon, y_all, wire, n_center, sq_norms
-
-
-def _quantize_to_center_batched(
-    parts, bits_per_sample: int, center: int, max_bits: int, impl: str = "batched"
-):
-    """Batched §5.1 wire: one vmapped fit/encode/decode, then assemble the
-    center's gram-row layout (exact center block first).  ``impl="mesh"``
-    runs the same wire as one shard_map program on a machines-as-devices
-    mesh (comm.q_all_gather is the channel; ledger from the actual payload)."""
-    shards = pad_parts(parts)
-    m, _, d = shards.X.shape
-    if impl == "mesh":
-        wire_state, wire = _run_wire_protocol_mesh(
-            shards.X, shards.mask, bits_per_sample, max_bits, "center", center
-        )
-    else:
-        wire_state = _run_wire_protocol(
-            shards.X, shards.mask, bits_per_sample, max_bits, "center", center
-        )
-        wire = _wire_bits(wire_state.rates, shards.lengths, d, skip=center)
-    order = [center] + [j for j in range(m) if j != center]
-    blocks = [parts[center][0]] + [
-        wire_state.decoded[j, : shards.lengths[j]] for j in order[1:]
-    ]
-    X_recon = jnp.concatenate(blocks, axis=0)
-    y_all = jnp.concatenate([parts[j][1] for j in order], axis=0)
-    sq_norms = jnp.concatenate(
-        [jnp.sum(jnp.asarray(parts[j][0]) ** 2, axis=-1) for j in order], axis=0
-    )
-    return X_recon, y_all, wire, shards.lengths[center], sq_norms, shards, wire_state, order
-
-
-def quantize_to_center(
-    parts, bits_per_sample: int, center: int = 0, impl: str = "batched",
-    max_bits: int = Q.DEFAULT_MAX_BITS,
-):
-    """Run the single-center wire protocol; returns
-    (X_recon, y_all, wire_bits, n_center, sq_norms).
-
-    X_recon stacks the center's exact block first, then every machine's decoded
-    points, matching the paper's gram-row layout.  ``sq_norms`` carries each
-    point's EXACT |x|² (an O(32 n)-bit extra the Snelson–Ghahramani/FITC
-    diagonal correction needs; included in the wire accounting).
-
-    impl: "host" (serial scipy oracle), "batched" (one vmapped jit), or
-    "mesh" (machines are devices; the wire is comm.q_all_gather inside one
-    shard_map program) — all three produce integer-identical wire ledgers and
-    matching reconstructions (tests/test_conformance.py)."""
-    if impl == "host":
-        return _quantize_to_center_host(parts, bits_per_sample, center, max_bits)
-    if impl not in ("batched", "mesh"):
-        raise ValueError(f"unknown impl {impl!r}")
-    out = _quantize_to_center_batched(parts, bits_per_sample, center, max_bits, impl)
-    return out[:5]
-
-
-@dataclasses.dataclass
-class CenterGP:
-    kernel: str
-    params: GPParams
-    X_recon: jnp.ndarray  # center block exact, rest reconstructed
-    y: jnp.ndarray
-    n_center: int
-    wire_bits: int
-    gram_mode: str = "nystrom"
-    sq_norms: jnp.ndarray | None = None  # exact |x|^2 for the FITC diagonal
-    gram_backend: str = "xla"
-    wire: WireState | None = None  # int codes + tables (pallas/qgram path)
-    block_order: tuple | None = None  # non-center machine ids, X_recon order
-    block_lengths: tuple | None = None  # their true row counts
-    _ip_cache: dict = dataclasses.field(default_factory=dict, repr=False)
-
-    def __post_init__(self):
-        if self.gram_backend == "pallas":
-            if self.wire is None:
-                raise ValueError(
-                    'gram_backend="pallas" requires the batched wire protocol '
-                    "(int codes) — use impl=\"batched\""
+def _deprecated(replacement: str):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            if fn.__name__ not in _WARNED:
+                _WARNED.add(fn.__name__)
+                warnings.warn(
+                    f"repro.core.distributed_gp.{fn.__name__} is deprecated: "
+                    f"use {replacement} (see docs/migration.md)",
+                    DeprecationWarning,
+                    stacklevel=2,
                 )
-            # materialize the inner-product cache NOW, outside any jit trace:
-            # a cache miss inside train_gp's scan would store a leaked tracer
-            self.warm_ip()
+            return fn(*args, **kwargs)
 
-    def _exact_diag(self, params):
-        """k(x_i, x_i) from the EXACT squared norms the machines shipped."""
-        return prior_diag(self.kernel, params, self.sq_norms)
+        return wrapper
 
-    # -- pallas/qgram inner-product assembly --------------------------------
+    return deco
 
-    def _ip_rows(self, Y):
-        """⟨x_i, y_j⟩ for every x in X_recon layout — see :func:`_pallas_ip_rows`."""
-        return _pallas_ip_rows(
-            self.wire, self.block_order, self.block_lengths,
-            self.X_recon[: self.n_center], Y,
-        )
 
-    def _ip(self, key: str):
-        """Cached param-independent inner products (pallas backend): computed
-        once with the kernels, then reused as constants by every training step
-        and prediction."""
-        if key not in self._ip_cache:
-            Xc = self.X_recon[: self.n_center]
-            if key == "KN":
-                self._ip_cache[key] = self._ip_rows(Xc).T  # (n_c, N)
-            elif key == "NN":
-                self._ip_cache[key] = self._ip_rows(self.X_recon)  # (N, N)
-            elif key == "sq":
-                self._ip_cache[key] = jnp.sum(self.X_recon**2, axis=-1)
-        return self._ip_cache[key]
+@_deprecated('DistributedGP(DGPConfig(protocol="center", ...)).fit(...)')
+@functools.wraps(_center.quantize_to_center)
+def quantize_to_center(*args, **kwargs):
+    return _center.quantize_to_center(*args, **kwargs)
 
-    def warm_ip(self):
-        """Materialize the inner-product cache eagerly (before train_gp's scan
-        traces _gram) so the Pallas kernels run once, not once per trace."""
-        if self.gram_backend != "pallas":
-            return self
-        self._ip("sq")
-        self._ip("NN" if self.gram_mode == "direct" else "KN")
-        return self
 
-    def _gram_pallas(self, params):
-        sq = self._ip("sq")
-        K = self.n_center
-        if self.gram_mode == "direct":
-            return kernel_from_inner(self.kernel, params, self._ip("NN"), sq, sq)
-        ip_KN = self._ip("KN")
-        G_KK = kernel_from_inner(self.kernel, params, ip_KN[:, :K], sq[:K], sq[:K])
-        G_KN = kernel_from_inner(self.kernel, params, ip_KN, sq[:K], sq)
-        if self.gram_mode == "nystrom_fitc" and self.sq_norms is not None:
-            return nystrom_complete(G_KK, G_KN, exact_diag=self._exact_diag(params))
-        return nystrom_complete(G_KK, G_KN)
+@_deprecated('DistributedGP(DGPConfig(protocol="center", ...))')
+@functools.wraps(_center.single_center_gp)
+def single_center_gp(*args, **kwargs):
+    return _center.single_center_gp(*args, **kwargs)
 
-    def _gram(self, params):
-        if self.gram_backend == "pallas":
-            return self._gram_pallas(params)
-        k = gram_fn(self.kernel)
-        if self.gram_mode == "direct":
-            # beyond-paper: all blocks straight from the reconstructed points;
-            # converges to the full GP as R -> inf (Nyström caps at rank K)
-            return k(params, self.X_recon)
-        Xc = self.X_recon[: self.n_center]
-        G_KK = k(params, Xc)
-        G_KN = k(params, Xc, self.X_recon)
-        if self.gram_mode == "nystrom_fitc" and self.sq_norms is not None:
-            # Snelson & Ghahramani: make the Nyström diagonal exact (the
-            # correction acts like per-point noise, taming the rank-K inverse)
-            return nystrom_complete(G_KK, G_KN, exact_diag=self._exact_diag(params))
-        return nystrom_complete(G_KK, G_KN)
 
+@_deprecated('DistributedGP(DGPConfig(protocol="broadcast", ...))')
+@functools.wraps(_broadcast.broadcast_gp)
+def broadcast_gp(*args, **kwargs):
+    return _broadcast.broadcast_gp(*args, **kwargs)
 
-    def predict(self, X_star):
-        if self.gram_backend == "pallas":
-            return self._predict_pallas(X_star)
-        k = gram_fn(self.kernel)
-        g_ss = jnp.diagonal(k(self.params, X_star, X_star))
-        noise = jnp.exp(self.params.log_noise)
-        if self.gram_mode == "nystrom_fitc":
-            # dense path: the FITC-corrected gram is full-rank (the exact
-            # diagonal acts as per-point noise), so the direct predictive is
-            # well-conditioned.  The test cross-covariance must still pass
-            # through the Nyström map — the raw k(x*, x) against a
-            # Nyström-structured train gram badly mis-weights y-components
-            # outside the rank-K span (was the out-of-range seed bug).
-            Xc = self.X_recon[: self.n_center]
-            G_KK = k(self.params, Xc)
-            G_KN = k(self.params, Xc, self.X_recon)
-            G = nystrom_complete(G_KK, G_KN, exact_diag=self._exact_diag(self.params))
-            G_sn = nystrom_cross(G_KK, G_KN, k(self.params, X_star, Xc))
-            return posterior_from_gram(G, G_sn, g_ss, self.y, noise)
-        if self.gram_mode == "nystrom":
-            # consistent low-rank predictive: the test cross-covariances must
-            # pass through the same Nyström map (G_*N = G_*K G_KK^{-1} G_KN),
-            # else y-components outside the rank-K span are amplified by 1/s^2
-            Xc = self.X_recon[: self.n_center]
-            return nystrom_posterior(
-                k(self.params, Xc), k(self.params, Xc, self.X_recon),
-                self.y, noise, k(self.params, X_star, Xc), g_ss,
-            )
-        G = self._gram(self.params)
-        G_sn = k(self.params, X_star, self.X_recon)
-        return posterior_from_gram(G, G_sn, g_ss, self.y, noise)
 
-    def _predict_pallas(self, X_star):
-        from ..kernels.gram.ops import gram as gram_kernel
+@_deprecated('DistributedGP(DGPConfig(protocol="poe", ...))')
+@functools.wraps(_poe.poe_baseline)
+def poe_baseline(*args, **kwargs):
+    return _poe.poe_baseline(*args, **kwargs)
 
-        X_star = jnp.asarray(X_star, jnp.float32)
-        p = self.params
-        sq = self._ip("sq")
-        sq_star = jnp.sum(X_star**2, -1)
-        K = self.n_center
-        Xc = self.X_recon[:K]
-        g_ss = prior_diag(self.kernel, p, sq_star)
-        noise = jnp.exp(p.log_noise)
-        ip_KN = self._ip("KN")
-        G_KK = kernel_from_inner(self.kernel, p, ip_KN[:, :K], sq[:K], sq[:K])
-        if self.gram_mode == "nystrom":
-            ip_sK = gram_kernel(X_star, Xc)
-            G_sK = kernel_from_inner(self.kernel, p, ip_sK, sq_star, sq[:K])
-            G_KN = kernel_from_inner(self.kernel, p, ip_KN, sq[:K], sq)
-            return nystrom_posterior(G_KK, G_KN, self.y, noise, G_sK, g_ss)
-        G = self._gram_pallas(p)
-        if self.gram_mode == "nystrom_fitc":
-            # FITC-consistent test covariance (see the xla path)
-            ip_sK = gram_kernel(X_star, Xc)
-            G_sK = kernel_from_inner(self.kernel, p, ip_sK, sq_star, sq[:K])
-            G_KN = kernel_from_inner(self.kernel, p, ip_KN, sq[:K], sq)
-            G_sn = nystrom_cross(G_KK, G_KN, G_sK)
-        else:
-            ip_sN = self._ip_rows(X_star).T  # (t, N)
-            G_sn = kernel_from_inner(self.kernel, p, ip_sN, sq_star, sq)
-        return posterior_from_gram(G, G_sn, g_ss, self.y, noise)
 
+@_deprecated("DistributedGP(DGPConfig(...)).fit(...)")
+@functools.wraps(_base.fit)
+def fit(*args, **kwargs):
+    return _base.fit(*args, **kwargs)
 
-def single_center_gp(
-    parts,
-    bits_per_sample: int,
-    kernel: str = "se",
-    steps: int = 150,
-    lr: float = 0.05,
-    params: GPParams | None = None,
-    gram_mode: str = "nystrom",
-    impl: str = "batched",
-    gram_backend: str = "xla",
-    max_bits: int = Q.DEFAULT_MAX_BITS,
-    train_impl: str = "scan",
-):
-    """Full §5.1 protocol: quantize-in, Nyström-complete (eq. 61), train hypers
-    on the completed gram by marginal likelihood, return a predictor.
 
-    This is now a thin composition over the serving API: the default
-    ``impl="batched"`` simply returns ``fit(parts, R, protocol="center", ...)``
-    — a :class:`FittedProtocol` artifact whose ``.predict(X_star)`` serves
-    queries from cached factors (and which additionally supports
-    :func:`update`, :func:`save_artifact` / :func:`load_artifact`).
+@_deprecated("DistributedGP(...).predict(art, X_star) or art.predict(X_star)")
+@functools.wraps(_base.predict)
+def predict(*args, **kwargs):
+    return _base.predict(*args, **kwargs)
 
-    Parameters
-    ----------
-    parts : list of (X_j, y_j) per machine (see :func:`split_machines`); machine
-        0 is the center.
-    bits_per_sample : the paper's R — total wire bits each non-center machine
-        spends per transmitted point (greedily allocated across dimensions).
-    kernel : "se" (paper eq. 65) or "linear" (eq. 4).
-    gram_mode : how the center assembles the train gram —
-        ``"nystrom"`` (eq.-61 completion + consistent low-rank predictive),
-        ``"nystrom_fitc"`` (Snelson–Ghahramani exact diagonal; costs an extra
-        32 bits/point of exact |x|² on the wire),
-        ``"direct"`` (all blocks from reconstructed points; beyond-paper,
-        converges to the full GP as R→∞).
-    impl : ``"batched"`` (default) runs the wire protocol vmapped over machines
-        inside one jit and returns the serving artifact; ``"host"`` is the
-        serial scipy reference/oracle (returns the legacy :class:`CenterGP`).
-    gram_backend : ``"xla"`` or ``"pallas"`` — the latter routes gram assembly
-        through the tiled Pallas gram kernel and feeds int wire codes straight
-        to the fused dequantize+gram kernel (batched impl only).
-    train_impl : ``"scan"`` compiles the whole Adam loop into one lax.scan
-        program; ``"loop"`` is the legacy per-step dispatch baseline.
-    """
-    if impl == "host":
-        X_recon, y_all, wire, n_c, sq_norms = _quantize_to_center_host(
-            parts, bits_per_sample, 0, max_bits
-        )
-        if gram_mode == "nystrom_fitc":  # exact |x|^2 side-channel (32 bits/pt)
-            wire += 32 * (X_recon.shape[0] - n_c)
-        model = CenterGP(
-            kernel=kernel,
-            params=params or init_params(),
-            X_recon=X_recon,
-            y=y_all,
-            n_center=n_c,
-            wire_bits=wire,
-            gram_mode=gram_mode,
-            sq_norms=sq_norms,
-            gram_backend=gram_backend,
-        )
-        trained = train_gp(
-            X_recon, y_all, kernel=kernel, params=model.params, steps=steps,
-            lr=lr, gram_override=model._gram, impl=train_impl,
-        )
-        model.params = trained.params
-        return model
-    return fit(
-        parts, bits_per_sample, protocol="center", kernel=kernel, steps=steps,
-        lr=lr, params=params, gram_mode=gram_mode, gram_backend=gram_backend,
-        max_bits=max_bits, train_impl=train_impl, impl=impl,
-    )
 
-
-# --------------------------------------------------------------------------
-# §5.2 broadcast protocol
-# --------------------------------------------------------------------------
-
-
-def _broadcast_gp_host(
-    parts, bits_per_sample, X_star, kernel, steps, lr, fuse, gram_mode, train_impl,
-    max_bits=Q.DEFAULT_MAX_BITS,
-):
-    """Serial reference §5.2: one scipy scheme fit and one dense solve per
-    machine (m host dispatches)."""
-    m = len(parts)
-    S = [second_moment(Xj) for Xj, _ in parts]
-    S_tot = sum(S)
-    # every machine encodes ONCE against the sum of the others' covariances
-    wire = 0
-    decoded = []
-    for j, (Xj, yj) in enumerate(parts):
-        sch = PerSymbolScheme(bits_per_sample, max_bits).fit(
-            np.asarray(S[j]), np.asarray(S_tot - S[j])
-        )
-        decoded.append(sch.decode(sch.encode(Xj)))
-        wire += sch.wire_bits(Xj.shape[0]) + sch.side_info_bits(Xj.shape[1])
-
-    k = gram_fn(kernel)
-    y_parts = [yj for _, yj in parts]
-
-    def machine_view(i):
-        blocks = [parts[j][0] if j == i else decoded[j] for j in range(m)]
-        order = [i] + [j for j in range(m) if j != i]
-        Xv = jnp.concatenate([blocks[j] for j in order], axis=0)
-        yv = jnp.concatenate([y_parts[j] for j in order], axis=0)
-        return Xv, yv, parts[i][0].shape[0]
-
-    # train shared hypers at machine 0 on its own completed gram
-    X0, y0, nc0 = machine_view(0)
-
-    def gram0(p):
-        Xc = X0[:nc0]
-        return nystrom_complete(k(p, Xc), k(p, Xc, X0))
-
-    trained = train_gp(
-        X0, y0, kernel=kernel, steps=steps, lr=lr, gram_override=gram0, impl=train_impl
-    )
-    p = trained.params
-
-    @partial(jax.jit, static_argnums=(2,))
-    def local_predict(Xv, yv, nc):
-        Xc = Xv[:nc]
-        g_ss = jnp.diagonal(k(p, X_star, X_star))
-        if gram_mode == "nystrom":
-            # consistent low-rank predictive (see CenterGP.predict)
-            return nystrom_posterior(
-                k(p, Xc), k(p, Xc, Xv), yv, jnp.exp(p.log_noise),
-                k(p, X_star, Xc), g_ss,
-            )
-        G = k(p, Xv)  # "direct": all blocks from reconstructed points
-        G_sn = k(p, X_star, Xv)
-        return posterior_from_gram(G, G_sn, g_ss, yv, jnp.exp(p.log_noise))
-
-    mus, s2s = [], []
-    for i in range(m):
-        Xv, yv, nc = machine_view(i)
-        mu_i, s2_i = local_predict(Xv, yv, nc)
-        mus.append(mu_i)
-        s2s.append(s2_i)
-    mus = jnp.stack(mus)
-    s2s = jnp.stack(s2s)
-    if fuse == "kl":
-        mu, s2 = kl_fuse_diag(mus, s2s)
-    else:
-        prior = jnp.diagonal(k(p, X_star, X_star)) + jnp.exp(p.log_noise)
-        mu, s2 = combine(fuse, mus, s2s, prior)
-    return mu, s2, wire, p
-
-
-def _train_inner_products(shards: PaddedShards, wire: WireState, backend: str):
-    """The query-independent inner-product tensors every machine view is
-    assembled from (computed ONCE at fit time):
-
-    A (m, n, n): exact own-block products Xs_i Xs_i^T
-    B (m, m, n, n): B[j, i] = X̂_j Xs_i^T (decoded j against exact i)
-
-    backend="pallas" computes A with the tiled gram kernel and B straight
-    from int codes with the fused dequantize+gram kernel."""
-    X = shards.X
-    if backend == "pallas":
-        from ..kernels.gram.ops import gram as gram_kernel
-        from ..kernels.qgram.ops import qgram
-
-        A = jax.vmap(lambda a: gram_kernel(a, a))(X)
-        proj = jnp.einsum("ind,jde->jine", X, wire.T_inv)  # (m_j, m_i, n, d)
-        B = jax.vmap(
-            lambda c, t, ys: jax.vmap(lambda yy: qgram(c, t, yy))(ys)
-        )(wire.codes, wire.scaled_cents, proj)
-        return A, B
-    A = jnp.einsum("ind,imd->inm", X, X)
-    B = jnp.einsum("jnd,imd->jinm", wire.decoded, X)
-    return A, B
-
-
-def _star_exact_products(Xs, X_star, backend: str):
-    """C (m, t, n): X_star Xs_i^T — the query-time products against every
-    machine's EXACT shard (the Nyström bases)."""
-    if backend == "pallas":
-        from ..kernels.gram.ops import gram as gram_kernel
-
-        return jax.vmap(lambda a: gram_kernel(X_star, a))(Xs)
-    return jnp.einsum("td,ind->itn", X_star, Xs)
-
-
-def _decoded_inner_products(shards: PaddedShards, wire: WireState, backend: str):
-    """D (m, n_pad, m*n_pad): D[j] = X̂_j [X̂_0..X̂_m]^T (decoded-vs-decoded) —
-    only the gram_mode="direct" views consume this, so it is computed only for
-    them (fit time)."""
-    m, n_pad, d = shards.X.shape
-    dec_flat = wire.decoded.reshape(m * n_pad, d)
-    if backend == "pallas":
-        from ..kernels.qgram.ops import qgram_batched
-
-        proj = jnp.einsum("nd,jde->jne", dec_flat, wire.T_inv)
-        return qgram_batched(wire.codes, wire.scaled_cents, proj)
-    return jnp.einsum("jnd,Nd->jnN", wire.decoded, dec_flat)
-
-
-def _star_decoded_products(wire: WireState, X_star, backend: str):
-    """E (m, t, n_pad): E[j] = X_star X̂_j^T — query-time products against the
-    reconstructions (gram_mode="direct" views only); straight from int codes
-    under the pallas backend."""
-    if backend == "pallas":
-        from ..kernels.qgram.ops import qgram_batched
-
-        proj_star = jnp.einsum("td,jde->jte", X_star, wire.T_inv)
-        return qgram_batched(wire.codes, wire.scaled_cents, proj_star).transpose(0, 2, 1)
-    return jnp.einsum("td,jnd->jtn", X_star, wire.decoded)
-
-
-def broadcast_gp(
-    parts,
-    bits_per_sample: int,
-    X_star,
-    kernel: str = "se",
-    steps: int = 150,
-    lr: float = 0.05,
-    fuse: str = "kl",
-    gram_mode: str = "nystrom",
-    impl: str = "batched",
-    gram_backend: str = "xla",
-    max_bits: int = Q.DEFAULT_MAX_BITS,
-    train_impl: str = "scan",
-):
-    """Full §5.2 protocol.  Hyperparameters are trained once (at machine 0, on
-    its Nyström view) and shared — a cheap O(#hypers) extra broadcast; the
-    paper trains per-machine, which is embarrassingly parallel on a real
-    cluster but m-times serial here.  Returns fused (mean, var) at X_star plus
-    total wire bits.
-
-    The default ``impl="batched"`` is a thin serving composition:
-    ``fit(parts, R, protocol="broadcast", ...)`` builds the
-    :class:`FittedProtocol` artifact (every machine's scheme fit, decode, and
-    Nyström factorization under jax.vmap on padded shards — one batched
-    Cholesky for all m local predictives instead of m serial ones), and
-    :func:`predict` serves X_star from the cached factors.  Call :func:`fit`
-    directly to keep the artifact and amortize the protocol over many query
-    batches."""
-    if impl == "host":
-        if gram_backend == "pallas":
-            raise ValueError('gram_backend="pallas" requires impl="batched"')
-        return _broadcast_gp_host(
-            parts, bits_per_sample, X_star, kernel, steps, lr, fuse, gram_mode,
-            train_impl, max_bits,
-        )
-    art = fit(
-        parts, bits_per_sample, protocol="broadcast", kernel=kernel, steps=steps,
-        lr=lr, gram_mode=gram_mode, fuse=fuse, gram_backend=gram_backend,
-        max_bits=max_bits, train_impl=train_impl, impl=impl,
-    )
-    mu, s2 = predict(art, X_star)
-    return mu, s2, art.wire_bits, art.params
-
-
-# --------------------------------------------------------------------------
-# zero-rate baselines
-# --------------------------------------------------------------------------
-
-
-def poe_baseline(
-    parts,
-    X_star,
-    kernel: str = "se",
-    method: str = "rbcm",
-    steps: int = 150,
-    lr: float = 0.05,
-    impl: str = "batched",
-    gram_backend: str = "xla",
-    train_impl: str = "scan",
-):
-    """Zero-rate baselines: each machine trains on its local data only (the
-    block-diagonal-gram assumption), predictions combined by PoE/BCM/rBCM.
-
-    ``impl="batched"`` (default) is a thin serving composition:
-    ``fit(parts, 0, protocol="poe", method=...)`` factorizes all m experts
-    under one vmapped Cholesky on padded shards, and :func:`predict` combines
-    the per-expert posteriors.  Call :func:`fit` directly to keep the
-    artifact."""
-    if impl == "host":
-        if gram_backend == "pallas":
-            raise ValueError('gram_backend="pallas" requires impl="batched"')
-        # shared hypers trained on machine 0's local data (standard practice:
-        # the PoE family shares one hyperparameter set across experts)
-        trained = train_gp(
-            parts[0][0], parts[0][1], kernel=kernel, steps=steps, lr=lr,
-            impl=train_impl,
-        )
-        p = trained.params
-        k = gram_fn(kernel)
-        noise = jnp.exp(p.log_noise)
-        X_star = jnp.asarray(X_star, jnp.float32)
-
-        @jax.jit
-        def expert(Xj, yj):
-            G = k(p, Xj)
-            G_sn = k(p, X_star, Xj)
-            g_ss = jnp.diagonal(k(p, X_star, X_star))
-            return posterior_from_gram(G, G_sn, g_ss, yj, noise)
-
-        mus, s2s = zip(*[expert(Xj, yj) for Xj, yj in parts])
-        mus, s2s = jnp.stack(mus), jnp.stack(s2s)
-        prior = jnp.diagonal(k(p, X_star, X_star)) + noise
-        return (*combine(method, mus, s2s, prior), p)
-
-    art = fit(
-        parts, 0, protocol="poe", kernel=kernel, steps=steps, lr=lr,
-        method=method, gram_backend=gram_backend, train_impl=train_impl,
-        impl=impl,
-    )
-    mu, s2 = predict(art, X_star)
-    return mu, s2, art.params
-
-
-# --------------------------------------------------------------------------
-# fit-once / serve-many: the FittedProtocol artifact
-# --------------------------------------------------------------------------
-
-
-@partial(
-    jax.tree_util.register_dataclass,
-    data_fields=["params", "y", "factors", "data", "wire"],
-    meta_fields=[
-        "protocol", "kernel", "gram_mode", "fuse", "gram_backend",
-        "n_center", "lengths", "block_order", "bits_per_sample", "max_bits",
-        "wire_bits", "impl",
-    ],
-)
-@dataclasses.dataclass
-class FittedProtocol:
-    """The serving artifact of a communication-limited distributed GP.
-
-    Produced by :func:`fit`, consumed by :func:`predict` (one jitted program;
-    triangular solves only) and :func:`update` (rank-k factor growth).  It is
-    a registered JAX pytree: array leaves checkpoint through
-    ``repro.checkpoint`` (:func:`save_artifact` / :func:`load_artifact`,
-    shardings respected on restore) and the static metadata rides in the
-    treedef, so :func:`predict` retraces only when the protocol shape
-    actually changes (e.g. after an :func:`update` grows the factors).
-
-    Array fields (pytree leaves)
-    ----------------------------
-    params : trained :class:`~repro.core.gp.GPParams` (log-space hypers).
-    y : targets in the artifact's column layout — center: (N,) flat
-        [center block first]; broadcast: (m·n_pad,) mask-zeroed; poe:
-        (m, n_pad) mask-zeroed.
-    factors : dict of cached solve factors, keyed per gram_mode —
-        ``L_KK``/``W``/``L_M``/``alpha`` (Nyström woodbury form, see
-        ``nystrom.nystrom_factors``) and/or ``L``/``alpha`` (dense
-        ``gp.posterior_factors``).  Broadcast/PoE hold a leading machine
-        axis (one batched factor set, NOT m objects).
-    data : dict of query-time arrays — the Nyström bases (``Xc`` for center,
-        ``Xs``+``mask`` for broadcast/poe), reconstructions (``X_recon``),
-        squared norms (``sq_cols``/``sq_exact``/``sq_dec``), and — after a
-        PoE :func:`update` — streamed extras (``X_extra``/``extra_mask``/
-        ``y_extra``).
-    wire : :class:`WireState` — the frozen fit-once scheme state (codebooks,
-        transforms, int codes).  :func:`update` re-encodes new symbols with
-        it; the pallas backend decodes grams straight from its codes.  None
-        for the zero-rate PoE baseline.
-
-    Static metadata (treedef)
-    -------------------------
-    protocol ("center" | "broadcast" | "poe"), kernel, gram_mode, fuse
-    (fusion/combiner name), gram_backend, n_center (center's exact-block
-    size K), lengths (per-machine true row counts), block_order (center's
-    gram-row machine order), bits_per_sample, max_bits, wire_bits — the
-    paper's §4 ledger: R bits/sample per transmitted point + O(2d²) fp32
-    side info per machine, extended by every :func:`update` — and impl:
-    ``"batched"`` (single-host artifact) or ``"mesh"`` (machines-as-devices:
-    broadcast/PoE factors live sharded along the mesh axis and
-    :func:`predict` runs as one shard_map program with a psum/KL fusion
-    epilogue; a checkpoint round-trip yields the single-host artifact).
-    """
-
-    params: GPParams
-    y: jnp.ndarray
-    factors: dict
-    data: dict
-    wire: WireState | None
-    protocol: str
-    kernel: str
-    gram_mode: str
-    fuse: str
-    gram_backend: str
-    n_center: int
-    lengths: tuple
-    block_order: tuple | None
-    bits_per_sample: int
-    max_bits: int
-    wire_bits: int
-    impl: str = "batched"
-
-    # -- conveniences (the paper-facing entry points return artifacts) ------
-
-    def predict(self, X_star):
-        """Serve one query batch from the cached factors — see :func:`predict`."""
-        return predict(self, X_star)
-
-    def update(self, X_new, y_new, machine: int = 0):
-        """Stream in new points — see :func:`update`."""
-        return update(self, X_new, y_new, machine)
-
-    def save(self, directory: str, step: int = 0) -> str:
-        """Checkpoint this artifact — see :func:`save_artifact`."""
-        return save_artifact(self, directory, step)
-
-    def _gram(self, params):
-        """Rebuild the TRAIN-time gram at the given params (debug/inspection;
-        the serve path never calls this — predictions run off cached
-        factors).  Center protocol, xla assembly."""
-        if self.protocol != "center":
-            raise NotImplementedError("_gram inspection is center-protocol only")
-        k = gram_fn(self.kernel)
-        X = self.data["X_recon"]
-        if self.gram_mode == "direct":
-            return k(params, X)
-        Xc = self.data["Xc"]
-        G_KK = k(params, Xc)
-        G_KN = k(params, Xc, X)
-        if self.gram_mode == "nystrom_fitc":
-            exact = prior_diag(self.kernel, params, self.data["sq_exact"])
-            return nystrom_complete(G_KK, G_KN, exact_diag=exact)
-        return nystrom_complete(G_KK, G_KN)
-
-
-def fit(
-    parts,
-    bits_per_sample: int = 0,
-    protocol: str = "center",
-    *,
-    kernel: str = "se",
-    steps: int = 150,
-    lr: float = 0.05,
-    params: GPParams | None = None,
-    gram_mode: str = "nystrom",
-    fuse: str = "kl",
-    method: str = "rbcm",
-    gram_backend: str = "xla",
-    max_bits: int = Q.DEFAULT_MAX_BITS,
-    train_impl: str = "scan",
-    impl: str = "batched",
-) -> FittedProtocol:
-    """Run a distributed-GP protocol ONCE and return the serving artifact.
-
-    This is the fit half of the fit/predict split: wire protocol (scheme fit +
-    encode + decode, one vmapped jit), hyperparameter training (one lax.scan
-    program), and ONE factorization of every predictive the protocol needs.
-    The returned :class:`FittedProtocol` then serves any number of
-    :func:`predict` query batches with no scheme refit and no Cholesky
-    refactorization, supports streaming :func:`update`, and checkpoints via
-    :func:`save_artifact`.
-
-    protocol="center" (§5.1): every machine quantizes toward the center's
-    covariance; the center Nyström-completes and holds one factor set.
-    protocol="broadcast" (§5.2): every machine broadcasts once; m local
-    Nyström factor sets are built under one vmap and fused (``fuse``:
-    "kl" = eqs. 62-64 barycenter, or a ``repro.core.poe`` combiner name).
-    protocol="poe": the zero-rate baseline (``method``: poe/gpoe/bcm/rbcm);
-    ``bits_per_sample`` is ignored and the wire ledger is 0.
-
-    impl="batched" (default) simulates the machines under one vmapped jit;
-    impl="mesh" puts machines on a real device mesh — the wire protocol,
-    factor builds, and (broadcast/PoE) predict run as shard_map programs
-    whose only inter-machine channel is ``repro.comm``, per-machine factors
-    come out sharded along the mesh axis, and the wire ledger is computed
-    from what the collectives actually move.
-
-    Other knobs (``gram_mode``, ``gram_backend``, ``max_bits``,
-    ``train_impl``) as in :func:`single_center_gp`.
-    """
-    if impl not in ("batched", "mesh"):
-        raise ValueError(f'fit() impl must be "batched" or "mesh", got {impl!r}')
-    if protocol == "center":
-        return _fit_center(
-            parts, bits_per_sample, kernel, steps, lr, params, gram_mode,
-            gram_backend, max_bits, train_impl, impl,
-        )
-    if protocol == "broadcast":
-        return _fit_broadcast(
-            parts, bits_per_sample, kernel, steps, lr, gram_mode, fuse,
-            gram_backend, max_bits, train_impl, impl,
-        )
-    if protocol == "poe":
-        return _fit_poe(
-            parts, kernel, steps, lr, method, gram_backend, train_impl, impl,
-        )
-    raise ValueError(f"unknown protocol {protocol!r}")
-
-
-def _fit_center(
-    parts, bits, kernel, steps, lr, params, gram_mode, gram_backend, max_bits,
-    train_impl, impl="batched",
-):
-    (X_recon, y_all, wire, n_c, sq_norms, shards, wire_state, order) = (
-        _quantize_to_center_batched(parts, bits, 0, max_bits, impl)
-    )
-    if gram_mode == "nystrom_fitc":  # exact |x|^2 side-channel (32 bits/point)
-        wire += 32 * (X_recon.shape[0] - n_c)
-    builder = CenterGP(
-        kernel=kernel,
-        params=params or init_params(),
-        X_recon=X_recon,
-        y=y_all,
-        n_center=n_c,
-        wire_bits=wire,
-        gram_mode=gram_mode,
-        sq_norms=sq_norms,
-        gram_backend=gram_backend,
-        wire=wire_state,
-        block_order=tuple(order),
-        block_lengths=shards.lengths,
-    )
-    trained = train_gp(
-        X_recon, y_all, kernel=kernel, params=builder.params, steps=steps,
-        lr=lr, gram_override=builder._gram, impl=train_impl,
-    )
-    builder.params = trained.params
-    p = builder.params
-    noise = jnp.exp(p.log_noise)
-    K = n_c
-    Xc = X_recon[:K]
-
-    # ---- the one-time factorization ----
-    if gram_backend == "pallas":
-        sq_cols = builder._ip("sq")
-        if gram_mode == "direct":
-            G_KK = G_KN = None
-        else:
-            ip_KN = builder._ip("KN")
-            G_KK = kernel_from_inner(kernel, p, ip_KN[:, :K], sq_cols[:K], sq_cols[:K])
-            G_KN = kernel_from_inner(kernel, p, ip_KN, sq_cols[:K], sq_cols)
-    else:
-        sq_cols = jnp.sum(X_recon**2, axis=-1)
-        if gram_mode == "direct":
-            G_KK = G_KN = None
-        else:
-            k = gram_fn(kernel)
-            G_KK = k(p, Xc)
-            G_KN = k(p, Xc, X_recon)
-
-    if gram_mode == "nystrom":
-        factors = nystrom_factors(G_KK, G_KN, y_all, noise)
-    elif gram_mode == "nystrom_fitc":
-        G = nystrom_complete(G_KK, G_KN, exact_diag=builder._exact_diag(p))
-        factors = posterior_factors(G, y_all, noise)
-        # FITC-consistent test map Q_*N = G_*K G_KK^{-1} G_KN needs (L_KK, W)
-        L_KK = jnp.linalg.cholesky(
-            G_KK + _JITTER * jnp.trace(G_KK) / K * jnp.eye(K, dtype=G_KK.dtype)
-        )
-        factors["L_KK"] = L_KK
-        factors["W"] = jax.scipy.linalg.solve_triangular(L_KK, G_KN, lower=True)
-    elif gram_mode == "direct":
-        factors = posterior_factors(builder._gram(p), y_all, noise)
-    else:
-        raise ValueError(f"unknown gram mode {gram_mode!r}")
-
-    return FittedProtocol(
-        params=p,
-        y=y_all,
-        factors=factors,
-        data={"Xc": Xc, "X_recon": X_recon, "sq_cols": sq_cols, "sq_exact": sq_norms},
-        wire=wire_state,
-        protocol="center",
-        kernel=kernel,
-        gram_mode=gram_mode,
-        fuse="",
-        gram_backend=gram_backend,
-        n_center=K,
-        lengths=shards.lengths,
-        block_order=tuple(order),
-        bits_per_sample=bits,
-        max_bits=max_bits,
-        wire_bits=int(wire),
-        impl=impl,
-    )
-
-
-def _fit_broadcast(
-    parts, bits, kernel, steps, lr, gram_mode, fuse, gram_backend, max_bits,
-    train_impl, impl="batched",
-):
-    m = len(parts)
-    shards = pad_parts(parts)
-    _, n_pad, d = shards.X.shape
-    if impl == "mesh":
-        if gram_mode != "nystrom":
-            raise NotImplementedError(
-                'impl="mesh" broadcast supports gram_mode="nystrom" only'
-            )
-        if gram_backend != "xla":
-            raise NotImplementedError(
-                'impl="mesh" assembles grams device-local (gram_backend="xla")'
-            )
-        wire_state, wire = _run_wire_protocol_mesh(
-            shards.X, shards.mask, bits, max_bits, "broadcast", 0
-        )
-    else:
-        wire_state = _run_wire_protocol(
-            shards.X, shards.mask, bits, max_bits, "broadcast", 0
-        )
-        wire = _wire_bits(wire_state.rates, shards.lengths, d)
-
-    sq_exact = jnp.sum(shards.X**2, -1)  # (m, n)
-    sq_dec = jnp.sum(wire_state.decoded**2, -1)
-
-    # ---- train shared hypers at machine 0 on its completed Nyström gram ----
-    # (unpadded slices; the inner products are param-independent constants, so
-    # the 150-step scan only re-does the cheap kernel map + Cholesky)
-    L = shards.lengths
-    n0 = L[0]
-    if impl == "mesh":
-        # machine-0-local training inputs, straight from the wire output (the
-        # batched A/B tensors below exist only to vmap the m simulated views)
-        X0s = jnp.asarray(parts[0][0], jnp.float32)
-        ip_KK0 = X0s @ X0s.T
-        X_cols0 = jnp.concatenate(
-            [X0s] + [wire_state.decoded[j, : L[j]] for j in range(1, m)], axis=0
-        )
-        ip_KN0 = X0s @ X_cols0.T
-    else:
-        A, B = _train_inner_products(shards, wire_state, gram_backend)
-        ip_KK0 = A[0][:n0, :n0]
-        ip_KN0 = jnp.concatenate(
-            [ip_KK0] + [B[j, 0][: L[j], :n0].T for j in range(1, m)], axis=1
-        )
-    sq0 = sq_exact[0][:n0]
-    sq_cols0 = jnp.concatenate([sq0] + [sq_dec[j][: L[j]] for j in range(1, m)])
-    y0 = jnp.concatenate([p[1] for p in parts], axis=0)
-    X0 = jnp.concatenate(
-        [parts[0][0]] + [wire_state.decoded[j, : L[j]] for j in range(1, m)], axis=0
-    )
-
-    def gram0(p):
-        G_KK = kernel_from_inner(kernel, p, ip_KK0, sq0, sq0)
-        G_KN = kernel_from_inner(kernel, p, ip_KN0, sq0, sq_cols0)
-        return nystrom_complete(G_KK, G_KN)
-
-    trained = train_gp(
-        X0, y0, kernel=kernel, steps=steps, lr=lr, gram_override=gram0, impl=train_impl
-    )
-    p = trained.params
-    noise = jnp.exp(p.log_noise)
-
-    # ---- factorize every machine's local predictive under ONE vmap ----
-    mask_flat = shards.mask.reshape(-1)  # column layout is block j at slot j
-    y_flat = (shards.y * shards.mask).reshape(-1)
-
-    if impl == "mesh":
-        # one shard_map program: device i assembles & factorizes ITS view;
-        # the factor set lives sharded along the mesh axis
-        mesh = machine_mesh(m)
-        factors = _mesh_broadcast_factor_fn(m, kernel)(
-            shards.X, shards.mask, wire_state.decoded, sq_dec, mask_flat,
-            y_flat, p,
-        )
-        data = _shard_machine_axis(
-            {"Xs": shards.X, "mask": shards.mask,
-             "sq_exact": sq_exact, "sq_dec": sq_dec},
-            mesh,
-        )
-        return FittedProtocol(
-            params=p, y=y_flat, factors=factors, data=data, wire=wire_state,
-            protocol="broadcast", kernel=kernel, gram_mode=gram_mode,
-            fuse=fuse, gram_backend=gram_backend, n_center=0,
-            lengths=shards.lengths, block_order=None, bits_per_sample=bits,
-            max_bits=max_bits, wire_bits=int(wire), impl="mesh",
-        )
-
-    if gram_mode == "nystrom":
-
-        def build(i):
-            mask_i = shards.mask[i]
-            # own (exact) block is the Nyström center; peers are reconstructions
-            ip_KK = A[i]
-            blocks = B[:, i].transpose(0, 2, 1)  # block j: Xs_i X̂_j^T (n, n)
-            blocks = blocks.at[i].set(ip_KK)  # own block exact
-            ip_KN = jnp.moveaxis(blocks, 0, 1).reshape(n_pad, m * n_pad)
-            sq_cols = sq_dec.at[i].set(sq_exact[i]).reshape(-1)
-            G_KK = _mask_gram(
-                kernel_from_inner(kernel, p, ip_KK, sq_exact[i], sq_exact[i]), mask_i
-            )
-            G_KN = kernel_from_inner(kernel, p, ip_KN, sq_exact[i], sq_cols) * (
-                mask_i[:, None] * mask_flat[None, :]
-            )
-            return nystrom_factors(G_KK, G_KN, y_flat, noise)
-
-        factors = jax.vmap(build)(jnp.arange(m))
-    elif gram_mode == "direct":
-        D = _decoded_inner_products(shards, wire_state, gram_backend)
-
-        def build(i):
-            mask_i = shards.mask[i]
-            own_cols = B[:, i].transpose(0, 2, 1)  # block j: Xs_i X̂_j^T
-            own_cols = own_cols.at[i].set(A[i])
-            row_i = jnp.moveaxis(own_cols, 0, 1).reshape(n_pad, m * n_pad)
-            # non-own rows: decoded-vs-decoded, with column block i swapped to
-            # decoded-vs-exact (B[r, i])
-            rows = D.reshape(m, n_pad, m, n_pad).at[:, :, i, :].set(B[:, i])
-            rows = rows.reshape(m, n_pad, m * n_pad).at[i].set(row_i)
-            ip_NN = rows.reshape(m * n_pad, m * n_pad)
-            sq_cols = sq_dec.at[i].set(sq_exact[i]).reshape(-1)
-            G = _mask_gram(
-                kernel_from_inner(kernel, p, ip_NN, sq_cols, sq_cols), mask_flat
-            )
-            return posterior_factors(G, y_flat, noise)
-
-        factors = jax.vmap(build)(jnp.arange(m))
-    else:
-        raise ValueError(f"unknown broadcast gram mode {gram_mode!r}")
-
-    return FittedProtocol(
-        params=p,
-        y=y_flat,
-        factors=factors,
-        data={
-            "Xs": shards.X, "mask": shards.mask,
-            "sq_exact": sq_exact, "sq_dec": sq_dec,
-        },
-        wire=wire_state,
-        protocol="broadcast",
-        kernel=kernel,
-        gram_mode=gram_mode,
-        fuse=fuse,
-        gram_backend=gram_backend,
-        n_center=0,
-        lengths=shards.lengths,
-        block_order=None,
-        bits_per_sample=bits,
-        max_bits=max_bits,
-        wire_bits=int(wire),
-    )
-
-
-def _fit_poe(parts, kernel, steps, lr, method, gram_backend, train_impl,
-             impl="batched"):
-    # shared hypers trained on machine 0's local data (standard practice: the
-    # PoE family shares one hyperparameter set across experts)
-    trained = train_gp(
-        parts[0][0], parts[0][1], kernel=kernel, steps=steps, lr=lr, impl=train_impl
-    )
-    p = trained.params
-    noise = jnp.exp(p.log_noise)
-    shards = pad_parts(parts)
-    sq_exact = jnp.sum(shards.X**2, -1)
-    m = len(parts)
-    if impl == "mesh":
-        if gram_backend != "xla":
-            raise NotImplementedError(
-                'impl="mesh" assembles grams device-local (gram_backend="xla")'
-            )
-        mesh = machine_mesh(m)
-        factors = _mesh_poe_factor_fn(m, kernel)(shards.X, shards.y, shards.mask, p)
-        data = _shard_machine_axis(
-            {"Xs": shards.X, "mask": shards.mask, "sq_exact": sq_exact}, mesh
-        )
-        return FittedProtocol(
-            params=p, y=shards.y * shards.mask, factors=factors, data=data,
-            wire=None, protocol="poe", kernel=kernel, gram_mode="dense",
-            fuse=method, gram_backend=gram_backend, n_center=0,
-            lengths=shards.lengths, block_order=None, bits_per_sample=0,
-            max_bits=0, wire_bits=0, impl="mesh",
-        )
-    if gram_backend == "pallas":
-        from ..kernels.gram.ops import gram as gram_kernel
-
-        A = jax.vmap(lambda a: gram_kernel(a, a))(shards.X)
-    else:
-        A = jnp.einsum("ind,imd->inm", shards.X, shards.X)
-
-    def build(ipA, sqj, yj, mask_j):
-        G = _mask_gram(kernel_from_inner(kernel, p, ipA, sqj, sqj), mask_j)
-        return posterior_factors(G, yj * mask_j, noise)
-
-    factors = jax.vmap(build)(A, sq_exact, shards.y, shards.mask)
-    return FittedProtocol(
-        params=p,
-        y=shards.y * shards.mask,
-        factors=factors,
-        data={"Xs": shards.X, "mask": shards.mask, "sq_exact": sq_exact},
-        wire=None,
-        protocol="poe",
-        kernel=kernel,
-        gram_mode="dense",
-        fuse=method,
-        gram_backend=gram_backend,
-        n_center=0,
-        lengths=shards.lengths,
-        block_order=None,
-        bits_per_sample=0,
-        max_bits=0,
-        wire_bits=0,
-    )
-
-
-# --------------------------------------------------------------------------
-# predict: one jitted program per artifact, cached factors only
-# --------------------------------------------------------------------------
-
-# Incremented INSIDE the traced function body, so it counts (re)traces, not
-# calls: a warm serve loop must leave it flat (benchmarks/serve_bench.py and
-# tests/test_serving.py assert exactly that).
-_SERVE_TRACES: collections.Counter = collections.Counter()
-
-
-def serve_trace_count(protocol: str = "center") -> int:
-    """How many times :func:`predict` has been (re)traced for a protocol —
-    a warm serve loop holds this constant (no refit, no recompile)."""
-    return _SERVE_TRACES[protocol]
-
-
-def _predict_impl(art: FittedProtocol, X_star):
-    _SERVE_TRACES[art.protocol] += 1  # runs at trace time only
-    p = art.params
-    noise = jnp.exp(p.log_noise)
-    sq_star = jnp.sum(X_star**2, -1)
-    g_ss = prior_diag(art.kernel, p, sq_star)
-    if art.protocol == "center":
-        return _predict_center(art, X_star, sq_star, g_ss, noise)
-    if art.protocol == "broadcast":
-        mus, s2s = _predict_broadcast_experts(art, X_star, sq_star, g_ss, noise)
-        if art.fuse == "kl":
-            return kl_fuse_diag(mus, s2s)
-        return combine(art.fuse, mus, s2s, g_ss + noise)
-    # poe
-    mus, s2s = _predict_poe_experts(art, X_star, sq_star, g_ss)
-    return combine(art.fuse, mus, s2s, g_ss + noise)
-
-
-_predict_jit = jax.jit(_predict_impl)
-
-
-def _predict_mesh_impl(art: FittedProtocol, X_star):
-    """Mesh serving: ONE shard_map program — each device applies ITS machine's
-    cached factors to the query batch (triangular solves only, exactly like
-    the batched path) and the predictives meet in a psum/KL fusion epilogue
-    (eqs. 62-64 as two psums; the PoE combiners as precision-weighted psums).
-    Factors/data stay sharded along the mesh axis throughout."""
-    _SERVE_TRACES[art.protocol] += 1  # runs at trace time only
-    m = len(art.lengths)
-    mesh = machine_mesh(m)
-    has_extra = "X_extra" in art.data
-
-    def body(fac, Xs_blk, mask_blk, sq_blk, em_blk, Xe, X_star, p):
-        fac_i = jax.tree.map(lambda a: a[0], fac)
-        Xi, mi, sqi = Xs_blk[0], mask_blk[0], sq_blk[0]
-        noise = jnp.exp(p.log_noise)
-        sq_star = jnp.sum(X_star**2, -1)
-        g_ss = prior_diag(art.kernel, p, sq_star)
-        G_sK = kernel_from_inner(
-            art.kernel, p, X_star @ Xi.T, sq_star, sqi
-        ) * mi[None, :]
-        if art.protocol == "broadcast":
-            mu_i, s2_i = nystrom_apply(fac_i, G_sK, g_ss, noise)
-            if art.fuse == "kl":
-                return kl_fuse_diag_psum(mu_i, s2_i, MESH_AXIS)
-            return combine_psum(art.fuse, mu_i, s2_i, g_ss + noise, MESH_AXIS)
-        # poe: streamed extras (update()) ride along as appended columns
-        G_sn = G_sK
-        if has_extra:
-            sq_e = jnp.sum(Xe**2, -1)
-            G_e = kernel_from_inner(art.kernel, p, X_star @ Xe.T, sq_star, sq_e)
-            G_sn = jnp.concatenate([G_sn, G_e * em_blk[0][None, :]], axis=1)
-        mu_i, s2_i = posterior_apply(fac_i, G_sn, g_ss)
-        return combine_psum(art.fuse, mu_i, s2_i, g_ss + noise, MESH_AXIS)
-
-    fn = shard_map(
-        body, mesh=mesh,
-        in_specs=(
-            P(MESH_AXIS), P(MESH_AXIS), P(MESH_AXIS), P(MESH_AXIS),
-            P(MESH_AXIS), P(), P(), P(),
-        ),
-        out_specs=(P(), P()), check_vma=False,
-    )
-    em = art.data["extra_mask"] if has_extra else art.data["mask"][:, :0]
-    Xe = art.data["X_extra"] if has_extra else X_star[:0]
-    return fn(
-        art.factors, art.data["Xs"], art.data["mask"], art.data["sq_exact"],
-        em, Xe, X_star, art.params,
-    )
-
-
-_predict_mesh_jit = jax.jit(_predict_mesh_impl)
-
-
-def _uses_mesh_predict(art: FittedProtocol) -> bool:
-    # §5.1 serving is center-local by construction (one factor set at the
-    # center, nothing to fuse) — center artifacts serve on the host path
-    return art.impl == "mesh" and art.protocol in ("broadcast", "poe")
-
-
-def predict(art: FittedProtocol, X_star):
-    """Serve one query batch from a fitted artifact: (mean, var) at X_star.
-
-    ONE jitted program per artifact shape, O(t) per query batch: the cross
-    inner products against the stored bases, the kernel map, and triangular
-    solves against the cached factors.  No scheme refit, no Cholesky
-    refactorization, no hyperparameter step happens here — verify with
-    :func:`predict_op_counts` / :func:`serve_trace_count`.  Retraces only
-    when the artifact's shapes change (a fresh :func:`fit`, an
-    :func:`update`, or a new query-batch size).  Mesh broadcast/PoE
-    artifacts serve through one shard_map program with a psum/KL fusion
-    epilogue instead (:func:`_predict_mesh_impl`)."""
-    X_star = jnp.asarray(X_star, jnp.float32)
-    if _uses_mesh_predict(art):
-        return _predict_mesh_jit(art, X_star)
-    return _predict_jit(art, X_star)
-
-
-def _predict_center(art, X_star, sq_star, g_ss, noise):
-    p = art.params
-    Xc = art.data["Xc"]
-    K = art.n_center
-    sq_cols = art.data["sq_cols"]
-    if art.gram_backend == "pallas":
-        from ..kernels.gram.ops import gram as gram_kernel
-
-        ip_sK = gram_kernel(X_star, Xc)
-        G_sK = kernel_from_inner(art.kernel, p, ip_sK, sq_star, sq_cols[:K])
-    else:
-        G_sK = gram_fn(art.kernel)(p, X_star, Xc)
-    if art.gram_mode == "nystrom":
-        return nystrom_apply(art.factors, G_sK, g_ss, noise)
-    if art.gram_mode == "nystrom_fitc":
-        # FITC-consistent test covariance: Q_*N = G_*K G_KK^{-1} G_KN from the
-        # cached (L_KK, W) — raw k(x*, x) against a Nyström-structured train
-        # gram badly mis-weights y-components outside the rank-K span
-        B = jax.scipy.linalg.solve_triangular(
-            art.factors["L_KK"], G_sK.T, lower=True
-        )
-        return posterior_apply(art.factors, B.T @ art.factors["W"], g_ss)
-    # direct
-    if art.gram_backend == "pallas":
-        ip_sN = _artifact_ip_rows(art, X_star).T  # (t, N)
-        G_sn = kernel_from_inner(art.kernel, p, ip_sN, sq_star, sq_cols)
-    else:
-        G_sn = gram_fn(art.kernel)(p, X_star, art.data["X_recon"])
-    return posterior_apply(art.factors, G_sn, g_ss)
-
-
-def _artifact_ip_rows(art, Y):
-    """⟨x_i, y_j⟩ in the artifact's X_recon layout — see :func:`_pallas_ip_rows`."""
-    return _pallas_ip_rows(art.wire, art.block_order, art.lengths, art.data["Xc"], Y)
-
-
-def _predict_broadcast_experts(art, X_star, sq_star, g_ss, noise):
-    p = art.params
-    Xs, mask = art.data["Xs"], art.data["mask"]
-    sq_exact = art.data["sq_exact"]
-    m, n_pad, _ = Xs.shape
-    C = _star_exact_products(Xs, X_star, art.gram_backend)
-    if art.gram_mode == "nystrom":
-
-        def apply_i(fac, Ci, sqi, mi):
-            G_sK = kernel_from_inner(art.kernel, p, Ci, sq_star, sqi) * mi[None, :]
-            return nystrom_apply(fac, G_sK, g_ss, noise)
-
-        return jax.vmap(apply_i)(art.factors, C, sq_exact, mask)
-    # direct views
-    sq_dec = art.data["sq_dec"]
-    mask_flat = mask.reshape(-1)
-    E = _star_decoded_products(art.wire, X_star, art.gram_backend)
-
-    def apply_i(i, fac):
-        star_cols = E.at[i].set(C[i])  # (m, t, n_pad); block i exact
-        ip_sN = jnp.moveaxis(star_cols, 0, 1).reshape(-1, m * n_pad)
-        sq_cols = sq_dec.at[i].set(sq_exact[i]).reshape(-1)
-        G_sn = kernel_from_inner(art.kernel, p, ip_sN, sq_star, sq_cols) * (
-            mask_flat[None, :]
-        )
-        return posterior_apply(fac, G_sn, g_ss)
-
-    return jax.vmap(apply_i)(jnp.arange(m), art.factors)
-
-
-def _predict_poe_experts(art, X_star, sq_star, g_ss):
-    p = art.params
-    Xs, mask = art.data["Xs"], art.data["mask"]
-    sq_exact = art.data["sq_exact"]
-    C = _star_exact_products(Xs, X_star, art.gram_backend)
-    has_extra = "X_extra" in art.data
-    if has_extra:
-        Xe = art.data["X_extra"]
-        C_e = X_star @ Xe.T  # (t, e); streamed extras ride the xla path
-        sq_e = jnp.sum(Xe**2, -1)
-        G_e = kernel_from_inner(art.kernel, p, C_e, sq_star, sq_e)
-
-    def apply_j(fac, Cj, sqj, mj, emj):
-        G_sn = kernel_from_inner(art.kernel, p, Cj, sq_star, sqj) * mj[None, :]
-        if has_extra:
-            G_sn = jnp.concatenate([G_sn, G_e * emj[None, :]], axis=1)
-        return posterior_apply(fac, G_sn, g_ss)
-
-    em = art.data["extra_mask"] if has_extra else mask[:, :0]
-    return jax.vmap(apply_j)(art.factors, C, sq_exact, mask, em)
-
-
-# --------------------------------------------------------------------------
-# update: streaming append via rank-k factor updates
-# --------------------------------------------------------------------------
-
-
-def update(art: FittedProtocol, X_new, y_new, machine: int = 0) -> FittedProtocol:
-    """Stream (X_new, y_new) arriving at ``machine`` into a fitted artifact.
-
-    The fit-once economics in action: machine ``machine``'s FROZEN scheme
-    state (codebooks + decorrelating transform fitted at :func:`fit` time)
-    re-encodes only the new symbols, charging ``rates[machine].sum()`` wire
-    bits per point to the ledger — no scheme refit, no new side info.  The
-    cached factors then grow by rank-k updates (``nystrom.chol_update_rank``
-    for the Nyström woodbury core, ``nystrom.chol_append`` for dense factors)
-    instead of refactorizing the train gram.  Returns a NEW artifact (the
-    input is unchanged); the next :func:`predict` retraces once for the grown
-    shapes, then serves warm again.
-
-    Center protocol: points landing on the center (``machine=0``) are exact
-    and cost 0 wire bits; the rank-K Nyström basis stays fixed either way
-    (appended points extend the columns, not the basis).  Broadcast: default
-    "nystrom" mode only.  PoE: the new points extend ``machine``'s expert
-    (zero-rate, exact).  Within-tolerance agreement with a from-scratch refit
-    on the concatenated data is locked by tests/test_serving.py."""
-    X_new = jnp.asarray(X_new, jnp.float32)
-    y_new = jnp.asarray(y_new, jnp.float32)
-    if X_new.ndim != 2 or y_new.ndim != 1 or y_new.shape[0] != X_new.shape[0]:
-        raise ValueError("update expects X_new (n_new, d), y_new (n_new,)")
-    if not 0 <= machine < len(art.lengths):
-        raise ValueError(f"machine {machine} out of range (m={len(art.lengths)})")
-    if art.impl == "mesh":
-        # the rank-k growth runs on host arrays (mixing mesh-sharded and
-        # fresh single-device operands in eager ops is ill-defined); the next
-        # mesh predict reshards the grown factors along the machine axis
-        pull = lambda t: jax.tree.map(lambda a: jnp.asarray(jax.device_get(a)), t)
-        art = dataclasses.replace(art, factors=pull(art.factors), data=pull(art.data))
-    if art.protocol == "center":
-        return _update_center(art, X_new, y_new, machine)
-    if art.protocol == "broadcast":
-        return _update_broadcast(art, X_new, y_new, machine)
-    if art.protocol == "poe":
-        return _update_poe(art, X_new, y_new, machine)
-    raise ValueError(f"unknown protocol {art.protocol!r}")
-
-
-def _reencode(art, machine: int, X_new):
-    """(codes, X̂, wire_bits) for new symbols under machine's frozen scheme."""
-    w = art.wire
-    state = {
-        "T": w.T[machine], "T_inv": w.T_inv[machine],
-        "sigma": w.sigma[machine], "rates": w.rates[machine],
-    }
-    tables = jax_scheme.scheme_tables(art.bits_per_sample, art.max_bits)
-    codes, decoded = jax_scheme.roundtrip(state, X_new, tables)
-    bits = int(np.asarray(w.rates[machine]).sum()) * X_new.shape[0]
-    return codes, decoded, bits
-
-
-def _bump_length(lengths: tuple, j: int, n_new: int) -> tuple:
-    return tuple(n + (n_new if i == j else 0) for i, n in enumerate(lengths))
-
-
-def _update_center(art, X_new, y_new, j):
-    if art.gram_backend == "pallas" and art.gram_mode != "nystrom":
-        raise NotImplementedError(
-            "streaming update of pallas-backed center artifacts supports "
-            'gram_mode="nystrom" only (direct/fitc query paths read the '
-            "fit-time wire codes, which update does not extend)"
-        )
-    p = art.params
-    noise = jnp.exp(p.log_noise)
-    n_new = X_new.shape[0]
-    if j == 0:  # the center's own data is local: exact, zero wire cost
-        decoded, wire_add = X_new, 0
-    else:
-        _, decoded, wire_add = _reencode(art, j, X_new)
-        if art.gram_mode == "nystrom_fitc":
-            wire_add += 32 * n_new  # exact |x|^2 side channel
-    sq_new = jnp.sum(decoded**2, -1)
-    sq_new_exact = jnp.sum(X_new**2, -1)
-    k = gram_fn(art.kernel)
-    Xc = art.data["Xc"]
-    y2 = jnp.concatenate([art.y, y_new])
-    f = dict(art.factors)
-    s2 = noise + _JITTER
-
-    if art.gram_mode == "nystrom":
-        # columns append on the woodbury form: W gains L_KK^{-1} G_K,new and
-        # L_M = chol(s2 I + W W^T) takes a rank-n_new update
-        W_new = jax.scipy.linalg.solve_triangular(
-            f["L_KK"], k(p, Xc, decoded), lower=True
-        )
-        f["W"] = jnp.concatenate([f["W"], W_new], axis=1)
-        f["L_M"] = chol_update_rank(f["L_M"], W_new)
-        f["alpha"] = nystrom_kinv(f["W"], f["L_M"], s2, y2)
-    elif art.gram_mode == "direct":
-        G_on = k(p, art.data["X_recon"], decoded)  # (N, n_new)
-        G_nn = k(p, decoded) + s2 * jnp.eye(n_new, dtype=G_on.dtype)
-        f["L"] = chol_append(f["L"], G_on, G_nn)
-        f["alpha"] = jax.scipy.linalg.cho_solve((f["L"], True), y2)
-    else:  # nystrom_fitc: bordered dense factor through the Nyström map
-        W_new = jax.scipy.linalg.solve_triangular(
-            f["L_KK"], k(p, Xc, decoded), lower=True
-        )
-        G_on = f["W"].T @ W_new
-        corr = jnp.maximum(
-            prior_diag(art.kernel, p, sq_new_exact) - jnp.sum(W_new**2, 0), 0.0
-        )
-        G_nn = W_new.T @ W_new + jnp.diag(corr) + s2 * jnp.eye(n_new)
-        f["L"] = chol_append(f["L"], G_on, G_nn)
-        f["alpha"] = jax.scipy.linalg.cho_solve((f["L"], True), y2)
-        f["W"] = jnp.concatenate([f["W"], W_new], axis=1)
-
-    data = dict(art.data)
-    data["X_recon"] = jnp.concatenate([data["X_recon"], decoded], axis=0)
-    data["sq_cols"] = jnp.concatenate([data["sq_cols"], sq_new])
-    data["sq_exact"] = jnp.concatenate([data["sq_exact"], sq_new_exact])
-    return dataclasses.replace(
-        art, y=y2, factors=f, data=data,
-        lengths=_bump_length(art.lengths, j, n_new),
-        wire_bits=art.wire_bits + wire_add,
-    )
-
-
-def _update_broadcast(art, X_new, y_new, j):
-    if art.gram_mode != "nystrom":
-        raise NotImplementedError(
-            'streaming update of broadcast artifacts supports gram_mode='
-            '"nystrom" only'
-        )
-    p = art.params
-    noise = jnp.exp(p.log_noise)
-    m = len(art.lengths)
-    n_new = X_new.shape[0]
-    _, decoded, wire_add = _reencode(art, j, X_new)
-    # machine j broadcast its codes once: every peer i sees X̂_new; machine j
-    # itself keeps the exact points.  The new points extend every view's
-    # COLUMNS (the rank-n_pad Nyström bases stay fixed).
-    reps = jnp.broadcast_to(decoded, (m, n_new, decoded.shape[1]))
-    reps = reps.at[j].set(X_new)
-    sq_new = jnp.sum(reps**2, -1)  # (m, n_new)
-    ip_new = jnp.einsum("ind,ied->ine", art.data["Xs"], reps)  # (m, n_pad, n_new)
-    y2 = jnp.concatenate([art.y, y_new])
-    s2 = noise + _JITTER
-
-    def upd(fac, ipn, sqi, sqn, mi):
-        G_KN_new = kernel_from_inner(art.kernel, p, ipn, sqi, sqn) * mi[:, None]
-        W_new = jax.scipy.linalg.solve_triangular(fac["L_KK"], G_KN_new, lower=True)
-        W2 = jnp.concatenate([fac["W"], W_new], axis=1)
-        L_M2 = chol_update_rank(fac["L_M"], W_new)
-        return {
-            "L_KK": fac["L_KK"], "W": W2, "L_M": L_M2,
-            "alpha": nystrom_kinv(W2, L_M2, s2, y2),
-        }
-
-    factors = jax.vmap(upd)(
-        art.factors, ip_new, art.data["sq_exact"], sq_new, art.data["mask"]
-    )
-    return dataclasses.replace(
-        art, y=y2, factors=factors,
-        lengths=_bump_length(art.lengths, j, n_new),
-        wire_bits=art.wire_bits + wire_add,
-    )
-
-
-def _update_poe(art, X_new, y_new, j):
-    p = art.params
-    noise = jnp.exp(p.log_noise)
-    m = len(art.lengths)
-    n_new = X_new.shape[0]
-    k = gram_fn(art.kernel)
-    s2 = noise + _JITTER
-    Xs, mask = art.data["Xs"], art.data["mask"]
-    # zero-rate: the points are machine j's own exact data; other experts
-    # never see them (valid only on row j), matching the fit-time masking
-    valid = jnp.zeros((m, n_new), jnp.float32).at[j].set(1.0)
-    Xe_old = art.data.get("X_extra")
-    em_old = art.data.get("extra_mask")
-    ye_old = art.data.get("y_extra")
-
-    def upd(fac, Xi, sqi, mi, vi, emi, yi, yei):
-        G_on = k(p, Xi, X_new) * (mi[:, None] * vi[None, :])
-        if Xe_old is not None:
-            G_on_e = k(p, Xe_old, X_new) * (emi[:, None] * vi[None, :])
-            G_on = jnp.concatenate([G_on, G_on_e], axis=0)
-        G_nn = _mask_gram(k(p, X_new), vi) + s2 * jnp.eye(n_new)
-        L2 = chol_append(fac["L"], G_on, G_nn)
-        y_cols = jnp.concatenate(
-            [yi] + ([yei * emi] if Xe_old is not None else []) + [y_new * vi]
-        )
-        return {"L": L2, "alpha": jax.scipy.linalg.cho_solve((L2, True), y_cols)}
-
-    em_arg = em_old if em_old is not None else mask[:, :0]
-    factors = jax.vmap(
-        lambda fac, Xi, sqi, mi, vi, emi, yi: upd(fac, Xi, sqi, mi, vi, emi, yi, ye_old)
-    )(art.factors, Xs, art.data["sq_exact"], mask, valid, em_arg, art.y)
-    data = dict(art.data)
-    data["X_extra"] = (
-        jnp.concatenate([Xe_old, X_new]) if Xe_old is not None else X_new
-    )
-    data["extra_mask"] = (
-        jnp.concatenate([em_old, valid], axis=1) if em_old is not None else valid
-    )
-    data["y_extra"] = (
-        jnp.concatenate([ye_old, y_new]) if ye_old is not None else y_new
-    )
-    return dataclasses.replace(
-        art, factors=factors, data=data,
-        lengths=_bump_length(art.lengths, j, n_new),
-    )
-
-
-# --------------------------------------------------------------------------
-# legacy one-shot mesh entry point (absorbed from core.mesh_gp)
-# --------------------------------------------------------------------------
-
-
-def broadcast_gp_mesh(
-    mesh,
-    axis: str,
-    X,
-    y,
-    X_star,
-    params: GPParams,
-    *,
-    kernel: str = "se",
-    bits_per_sample: int = 32,
-    max_bits: int = 8,
-):
-    """One-shot §5.2 broadcast on a caller-supplied mesh: devices along
-    ``axis`` are machines, the wire is ``comm.q_all_gather`` (int codes),
-    each device solves its dense local view, and the per-point predictives
-    are KL-fused (eqs. 62-64) — all inside one jit/shard_map program.
-
-    This is the original ``core.mesh_gp`` prototype, kept for fixed-hyper
-    one-shot runs (no training, no serving artifact).  The first-class mesh
-    path is ``fit(..., impl="mesh")`` — it adds hyperparameter training,
-    Nyström factor caching sharded along the mesh axis, streaming
-    :func:`update`, and checkpointing.
-
-    X: (n, d) globally, sharded over ``axis`` on dim 0 (n % n_devices == 0);
-    y: (n,) likewise; X_star: (t, d) replicated.  Returns fused (mean, var).
-    """
-    from ..comm import q_all_gather
-
-    k = gram_fn(kernel)
-
-    def local_predict(X_all_blocks, y_all, own_idx, xs_l):
-        """One device's §5.2 view: own block exact, peers reconstructed."""
-        m, n_loc, d = X_all_blocks.shape
-        # reorder so the exact (own) block is first — matches the Nyström layout
-        order = jnp.argsort(
-            jnp.where(jnp.arange(m) == own_idx, -1, jnp.arange(m))
-        )
-        Xv = X_all_blocks[order].reshape(m * n_loc, d)
-        yv = y_all[order].reshape(m * n_loc)
-        G = k(params, Xv)
-        G_sn = k(params, xs_l, Xv)
-        g_ss = jnp.diagonal(k(params, xs_l, xs_l))
-        return posterior_from_gram(G, G_sn, g_ss, yv, jnp.exp(params.log_noise))
-
-    def body(x_l, y_l, xs_l):
-        idx = jax.lax.axis_index(axis)
-        # the paper's wire: quantized codes, own block exact (repro.comm)
-        x_blocks = q_all_gather(x_l, axis, bits_per_sample, max_bits)
-        y_all = jax.lax.all_gather(y_l, axis)  # targets are scalars (unquantized)
-        mu_i, s2_i = local_predict(x_blocks, y_all, idx, xs_l)
-        # KL-barycenter fusion (eqs. 62-64) across the machine axis
-        mus = jax.lax.all_gather(mu_i, axis)
-        s2s = jax.lax.all_gather(s2_i, axis)
-        return kl_fuse_diag(mus, s2s)
-
-    fn = shard_map(
-        body,
-        mesh=mesh,
-        in_specs=(P(axis, None), P(axis), P(None, None)),
-        out_specs=(P(), P()),
-        check_vma=False,
-    )
-    return jax.jit(fn)(X, y, X_star)
-
-
-# --------------------------------------------------------------------------
-# artifact persistence (repro.checkpoint) + serve-path introspection
-# --------------------------------------------------------------------------
-
-
-def save_artifact(art: FittedProtocol, directory: str, step: int = 0) -> str:
-    """Checkpoint a fitted artifact: array leaves through
-    ``repro.checkpoint.save_checkpoint`` (atomic npz), static metadata to a
-    sidecar json.  :func:`load_artifact` restores without needing the
-    original object; predictions from the restored artifact are bitwise
-    identical (tests/test_serving.py)."""
-    from ..checkpoint import save_artifact as _save
-
-    meta = {
-        "protocol": art.protocol, "kernel": art.kernel,
-        "gram_mode": art.gram_mode, "fuse": art.fuse,
-        "gram_backend": art.gram_backend, "n_center": art.n_center,
-        "lengths": list(art.lengths),
-        "block_order": list(art.block_order) if art.block_order is not None else None,
-        "bits_per_sample": art.bits_per_sample, "max_bits": art.max_bits,
-        "wire_bits": art.wire_bits, "has_wire": art.wire is not None,
-        "impl": art.impl,  # provenance; restore is always single-host
-    }
-    return _save(directory, step, art, meta)
-
-
-def load_artifact(directory: str, step: int | None = None, shardings=None) -> FittedProtocol:
-    """Restore a :func:`save_artifact` checkpoint into a fresh artifact.
-
-    Always restores as a SINGLE-HOST artifact (``impl="batched"``): a mesh
-    fit's checkpoint round-trips to an equivalent host-serving artifact
-    (sharded factors were gathered at save time).  ``shardings``: optional —
-    a single ``Sharding``/device applied to every leaf, or a
-    ``{leaf_key: sharding}`` dict (keys as in the npz: ``factors/W``,
-    ``data/Xc``, ``wire/codes``, ...) for per-leaf placement; leaves are
-    ``jax.device_put`` into place on restore."""
-    from ..checkpoint import load_artifact_arrays
-
-    meta, arrays = load_artifact_arrays(directory, step)
-
-    def put(key):
-        arr = arrays[key]
-        sh = shardings.get(key) if isinstance(shardings, dict) else shardings
-        return jax.device_put(arr, sh) if sh is not None else jnp.asarray(arr)
-
-    params = GPParams(*(put(f"params/{f}") for f in GPParams._fields))
-    factors = {
-        k.split("/", 1)[1]: put(k) for k in arrays if k.startswith("factors/")
-    }
-    data = {k.split("/", 1)[1]: put(k) for k in arrays if k.startswith("data/")}
-    wire = None
-    if meta["has_wire"]:
-        wire = WireState(*(put(f"wire/{f}") for f in WireState._fields))
-    return FittedProtocol(
-        params=params, y=put("y"), factors=factors, data=data, wire=wire,
-        protocol=meta["protocol"], kernel=meta["kernel"],
-        gram_mode=meta["gram_mode"], fuse=meta["fuse"],
-        gram_backend=meta["gram_backend"], n_center=meta["n_center"],
-        lengths=tuple(meta["lengths"]),
-        block_order=tuple(meta["block_order"]) if meta["block_order"] is not None else None,
-        bits_per_sample=meta["bits_per_sample"], max_bits=meta["max_bits"],
-        wire_bits=meta["wire_bits"], impl="batched",
-    )
-
-
-def _walk_jaxpr(jaxpr):
-    from jax.core import Jaxpr, ClosedJaxpr
-
-    def subs(v):
-        if isinstance(v, ClosedJaxpr):
-            yield v.jaxpr
-        elif isinstance(v, Jaxpr):
-            yield v
-        elif isinstance(v, (list, tuple)):
-            for x in v:
-                yield from subs(x)
-
-    for eqn in jaxpr.eqns:
-        yield eqn
-        for pv in eqn.params.values():
-            for sub in subs(pv):
-                yield from _walk_jaxpr(sub)
-
-
-def predict_op_counts(art: FittedProtocol, X_star, ops=("cholesky", "eigh")) -> dict:
-    """Count primitives in the :func:`predict` program for this artifact —
-    the structural serve-path check: a warm predict must contain ZERO
-    ``cholesky`` (no refactorization) and ZERO ``eigh`` (no scheme refit)
-    equations.  Mesh artifacts are checked on their actual shard_map serve
-    program (the walk descends into the shard_map body jaxpr).
-    benchmarks/serve_bench.py records these counts in BENCH_serve.json and
-    tests/test_serving.py locks them."""
-    fn = _predict_mesh_impl if _uses_mesh_predict(art) else _predict_impl
-    jaxpr = jax.make_jaxpr(fn)(art, jnp.asarray(X_star, jnp.float32))
-    counts = {op: 0 for op in ops}
-    for eqn in _walk_jaxpr(jaxpr.jaxpr):
-        if eqn.primitive.name in counts:
-            counts[eqn.primitive.name] += 1
-    return counts
+@_deprecated("DistributedGP(...).update(art, ...) or art.update(...)")
+@functools.wraps(_base.update)
+def update(*args, **kwargs):
+    return _base.update(*args, **kwargs)

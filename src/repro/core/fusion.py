@@ -35,3 +35,16 @@ def kl_fuse_diag_psum(mu_i, s2_i, axis_name: str):
     mu = jax.lax.psum(mu_i, axis_name) / m
     s2 = jax.lax.psum(s2_i + (mu - mu_i) ** 2, axis_name) / m
     return mu, s2
+
+
+# KL barycenter as a registered fusion rule: the §5.2 default, selectable by
+# name next to the PoE-family combiners (see repro.core.registry).
+from .registry import FusionSpec, register_fusion  # noqa: E402
+
+register_fusion(FusionSpec(
+    name="kl",
+    fuse=lambda mus, s2s, prior_var=None: kl_fuse_diag(mus, s2s),
+    fuse_psum=lambda mu_i, s2_i, prior_var, axis: kl_fuse_diag_psum(
+        mu_i, s2_i, axis
+    ),
+))

@@ -21,6 +21,8 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from .registry import KERNELS, KernelSpec, register_kernel
+
 __all__ = [
     "GPParams",
     "linear_gram",
@@ -98,34 +100,50 @@ def se_gram(params: GPParams, X, X2=None, *, backend: str = "xla"):
     )
 
 
+def _linear_from_inner(params: GPParams, ip, sq_x, sq_x2):
+    return jnp.exp(params.log_a) * ip + jnp.exp(params.log_b)
+
+
+def _se_from_inner(params: GPParams, ip, sq_x, sq_x2):
+    sq = jnp.maximum(sq_x[:, None] + sq_x2[None, :] - 2.0 * ip, 0.0)
+    return jnp.exp(params.log_a) * jnp.exp(-sq / jnp.exp(params.log_b))
+
+
+def _linear_prior_diag(params: GPParams, sq_x):
+    return jnp.exp(params.log_a) * sq_x + jnp.exp(params.log_b)
+
+
+def _se_prior_diag(params: GPParams, sq_x):
+    return jnp.full_like(jnp.asarray(sq_x), jnp.exp(params.log_a))
+
+
+register_kernel(KernelSpec(
+    name="linear", gram=linear_gram,
+    from_inner=_linear_from_inner, prior_diag=_linear_prior_diag,
+))
+register_kernel(KernelSpec(
+    name="se", gram=se_gram,
+    from_inner=_se_from_inner, prior_diag=_se_prior_diag,
+))
+
+
 def kernel_from_inner(kernel: str, params: GPParams, ip, sq_x, sq_x2):
     """Gram block from precomputed inner products ``ip = X @ X2^T`` and squared
-    norms — the form the fused dequantize+gram (qgram) path produces."""
-    if kernel == "linear":
-        return jnp.exp(params.log_a) * ip + jnp.exp(params.log_b)
-    if kernel == "se":
-        sq = jnp.maximum(sq_x[:, None] + sq_x2[None, :] - 2.0 * ip, 0.0)
-        return jnp.exp(params.log_a) * jnp.exp(-sq / jnp.exp(params.log_b))
-    raise ValueError(f"unknown kernel {kernel!r}")
+    norms — the form the fused dequantize+gram (qgram) path produces.
+
+    ``kernel`` names a :data:`~repro.core.registry.KERNELS` entry (builtin:
+    ``linear`` eq. 4, ``se`` eq. 65; extend with ``register_kernel``)."""
+    return KERNELS.get(kernel).from_inner(params, ip, sq_x, sq_x2)
 
 
 def prior_diag(kernel: str, params: GPParams, sq_x):
     """Prior variances k(x, x) from squared norms: the kernel-diagonal
     special case every predictive needs (linear: a|x|²+b; SE: constant s)."""
-    if kernel == "linear":
-        return jnp.exp(params.log_a) * sq_x + jnp.exp(params.log_b)
-    if kernel == "se":
-        return jnp.full_like(jnp.asarray(sq_x), jnp.exp(params.log_a))
-    raise ValueError(f"unknown kernel {kernel!r}")
+    return KERNELS.get(kernel).prior_diag(params, sq_x)
 
 
 def gram_fn(kernel: str, backend: str = "xla") -> Callable:
-    if kernel == "linear":
-        fn = linear_gram
-    elif kernel == "se":
-        fn = se_gram
-    else:
-        raise ValueError(f"unknown kernel {kernel!r}")
+    fn = KERNELS.get(kernel).gram
     if backend == "xla":
         return fn
     return functools.partial(fn, backend=backend)

@@ -85,3 +85,18 @@ def combine_psum(method: str, mu_i, s2_i, prior_var, axis_name: str):
         mu = jax.lax.psum(beta_i * mu_i / s2_i, axis_name) / prec
         return mu, 1.0 / prec
     raise ValueError(f"unknown combiner {method!r}")
+
+
+# The zero-rate combiners double as registered fusion rules so broadcast
+# artifacts can fuse with any of them by name (fuse="rbcm" etc.).
+from functools import partial as _partial  # noqa: E402
+
+from .registry import FusionSpec, register_fusion  # noqa: E402
+
+for _name in _COMBINERS:
+    register_fusion(FusionSpec(
+        name=_name,
+        fuse=_partial(combine, _name),
+        fuse_psum=_partial(combine_psum, _name),
+    ))
+del _name

@@ -1,0 +1,67 @@
+"""The §5 distributed-GP protocols as a package.
+
+Layout (the old 2k-line ``core/distributed_gp.py`` monolith, split along the
+paper's own seams):
+
+* :mod:`.base` — shared machinery: padded shards, the wire-bit ledger, the
+  :class:`~.base.FittedProtocol` serving artifact, and the
+  ``fit``/``predict``/``update``/``save_artifact``/``load_artifact``
+  lifecycle (protocol/scheme dispatch via :mod:`repro.core.registry`);
+* :mod:`.wire` — pluggable wire schemes: ``per_symbol`` (§4.2 int codes) and
+  ``vq`` (the §4.1 Theorem-2 optimal test channel, runnable on the wire);
+* :mod:`.center` — the §5.1 single-center protocol;
+* :mod:`.broadcast` — the §5.2 broadcast protocol;
+* :mod:`.poe` — the zero-rate PoE/BCM baselines as a protocol;
+* :mod:`.mesh` — the machines-as-devices shard_map substrate
+  (``impl="mesh"``) shared by all of the above.
+
+Importing this package registers the builtin protocols and schemes.  The
+public front door is :class:`repro.core.api.DistributedGP`; the legacy entry
+points live on as deprecated wrappers in :mod:`repro.core.distributed_gp`.
+"""
+from . import base, wire, center, broadcast, poe, mesh  # noqa: F401 (registration)
+
+from .base import (
+    FittedProtocol,
+    PaddedShards,
+    WireState,
+    fit,
+    load_artifact,
+    pad_parts,
+    predict,
+    predict_op_counts,
+    save_artifact,
+    serve_trace_count,
+    split_machines,
+    update,
+)
+from .center import CenterGP, quantize_to_center, single_center_gp
+from .broadcast import HostBroadcastGP, broadcast_gp
+from .poe import HostPoEGP, poe_baseline
+from .mesh import MESH_AXIS, broadcast_gp_mesh, machine_mesh
+from .wire import _run_wire_protocol  # noqa: F401 (benchmarks/tests import it)
+
+__all__ = [
+    "FittedProtocol",
+    "PaddedShards",
+    "WireState",
+    "fit",
+    "predict",
+    "update",
+    "save_artifact",
+    "load_artifact",
+    "pad_parts",
+    "split_machines",
+    "serve_trace_count",
+    "predict_op_counts",
+    "CenterGP",
+    "quantize_to_center",
+    "single_center_gp",
+    "HostBroadcastGP",
+    "broadcast_gp",
+    "HostPoEGP",
+    "poe_baseline",
+    "MESH_AXIS",
+    "machine_mesh",
+    "broadcast_gp_mesh",
+]

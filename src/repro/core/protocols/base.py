@@ -1,0 +1,571 @@
+"""Shared machinery of the §5 distributed-GP protocols.
+
+This module owns everything the protocol implementations
+(:mod:`.center`, :mod:`.broadcast`, :mod:`.poe`, :mod:`.mesh`) share:
+
+* the padded-shard layout every vmapped stage runs on (:class:`PaddedShards`),
+* the wire-state container and the §4 bit-accounting formula
+  (:class:`WireState`, :func:`_wire_bits`),
+* the serving artifact (:class:`FittedProtocol`) and its
+  :func:`fit` / :func:`predict` / :func:`update` /
+  :func:`save_artifact` / :func:`load_artifact` lifecycle,
+* the serve-path introspection hooks (:func:`serve_trace_count`,
+  :func:`predict_op_counts`).
+
+Protocols and wire schemes are looked up in :mod:`repro.core.registry`
+(``PROTOCOLS`` / ``SCHEMES``) — this module never names a concrete protocol,
+which is what lets ``register_protocol`` / ``register_scheme`` extend the
+system without touching the dispatch below.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..gp import GPParams, gram_fn, prior_diag
+from ..nystrom import nystrom_complete
+from ..registry import PROTOCOLS, SCHEMES
+
+__all__ = [
+    "split_machines",
+    "pad_parts",
+    "PaddedShards",
+    "WireState",
+    "FittedProtocol",
+    "fit",
+    "predict",
+    "update",
+    "save_artifact",
+    "load_artifact",
+    "serve_trace_count",
+    "predict_op_counts",
+]
+
+
+def split_machines(X, y, m: int, key) -> list[tuple[jnp.ndarray, jnp.ndarray]]:
+    """Random uniform split across m machines (paper §6: 'randomly distributed
+    across 40 machines')."""
+    n = X.shape[0]
+    perm = jax.random.permutation(key, n)
+    chunks = np.array_split(np.asarray(perm), m)
+    return [(jnp.asarray(X)[c], jnp.asarray(y)[c]) for c in chunks]
+
+
+# --------------------------------------------------------------------------
+# uniform padded shards — the layout every vmapped protocol stage runs on
+# --------------------------------------------------------------------------
+
+
+class PaddedShards(collections.namedtuple("PaddedShards", "X y mask lengths")):
+    """(m, n_pad, d) machine shards; invalid rows are zero with mask 0.
+
+    ``lengths`` holds the per-machine true row counts (python ints)."""
+
+    __slots__ = ()
+
+
+def pad_parts(parts) -> PaddedShards:
+    m = len(parts)
+    d = parts[0][0].shape[1]
+    lengths = tuple(int(p[0].shape[0]) for p in parts)
+    n_pad = max(lengths)
+    X = np.zeros((m, n_pad, d), np.float32)
+    y = np.zeros((m, n_pad), np.float32)
+    mask = np.zeros((m, n_pad), np.float32)
+    for j, (Xj, yj) in enumerate(parts):
+        X[j, : lengths[j]] = np.asarray(Xj, np.float32)
+        y[j, : lengths[j]] = np.asarray(yj, np.float32)
+        mask[j, : lengths[j]] = 1.0
+    return PaddedShards(jnp.asarray(X), jnp.asarray(y), jnp.asarray(mask), lengths)
+
+
+class WireState(collections.namedtuple(
+    "WireState", "codes decoded T_inv rates sigma scaled_cents T"
+)):
+    """Everything the wire protocol produced, for every machine at once.
+
+    This is the fit-once scheme state: ``(T, T_inv, sigma, rates)`` per machine
+    are the frozen codebooks/transforms that :func:`update` reuses to encode
+    NEW symbols without refitting (only their ``rates.sum()`` wire bits are
+    spent), and ``codes``/``scaled_cents`` feed the fused dequantize+gram
+    kernel under ``gram_backend="pallas"``.
+
+    Fields: codes (m, n_pad, d) int32 [padded rows = -1, decode to 0];
+    decoded (m, n_pad, d) reconstructions [padded rows zero]; T_inv (m, d, d)
+    decorrelating inverses; rates (m, d) int32 per-dim bit allocation;
+    sigma (m, d); scaled_cents (m, d, C) qgram decode tables; T (m, d, d)
+    forward transforms.  The ``vq`` scheme fills ``decoded`` only (identity
+    transforms, no int codes — its channel state rides in the artifact's
+    ``data`` dict instead)."""
+
+    __slots__ = ()
+
+
+def _wire_bits(rates, lengths, d: int, skip=None) -> int:
+    """Paper §4 accounting: R bits/sample on the wire + O(2 d²) fp32 side info
+    per transmitting machine."""
+    rates = np.asarray(rates)
+    total = 0
+    for j, n_j in enumerate(lengths):
+        if j == skip:
+            continue
+        total += int(rates[j].sum()) * n_j + 2 * d * d * 32
+    return total
+
+
+def _mask_gram(G, mask_r, mask_c=None, pin_diag=True):
+    """Zero padded rows/cols; optionally pin their diagonal to 1 so Cholesky
+    stays SPD.  A point with k(·, pad)=0, y_pad=0 contributes nothing to the
+    posterior, which makes the padded program bit-compatible with the
+    unpadded one."""
+    mask_c = mask_r if mask_c is None else mask_c
+    Gm = G * (mask_r[:, None] * mask_c[None, :])
+    if pin_diag:
+        Gm = Gm + jnp.diag(1.0 - mask_r)
+    return Gm
+
+
+# --------------------------------------------------------------------------
+# fit-once / serve-many: the FittedProtocol artifact
+# --------------------------------------------------------------------------
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["params", "y", "factors", "data", "wire"],
+    meta_fields=[
+        "protocol", "kernel", "gram_mode", "fuse", "gram_backend",
+        "n_center", "lengths", "block_order", "bits_per_sample", "max_bits",
+        "wire_bits", "impl", "scheme", "config",
+    ],
+)
+@dataclasses.dataclass
+class FittedProtocol:
+    """The serving artifact of a communication-limited distributed GP.
+
+    Produced by :func:`fit`, consumed by :func:`predict` (one jitted program;
+    triangular solves only) and :func:`update` (rank-k factor growth).  It is
+    a registered JAX pytree: array leaves checkpoint through
+    ``repro.checkpoint`` (:func:`save_artifact` / :func:`load_artifact`,
+    shardings respected on restore) and the static metadata rides in the
+    treedef, so :func:`predict` retraces only when the protocol shape
+    actually changes (e.g. after an :func:`update` grows the factors).
+
+    Array fields (pytree leaves)
+    ----------------------------
+    params : trained :class:`~repro.core.gp.GPParams` (log-space hypers).
+    y : targets in the artifact's column layout — center: (N,) flat
+        [center block first]; broadcast: (m·n_pad,) mask-zeroed; poe:
+        (m, n_pad) mask-zeroed.
+    factors : dict of cached solve factors, keyed per gram_mode —
+        ``L_KK``/``W``/``L_M``/``alpha`` (Nyström woodbury form, see
+        ``nystrom.nystrom_factors``) and/or ``L``/``alpha`` (dense
+        ``gp.posterior_factors``).  Broadcast/PoE hold a leading machine
+        axis (one batched factor set, NOT m objects).
+    data : dict of query-time arrays — the Nyström bases (``Xc`` for center,
+        ``Xs``+``mask`` for broadcast/poe), reconstructions (``X_recon``),
+        squared norms (``sq_cols``/``sq_exact``/``sq_dec``), scheme extras
+        (the ``vq`` test-channel state ``vq_A``/``vq_W_half``/
+        ``vq_rate_bits``), and — after a PoE :func:`update` — streamed
+        extras (``X_extra``/``extra_mask``/``y_extra``).
+    wire : :class:`WireState` — the frozen fit-once scheme state (codebooks,
+        transforms, int codes).  :func:`update` re-encodes new symbols with
+        it; the pallas backend decodes grams straight from its codes.  None
+        for the zero-rate PoE baseline.
+
+    Static metadata (treedef)
+    -------------------------
+    protocol / kernel / gram_mode / fuse / gram_backend / scheme — registry
+    names (see :mod:`repro.core.registry`); n_center (center's exact-block
+    size K), lengths (per-machine true row counts), block_order (center's
+    gram-row machine order), bits_per_sample, max_bits, wire_bits — the
+    paper's §4 ledger, extended by every :func:`update` — impl (``"batched"``
+    single-host or ``"mesh"`` machines-as-devices: factors live sharded
+    along the mesh axis and :func:`predict` runs as one shard_map program
+    with a psum/KL fusion epilogue), and config — the full
+    :class:`~repro.core.config.DGPConfig` this artifact was fitted under
+    (recorded in the checkpoint's ``meta.json``; ``None`` only on artifacts
+    restored from pre-config checkpoints before defaults kick in).
+    """
+
+    params: GPParams
+    y: jnp.ndarray
+    factors: dict
+    data: dict
+    wire: WireState | None
+    protocol: str
+    kernel: str
+    gram_mode: str
+    fuse: str
+    gram_backend: str
+    n_center: int
+    lengths: tuple
+    block_order: tuple | None
+    bits_per_sample: int
+    max_bits: int
+    wire_bits: int
+    impl: str = "batched"
+    scheme: str = "per_symbol"
+    config: object | None = None  # DGPConfig (opaque here: no import cycle)
+
+    # -- conveniences (the paper-facing entry points return artifacts) ------
+
+    def predict(self, X_star):
+        """Serve one query batch from the cached factors — see :func:`predict`."""
+        return predict(self, X_star)
+
+    def update(self, X_new, y_new, machine: int = 0):
+        """Stream in new points — see :func:`update`."""
+        return update(self, X_new, y_new, machine)
+
+    def save(self, directory: str, step: int = 0) -> str:
+        """Checkpoint this artifact — see :func:`save_artifact`."""
+        return save_artifact(self, directory, step)
+
+    def _gram(self, params):
+        """Rebuild the TRAIN-time gram at the given params (debug/inspection;
+        the serve path never calls this — predictions run off cached
+        factors).  Center protocol, xla assembly."""
+        if self.protocol != "center":
+            raise NotImplementedError("_gram inspection is center-protocol only")
+        k = gram_fn(self.kernel)
+        X = self.data["X_recon"]
+        if self.gram_mode == "direct":
+            return k(params, X)
+        Xc = self.data["Xc"]
+        G_KK = k(params, Xc)
+        G_KN = k(params, Xc, X)
+        if self.gram_mode == "nystrom_fitc":
+            exact = prior_diag(self.kernel, params, self.data["sq_exact"])
+            return nystrom_complete(G_KK, G_KN, exact_diag=exact)
+        return nystrom_complete(G_KK, G_KN)
+
+
+def _as_config(
+    bits_per_sample, protocol, kernel, steps, lr, gram_mode, fuse, method,
+    gram_backend, max_bits, train_impl, impl, scheme,
+):
+    """The loose legacy kwargs as one validated DGPConfig (``method`` wins
+    over ``fuse`` for the PoE protocol, matching the old signatures)."""
+    from ..config import DGPConfig
+
+    return DGPConfig(
+        protocol=protocol,
+        scheme=scheme,
+        kernel=kernel,
+        fusion=method if protocol == "poe" else fuse,
+        impl=impl,
+        gram_backend=gram_backend,
+        gram_mode=gram_mode,
+        bits_per_sample=int(bits_per_sample),
+        max_bits=int(max_bits),
+        steps=int(steps),
+        lr=float(lr),
+        train_impl=train_impl,
+    )
+
+
+def fit(
+    parts,
+    bits_per_sample: int = 0,
+    protocol: str = "center",
+    *,
+    kernel: str = "se",
+    steps: int = 150,
+    lr: float = 0.05,
+    params: GPParams | None = None,
+    gram_mode: str = "nystrom",
+    fuse: str = "kl",
+    method: str = "rbcm",
+    gram_backend: str = "xla",
+    max_bits: int | None = None,
+    train_impl: str = "scan",
+    impl: str = "batched",
+    scheme: str = "per_symbol",
+) -> FittedProtocol:
+    """Run a distributed-GP protocol ONCE and return the serving artifact.
+
+    This is the fit half of the fit/predict split: wire protocol (scheme fit +
+    encode + decode, one vmapped jit), hyperparameter training (one lax.scan
+    program), and ONE factorization of every predictive the protocol needs.
+    The returned :class:`FittedProtocol` then serves any number of
+    :func:`predict` query batches with no scheme refit and no Cholesky
+    refactorization, supports streaming :func:`update`, and checkpoints via
+    :func:`save_artifact`.
+
+    protocol="center" (§5.1): every machine quantizes toward the center's
+    covariance; the center Nyström-completes and holds one factor set.
+    protocol="broadcast" (§5.2): every machine broadcasts once; m local
+    Nyström factor sets are built under one vmap and fused (``fuse``: a
+    ``repro.core.registry.FUSIONS`` name — "kl" = eqs. 62-64 barycenter, or
+    a PoE-family combiner).
+    protocol="poe": the zero-rate baseline (``method``: poe/gpoe/bcm/rbcm);
+    ``bits_per_sample`` is ignored and the wire ledger is 0.
+
+    scheme="per_symbol" (§4.2, default) puts int codes on the wire;
+    scheme="vq" simulates the §4.1 Theorem-2 optimal test channel at the
+    matched bit budget (batched impl, xla backend).
+
+    impl="batched" (default) simulates the machines under one vmapped jit;
+    impl="mesh" puts machines on a real device mesh — the wire protocol,
+    factor builds, and (broadcast/PoE) predict run as shard_map programs
+    whose only inter-machine channel is ``repro.comm``, per-machine factors
+    come out sharded along the mesh axis, and the wire ledger is computed
+    from what the collectives actually move.
+
+    This is the engine under :meth:`repro.core.api.DistributedGP.fit`; prefer
+    the facade (one validated :class:`~repro.core.config.DGPConfig` instead
+    of loose kwargs) in new code.
+    """
+    if impl not in ("batched", "mesh"):
+        raise ValueError(f'fit() impl must be "batched" or "mesh", got {impl!r}')
+    from .. import quantizers as Q
+
+    cfg = _as_config(
+        bits_per_sample, protocol, kernel, steps, lr, gram_mode, fuse, method,
+        gram_backend, Q.DEFAULT_MAX_BITS if max_bits is None else max_bits,
+        train_impl, impl, scheme,
+    )
+    return PROTOCOLS.get(cfg.protocol).fit(parts, cfg, params)
+
+
+# --------------------------------------------------------------------------
+# predict: one jitted program per artifact, cached factors only
+# --------------------------------------------------------------------------
+
+# Incremented INSIDE the traced function body, so it counts (re)traces, not
+# calls: a warm serve loop must leave it flat (benchmarks/serve_bench.py and
+# tests/test_serving.py assert exactly that).
+_SERVE_TRACES: collections.Counter = collections.Counter()
+
+
+def serve_trace_count(protocol: str = "center") -> int:
+    """How many times :func:`predict` has been (re)traced for a protocol —
+    a warm serve loop holds this constant (no refit, no recompile)."""
+    return _SERVE_TRACES[protocol]
+
+
+def _predict_impl(art: FittedProtocol, X_star):
+    _SERVE_TRACES[art.protocol] += 1  # runs at trace time only
+    p = art.params
+    noise = jnp.exp(p.log_noise)
+    sq_star = jnp.sum(X_star**2, -1)
+    g_ss = prior_diag(art.kernel, p, sq_star)
+    return PROTOCOLS.get(art.protocol).predict(art, X_star, sq_star, g_ss, noise)
+
+
+_predict_jit = jax.jit(_predict_impl)
+
+
+def _uses_mesh_predict(art: FittedProtocol) -> bool:
+    # §5.1 serving is center-local by construction (one factor set at the
+    # center, nothing to fuse) — center artifacts serve on the host path
+    return art.impl == "mesh" and art.protocol in ("broadcast", "poe")
+
+
+def predict(art: FittedProtocol, X_star):
+    """Serve one query batch from a fitted artifact: (mean, var) at X_star.
+
+    ONE jitted program per artifact shape, O(t) per query batch: the cross
+    inner products against the stored bases, the kernel map, and triangular
+    solves against the cached factors.  No scheme refit, no Cholesky
+    refactorization, no hyperparameter step happens here — verify with
+    :func:`predict_op_counts` / :func:`serve_trace_count`.  Retraces only
+    when the artifact's shapes change (a fresh :func:`fit`, an
+    :func:`update`, or a new query-batch size).  Mesh broadcast/PoE
+    artifacts serve through one shard_map program with a psum/KL fusion
+    epilogue instead (:func:`.mesh._predict_mesh_impl`)."""
+    X_star = jnp.asarray(X_star, jnp.float32)
+    if _uses_mesh_predict(art):
+        from . import mesh
+
+        return mesh._predict_mesh_jit(art, X_star)
+    return _predict_jit(art, X_star)
+
+
+# --------------------------------------------------------------------------
+# update: streaming append via rank-k factor updates
+# --------------------------------------------------------------------------
+
+
+def update(art: FittedProtocol, X_new, y_new, machine: int = 0) -> FittedProtocol:
+    """Stream (X_new, y_new) arriving at ``machine`` into a fitted artifact.
+
+    The fit-once economics in action: machine ``machine``'s FROZEN scheme
+    state (codebooks + decorrelating transform fitted at :func:`fit` time;
+    the test-channel parameters for ``scheme="vq"``) re-encodes only the new
+    symbols, charging the frozen per-machine rate to the ledger — no scheme
+    refit, no new side info.  The cached factors then grow by rank-k updates
+    (``nystrom.chol_update_rank`` for the Nyström woodbury core,
+    ``nystrom.chol_append`` for dense factors) instead of refactorizing the
+    train gram.  Returns a NEW artifact (the input is unchanged); the next
+    :func:`predict` retraces once for the grown shapes, then serves warm
+    again.
+
+    Center protocol: points landing on the center are exact and cost 0 wire
+    bits; the rank-K Nyström basis stays fixed either way (appended points
+    extend the columns, not the basis).  Broadcast: default "nystrom" mode
+    only.  PoE: the new points extend ``machine``'s expert (zero-rate,
+    exact).  Within-tolerance agreement with a from-scratch refit on the
+    concatenated data is locked by tests/test_serving.py."""
+    X_new = jnp.asarray(X_new, jnp.float32)
+    y_new = jnp.asarray(y_new, jnp.float32)
+    if X_new.ndim != 2 or y_new.ndim != 1 or y_new.shape[0] != X_new.shape[0]:
+        raise ValueError("update expects X_new (n_new, d), y_new (n_new,)")
+    if not 0 <= machine < len(art.lengths):
+        raise ValueError(f"machine {machine} out of range (m={len(art.lengths)})")
+    if art.impl == "mesh":
+        # the rank-k growth runs on host arrays (mixing mesh-sharded and
+        # fresh single-device operands in eager ops is ill-defined); the next
+        # mesh predict reshards the grown factors along the machine axis
+        pull = lambda t: jax.tree.map(lambda a: jnp.asarray(jax.device_get(a)), t)
+        art = dataclasses.replace(art, factors=pull(art.factors), data=pull(art.data))
+    return PROTOCOLS.get(art.protocol).update(art, X_new, y_new, machine)
+
+
+def _reencode(art: FittedProtocol, machine: int, X_new):
+    """(X̂, wire_bits) for new symbols under ``machine``'s frozen scheme —
+    dispatched on the artifact's wire scheme (registry lookup)."""
+    return SCHEMES.get(art.scheme).reencode(art, machine, X_new)
+
+
+def _bump_length(lengths: tuple, j: int, n_new: int) -> tuple:
+    return tuple(n + (n_new if i == j else 0) for i, n in enumerate(lengths))
+
+
+# --------------------------------------------------------------------------
+# artifact persistence (repro.checkpoint) + serve-path introspection
+# --------------------------------------------------------------------------
+
+
+def save_artifact(art: FittedProtocol, directory: str, step: int = 0) -> str:
+    """Checkpoint a fitted artifact: array leaves through
+    ``repro.checkpoint.save_checkpoint`` (atomic npz), static metadata to a
+    sidecar json — including the full :class:`~repro.core.config.DGPConfig`
+    and an artifact format version, so :func:`load_artifact` can rebuild the
+    exact configuration years later.  Predictions from the restored artifact
+    are bitwise identical (tests/test_serving.py)."""
+    from ...checkpoint import save_artifact as _save
+    from ..config import ARTIFACT_FORMAT_VERSION
+
+    cfg = getattr(art, "config", None)
+    meta = {
+        "format_version": ARTIFACT_FORMAT_VERSION,
+        "protocol": art.protocol, "kernel": art.kernel,
+        "gram_mode": art.gram_mode, "fuse": art.fuse,
+        "gram_backend": art.gram_backend, "n_center": art.n_center,
+        "lengths": list(art.lengths),
+        "block_order": list(art.block_order) if art.block_order is not None else None,
+        "bits_per_sample": art.bits_per_sample, "max_bits": art.max_bits,
+        "wire_bits": art.wire_bits, "has_wire": art.wire is not None,
+        "impl": art.impl,  # provenance; restore is always single-host
+        "scheme": art.scheme,
+        "config": cfg.asdict() if cfg is not None else None,
+    }
+    return _save(directory, step, art, meta)
+
+
+def load_artifact(directory: str, step: int | None = None, shardings=None) -> FittedProtocol:
+    """Restore a :func:`save_artifact` checkpoint into a fresh artifact.
+
+    Always restores as a SINGLE-HOST artifact (``impl="batched"``): a mesh
+    fit's checkpoint round-trips to an equivalent host-serving artifact
+    (sharded factors were gathered at save time).  Pre-redesign checkpoints
+    (format version 1: no ``config``/``scheme`` in ``meta.json``) load too —
+    the scheme defaults to ``per_symbol`` and a
+    :class:`~repro.core.config.DGPConfig` is reconstructed from the legacy
+    metadata fields (tests/test_ckpt_backcompat.py).  ``shardings``:
+    optional — a single ``Sharding``/device applied to every leaf, or a
+    ``{leaf_key: sharding}`` dict (keys as in the npz: ``factors/W``,
+    ``data/Xc``, ``wire/codes``, ...) for per-leaf placement; leaves are
+    ``jax.device_put`` into place on restore."""
+    from ...checkpoint import load_artifact_arrays
+    from ..config import ARTIFACT_FORMAT_VERSION, DGPConfig
+
+    meta, arrays = load_artifact_arrays(directory, step)
+    version = meta.get("format_version", 1)  # pre-redesign checkpoints: v1
+    if version > ARTIFACT_FORMAT_VERSION:
+        raise ValueError(
+            f"artifact format version {version} is newer than this code "
+            f"supports ({ARTIFACT_FORMAT_VERSION}) — upgrade the package to "
+            "load this checkpoint"
+        )
+
+    def put(key):
+        arr = arrays[key]
+        sh = shardings.get(key) if isinstance(shardings, dict) else shardings
+        return jax.device_put(arr, sh) if sh is not None else jnp.asarray(arr)
+
+    params = GPParams(*(put(f"params/{f}") for f in GPParams._fields))
+    factors = {
+        k.split("/", 1)[1]: put(k) for k in arrays if k.startswith("factors/")
+    }
+    data = {k.split("/", 1)[1]: put(k) for k in arrays if k.startswith("data/")}
+    wire = None
+    if meta["has_wire"]:
+        wire = WireState(*(put(f"wire/{f}") for f in WireState._fields))
+    cfg_dict = meta.get("config")
+    config = (
+        DGPConfig.from_dict(cfg_dict) if cfg_dict
+        else DGPConfig.from_legacy_meta(meta)
+    )
+    # restored artifacts always serve single-host; the recorded config keeps
+    # the fit-time impl as provenance, the reconstruction pins "batched"
+    config = dataclasses.replace(config, impl="batched")
+    return FittedProtocol(
+        params=params, y=put("y"), factors=factors, data=data, wire=wire,
+        protocol=meta["protocol"], kernel=meta["kernel"],
+        gram_mode=meta["gram_mode"], fuse=meta["fuse"],
+        gram_backend=meta["gram_backend"], n_center=meta["n_center"],
+        lengths=tuple(meta["lengths"]),
+        block_order=tuple(meta["block_order"]) if meta["block_order"] is not None else None,
+        bits_per_sample=meta["bits_per_sample"], max_bits=meta["max_bits"],
+        wire_bits=meta["wire_bits"], impl="batched",
+        scheme=meta.get("scheme", "per_symbol"), config=config,
+    )
+
+
+def _walk_jaxpr(jaxpr):
+    from jax.core import Jaxpr, ClosedJaxpr
+
+    def subs(v):
+        if isinstance(v, ClosedJaxpr):
+            yield v.jaxpr
+        elif isinstance(v, Jaxpr):
+            yield v
+        elif isinstance(v, (list, tuple)):
+            for x in v:
+                yield from subs(x)
+
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for pv in eqn.params.values():
+            for sub in subs(pv):
+                yield from _walk_jaxpr(sub)
+
+
+def predict_op_counts(art: FittedProtocol, X_star, ops=("cholesky", "eigh")) -> dict:
+    """Count primitives in the :func:`predict` program for this artifact —
+    the structural serve-path check: a warm predict must contain ZERO
+    ``cholesky`` (no refactorization) and ZERO ``eigh`` (no scheme refit)
+    equations.  Mesh artifacts are checked on their actual shard_map serve
+    program (the walk descends into the shard_map body jaxpr).
+    benchmarks/serve_bench.py records these counts in BENCH_serve.json and
+    tests/test_serving.py locks them."""
+    if _uses_mesh_predict(art):
+        from . import mesh
+
+        fn = mesh._predict_mesh_impl
+    else:
+        fn = _predict_impl
+    jaxpr = jax.make_jaxpr(fn)(art, jnp.asarray(X_star, jnp.float32))
+    counts = {op: 0 for op in ops}
+    for eqn in _walk_jaxpr(jaxpr.jaxpr):
+        if eqn.primitive.name in counts:
+            counts[eqn.primitive.name] += 1
+    return counts

@@ -1,0 +1,518 @@
+"""§5.2 broadcast protocol.
+
+Every machine broadcasts codes fitted against Qy = sum of the *other*
+machines' covariances; each machine builds its own Nyström gram (own block
+exact), forms a local predictive, and the per-point predictives are fused
+with a registered fusion rule (default: the KL barycenter, eqs. 62-64).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .. import quantizers as Q
+from ..distortion import second_moment
+from ..schemes import PerSymbolScheme
+from ..gp import (
+    GPParams,
+    gram_fn,
+    kernel_from_inner,
+    posterior_factors,
+    posterior_apply,
+    posterior_from_gram,
+    train_gp,
+)
+from ..nystrom import (
+    nystrom_complete,
+    nystrom_posterior,
+    nystrom_factors,
+    nystrom_apply,
+    nystrom_kinv,
+    chol_update_rank,
+    _JITTER,
+)
+from ..registry import FUSIONS, SCHEMES, ProtocolSpec, register_protocol
+from . import base, mesh
+from .base import (
+    FittedProtocol,
+    PaddedShards,
+    WireState,
+    pad_parts,
+    _bump_length,
+    _mask_gram,
+    _reencode,
+)
+
+__all__ = ["broadcast_gp", "HostBroadcastGP", "fit_broadcast_host"]
+
+
+# --------------------------------------------------------------------------
+# the serial host oracle
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class HostBroadcastGP:
+    """The ``impl="host"`` oracle's fitted state: one scipy scheme fit per
+    machine, shared hypers trained at machine 0.  ``predict`` runs one dense
+    solve per machine view and fuses — m serial host dispatches, kept as the
+    reference the batched/mesh artifacts are locked against."""
+
+    kernel: str
+    params: GPParams
+    parts: list
+    decoded: list
+    wire_bits: int
+    gram_mode: str
+    fuse: str
+
+    def predict(self, X_star):
+        m = len(self.parts)
+        k = gram_fn(self.kernel)
+        p = self.params
+        X_star = jnp.asarray(X_star, jnp.float32)
+        y_parts = [yj for _, yj in self.parts]
+
+        def machine_view(i):
+            blocks = [
+                self.parts[j][0] if j == i else self.decoded[j] for j in range(m)
+            ]
+            order = [i] + [j for j in range(m) if j != i]
+            Xv = jnp.concatenate([blocks[j] for j in order], axis=0)
+            yv = jnp.concatenate([y_parts[j] for j in order], axis=0)
+            return Xv, yv, self.parts[i][0].shape[0]
+
+        gram_mode = self.gram_mode
+
+        @partial(jax.jit, static_argnums=(2,))
+        def local_predict(Xv, yv, nc):
+            Xc = Xv[:nc]
+            g_ss = jnp.diagonal(k(p, X_star, X_star))
+            if gram_mode == "nystrom":
+                # consistent low-rank predictive (see CenterGP.predict)
+                return nystrom_posterior(
+                    k(p, Xc), k(p, Xc, Xv), yv, jnp.exp(p.log_noise),
+                    k(p, X_star, Xc), g_ss,
+                )
+            G = k(p, Xv)  # "direct": all blocks from reconstructed points
+            G_sn = k(p, X_star, Xv)
+            return posterior_from_gram(G, G_sn, g_ss, yv, jnp.exp(p.log_noise))
+
+        mus, s2s = [], []
+        for i in range(m):
+            Xv, yv, nc = machine_view(i)
+            mu_i, s2_i = local_predict(Xv, yv, nc)
+            mus.append(mu_i)
+            s2s.append(s2_i)
+        mus = jnp.stack(mus)
+        s2s = jnp.stack(s2s)
+        prior = jnp.diagonal(k(p, X_star, X_star)) + jnp.exp(p.log_noise)
+        return FUSIONS.get(self.fuse).fuse(mus, s2s, prior)
+
+
+def fit_broadcast_host(parts, cfg, params=None) -> HostBroadcastGP:
+    """Serial reference §5.2 fit: one scipy scheme fit per machine and shared
+    hypers trained at machine 0 on its Nyström view (warm-started from
+    ``params`` when given)."""
+    m = len(parts)
+    S = [second_moment(Xj) for Xj, _ in parts]
+    S_tot = sum(S)
+    # every machine encodes ONCE against the sum of the others' covariances
+    wire = 0
+    decoded = []
+    for j, (Xj, yj) in enumerate(parts):
+        sch = PerSymbolScheme(cfg.bits_per_sample, cfg.max_bits).fit(
+            np.asarray(S[j]), np.asarray(S_tot - S[j])
+        )
+        decoded.append(sch.decode(sch.encode(Xj)))
+        wire += sch.wire_bits(Xj.shape[0]) + sch.side_info_bits(Xj.shape[1])
+
+    k = gram_fn(cfg.kernel)
+
+    # train shared hypers at machine 0 on its own completed gram
+    blocks0 = [parts[0][0]] + [decoded[j] for j in range(1, m)]
+    X0 = jnp.concatenate(blocks0, axis=0)
+    y0 = jnp.concatenate([yj for _, yj in parts], axis=0)
+    nc0 = parts[0][0].shape[0]
+
+    def gram0(p):
+        Xc = X0[:nc0]
+        return nystrom_complete(k(p, Xc), k(p, Xc, X0))
+
+    trained = train_gp(
+        X0, y0, kernel=cfg.kernel, params=params, steps=cfg.steps, lr=cfg.lr,
+        gram_override=gram0, impl=cfg.train_impl,
+    )
+    return HostBroadcastGP(
+        kernel=cfg.kernel, params=trained.params, parts=list(parts),
+        decoded=decoded, wire_bits=wire, gram_mode=cfg.gram_mode,
+        fuse=cfg.fusion,
+    )
+
+
+# --------------------------------------------------------------------------
+# fit-time inner-product tensors (batched impl)
+# --------------------------------------------------------------------------
+
+
+def _train_inner_products(shards: PaddedShards, wire: WireState, backend: str):
+    """The query-independent inner-product tensors every machine view is
+    assembled from (computed ONCE at fit time):
+
+    A (m, n, n): exact own-block products Xs_i Xs_i^T
+    B (m, m, n, n): B[j, i] = X̂_j Xs_i^T (decoded j against exact i)
+
+    backend="pallas" computes A with the tiled gram kernel and B straight
+    from int codes with the fused dequantize+gram kernel."""
+    X = shards.X
+    if backend == "pallas":
+        from ...kernels.gram.ops import gram as gram_kernel
+        from ...kernels.qgram.ops import qgram
+
+        A = jax.vmap(lambda a: gram_kernel(a, a))(X)
+        proj = jnp.einsum("ind,jde->jine", X, wire.T_inv)  # (m_j, m_i, n, d)
+        B = jax.vmap(
+            lambda c, t, ys: jax.vmap(lambda yy: qgram(c, t, yy))(ys)
+        )(wire.codes, wire.scaled_cents, proj)
+        return A, B
+    A = jnp.einsum("ind,imd->inm", X, X)
+    B = jnp.einsum("jnd,imd->jinm", wire.decoded, X)
+    return A, B
+
+
+def _star_exact_products(Xs, X_star, backend: str):
+    """C (m, t, n): X_star Xs_i^T — the query-time products against every
+    machine's EXACT shard (the Nyström bases)."""
+    if backend == "pallas":
+        from ...kernels.gram.ops import gram as gram_kernel
+
+        return jax.vmap(lambda a: gram_kernel(X_star, a))(Xs)
+    return jnp.einsum("td,ind->itn", X_star, Xs)
+
+
+def _decoded_inner_products(shards: PaddedShards, wire: WireState, backend: str):
+    """D (m, n_pad, m*n_pad): D[j] = X̂_j [X̂_0..X̂_m]^T (decoded-vs-decoded) —
+    only the gram_mode="direct" views consume this, so it is computed only for
+    them (fit time)."""
+    m, n_pad, d = shards.X.shape
+    dec_flat = wire.decoded.reshape(m * n_pad, d)
+    if backend == "pallas":
+        from ...kernels.qgram.ops import qgram_batched
+
+        proj = jnp.einsum("nd,jde->jne", dec_flat, wire.T_inv)
+        return qgram_batched(wire.codes, wire.scaled_cents, proj)
+    return jnp.einsum("jnd,Nd->jnN", wire.decoded, dec_flat)
+
+
+def _star_decoded_products(wire: WireState, X_star, backend: str):
+    """E (m, t, n_pad): E[j] = X_star X̂_j^T — query-time products against the
+    reconstructions (gram_mode="direct" views only); straight from int codes
+    under the pallas backend."""
+    if backend == "pallas":
+        from ...kernels.qgram.ops import qgram_batched
+
+        proj_star = jnp.einsum("td,jde->jte", X_star, wire.T_inv)
+        return qgram_batched(wire.codes, wire.scaled_cents, proj_star).transpose(0, 2, 1)
+    return jnp.einsum("td,jnd->jtn", X_star, wire.decoded)
+
+
+def broadcast_gp(
+    parts,
+    bits_per_sample: int,
+    X_star,
+    kernel: str = "se",
+    steps: int = 150,
+    lr: float = 0.05,
+    fuse: str = "kl",
+    gram_mode: str = "nystrom",
+    impl: str = "batched",
+    gram_backend: str = "xla",
+    max_bits: int = Q.DEFAULT_MAX_BITS,
+    train_impl: str = "scan",
+):
+    """Full §5.2 protocol.  Hyperparameters are trained once (at machine 0, on
+    its Nyström view) and shared — a cheap O(#hypers) extra broadcast; the
+    paper trains per-machine, which is embarrassingly parallel on a real
+    cluster but m-times serial here.  Returns fused (mean, var) at X_star plus
+    total wire bits.
+
+    The default ``impl="batched"`` is a thin serving composition:
+    ``fit(parts, R, protocol="broadcast", ...)`` builds the
+    :class:`~.base.FittedProtocol` artifact (every machine's scheme fit,
+    decode, and Nyström factorization under jax.vmap on padded shards — one
+    batched Cholesky for all m local predictives instead of m serial ones),
+    and :func:`~.base.predict` serves X_star from the cached factors.  Call
+    ``fit`` directly (or the ``DistributedGP`` facade) to keep the artifact
+    and amortize the protocol over many query batches."""
+    if impl == "host":
+        if gram_backend == "pallas":
+            raise ValueError('gram_backend="pallas" requires impl="batched"')
+        from ..config import DGPConfig
+
+        cfg = DGPConfig(
+            protocol="broadcast", kernel=kernel, fusion=fuse, impl="host",
+            gram_mode=gram_mode, bits_per_sample=int(bits_per_sample),
+            max_bits=int(max_bits), steps=int(steps), lr=float(lr),
+            train_impl=train_impl,
+        )
+        model = fit_broadcast_host(parts, cfg)
+        mu, s2 = model.predict(X_star)
+        return mu, s2, model.wire_bits, model.params
+    art = base.fit(
+        parts, bits_per_sample, protocol="broadcast", kernel=kernel, steps=steps,
+        lr=lr, gram_mode=gram_mode, fuse=fuse, gram_backend=gram_backend,
+        max_bits=max_bits, train_impl=train_impl, impl=impl,
+    )
+    mu, s2 = base.predict(art, X_star)
+    return mu, s2, art.wire_bits, art.params
+
+
+# --------------------------------------------------------------------------
+# fit / predict / update (the registered protocol triple)
+# --------------------------------------------------------------------------
+
+
+def _fit_broadcast(parts, cfg, params=None) -> FittedProtocol:
+    m = len(parts)
+    shards = pad_parts(parts)
+    _, n_pad, d = shards.X.shape
+    bits, kernel, gram_mode = cfg.bits_per_sample, cfg.kernel, cfg.gram_mode
+    gram_backend, fuse = cfg.gram_backend, cfg.fusion
+    if cfg.impl == "mesh":
+        if gram_mode != "nystrom":
+            raise NotImplementedError(
+                'impl="mesh" broadcast supports gram_mode="nystrom" only'
+            )
+        if gram_backend != "xla":
+            raise NotImplementedError(
+                'impl="mesh" assembles grams device-local (gram_backend="xla")'
+            )
+    wire_state, wire, extras = SCHEMES.get(cfg.scheme).run(
+        shards, bits, cfg.max_bits, "broadcast", 0, cfg.impl
+    )
+
+    sq_exact = jnp.sum(shards.X**2, -1)  # (m, n)
+    sq_dec = jnp.sum(wire_state.decoded**2, -1)
+
+    # ---- train shared hypers at machine 0 on its completed Nyström gram ----
+    # (unpadded slices; the inner products are param-independent constants, so
+    # the 150-step scan only re-does the cheap kernel map + Cholesky)
+    L = shards.lengths
+    n0 = L[0]
+    if cfg.impl == "mesh":
+        # machine-0-local training inputs, straight from the wire output (the
+        # batched A/B tensors below exist only to vmap the m simulated views)
+        X0s = jnp.asarray(parts[0][0], jnp.float32)
+        ip_KK0 = X0s @ X0s.T
+        X_cols0 = jnp.concatenate(
+            [X0s] + [wire_state.decoded[j, : L[j]] for j in range(1, m)], axis=0
+        )
+        ip_KN0 = X0s @ X_cols0.T
+    else:
+        A, B = _train_inner_products(shards, wire_state, gram_backend)
+        ip_KK0 = A[0][:n0, :n0]
+        ip_KN0 = jnp.concatenate(
+            [ip_KK0] + [B[j, 0][: L[j], :n0].T for j in range(1, m)], axis=1
+        )
+    sq0 = sq_exact[0][:n0]
+    sq_cols0 = jnp.concatenate([sq0] + [sq_dec[j][: L[j]] for j in range(1, m)])
+    y0 = jnp.concatenate([p[1] for p in parts], axis=0)
+    X0 = jnp.concatenate(
+        [parts[0][0]] + [wire_state.decoded[j, : L[j]] for j in range(1, m)], axis=0
+    )
+
+    def gram0(p):
+        G_KK = kernel_from_inner(kernel, p, ip_KK0, sq0, sq0)
+        G_KN = kernel_from_inner(kernel, p, ip_KN0, sq0, sq_cols0)
+        return nystrom_complete(G_KK, G_KN)
+
+    trained = train_gp(
+        X0, y0, kernel=kernel, params=params, steps=cfg.steps, lr=cfg.lr,
+        gram_override=gram0, impl=cfg.train_impl,
+    )
+    p = trained.params
+    noise = jnp.exp(p.log_noise)
+
+    # ---- factorize every machine's local predictive under ONE vmap ----
+    mask_flat = shards.mask.reshape(-1)  # column layout is block j at slot j
+    y_flat = (shards.y * shards.mask).reshape(-1)
+
+    if cfg.impl == "mesh":
+        # one shard_map program: device i assembles & factorizes ITS view;
+        # the factor set lives sharded along the mesh axis
+        msh = mesh.machine_mesh(m)
+        factors = mesh._mesh_broadcast_factor_fn(m, kernel)(
+            shards.X, shards.mask, wire_state.decoded, sq_dec, mask_flat,
+            y_flat, p,
+        )
+        data = mesh._shard_machine_axis(
+            {"Xs": shards.X, "mask": shards.mask,
+             "sq_exact": sq_exact, "sq_dec": sq_dec},
+            msh,
+        )
+        return FittedProtocol(
+            params=p, y=y_flat, factors=factors, data=data, wire=wire_state,
+            protocol="broadcast", kernel=kernel, gram_mode=gram_mode,
+            fuse=fuse, gram_backend=gram_backend, n_center=0,
+            lengths=shards.lengths, block_order=None, bits_per_sample=bits,
+            max_bits=cfg.max_bits, wire_bits=int(wire), impl="mesh",
+            scheme=cfg.scheme, config=cfg,
+        )
+
+    if gram_mode == "nystrom":
+
+        def build(i):
+            mask_i = shards.mask[i]
+            # own (exact) block is the Nyström center; peers are reconstructions
+            ip_KK = A[i]
+            blocks = B[:, i].transpose(0, 2, 1)  # block j: Xs_i X̂_j^T (n, n)
+            blocks = blocks.at[i].set(ip_KK)  # own block exact
+            ip_KN = jnp.moveaxis(blocks, 0, 1).reshape(n_pad, m * n_pad)
+            sq_cols = sq_dec.at[i].set(sq_exact[i]).reshape(-1)
+            G_KK = _mask_gram(
+                kernel_from_inner(kernel, p, ip_KK, sq_exact[i], sq_exact[i]), mask_i
+            )
+            G_KN = kernel_from_inner(kernel, p, ip_KN, sq_exact[i], sq_cols) * (
+                mask_i[:, None] * mask_flat[None, :]
+            )
+            return nystrom_factors(G_KK, G_KN, y_flat, noise)
+
+        factors = jax.vmap(build)(jnp.arange(m))
+    elif gram_mode == "direct":
+        D = _decoded_inner_products(shards, wire_state, gram_backend)
+
+        def build(i):
+            mask_i = shards.mask[i]
+            own_cols = B[:, i].transpose(0, 2, 1)  # block j: Xs_i X̂_j^T
+            own_cols = own_cols.at[i].set(A[i])
+            row_i = jnp.moveaxis(own_cols, 0, 1).reshape(n_pad, m * n_pad)
+            # non-own rows: decoded-vs-decoded, with column block i swapped to
+            # decoded-vs-exact (B[r, i])
+            rows = D.reshape(m, n_pad, m, n_pad).at[:, :, i, :].set(B[:, i])
+            rows = rows.reshape(m, n_pad, m * n_pad).at[i].set(row_i)
+            ip_NN = rows.reshape(m * n_pad, m * n_pad)
+            sq_cols = sq_dec.at[i].set(sq_exact[i]).reshape(-1)
+            G = _mask_gram(
+                kernel_from_inner(kernel, p, ip_NN, sq_cols, sq_cols), mask_flat
+            )
+            return posterior_factors(G, y_flat, noise)
+
+        factors = jax.vmap(build)(jnp.arange(m))
+    else:
+        raise ValueError(f"unknown broadcast gram mode {gram_mode!r}")
+
+    data = {
+        "Xs": shards.X, "mask": shards.mask,
+        "sq_exact": sq_exact, "sq_dec": sq_dec,
+    }
+    data.update(extras)
+    return FittedProtocol(
+        params=p,
+        y=y_flat,
+        factors=factors,
+        data=data,
+        wire=wire_state,
+        protocol="broadcast",
+        kernel=kernel,
+        gram_mode=gram_mode,
+        fuse=fuse,
+        gram_backend=gram_backend,
+        n_center=0,
+        lengths=shards.lengths,
+        block_order=None,
+        bits_per_sample=bits,
+        max_bits=cfg.max_bits,
+        wire_bits=int(wire),
+        impl=cfg.impl,
+        scheme=cfg.scheme,
+        config=cfg,
+    )
+
+
+def _predict_broadcast_experts(art, X_star, sq_star, g_ss, noise):
+    p = art.params
+    Xs, mask = art.data["Xs"], art.data["mask"]
+    sq_exact = art.data["sq_exact"]
+    m, n_pad, _ = Xs.shape
+    C = _star_exact_products(Xs, X_star, art.gram_backend)
+    if art.gram_mode == "nystrom":
+
+        def apply_i(fac, Ci, sqi, mi):
+            G_sK = kernel_from_inner(art.kernel, p, Ci, sq_star, sqi) * mi[None, :]
+            return nystrom_apply(fac, G_sK, g_ss, noise)
+
+        return jax.vmap(apply_i)(art.factors, C, sq_exact, mask)
+    # direct views
+    sq_dec = art.data["sq_dec"]
+    mask_flat = mask.reshape(-1)
+    E = _star_decoded_products(art.wire, X_star, art.gram_backend)
+
+    def apply_i(i, fac):
+        star_cols = E.at[i].set(C[i])  # (m, t, n_pad); block i exact
+        ip_sN = jnp.moveaxis(star_cols, 0, 1).reshape(-1, m * n_pad)
+        sq_cols = sq_dec.at[i].set(sq_exact[i]).reshape(-1)
+        G_sn = kernel_from_inner(art.kernel, p, ip_sN, sq_star, sq_cols) * (
+            mask_flat[None, :]
+        )
+        return posterior_apply(fac, G_sn, g_ss)
+
+    return jax.vmap(apply_i)(jnp.arange(m), art.factors)
+
+
+def _predict_broadcast(art: FittedProtocol, X_star, sq_star, g_ss, noise):
+    mus, s2s = _predict_broadcast_experts(art, X_star, sq_star, g_ss, noise)
+    return FUSIONS.get(art.fuse).fuse(mus, s2s, g_ss + noise)
+
+
+def _update_broadcast(art: FittedProtocol, X_new, y_new, j):
+    if art.gram_mode != "nystrom":
+        raise NotImplementedError(
+            'streaming update of broadcast artifacts supports gram_mode='
+            '"nystrom" only'
+        )
+    p = art.params
+    noise = jnp.exp(p.log_noise)
+    m = len(art.lengths)
+    n_new = X_new.shape[0]
+    decoded, wire_add = _reencode(art, j, X_new)
+    # machine j broadcast its codes once: every peer i sees X̂_new; machine j
+    # itself keeps the exact points.  The new points extend every view's
+    # COLUMNS (the rank-n_pad Nyström bases stay fixed).
+    reps = jnp.broadcast_to(decoded, (m, n_new, decoded.shape[1]))
+    reps = reps.at[j].set(X_new)
+    sq_new = jnp.sum(reps**2, -1)  # (m, n_new)
+    ip_new = jnp.einsum("ind,ied->ine", art.data["Xs"], reps)  # (m, n_pad, n_new)
+    y2 = jnp.concatenate([art.y, y_new])
+    s2 = noise + _JITTER
+
+    def upd(fac, ipn, sqi, sqn, mi):
+        G_KN_new = kernel_from_inner(art.kernel, p, ipn, sqi, sqn) * mi[:, None]
+        W_new = jax.scipy.linalg.solve_triangular(fac["L_KK"], G_KN_new, lower=True)
+        W2 = jnp.concatenate([fac["W"], W_new], axis=1)
+        L_M2 = chol_update_rank(fac["L_M"], W_new)
+        return {
+            "L_KK": fac["L_KK"], "W": W2, "L_M": L_M2,
+            "alpha": nystrom_kinv(W2, L_M2, s2, y2),
+        }
+
+    factors = jax.vmap(upd)(
+        art.factors, ip_new, art.data["sq_exact"], sq_new, art.data["mask"]
+    )
+    return dataclasses.replace(
+        art, y=y2, factors=factors,
+        lengths=_bump_length(art.lengths, j, n_new),
+        wire_bits=art.wire_bits + wire_add,
+    )
+
+
+register_protocol(ProtocolSpec(
+    name="broadcast",
+    fit=_fit_broadcast,
+    predict=_predict_broadcast,
+    update=_update_broadcast,
+    fit_host=fit_broadcast_host,
+))

@@ -1,0 +1,586 @@
+"""§5.1 single-center protocol.
+
+Machine ``center`` is the center: it ships its local second-moment S_c to
+every machine; machine j fits the wire scheme to (Qx=S_j, Qy=S_c) and
+transmits; the center decodes X̂_j, forms the first-block rows of the gram
+matrix (its own block exact), Nyström-completes (eq. 61), trains
+hyperparameters on the completed gram, and serves predictions from one
+cached factor set.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .. import quantizers as Q
+from ..distortion import second_moment
+from ..schemes import PerSymbolScheme
+from ..gp import (
+    GPParams,
+    init_params,
+    gram_fn,
+    kernel_from_inner,
+    prior_diag,
+    posterior_factors,
+    posterior_apply,
+    posterior_from_gram,
+    train_gp,
+)
+from ..nystrom import (
+    nystrom_complete,
+    nystrom_cross,
+    nystrom_posterior,
+    nystrom_factors,
+    nystrom_apply,
+    nystrom_kinv,
+    chol_update_rank,
+    chol_append,
+    _JITTER,
+)
+from ..registry import SCHEMES, ProtocolSpec, register_protocol
+from . import base
+from .base import FittedProtocol, WireState, pad_parts, _bump_length, _reencode
+
+__all__ = ["quantize_to_center", "CenterGP", "single_center_gp"]
+
+
+def _quantize_to_center_host(
+    parts, bits_per_sample: int, center: int = 0, max_bits: int = Q.DEFAULT_MAX_BITS
+):
+    """Serial reference protocol: host-side scipy PerSymbolScheme per machine."""
+    S_c = second_moment(parts[center][0])
+    Xs, ys, sqs, wire = [], [], [], 0
+    for j, (Xj, yj) in enumerate(parts):
+        if j == center:
+            Xs.append(Xj)
+        else:
+            S_j = second_moment(Xj)
+            sch = PerSymbolScheme(bits_per_sample, max_bits).fit(
+                np.asarray(S_j), np.asarray(S_c)
+            )
+            Xs.append(sch.decode(sch.encode(Xj)))
+            wire += sch.wire_bits(Xj.shape[0]) + sch.side_info_bits(Xj.shape[1])
+            # (the optional FITC diagonal costs an extra 32 bits/point of
+            #  exact |x|^2 — accounted by the caller when gram_mode uses it)
+        ys.append(yj)
+        sqs.append(jnp.sum(jnp.asarray(Xj) ** 2, axis=-1))
+    order = [center] + [j for j in range(len(parts)) if j != center]
+    X_recon = jnp.concatenate([Xs[j] for j in order], axis=0)
+    y_all = jnp.concatenate([ys[j] for j in order], axis=0)
+    sq_norms = jnp.concatenate([sqs[j] for j in order], axis=0)
+    n_center = parts[center][0].shape[0]
+    return X_recon, y_all, wire, n_center, sq_norms
+
+
+def _quantize_to_center_batched(
+    parts, bits_per_sample: int, center: int, max_bits: int,
+    impl: str = "batched", scheme: str = "per_symbol",
+):
+    """Batched §5.1 wire: run the registered wire scheme for every machine at
+    once, then assemble the center's gram-row layout (exact center block
+    first).  ``impl="mesh"`` runs the per-symbol wire as one shard_map
+    program on a machines-as-devices mesh (comm.q_all_gather is the channel;
+    ledger from the actual payload)."""
+    shards = pad_parts(parts)
+    m, _, d = shards.X.shape
+    wire_state, wire, extras = SCHEMES.get(scheme).run(
+        shards, bits_per_sample, max_bits, "center", center, impl
+    )
+    order = [center] + [j for j in range(m) if j != center]
+    blocks = [parts[center][0]] + [
+        wire_state.decoded[j, : shards.lengths[j]] for j in order[1:]
+    ]
+    X_recon = jnp.concatenate(blocks, axis=0)
+    y_all = jnp.concatenate([parts[j][1] for j in order], axis=0)
+    sq_norms = jnp.concatenate(
+        [jnp.sum(jnp.asarray(parts[j][0]) ** 2, axis=-1) for j in order], axis=0
+    )
+    return (
+        X_recon, y_all, wire, shards.lengths[center], sq_norms, shards,
+        wire_state, order, extras,
+    )
+
+
+def quantize_to_center(
+    parts, bits_per_sample: int, center: int = 0, impl: str = "batched",
+    max_bits: int = Q.DEFAULT_MAX_BITS,
+):
+    """Run the single-center wire protocol; returns
+    (X_recon, y_all, wire_bits, n_center, sq_norms).
+
+    X_recon stacks the center's exact block first, then every machine's decoded
+    points, matching the paper's gram-row layout.  ``sq_norms`` carries each
+    point's EXACT |x|² (an O(32 n)-bit extra the Snelson–Ghahramani/FITC
+    diagonal correction needs; included in the wire accounting).
+
+    impl: "host" (serial scipy oracle), "batched" (one vmapped jit), or
+    "mesh" (machines are devices; the wire is comm.q_all_gather inside one
+    shard_map program) — all three produce integer-identical wire ledgers and
+    matching reconstructions (tests/test_conformance.py)."""
+    if impl == "host":
+        return _quantize_to_center_host(parts, bits_per_sample, center, max_bits)
+    if impl not in ("batched", "mesh"):
+        raise ValueError(f"unknown impl {impl!r}")
+    out = _quantize_to_center_batched(parts, bits_per_sample, center, max_bits, impl)
+    return out[:5]
+
+
+def _pallas_ip_rows(wire: WireState, block_order, lengths, Xc, Y):
+    """⟨x_i, y_j⟩ for every x in the center gram-row layout (N, p): center rows
+    via the Pallas tiled gram on exact points; reconstructed rows straight
+    from int codes via the fused dequantize+gram kernel —
+    X̂ = dequant(codes) @ T_inv^T, so ⟨x̂, y⟩ = qgram(codes, Y @ T_inv).
+    Shared by the CenterGP fit-time builder and the FittedProtocol serve path."""
+    from ...kernels.gram.ops import gram as gram_kernel
+    from ...kernels.qgram.ops import qgram_batched
+
+    idx = list(block_order[1:])
+    codes = wire.codes[jnp.asarray(idx)]
+    cents = wire.scaled_cents[jnp.asarray(idx)]
+    T_inv = wire.T_inv[jnp.asarray(idx)]
+    top = gram_kernel(Xc, Y)  # (n_c, p)
+    proj = jnp.einsum("pd,mde->mpe", Y, T_inv)  # Y in each decorrelated basis
+    blocks = qgram_batched(codes, cents, proj)  # (m-1, n_pad, p)
+    rows = [top] + [blocks[i, : lengths[j]] for i, j in enumerate(idx)]
+    return jnp.concatenate(rows, axis=0)
+
+
+@dataclasses.dataclass
+class CenterGP:
+    kernel: str
+    params: GPParams
+    X_recon: jnp.ndarray  # center block exact, rest reconstructed
+    y: jnp.ndarray
+    n_center: int
+    wire_bits: int
+    gram_mode: str = "nystrom"
+    sq_norms: jnp.ndarray | None = None  # exact |x|^2 for the FITC diagonal
+    gram_backend: str = "xla"
+    wire: WireState | None = None  # int codes + tables (pallas/qgram path)
+    block_order: tuple | None = None  # non-center machine ids, X_recon order
+    block_lengths: tuple | None = None  # their true row counts
+    _ip_cache: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    def __post_init__(self):
+        if self.gram_backend == "pallas":
+            if self.wire is None:
+                raise ValueError(
+                    'gram_backend="pallas" requires the batched wire protocol '
+                    "(int codes) — use impl=\"batched\""
+                )
+            # materialize the inner-product cache NOW, outside any jit trace:
+            # a cache miss inside train_gp's scan would store a leaked tracer
+            self.warm_ip()
+
+    def _exact_diag(self, params):
+        """k(x_i, x_i) from the EXACT squared norms the machines shipped."""
+        return prior_diag(self.kernel, params, self.sq_norms)
+
+    # -- pallas/qgram inner-product assembly --------------------------------
+
+    def _ip_rows(self, Y):
+        """⟨x_i, y_j⟩ for every x in X_recon layout — see :func:`_pallas_ip_rows`."""
+        return _pallas_ip_rows(
+            self.wire, self.block_order, self.block_lengths,
+            self.X_recon[: self.n_center], Y,
+        )
+
+    def _ip(self, key: str):
+        """Cached param-independent inner products (pallas backend): computed
+        once with the kernels, then reused as constants by every training step
+        and prediction."""
+        if key not in self._ip_cache:
+            Xc = self.X_recon[: self.n_center]
+            if key == "KN":
+                self._ip_cache[key] = self._ip_rows(Xc).T  # (n_c, N)
+            elif key == "NN":
+                self._ip_cache[key] = self._ip_rows(self.X_recon)  # (N, N)
+            elif key == "sq":
+                self._ip_cache[key] = jnp.sum(self.X_recon**2, axis=-1)
+        return self._ip_cache[key]
+
+    def warm_ip(self):
+        """Materialize the inner-product cache eagerly (before train_gp's scan
+        traces _gram) so the Pallas kernels run once, not once per trace."""
+        if self.gram_backend != "pallas":
+            return self
+        self._ip("sq")
+        self._ip("NN" if self.gram_mode == "direct" else "KN")
+        return self
+
+    def _gram_pallas(self, params):
+        sq = self._ip("sq")
+        K = self.n_center
+        if self.gram_mode == "direct":
+            return kernel_from_inner(self.kernel, params, self._ip("NN"), sq, sq)
+        ip_KN = self._ip("KN")
+        G_KK = kernel_from_inner(self.kernel, params, ip_KN[:, :K], sq[:K], sq[:K])
+        G_KN = kernel_from_inner(self.kernel, params, ip_KN, sq[:K], sq)
+        if self.gram_mode == "nystrom_fitc" and self.sq_norms is not None:
+            return nystrom_complete(G_KK, G_KN, exact_diag=self._exact_diag(params))
+        return nystrom_complete(G_KK, G_KN)
+
+    def _gram(self, params):
+        if self.gram_backend == "pallas":
+            return self._gram_pallas(params)
+        k = gram_fn(self.kernel)
+        if self.gram_mode == "direct":
+            # beyond-paper: all blocks straight from the reconstructed points;
+            # converges to the full GP as R -> inf (Nyström caps at rank K)
+            return k(params, self.X_recon)
+        Xc = self.X_recon[: self.n_center]
+        G_KK = k(params, Xc)
+        G_KN = k(params, Xc, self.X_recon)
+        if self.gram_mode == "nystrom_fitc" and self.sq_norms is not None:
+            # Snelson & Ghahramani: make the Nyström diagonal exact (the
+            # correction acts like per-point noise, taming the rank-K inverse)
+            return nystrom_complete(G_KK, G_KN, exact_diag=self._exact_diag(params))
+        return nystrom_complete(G_KK, G_KN)
+
+    def predict(self, X_star):
+        if self.gram_backend == "pallas":
+            return self._predict_pallas(X_star)
+        k = gram_fn(self.kernel)
+        g_ss = jnp.diagonal(k(self.params, X_star, X_star))
+        noise = jnp.exp(self.params.log_noise)
+        if self.gram_mode == "nystrom_fitc":
+            # dense path: the FITC-corrected gram is full-rank (the exact
+            # diagonal acts as per-point noise), so the direct predictive is
+            # well-conditioned.  The test cross-covariance must still pass
+            # through the Nyström map — the raw k(x*, x) against a
+            # Nyström-structured train gram badly mis-weights y-components
+            # outside the rank-K span (was the out-of-range seed bug).
+            Xc = self.X_recon[: self.n_center]
+            G_KK = k(self.params, Xc)
+            G_KN = k(self.params, Xc, self.X_recon)
+            G = nystrom_complete(G_KK, G_KN, exact_diag=self._exact_diag(self.params))
+            G_sn = nystrom_cross(G_KK, G_KN, k(self.params, X_star, Xc))
+            return posterior_from_gram(G, G_sn, g_ss, self.y, noise)
+        if self.gram_mode == "nystrom":
+            # consistent low-rank predictive: the test cross-covariances must
+            # pass through the same Nyström map (G_*N = G_*K G_KK^{-1} G_KN),
+            # else y-components outside the rank-K span are amplified by 1/s^2
+            Xc = self.X_recon[: self.n_center]
+            return nystrom_posterior(
+                k(self.params, Xc), k(self.params, Xc, self.X_recon),
+                self.y, noise, k(self.params, X_star, Xc), g_ss,
+            )
+        G = self._gram(self.params)
+        G_sn = k(self.params, X_star, self.X_recon)
+        return posterior_from_gram(G, G_sn, g_ss, self.y, noise)
+
+    def _predict_pallas(self, X_star):
+        from ...kernels.gram.ops import gram as gram_kernel
+
+        X_star = jnp.asarray(X_star, jnp.float32)
+        p = self.params
+        sq = self._ip("sq")
+        sq_star = jnp.sum(X_star**2, -1)
+        K = self.n_center
+        Xc = self.X_recon[:K]
+        g_ss = prior_diag(self.kernel, p, sq_star)
+        noise = jnp.exp(p.log_noise)
+        ip_KN = self._ip("KN")
+        G_KK = kernel_from_inner(self.kernel, p, ip_KN[:, :K], sq[:K], sq[:K])
+        if self.gram_mode == "nystrom":
+            ip_sK = gram_kernel(X_star, Xc)
+            G_sK = kernel_from_inner(self.kernel, p, ip_sK, sq_star, sq[:K])
+            G_KN = kernel_from_inner(self.kernel, p, ip_KN, sq[:K], sq)
+            return nystrom_posterior(G_KK, G_KN, self.y, noise, G_sK, g_ss)
+        G = self._gram_pallas(p)
+        if self.gram_mode == "nystrom_fitc":
+            # FITC-consistent test covariance (see the xla path)
+            ip_sK = gram_kernel(X_star, Xc)
+            G_sK = kernel_from_inner(self.kernel, p, ip_sK, sq_star, sq[:K])
+            G_KN = kernel_from_inner(self.kernel, p, ip_KN, sq[:K], sq)
+            G_sn = nystrom_cross(G_KK, G_KN, G_sK)
+        else:
+            ip_sN = self._ip_rows(X_star).T  # (t, N)
+            G_sn = kernel_from_inner(self.kernel, p, ip_sN, sq_star, sq)
+        return posterior_from_gram(G, G_sn, g_ss, self.y, noise)
+
+
+def _check_center(cfg, parts):
+    if not cfg.center < len(parts):
+        raise ValueError(
+            f"center={cfg.center} out of range for m={len(parts)} machines"
+        )
+
+
+def fit_center_host(parts, cfg, params: GPParams | None = None) -> CenterGP:
+    """The serial scipy oracle (``impl="host"``): one host-side scheme fit and
+    one dense Cholesky per machine.  Returns the legacy :class:`CenterGP`
+    model (protocol semantics identical to the batched artifact; locked by
+    tests/test_batched_protocol.py / test_conformance.py)."""
+    _check_center(cfg, parts)
+    X_recon, y_all, wire, n_c, sq_norms = _quantize_to_center_host(
+        parts, cfg.bits_per_sample, cfg.center, cfg.max_bits
+    )
+    if cfg.gram_mode == "nystrom_fitc":  # exact |x|^2 side-channel (32 bits/pt)
+        wire += 32 * (X_recon.shape[0] - n_c)
+    model = CenterGP(
+        kernel=cfg.kernel,
+        params=params or init_params(),
+        X_recon=X_recon,
+        y=y_all,
+        n_center=n_c,
+        wire_bits=wire,
+        gram_mode=cfg.gram_mode,
+        sq_norms=sq_norms,
+        gram_backend=cfg.gram_backend,
+    )
+    trained = train_gp(
+        X_recon, y_all, kernel=cfg.kernel, params=model.params, steps=cfg.steps,
+        lr=cfg.lr, gram_override=model._gram, impl=cfg.train_impl,
+    )
+    model.params = trained.params
+    return model
+
+
+def single_center_gp(
+    parts,
+    bits_per_sample: int,
+    kernel: str = "se",
+    steps: int = 150,
+    lr: float = 0.05,
+    params: GPParams | None = None,
+    gram_mode: str = "nystrom",
+    impl: str = "batched",
+    gram_backend: str = "xla",
+    max_bits: int = Q.DEFAULT_MAX_BITS,
+    train_impl: str = "scan",
+):
+    """Full §5.1 protocol: quantize-in, Nyström-complete (eq. 61), train hypers
+    on the completed gram by marginal likelihood, return a predictor.
+
+    This is a thin composition over the serving API: the default
+    ``impl="batched"`` simply returns ``fit(parts, R, protocol="center", ...)``
+    — a :class:`~.base.FittedProtocol` artifact whose ``.predict(X_star)``
+    serves queries from cached factors.  ``impl="host"`` is the serial scipy
+    reference/oracle (returns the legacy :class:`CenterGP`).  New code should
+    prefer ``DistributedGP(DGPConfig(protocol="center", ...))``.
+    """
+    if impl == "host":
+        from ..config import DGPConfig
+
+        cfg = DGPConfig(
+            protocol="center", kernel=kernel, impl="host",
+            gram_backend=gram_backend, gram_mode=gram_mode,
+            bits_per_sample=int(bits_per_sample), max_bits=int(max_bits),
+            steps=int(steps), lr=float(lr), train_impl=train_impl,
+        )
+        return fit_center_host(parts, cfg, params)
+    return base.fit(
+        parts, bits_per_sample, protocol="center", kernel=kernel, steps=steps,
+        lr=lr, params=params, gram_mode=gram_mode, gram_backend=gram_backend,
+        max_bits=max_bits, train_impl=train_impl, impl=impl,
+    )
+
+
+# --------------------------------------------------------------------------
+# fit / predict / update (the registered protocol triple)
+# --------------------------------------------------------------------------
+
+
+def _fit_center(parts, cfg, params: GPParams | None = None) -> FittedProtocol:
+    _check_center(cfg, parts)
+    (X_recon, y_all, wire, n_c, sq_norms, shards, wire_state, order, extras) = (
+        _quantize_to_center_batched(
+            parts, cfg.bits_per_sample, cfg.center, cfg.max_bits, cfg.impl,
+            cfg.scheme,
+        )
+    )
+    kernel, gram_mode, gram_backend = cfg.kernel, cfg.gram_mode, cfg.gram_backend
+    if gram_mode == "nystrom_fitc":  # exact |x|^2 side-channel (32 bits/point)
+        wire += 32 * (X_recon.shape[0] - n_c)
+    builder = CenterGP(
+        kernel=kernel,
+        params=params or init_params(),
+        X_recon=X_recon,
+        y=y_all,
+        n_center=n_c,
+        wire_bits=wire,
+        gram_mode=gram_mode,
+        sq_norms=sq_norms,
+        gram_backend=gram_backend,
+        wire=wire_state,
+        block_order=tuple(order),
+        block_lengths=shards.lengths,
+    )
+    trained = train_gp(
+        X_recon, y_all, kernel=kernel, params=builder.params, steps=cfg.steps,
+        lr=cfg.lr, gram_override=builder._gram, impl=cfg.train_impl,
+    )
+    builder.params = trained.params
+    p = builder.params
+    noise = jnp.exp(p.log_noise)
+    K = n_c
+    Xc = X_recon[:K]
+    # ---- the one-time factorization ----
+    if gram_backend == "pallas":
+        sq_cols = builder._ip("sq")
+        if gram_mode == "direct":
+            G_KK = G_KN = None
+        else:
+            ip_KN = builder._ip("KN")
+            G_KK = kernel_from_inner(kernel, p, ip_KN[:, :K], sq_cols[:K], sq_cols[:K])
+            G_KN = kernel_from_inner(kernel, p, ip_KN, sq_cols[:K], sq_cols)
+    else:
+        sq_cols = jnp.sum(X_recon**2, axis=-1)
+        if gram_mode == "direct":
+            G_KK = G_KN = None
+        else:
+            k = gram_fn(kernel)
+            G_KK = k(p, Xc)
+            G_KN = k(p, Xc, X_recon)
+
+    if gram_mode == "nystrom":
+        factors = nystrom_factors(G_KK, G_KN, y_all, noise)
+    elif gram_mode == "nystrom_fitc":
+        G = nystrom_complete(G_KK, G_KN, exact_diag=builder._exact_diag(p))
+        factors = posterior_factors(G, y_all, noise)
+        # FITC-consistent test map Q_*N = G_*K G_KK^{-1} G_KN needs (L_KK, W)
+        L_KK = jnp.linalg.cholesky(
+            G_KK + _JITTER * jnp.trace(G_KK) / K * jnp.eye(K, dtype=G_KK.dtype)
+        )
+        factors["L_KK"] = L_KK
+        factors["W"] = jax.scipy.linalg.solve_triangular(L_KK, G_KN, lower=True)
+    elif gram_mode == "direct":
+        factors = posterior_factors(builder._gram(p), y_all, noise)
+    else:
+        raise ValueError(f"unknown gram mode {gram_mode!r}")
+
+    data = {"Xc": Xc, "X_recon": X_recon, "sq_cols": sq_cols, "sq_exact": sq_norms}
+    data.update(extras)
+    return FittedProtocol(
+        params=p,
+        y=y_all,
+        factors=factors,
+        data=data,
+        wire=wire_state,
+        protocol="center",
+        kernel=kernel,
+        gram_mode=gram_mode,
+        fuse="",
+        gram_backend=gram_backend,
+        n_center=K,
+        lengths=shards.lengths,
+        block_order=tuple(order),
+        bits_per_sample=cfg.bits_per_sample,
+        max_bits=cfg.max_bits,
+        wire_bits=int(wire),
+        impl=cfg.impl,
+        scheme=cfg.scheme,
+        config=cfg,
+    )
+
+
+def _predict_center(art: FittedProtocol, X_star, sq_star, g_ss, noise):
+    p = art.params
+    Xc = art.data["Xc"]
+    K = art.n_center
+    sq_cols = art.data["sq_cols"]
+    if art.gram_backend == "pallas":
+        from ...kernels.gram.ops import gram as gram_kernel
+
+        ip_sK = gram_kernel(X_star, Xc)
+        G_sK = kernel_from_inner(art.kernel, p, ip_sK, sq_star, sq_cols[:K])
+    else:
+        G_sK = gram_fn(art.kernel)(p, X_star, Xc)
+    if art.gram_mode == "nystrom":
+        return nystrom_apply(art.factors, G_sK, g_ss, noise)
+    if art.gram_mode == "nystrom_fitc":
+        # FITC-consistent test covariance: Q_*N = G_*K G_KK^{-1} G_KN from the
+        # cached (L_KK, W) — raw k(x*, x) against a Nyström-structured train
+        # gram badly mis-weights y-components outside the rank-K span
+        B = jax.scipy.linalg.solve_triangular(
+            art.factors["L_KK"], G_sK.T, lower=True
+        )
+        return posterior_apply(art.factors, B.T @ art.factors["W"], g_ss)
+    # direct
+    if art.gram_backend == "pallas":
+        ip_sN = _artifact_ip_rows(art, X_star).T  # (t, N)
+        G_sn = kernel_from_inner(art.kernel, p, ip_sN, sq_star, sq_cols)
+    else:
+        G_sn = gram_fn(art.kernel)(p, X_star, art.data["X_recon"])
+    return posterior_apply(art.factors, G_sn, g_ss)
+
+
+def _artifact_ip_rows(art, Y):
+    """⟨x_i, y_j⟩ in the artifact's X_recon layout — see :func:`_pallas_ip_rows`."""
+    return _pallas_ip_rows(art.wire, art.block_order, art.lengths, art.data["Xc"], Y)
+
+
+def _update_center(art: FittedProtocol, X_new, y_new, j):
+    if art.gram_backend == "pallas" and art.gram_mode != "nystrom":
+        raise NotImplementedError(
+            "streaming update of pallas-backed center artifacts supports "
+            'gram_mode="nystrom" only (direct/fitc query paths read the '
+            "fit-time wire codes, which update does not extend)"
+        )
+    p = art.params
+    noise = jnp.exp(p.log_noise)
+    n_new = X_new.shape[0]
+    center = art.block_order[0] if art.block_order else 0
+    if j == center:  # the center's own data is local: exact, zero wire cost
+        decoded, wire_add = X_new, 0
+    else:
+        decoded, wire_add = _reencode(art, j, X_new)
+        if art.gram_mode == "nystrom_fitc":
+            wire_add += 32 * n_new  # exact |x|^2 side channel
+    sq_new = jnp.sum(decoded**2, -1)
+    sq_new_exact = jnp.sum(X_new**2, -1)
+    k = gram_fn(art.kernel)
+    Xc = art.data["Xc"]
+    y2 = jnp.concatenate([art.y, y_new])
+    f = dict(art.factors)
+    s2 = noise + _JITTER
+
+    if art.gram_mode == "nystrom":
+        # columns append on the woodbury form: W gains L_KK^{-1} G_K,new and
+        # L_M = chol(s2 I + W W^T) takes a rank-n_new update
+        W_new = jax.scipy.linalg.solve_triangular(
+            f["L_KK"], k(p, Xc, decoded), lower=True
+        )
+        f["W"] = jnp.concatenate([f["W"], W_new], axis=1)
+        f["L_M"] = chol_update_rank(f["L_M"], W_new)
+        f["alpha"] = nystrom_kinv(f["W"], f["L_M"], s2, y2)
+    elif art.gram_mode == "direct":
+        G_on = k(p, art.data["X_recon"], decoded)  # (N, n_new)
+        G_nn = k(p, decoded) + s2 * jnp.eye(n_new, dtype=G_on.dtype)
+        f["L"] = chol_append(f["L"], G_on, G_nn)
+        f["alpha"] = jax.scipy.linalg.cho_solve((f["L"], True), y2)
+    else:  # nystrom_fitc: bordered dense factor through the Nyström map
+        W_new = jax.scipy.linalg.solve_triangular(
+            f["L_KK"], k(p, Xc, decoded), lower=True
+        )
+        G_on = f["W"].T @ W_new
+        corr = jnp.maximum(
+            prior_diag(art.kernel, p, sq_new_exact) - jnp.sum(W_new**2, 0), 0.0
+        )
+        G_nn = W_new.T @ W_new + jnp.diag(corr) + s2 * jnp.eye(n_new)
+        f["L"] = chol_append(f["L"], G_on, G_nn)
+        f["alpha"] = jax.scipy.linalg.cho_solve((f["L"], True), y2)
+        f["W"] = jnp.concatenate([f["W"], W_new], axis=1)
+
+    data = dict(art.data)
+    data["X_recon"] = jnp.concatenate([data["X_recon"], decoded], axis=0)
+    data["sq_cols"] = jnp.concatenate([data["sq_cols"], sq_new])
+    data["sq_exact"] = jnp.concatenate([data["sq_exact"], sq_new_exact])
+    return dataclasses.replace(
+        art, y=y2, factors=f, data=data,
+        lengths=_bump_length(art.lengths, j, n_new),
+        wire_bits=art.wire_bits + wire_add,
+    )
+
+
+register_protocol(ProtocolSpec(
+    name="center",
+    fit=_fit_center,
+    predict=_predict_center,
+    update=_update_center,
+    fit_host=fit_center_host,
+))

@@ -1,0 +1,292 @@
+"""impl="mesh": machines are devices, the collectives are the wire.
+
+The production SPMD substrate shared by every protocol: machines live along a
+1-D ``("machines",)`` device mesh, the per-symbol wire protocol runs as ONE
+``compat.shard_map`` program whose only inter-machine channel is
+``repro.comm.q_all_gather`` (int codes + O(d²) fp32 side info; the ledger is
+computed from what the collective actually moves), per-machine factors are
+built device-local and live SHARDED along the mesh axis, and broadcast/PoE
+serving is one shard_map program with a psum/KL fusion epilogue.  All of it
+is locked to the host/batched impls by tests/test_conformance.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ...compat import shard_map
+from .. import jax_scheme
+from ..gp import (
+    GPParams,
+    gram_fn,
+    kernel_from_inner,
+    prior_diag,
+    posterior_factors,
+    posterior_apply,
+    posterior_from_gram,
+)
+from ..nystrom import nystrom_factors, nystrom_apply
+from ..fusion import kl_fuse_diag
+from ..registry import FUSIONS
+from .base import WireState, _mask_gram, _SERVE_TRACES
+
+__all__ = [
+    "MESH_AXIS",
+    "machine_mesh",
+    "broadcast_gp_mesh",
+]
+
+MESH_AXIS = "machines"
+
+
+def machine_mesh(m: int) -> Mesh:
+    """A 1-D ``("machines",)`` mesh over the first m local devices — the
+    execution substrate of ``impl="mesh"``.  On CPU, force placeholder
+    devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    (tests/conftest.py does; launch/serve_gp.py --mesh does it for you)."""
+    devs = jax.devices()
+    if m > len(devs):
+        raise ValueError(
+            f'impl="mesh" needs one device per machine: m={m} > '
+            f"{len(devs)} available devices (hint: "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={m})"
+        )
+    return Mesh(np.asarray(devs[:m]), (MESH_AXIS,))
+
+
+@functools.lru_cache(maxsize=None)
+def _mesh_wire_fn(m: int, total_bits: int, max_bits: int, mode: str, center: int):
+    """One compiled SPMD wire program per (m, R, mode): every device fits its
+    scheme, the int codes + O(d²) side info move through comm.q_all_gather,
+    and everything the collective moved comes back replicated."""
+    from ...comm import q_all_gather
+
+    mesh = machine_mesh(m)
+
+    def body(x_blk, mask_blk):
+        _, st = q_all_gather(
+            x_blk[0], MESH_AXIS, total_bits, max_bits, mask=mask_blk[0],
+            mode=mode, center=center, return_state=True,
+        )
+        return st
+
+    return jax.jit(shard_map(
+        body, mesh=mesh, in_specs=(P(MESH_AXIS), P(MESH_AXIS)),
+        out_specs=P(), check_vma=False,
+    ))
+
+
+def _run_wire_protocol_mesh(X, mask, total_bits: int, max_bits: int, mode: str, center: int):
+    """The per-symbol wire protocol as a REAL device-mesh program (machines =
+    devices along ``MESH_AXIS``; ``comm.q_all_gather`` is the only
+    inter-machine channel).  Returns the same :class:`~.base.WireState`
+    layout as the batched program (replicated arrays) plus the wire-bit
+    ledger computed from what the collective actually moved — integer-equal
+    to the host oracle's §4 accounting (tests/test_conformance.py)."""
+    m, n_pad, d = X.shape
+    st = _mesh_wire_fn(m, total_bits, max_bits, mode, center)(X, mask)
+    tables = jax_scheme.scheme_tables(total_bits, max_bits)
+    cents = jax_scheme.scaled_centroids_batched(st["rates"], st["sigma"], tables)
+    ws = WireState(
+        st["codes"], st["decoded"], st["T_inv"], st["rates"], st["sigma"],
+        cents, st["T"],
+    )
+    return ws, int(st["wire_bits"])
+
+
+def _shard_machine_axis(tree, mesh: Mesh):
+    """device_put every leaf with its leading (machine) axis along the mesh."""
+    sh = NamedSharding(mesh, P(MESH_AXIS))
+    return jax.tree.map(lambda a: jax.device_put(a, sh), tree)
+
+
+@functools.lru_cache(maxsize=None)
+def _mesh_broadcast_factor_fn(m: int, kernel: str):
+    """Per-machine §5.2 Nyström factor build as ONE shard_map program: device i
+    assembles ITS view (own block exact, peers from the wire reconstructions)
+    and factorizes it locally; the factor set comes out SHARDED along the
+    mesh axis (out_specs P(MESH_AXIS))."""
+    mesh = machine_mesh(m)
+
+    def body(x_blk, mask_blk, dec, sq_dec, mask_flat, y_flat, p):
+        i = jax.lax.axis_index(MESH_AXIS)
+        x, mi = x_blk[0], mask_blk[0]
+        n_pad = x.shape[0]
+        noise = jnp.exp(p.log_noise)
+        sqx = jnp.sum(x**2, -1)
+        cols = dec.at[i].set(x)  # own (exact) block replaces its reconstruction
+        sq_cols = sq_dec.at[i].set(sqx).reshape(-1)
+        ip_KK = x @ x.T
+        ip_KN = jnp.moveaxis(
+            jnp.einsum("nd,jNd->jnN", x, cols), 0, 1
+        ).reshape(n_pad, m * n_pad)
+        G_KK = _mask_gram(kernel_from_inner(kernel, p, ip_KK, sqx, sqx), mi)
+        G_KN = kernel_from_inner(kernel, p, ip_KN, sqx, sq_cols) * (
+            mi[:, None] * mask_flat[None, :]
+        )
+        fac = nystrom_factors(G_KK, G_KN, y_flat, noise)
+        return jax.tree.map(lambda a: a[None], fac)
+
+    return jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(P(MESH_AXIS), P(MESH_AXIS), P(), P(), P(), P(), P()),
+        out_specs=P(MESH_AXIS), check_vma=False,
+    ))
+
+
+@functools.lru_cache(maxsize=None)
+def _mesh_poe_factor_fn(m: int, kernel: str):
+    """Zero-rate expert factorization, one dense Cholesky per device (own
+    shard only — no wire at all), factors sharded along the mesh axis."""
+    mesh = machine_mesh(m)
+
+    def body(x_blk, y_blk, mask_blk, p):
+        x, yj, mj = x_blk[0], y_blk[0], mask_blk[0]
+        noise = jnp.exp(p.log_noise)
+        sqj = jnp.sum(x**2, -1)
+        G = _mask_gram(kernel_from_inner(kernel, p, x @ x.T, sqj, sqj), mj)
+        fac = posterior_factors(G, yj * mj, noise)
+        return jax.tree.map(lambda a: a[None], fac)
+
+    return jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(P(MESH_AXIS), P(MESH_AXIS), P(MESH_AXIS), P()),
+        out_specs=P(MESH_AXIS), check_vma=False,
+    ))
+
+
+# --------------------------------------------------------------------------
+# mesh serving: one shard_map program with a psum fusion epilogue
+# --------------------------------------------------------------------------
+
+
+def _predict_mesh_impl(art, X_star):
+    """Mesh serving: ONE shard_map program — each device applies ITS machine's
+    cached factors to the query batch (triangular solves only, exactly like
+    the batched path) and the predictives meet in a psum/KL fusion epilogue
+    (eqs. 62-64 as two psums; the PoE combiners as precision-weighted psums;
+    any registered fusion with a ``fuse_psum`` form plugs in).  Factors/data
+    stay sharded along the mesh axis throughout."""
+    _SERVE_TRACES[art.protocol] += 1  # runs at trace time only
+    m = len(art.lengths)
+    mesh = machine_mesh(m)
+    has_extra = "X_extra" in art.data
+    fusion = FUSIONS.get(art.fuse)
+    if fusion.fuse_psum is None:
+        raise NotImplementedError(
+            f"fusion {art.fuse!r} has no mesh (psum) form — serve the "
+            "checkpointed single-host artifact instead"
+        )
+
+    def body(fac, Xs_blk, mask_blk, sq_blk, em_blk, Xe, X_star, p):
+        fac_i = jax.tree.map(lambda a: a[0], fac)
+        Xi, mi, sqi = Xs_blk[0], mask_blk[0], sq_blk[0]
+        noise = jnp.exp(p.log_noise)
+        sq_star = jnp.sum(X_star**2, -1)
+        g_ss = prior_diag(art.kernel, p, sq_star)
+        G_sK = kernel_from_inner(
+            art.kernel, p, X_star @ Xi.T, sq_star, sqi
+        ) * mi[None, :]
+        if art.protocol == "broadcast":
+            mu_i, s2_i = nystrom_apply(fac_i, G_sK, g_ss, noise)
+            return fusion.fuse_psum(mu_i, s2_i, g_ss + noise, MESH_AXIS)
+        # poe: streamed extras (update()) ride along as appended columns
+        G_sn = G_sK
+        if has_extra:
+            sq_e = jnp.sum(Xe**2, -1)
+            G_e = kernel_from_inner(art.kernel, p, X_star @ Xe.T, sq_star, sq_e)
+            G_sn = jnp.concatenate([G_sn, G_e * em_blk[0][None, :]], axis=1)
+        mu_i, s2_i = posterior_apply(fac_i, G_sn, g_ss)
+        return fusion.fuse_psum(mu_i, s2_i, g_ss + noise, MESH_AXIS)
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(
+            P(MESH_AXIS), P(MESH_AXIS), P(MESH_AXIS), P(MESH_AXIS),
+            P(MESH_AXIS), P(), P(), P(),
+        ),
+        out_specs=(P(), P()), check_vma=False,
+    )
+    em = art.data["extra_mask"] if has_extra else art.data["mask"][:, :0]
+    Xe = art.data["X_extra"] if has_extra else X_star[:0]
+    return fn(
+        art.factors, art.data["Xs"], art.data["mask"], art.data["sq_exact"],
+        em, Xe, X_star, art.params,
+    )
+
+
+_predict_mesh_jit = jax.jit(_predict_mesh_impl)
+
+
+# --------------------------------------------------------------------------
+# legacy one-shot mesh entry point (absorbed from the old core.mesh_gp)
+# --------------------------------------------------------------------------
+
+
+def broadcast_gp_mesh(
+    mesh,
+    axis: str,
+    X,
+    y,
+    X_star,
+    params: GPParams,
+    *,
+    kernel: str = "se",
+    bits_per_sample: int = 32,
+    max_bits: int = 8,
+):
+    """One-shot §5.2 broadcast on a caller-supplied mesh: devices along
+    ``axis`` are machines, the wire is ``comm.q_all_gather`` (int codes),
+    each device solves its dense local view, and the per-point predictives
+    are KL-fused (eqs. 62-64) — all inside one jit/shard_map program.
+
+    This is the original mesh prototype, kept for fixed-hyper one-shot runs
+    (no training, no serving artifact).  The first-class mesh path is
+    ``fit(..., impl="mesh")`` — it adds hyperparameter training, Nyström
+    factor caching sharded along the mesh axis, streaming
+    :func:`~.base.update`, and checkpointing.
+
+    X: (n, d) globally, sharded over ``axis`` on dim 0 (n % n_devices == 0);
+    y: (n,) likewise; X_star: (t, d) replicated.  Returns fused (mean, var).
+    """
+    from ...comm import q_all_gather
+
+    k = gram_fn(kernel)
+
+    def local_predict(X_all_blocks, y_all, own_idx, xs_l):
+        """One device's §5.2 view: own block exact, peers reconstructed."""
+        m, n_loc, d = X_all_blocks.shape
+        # reorder so the exact (own) block is first — matches the Nyström layout
+        order = jnp.argsort(
+            jnp.where(jnp.arange(m) == own_idx, -1, jnp.arange(m))
+        )
+        Xv = X_all_blocks[order].reshape(m * n_loc, d)
+        yv = y_all[order].reshape(m * n_loc)
+        G = k(params, Xv)
+        G_sn = k(params, xs_l, Xv)
+        g_ss = jnp.diagonal(k(params, xs_l, xs_l))
+        return posterior_from_gram(G, G_sn, g_ss, yv, jnp.exp(params.log_noise))
+
+    def body(x_l, y_l, xs_l):
+        idx = jax.lax.axis_index(axis)
+        # the paper's wire: quantized codes, own block exact (repro.comm)
+        x_blocks = q_all_gather(x_l, axis, bits_per_sample, max_bits)
+        y_all = jax.lax.all_gather(y_l, axis)  # targets are scalars (unquantized)
+        mu_i, s2_i = local_predict(x_blocks, y_all, idx, xs_l)
+        # KL-barycenter fusion (eqs. 62-64) across the machine axis
+        mus = jax.lax.all_gather(mu_i, axis)
+        s2s = jax.lax.all_gather(s2_i, axis)
+        return kl_fuse_diag(mus, s2s)
+
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis, None), P(axis), P(None, None)),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+    return jax.jit(fn)(X, y, X_star)

@@ -1,0 +1,276 @@
+"""Zero-rate baselines: PoE / gPoE / BCM / rBCM as a protocol.
+
+Each machine trains on its local data only (the block-diagonal-gram
+assumption); predictions are combined by a registered fusion rule (the PoE
+family).  Nothing crosses the wire, so the ledger is 0 — this is the zero
+point of the paper's rate/distortion axis the quantized protocols beat.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..gp import (
+    GPParams,
+    gram_fn,
+    kernel_from_inner,
+    posterior_factors,
+    posterior_apply,
+    posterior_from_gram,
+    train_gp,
+)
+from ..nystrom import chol_append, _JITTER
+from ..registry import FUSIONS, ProtocolSpec, register_protocol
+from . import base, mesh
+from .base import FittedProtocol, pad_parts, _bump_length, _mask_gram
+
+__all__ = ["poe_baseline", "HostPoEGP", "fit_poe_host"]
+
+
+# --------------------------------------------------------------------------
+# the serial host oracle
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class HostPoEGP:
+    """The ``impl="host"`` oracle: shared hypers trained on machine 0's local
+    data, one dense solve per expert at predict time (m serial dispatches)."""
+
+    kernel: str
+    params: GPParams
+    parts: list
+    method: str
+
+    def predict(self, X_star):
+        p = self.params
+        k = gram_fn(self.kernel)
+        noise = jnp.exp(p.log_noise)
+        X_star = jnp.asarray(X_star, jnp.float32)
+
+        @jax.jit
+        def expert(Xj, yj):
+            G = k(p, Xj)
+            G_sn = k(p, X_star, Xj)
+            g_ss = jnp.diagonal(k(p, X_star, X_star))
+            return posterior_from_gram(G, G_sn, g_ss, yj, noise)
+
+        mus, s2s = zip(*[expert(Xj, yj) for Xj, yj in self.parts])
+        mus, s2s = jnp.stack(mus), jnp.stack(s2s)
+        prior = jnp.diagonal(k(p, X_star, X_star)) + noise
+        return FUSIONS.get(self.method).fuse(mus, s2s, prior)
+
+
+def fit_poe_host(parts, cfg, params=None) -> HostPoEGP:
+    # shared hypers trained on machine 0's local data (standard practice:
+    # the PoE family shares one hyperparameter set across experts)
+    trained = train_gp(
+        parts[0][0], parts[0][1], kernel=cfg.kernel, params=params,
+        steps=cfg.steps, lr=cfg.lr, impl=cfg.train_impl,
+    )
+    return HostPoEGP(
+        kernel=cfg.kernel, params=trained.params, parts=list(parts),
+        method=cfg.fusion,
+    )
+
+
+def poe_baseline(
+    parts,
+    X_star,
+    kernel: str = "se",
+    method: str = "rbcm",
+    steps: int = 150,
+    lr: float = 0.05,
+    impl: str = "batched",
+    gram_backend: str = "xla",
+    train_impl: str = "scan",
+):
+    """Zero-rate baselines: each machine trains on its local data only (the
+    block-diagonal-gram assumption), predictions combined by PoE/BCM/rBCM.
+
+    ``impl="batched"`` (default) is a thin serving composition:
+    ``fit(parts, 0, protocol="poe", method=...)`` factorizes all m experts
+    under one vmapped Cholesky on padded shards, and :func:`~.base.predict`
+    combines the per-expert posteriors.  Call ``fit`` (or the
+    ``DistributedGP`` facade) directly to keep the artifact."""
+    if impl == "host":
+        if gram_backend == "pallas":
+            raise ValueError('gram_backend="pallas" requires impl="batched"')
+        from ..config import DGPConfig
+
+        cfg = DGPConfig(
+            protocol="poe", kernel=kernel, fusion=method, impl="host",
+            bits_per_sample=0, steps=int(steps), lr=float(lr),
+            train_impl=train_impl,
+        )
+        model = fit_poe_host(parts, cfg)
+        mu, s2 = model.predict(X_star)
+        return mu, s2, model.params
+
+    art = base.fit(
+        parts, 0, protocol="poe", kernel=kernel, steps=steps, lr=lr,
+        method=method, gram_backend=gram_backend, train_impl=train_impl,
+        impl=impl,
+    )
+    mu, s2 = base.predict(art, X_star)
+    return mu, s2, art.params
+
+
+# --------------------------------------------------------------------------
+# fit / predict / update (the registered protocol triple)
+# --------------------------------------------------------------------------
+
+
+def _fit_poe(parts, cfg, params=None) -> FittedProtocol:
+    # shared hypers trained on machine 0's local data (standard practice: the
+    # PoE family shares one hyperparameter set across experts)
+    kernel, method, gram_backend = cfg.kernel, cfg.fusion, cfg.gram_backend
+    trained = train_gp(
+        parts[0][0], parts[0][1], kernel=kernel, params=params,
+        steps=cfg.steps, lr=cfg.lr, impl=cfg.train_impl,
+    )
+    p = trained.params
+    noise = jnp.exp(p.log_noise)
+    shards = pad_parts(parts)
+    sq_exact = jnp.sum(shards.X**2, -1)
+    m = len(parts)
+    if cfg.impl == "mesh":
+        if gram_backend != "xla":
+            raise NotImplementedError(
+                'impl="mesh" assembles grams device-local (gram_backend="xla")'
+            )
+        msh = mesh.machine_mesh(m)
+        factors = mesh._mesh_poe_factor_fn(m, kernel)(
+            shards.X, shards.y, shards.mask, p
+        )
+        data = mesh._shard_machine_axis(
+            {"Xs": shards.X, "mask": shards.mask, "sq_exact": sq_exact}, msh
+        )
+        return FittedProtocol(
+            params=p, y=shards.y * shards.mask, factors=factors, data=data,
+            wire=None, protocol="poe", kernel=kernel, gram_mode="dense",
+            fuse=method, gram_backend=gram_backend, n_center=0,
+            lengths=shards.lengths, block_order=None, bits_per_sample=0,
+            max_bits=0, wire_bits=0, impl="mesh", scheme=cfg.scheme,
+            config=cfg,
+        )
+    if gram_backend == "pallas":
+        from ...kernels.gram.ops import gram as gram_kernel
+
+        A = jax.vmap(lambda a: gram_kernel(a, a))(shards.X)
+    else:
+        A = jnp.einsum("ind,imd->inm", shards.X, shards.X)
+
+    def build(ipA, sqj, yj, mask_j):
+        G = _mask_gram(kernel_from_inner(kernel, p, ipA, sqj, sqj), mask_j)
+        return posterior_factors(G, yj * mask_j, noise)
+
+    factors = jax.vmap(build)(A, sq_exact, shards.y, shards.mask)
+    return FittedProtocol(
+        params=p,
+        y=shards.y * shards.mask,
+        factors=factors,
+        data={"Xs": shards.X, "mask": shards.mask, "sq_exact": sq_exact},
+        wire=None,
+        protocol="poe",
+        kernel=kernel,
+        gram_mode="dense",
+        fuse=method,
+        gram_backend=gram_backend,
+        n_center=0,
+        lengths=shards.lengths,
+        block_order=None,
+        bits_per_sample=0,
+        max_bits=0,
+        wire_bits=0,
+        impl=cfg.impl,
+        scheme=cfg.scheme,
+        config=cfg,
+    )
+
+
+def _predict_poe_experts(art, X_star, sq_star, g_ss):
+    from .broadcast import _star_exact_products
+
+    p = art.params
+    Xs, mask = art.data["Xs"], art.data["mask"]
+    sq_exact = art.data["sq_exact"]
+    C = _star_exact_products(Xs, X_star, art.gram_backend)
+    has_extra = "X_extra" in art.data
+    if has_extra:
+        Xe = art.data["X_extra"]
+        C_e = X_star @ Xe.T  # (t, e); streamed extras ride the xla path
+        sq_e = jnp.sum(Xe**2, -1)
+        G_e = kernel_from_inner(art.kernel, p, C_e, sq_star, sq_e)
+
+    def apply_j(fac, Cj, sqj, mj, emj):
+        G_sn = kernel_from_inner(art.kernel, p, Cj, sq_star, sqj) * mj[None, :]
+        if has_extra:
+            G_sn = jnp.concatenate([G_sn, G_e * emj[None, :]], axis=1)
+        return posterior_apply(fac, G_sn, g_ss)
+
+    em = art.data["extra_mask"] if has_extra else mask[:, :0]
+    return jax.vmap(apply_j)(art.factors, C, sq_exact, mask, em)
+
+
+def _predict_poe(art: FittedProtocol, X_star, sq_star, g_ss, noise):
+    mus, s2s = _predict_poe_experts(art, X_star, sq_star, g_ss)
+    return FUSIONS.get(art.fuse).fuse(mus, s2s, g_ss + noise)
+
+
+def _update_poe(art: FittedProtocol, X_new, y_new, j):
+    p = art.params
+    noise = jnp.exp(p.log_noise)
+    m = len(art.lengths)
+    n_new = X_new.shape[0]
+    k = gram_fn(art.kernel)
+    s2 = noise + _JITTER
+    Xs, mask = art.data["Xs"], art.data["mask"]
+    # zero-rate: the points are machine j's own exact data; other experts
+    # never see them (valid only on row j), matching the fit-time masking
+    valid = jnp.zeros((m, n_new), jnp.float32).at[j].set(1.0)
+    Xe_old = art.data.get("X_extra")
+    em_old = art.data.get("extra_mask")
+    ye_old = art.data.get("y_extra")
+
+    def upd(fac, Xi, sqi, mi, vi, emi, yi, yei):
+        G_on = k(p, Xi, X_new) * (mi[:, None] * vi[None, :])
+        if Xe_old is not None:
+            G_on_e = k(p, Xe_old, X_new) * (emi[:, None] * vi[None, :])
+            G_on = jnp.concatenate([G_on, G_on_e], axis=0)
+        G_nn = _mask_gram(k(p, X_new), vi) + s2 * jnp.eye(n_new)
+        L2 = chol_append(fac["L"], G_on, G_nn)
+        y_cols = jnp.concatenate(
+            [yi] + ([yei * emi] if Xe_old is not None else []) + [y_new * vi]
+        )
+        return {"L": L2, "alpha": jax.scipy.linalg.cho_solve((L2, True), y_cols)}
+
+    em_arg = em_old if em_old is not None else mask[:, :0]
+    factors = jax.vmap(
+        lambda fac, Xi, sqi, mi, vi, emi, yi: upd(fac, Xi, sqi, mi, vi, emi, yi, ye_old)
+    )(art.factors, Xs, art.data["sq_exact"], mask, valid, em_arg, art.y)
+    data = dict(art.data)
+    data["X_extra"] = (
+        jnp.concatenate([Xe_old, X_new]) if Xe_old is not None else X_new
+    )
+    data["extra_mask"] = (
+        jnp.concatenate([em_old, valid], axis=1) if em_old is not None else valid
+    )
+    data["y_extra"] = (
+        jnp.concatenate([ye_old, y_new]) if ye_old is not None else y_new
+    )
+    return dataclasses.replace(
+        art, factors=factors, data=data,
+        lengths=_bump_length(art.lengths, j, n_new),
+    )
+
+
+register_protocol(ProtocolSpec(
+    name="poe",
+    fit=_fit_poe,
+    predict=_predict_poe,
+    update=_update_poe,
+    fit_host=fit_poe_host,
+))

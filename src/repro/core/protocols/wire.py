@@ -1,0 +1,205 @@
+"""Pluggable wire schemes: what actually crosses the machine boundary.
+
+The paper's central design variable is the *scheme on the wire* — §4 develops
+three: the optimal vector-quantization test channel (Theorem 2), the
+near-optimal per-symbol scheme (§4.2), and dimension reduction — and §5's
+protocols are parametric in it.  This module makes the first two selectable
+by name (``repro.core.registry.SCHEMES``):
+
+* ``per_symbol`` — the §4.2 scheme: decorrelating transform, greedy
+  Algorithm-1 bit allocation, int codes on the wire.  Batched impl runs one
+  vmapped fit/encode/decode jit (:func:`_run_wire_protocol`); mesh impl runs
+  the same math through ``repro.comm.q_all_gather`` (see :mod:`.mesh`).
+* ``vq`` — the §4.1 Theorem-2 *optimal* test channel, promoted from an
+  offline rate/distortion curve (``core.rate_distortion``) to a runnable
+  wire scheme: each machine builds the achieving conditional
+  ``x̂ | x ~ N(Ax, W)`` at the distortion its bit budget buys
+  (``distortion_for_rate``), and the receiver sees samples from it.  Block
+  coding with 2^{nR} codebooks is intractable (as the paper notes), so the
+  channel is *simulated* — but the ledger is honest: each machine is charged
+  ``ceil(n_j · R_j)`` wire bits at the channel's ACHIEVED Theorem-1 rate
+  ``R_j ≈ R`` plus the same O(2d²) fp32 side info as per-symbol (the
+  receiver needs the channel/transform parameters either way).
+
+Every scheme returns the shared :class:`~.base.WireState` layout plus an
+``extras`` dict of scheme-private arrays that ride in the artifact's
+``data`` (the vq channel state lives there so streaming
+:func:`~.base.update` can re-encode new symbols under the FROZEN channel).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .. import jax_scheme
+from ..rate_distortion import distortion_for_rate, make_test_channel, sample_test_channel
+from ..registry import SchemeSpec, register_scheme
+from .base import PaddedShards, WireState, _wire_bits
+
+__all__ = ["_run_wire_protocol", "PER_SYMBOL", "VQ"]
+
+
+# --------------------------------------------------------------------------
+# per_symbol — §4.2 int codes (the default)
+# --------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("total_bits", "max_bits", "mode", "center"))
+def _run_wire_protocol(X, mask, total_bits: int, max_bits: int, mode: str, center: int):
+    """Fit + encode + decode for EVERY machine under one jit: a single batched
+    eigh pair (fit), one batched quantize and one batched dequantize.
+
+    mode="center": every machine targets the center's covariance (§5.1);
+    mode="broadcast": machine j targets the sum of the others' (§5.2)."""
+    m, n_pad, d = X.shape
+    n = jnp.maximum(mask.sum(axis=1), 1.0)
+    S = jnp.einsum("mnd,mne->mde", X, X) / n[:, None, None]  # padded rows are 0
+    if mode == "center":
+        Qy = jnp.broadcast_to(S[center], (m, d, d))
+    elif mode == "broadcast":
+        Qy = jnp.sum(S, axis=0)[None] - S
+    else:
+        raise ValueError(f"unknown wire mode {mode!r}")
+    cap = jax_scheme.codebook_cap(total_bits, max_bits)
+    tables = jax_scheme.scheme_tables(total_bits, max_bits)
+    states = jax_scheme.fit_scheme_batched(S, Qy, total_bits, cap)
+    codes = jax.vmap(lambda st, x: jax_scheme.encode(st, x, tables))(states, X)
+    decoded = jax.vmap(lambda st, c: jax_scheme.decode(st, c, tables))(states, codes)
+    decoded = decoded * mask[..., None]
+    codes = jnp.where(mask[..., None] > 0, codes, -1)
+    cents = jax.vmap(lambda st: jax_scheme.scaled_centroids(st, tables))(states)
+    return WireState(
+        codes, decoded, states["T_inv"], states["rates"], states["sigma"], cents,
+        states["T"],
+    )
+
+
+def _per_symbol_run(
+    shards: PaddedShards, bits: int, max_bits: int, mode: str, center: int,
+    impl: str,
+):
+    m, n_pad, d = shards.X.shape
+    if impl == "mesh":
+        from . import mesh
+
+        ws, wire = mesh._run_wire_protocol_mesh(
+            shards.X, shards.mask, bits, max_bits, mode, center
+        )
+    else:
+        ws = _run_wire_protocol(shards.X, shards.mask, bits, max_bits, mode, center)
+        wire = _wire_bits(
+            ws.rates, shards.lengths, d, skip=center if mode == "center" else None
+        )
+    return ws, int(wire), {}
+
+
+def _per_symbol_reencode(art, machine: int, X_new):
+    """(X̂, wire_bits) for new symbols under machine's frozen codebooks."""
+    w = art.wire
+    state = {
+        "T": w.T[machine], "T_inv": w.T_inv[machine],
+        "sigma": w.sigma[machine], "rates": w.rates[machine],
+    }
+    tables = jax_scheme.scheme_tables(art.bits_per_sample, art.max_bits)
+    _, decoded = jax_scheme.roundtrip(state, X_new, tables)
+    bits = int(np.asarray(w.rates[machine]).sum()) * X_new.shape[0]
+    return decoded, bits
+
+
+PER_SYMBOL = register_scheme(SchemeSpec(
+    name="per_symbol", run=_per_symbol_run, reencode=_per_symbol_reencode,
+))
+
+
+# --------------------------------------------------------------------------
+# vq — the §4.1 Theorem-2 optimal test channel as a wire scheme
+# --------------------------------------------------------------------------
+
+
+def _vq_run(
+    shards: PaddedShards, bits: int, max_bits: int, mode: str, center: int,
+    impl: str,
+):
+    if impl != "batched":
+        raise NotImplementedError(
+            'scheme="vq" runs on impl="batched" only (the test channel is '
+            "simulated host-side; there are no int codes for the mesh "
+            "collectives to carry)"
+        )
+    X = np.asarray(shards.X, np.float64)
+    m, n_pad, d = X.shape
+    # honor the per-symbol allocator's ceiling: max_bits caps each dimension's
+    # rate, so no scheme can spend more than d*max_bits per sample — clamping
+    # the target here keeps the two schemes' budgets matched when it binds
+    bits = min(bits, d * max_bits)
+    L = shards.lengths
+    S = [X[j, : L[j]].T @ X[j, : L[j]] / max(L[j], 1) for j in range(m)]
+    S_tot = sum(S)
+
+    decoded = np.zeros((m, n_pad, d), np.float32)
+    A = np.zeros((m, d, d), np.float32)
+    W_half = np.zeros((m, d, d), np.float32)
+    rate_bits = np.zeros((m,), np.float32)
+    wire = 0
+    key = jax.random.PRNGKey(0)
+    for j in range(m):
+        if mode == "center" and j == center:
+            continue  # never transmits: its block stays exact, update() is free
+        Qy = S[center] if mode == "center" else S_tot - S[j]
+        D = distortion_for_rate(S[j], Qy, float(bits))
+        ch = make_test_channel(S[j], Qy, D)
+        xh = sample_test_channel(
+            ch, X[j, : L[j]].astype(np.float32), jax.random.fold_in(key, j)
+        )
+        decoded[j, : L[j]] = np.asarray(xh, np.float32)
+        A[j] = ch.A
+        W_half[j] = ch.W_half
+        rate_bits[j] = ch.rate_bits
+        # honest accounting at the channel's ACHIEVED rate (≈ the target
+        # R by construction) + the per-symbol-matched O(2d²) side info
+        wire += math.ceil(L[j] * float(ch.rate_bits)) + 2 * d * d * 32
+
+    eye = np.broadcast_to(np.eye(d, dtype=np.float32), (m, d, d))
+    ws = WireState(
+        codes=jnp.full((m, n_pad, d), -1, jnp.int32),
+        decoded=jnp.asarray(decoded),
+        T_inv=jnp.asarray(eye),
+        rates=jnp.zeros((m, d), jnp.int32),
+        sigma=jnp.ones((m, d), jnp.float32),
+        scaled_cents=jnp.zeros((m, d, 1), jnp.float32),
+        T=jnp.asarray(eye),
+    )
+    extras = {
+        "vq_A": jnp.asarray(A),
+        "vq_W_half": jnp.asarray(W_half),
+        "vq_rate_bits": jnp.asarray(rate_bits),
+    }
+    return ws, int(wire), extras
+
+
+def _vq_reencode(art, machine: int, X_new):
+    """Sample the FROZEN fit-time test channel for new symbols: the streaming
+    ledger grows by the channel's achieved rate per point, mirroring the
+    per-symbol frozen-codebook economics."""
+    if "vq_A" not in art.data:
+        raise ValueError(
+            "artifact has no vq channel state (was it fitted with "
+            'scheme="vq"?)'
+        )
+    A = art.data["vq_A"][machine]
+    W_half = art.data["vq_W_half"][machine]
+    rate = float(np.asarray(art.data["vq_rate_bits"][machine]))
+    X_new = jnp.asarray(X_new, jnp.float32)
+    # deterministic fresh noise: fold the ledger state so successive updates
+    # draw independent channel samples without carrying a key around
+    key = jax.random.fold_in(jax.random.PRNGKey(1), art.wire_bits + machine)
+    noise = jax.random.normal(key, X_new.shape, dtype=X_new.dtype)
+    decoded = X_new @ A.T + noise @ W_half.T
+    return decoded, math.ceil(X_new.shape[0] * rate)
+
+
+VQ = register_scheme(SchemeSpec(name="vq", run=_vq_run, reencode=_vq_reencode))

@@ -1,0 +1,147 @@
+"""Name registries backing the :class:`~repro.core.api.DistributedGP` API.
+
+The paper's framing is that the *scheme on the wire* is the design variable:
+optimal vector quantization (§4.1), near-optimal per-symbol (§4.2), and the
+zero-rate PoE/BCM baselines are points on one rate/distortion axis.  The
+registries make that axis (and the other protocol knobs) first-class: kernels,
+wire schemes, fusion rules, and protocols are looked up by name, so a new one
+plugs into every entry point — ``DGPConfig`` validation, ``fit``/``predict``,
+the benchmarks — by registering instead of by editing dispatch chains.
+
+Builtins register themselves at import time:
+
+* kernels ``se`` / ``linear`` — :mod:`repro.core.gp`;
+* fusions ``kl`` (eqs. 62-64) and the PoE-family combiners ``poe`` / ``gpoe``
+  / ``bcm`` / ``rbcm`` — :mod:`repro.core.fusion` / :mod:`repro.core.poe`;
+* wire schemes ``per_symbol`` (§4.2) and ``vq`` (the §4.1 Theorem-2 test
+  channel) — :mod:`repro.core.protocols.wire`;
+* protocols ``center`` / ``broadcast`` / ``poe`` —
+  :mod:`repro.core.protocols`.
+
+This module is dependency-free so every layer (``gp``, ``fusion``, ``poe``,
+``protocols``) can import it without cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+
+class Registry:
+    """A named table of pluggable components.
+
+    ``register`` rejects duplicates (a silent overwrite would make the
+    "which scheme actually ran?" question unanswerable); ``get`` raises a
+    ``ValueError`` that lists the known names, so a typo'd config fails with
+    the menu in hand.
+    """
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._entries: dict[str, Any] = {}
+
+    def register(self, name: str, entry: Any) -> Any:
+        if not isinstance(name, str) or not name:
+            raise ValueError(f"{self.kind} name must be a non-empty string")
+        if name in self._entries:
+            raise ValueError(
+                f"duplicate {self.kind} {name!r}: already registered "
+                f"(known {self.kind}s: {', '.join(self.names())})"
+            )
+        self._entries[name] = entry
+        return entry
+
+    def get(self, name: str) -> Any:
+        try:
+            return self._entries[name]
+        except KeyError:
+            raise ValueError(
+                f"unknown {self.kind} {name!r}: known {self.kind}s are "
+                f"{', '.join(self.names())}"
+            ) from None
+
+    def names(self) -> tuple[str, ...]:
+        return tuple(sorted(self._entries))
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+    def __iter__(self):
+        return iter(self.names())
+
+
+# -- entry shapes ------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """A GP kernel: dense gram builder plus the inner-product/diagonal forms
+    the quantized-wire paths consume (see ``gp.kernel_from_inner``)."""
+
+    name: str
+    gram: Callable  # (params, X, X2=None, *, backend="xla") -> (n, n2)
+    from_inner: Callable  # (params, ip, sq_x, sq_x2) -> gram block
+    prior_diag: Callable  # (params, sq_x) -> k(x, x) vector
+
+
+@dataclasses.dataclass(frozen=True)
+class FusionSpec:
+    """How per-machine predictive Gaussians meet: ``fuse`` on stacked
+    ``(m, t)`` predictives (batched/host impls), ``fuse_psum`` as a mesh
+    collective epilogue (``None`` if the fusion has no mesh form)."""
+
+    name: str
+    fuse: Callable  # (mus, s2s, prior_var) -> (mu, s2)
+    fuse_psum: Callable | None = None  # (mu_i, s2_i, prior_var, axis) -> ...
+
+
+@dataclasses.dataclass(frozen=True)
+class SchemeSpec:
+    """A wire scheme: how machine shards become what the receiver sees.
+
+    ``run`` executes the fit-time wire protocol for every machine at once and
+    returns ``(WireState, wire_bits, extras)`` — the ledger is the scheme's
+    honest bit accounting, ``extras`` are scheme-private arrays stashed in the
+    artifact's ``data`` dict (e.g. the vq test-channel parameters).
+    ``reencode`` encodes NEW symbols under the frozen fit-time state for
+    streaming :func:`~repro.core.protocols.base.update`."""
+
+    name: str
+    run: Callable  # (shards, bits, max_bits, mode, center, impl) -> (ws, bits, extras)
+    reencode: Callable  # (art, machine, X_new) -> (decoded, wire_bits_added)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProtocolSpec:
+    """A distributed-GP protocol: the fit/predict/update triple the facade
+    dispatches on.  ``fit`` consumes a validated ``DGPConfig``; ``predict``
+    serves one query batch from a ``FittedProtocol`` (fusion included);
+    ``update`` streams new points in."""
+
+    name: str
+    fit: Callable  # (parts, cfg, params=None) -> FittedProtocol
+    predict: Callable  # (art, X_star, sq_star, g_ss, noise) -> (mu, s2)
+    update: Callable  # (art, X_new, y_new, machine) -> FittedProtocol
+    fit_host: Callable | None = None  # (parts, cfg, params=None) -> oracle model
+
+
+KERNELS = Registry("kernel")
+SCHEMES = Registry("scheme")
+FUSIONS = Registry("fusion")
+PROTOCOLS = Registry("protocol")
+
+
+def register_kernel(spec: KernelSpec) -> KernelSpec:
+    return KERNELS.register(spec.name, spec)
+
+
+def register_scheme(spec: SchemeSpec) -> SchemeSpec:
+    return SCHEMES.register(spec.name, spec)
+
+
+def register_fusion(spec: FusionSpec) -> FusionSpec:
+    return FUSIONS.register(spec.name, spec)
+
+
+def register_protocol(spec: ProtocolSpec) -> ProtocolSpec:
+    return PROTOCOLS.register(spec.name, spec)

@@ -1,0 +1,1 @@
+# subpackage marker (kernel impl + ops wrapper + ref oracle; see kernels/__init__.py)

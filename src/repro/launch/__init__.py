@@ -1,0 +1,2 @@
+"""Drivers: serve_gp (distributed-GP serving), train/serve/dryrun (the
+transformer stack with the GP head).  Modules are runnable via python -m."""

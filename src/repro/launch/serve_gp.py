@@ -2,15 +2,18 @@
 checkpoint the artifact, then serve query batches (and optionally stream new
 points) from the cached factors.
 
-  PYTHONPATH=src python -m repro.launch.serve_gp --protocol center --m 40 \
+  python -m repro.launch.serve_gp --protocol center --m 40 \
       --bits 24 --n 2000 --d 8 --steps 60 --queries 50 --batch 128 \
       --artifact-dir /tmp/gp_artifact [--stream-every 20 --stream-size 16]
 
-The serve loop deliberately round-trips through the checkpoint
-(save_artifact -> load_artifact) so what is timed is exactly the production
-story: a server process that never refits — it loads factors and answers.
-Warm-path structure is printed at the end (retraces, cholesky/eigh equation
-counts) alongside latency/throughput.
+The driver builds ONE validated ``DGPConfig`` from the CLI flags and drives
+everything through the ``DistributedGP`` facade — protocol, wire scheme
+(``--scheme per_symbol|vq``), impl, and backend are all config fields, so the
+command line is a 1:1 mirror of the API.  The serve loop deliberately
+round-trips through the checkpoint (save -> load) so what is timed is exactly
+the production story: a server process that never refits — it loads factors
+and answers.  Warm-path structure is printed at the end (retraces,
+cholesky/eigh equation counts) alongside latency/throughput.
 """
 from __future__ import annotations
 
@@ -22,6 +25,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--protocol", default="center",
                     choices=["center", "broadcast", "poe"])
+    ap.add_argument("--scheme", default="per_symbol",
+                    choices=["per_symbol", "vq"],
+                    help="wire scheme: §4.2 per-symbol int codes or the §4.1 "
+                         "Theorem-2 optimal test channel (batched impl only)")
     ap.add_argument("--m", type=int, default=40, help="machines (paper §6: 40)")
     ap.add_argument("--bits", type=int, default=24, help="R bits/sample")
     ap.add_argument("--n", type=int, default=2000)
@@ -29,6 +36,9 @@ def main():
     ap.add_argument("--steps", type=int, default=60, help="hyperparameter steps")
     ap.add_argument("--gram-mode", default="nystrom")
     ap.add_argument("--gram-backend", default="xla", choices=["xla", "pallas"])
+    ap.add_argument("--fusion", default=None,
+                    help="broadcast fusion / poe combiner (registry name); "
+                         "default: kl for broadcast, rbcm for poe")
     ap.add_argument("--queries", type=int, default=50, help="warm query batches")
     ap.add_argument("--batch", type=int, default=128, help="points per query batch")
     ap.add_argument("--artifact-dir", default=None,
@@ -53,42 +63,52 @@ def main():
 
     import numpy as np
     import jax
-    from repro.core import (
-        split_machines, fit, predict, update, save_artifact, load_artifact,
+    from repro.core import DGPConfig, DistributedGP
+    from repro.core.protocols import predict_op_counts, serve_trace_count
+
+    fusion = args.fusion
+    if fusion is None:
+        fusion = "rbcm" if args.protocol == "poe" else "kl"
+    cfg = DGPConfig(
+        protocol=args.protocol,
+        scheme=args.scheme,
+        fusion=fusion,
+        impl="mesh" if args.mesh else "batched",
+        gram_backend=args.gram_backend,
+        gram_mode="dense" if args.protocol == "poe" else args.gram_mode,
+        bits_per_sample=0 if args.protocol == "poe" else args.bits,
+        steps=args.steps,
     )
-    from repro.core.distributed_gp import predict_op_counts, serve_trace_count
+    est = DistributedGP(cfg)
 
     rng = np.random.default_rng(0)
     W = rng.normal(size=(args.d, 2))
     f = lambda Z: np.sin(Z @ W[:, 0]) + 0.4 * (Z @ W[:, 1])
     X = rng.normal(size=(args.n, args.d)).astype(np.float32)
     y = (f(X) + 0.05 * rng.normal(size=args.n)).astype(np.float32)
-    parts = split_machines(X, y, args.m, jax.random.PRNGKey(0))
 
     t0 = time.perf_counter()
-    art = fit(
-        parts, args.bits, args.protocol, steps=args.steps,
-        gram_mode=args.gram_mode, gram_backend=args.gram_backend,
-        impl="mesh" if args.mesh else "batched",
-    )
+    art = est.fit(X, y, args.m, key=jax.random.PRNGKey(0))
     t_fit = time.perf_counter() - t0
-    print(f"fit: protocol={args.protocol} impl={art.impl} m={args.m} "
-          f"n={args.n} d={args.d} "
-          f"R={args.bits} -> {t_fit:.2f}s, wire {art.wire_bits/1e3:.1f} kbit")
+    print(f"fit: protocol={cfg.protocol} scheme={cfg.scheme} impl={art.impl} "
+          f"m={args.m} n={args.n} d={args.d} "
+          f"R={cfg.bits_per_sample} -> {t_fit:.2f}s, "
+          f"wire {art.wire_bits/1e3:.1f} kbit")
 
     if args.artifact_dir:
-        path = save_artifact(art, args.artifact_dir)
+        path = est.save(art, args.artifact_dir)
         if args.mesh:
             # the checkpoint round-trips to a single-host artifact; keep
             # serving the sharded mesh copy, but verify the round trip
-            loaded = load_artifact(args.artifact_dir)
+            loaded = est.load(args.artifact_dir)
             Xv = rng.normal(size=(8, args.d)).astype(np.float32)
-            dmu = float(np.max(np.abs(np.asarray(predict(art, Xv)[0])
-                                      - np.asarray(predict(loaded, Xv)[0]))))
+            dmu = float(np.max(np.abs(np.asarray(est.predict(art, Xv)[0])
+                                      - np.asarray(est.predict(loaded, Xv)[0]))))
             print(f"artifact: saved {path}; single-host reload agrees to "
-                  f"{dmu:.1e} (serving the sharded mesh copy)")
+                  f"{dmu:.1e} (serving the sharded mesh copy); recorded "
+                  f"config: {loaded.config.protocol}/{loaded.config.scheme}")
         else:
-            art = load_artifact(args.artifact_dir)
+            art = est.load(args.artifact_dir)
             print(f"artifact: saved+reloaded {path} (serving the loaded copy)")
 
     lat, machine, n_updates = [], 1 % args.m, 0
@@ -96,7 +116,7 @@ def main():
     for q in range(args.queries):
         Xq = rng.normal(size=(args.batch, args.d)).astype(np.float32)
         t0 = time.perf_counter()
-        mu, var = predict(art, Xq)
+        mu, var = est.predict(art, Xq)
         jax.block_until_ready(mu)
         lat.append(time.perf_counter() - t0)
         if c0 is None:
@@ -105,7 +125,7 @@ def main():
             Xn = rng.normal(size=(args.stream_size, args.d)).astype(np.float32)
             yn = (f(Xn) + 0.05 * rng.normal(size=args.stream_size)).astype(np.float32)
             t0 = time.perf_counter()
-            art = update(art, Xn, yn, machine=machine)
+            art = est.update(art, Xn, yn, machine=machine)
             # a growth only retraces the NEXT predict; the last batch's
             # update is never served in this loop
             n_updates += 1 if q + 1 < args.queries else 0

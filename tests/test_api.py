@@ -1,0 +1,345 @@
+"""The registry-backed estimator API (core.config.DGPConfig /
+core.api.DistributedGP / core.registry).
+
+Locks the redesign's contract:
+  * DGPConfig validates at CONSTRUCTION: bad protocol/scheme/impl/fusion/
+    kernel names raise ValueError with the registry's known names in the
+    message; cross-field vq constraints are enforced there too;
+  * registering a duplicate name in any registry raises;
+  * all 3 protocols x all 3 impls (host/batched/mesh) are reachable through
+    DistributedGP(DGPConfig(...)) and agree with the legacy entry points;
+  * scheme="vq" (the §4.1 Theorem-2 optimal test channel) runs end-to-end on
+    the wire for the batched impl, with the ledger charged at the channel's
+    achieved rate (matched to the per-symbol budget) and streaming update()
+    re-encoding under the FROZEN channel;
+  * the fitted artifact carries its config, and save_artifact records it
+    (plus a format version) in meta.json.
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    DGPConfig,
+    DistributedGP,
+    FittedProtocol,
+    KERNELS,
+    FUSIONS,
+    PROTOCOLS,
+    SCHEMES,
+    FusionSpec,
+    SchemeSpec,
+    register_fusion,
+    register_scheme,
+)
+from repro.core.protocols import split_machines
+from repro.core.protocols.center import CenterGP
+
+
+def _problem(seed=0, n=140, d=4, m=4, n_test=20):
+    rng = np.random.default_rng(seed)
+    W = rng.normal(size=(d, 2))
+    f = lambda Z: np.sin(Z @ W[:, 0]) + 0.4 * (Z @ W[:, 1])
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    y = (f(X) + 0.05 * rng.normal(size=n)).astype(np.float32)
+    Xt = rng.normal(size=(n_test, d)).astype(np.float32)
+    return X, y, jnp.asarray(Xt)
+
+
+# --------------------------------------------------------------------------
+# DGPConfig validation
+# --------------------------------------------------------------------------
+
+
+def test_default_config_is_valid():
+    cfg = DGPConfig()
+    assert cfg.protocol == "center" and cfg.scheme == "per_symbol"
+    # frozen: field assignment is an error
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.protocol = "broadcast"
+
+
+@pytest.mark.parametrize(
+    "field,value,registry",
+    [
+        ("protocol", "centre", PROTOCOLS),
+        ("scheme", "vector-q", SCHEMES),
+        ("kernel", "matern", KERNELS),
+        ("fusion", "klqb", FUSIONS),
+    ],
+)
+def test_bad_registry_names_raise_with_known_names(field, value, registry):
+    with pytest.raises(ValueError) as ei:
+        DGPConfig(**{field: value})
+    msg = str(ei.value)
+    assert value in msg
+    for known in registry.names():
+        assert known in msg  # the menu is in the error
+
+
+@pytest.mark.parametrize(
+    "field,value",
+    [("impl", "tpu"), ("gram_backend", "triton"), ("gram_mode", "fitc"),
+     ("train_impl", "while")],
+)
+def test_bad_enum_fields_raise(field, value):
+    with pytest.raises(ValueError, match=field):
+        DGPConfig(**{field: value})
+
+
+@pytest.mark.parametrize("impl", ["host", "mesh"])
+def test_pallas_requires_batched_at_construction(impl):
+    with pytest.raises(ValueError, match="pallas"):
+        DGPConfig(gram_backend="pallas", impl=impl)
+
+
+def test_numeric_field_validation():
+    with pytest.raises(ValueError, match="bits_per_sample"):
+        DGPConfig(bits_per_sample=-1)
+    with pytest.raises(ValueError, match="steps"):
+        DGPConfig(steps=-5)
+
+
+@pytest.mark.parametrize(
+    "kw",
+    [
+        dict(scheme="vq", impl="mesh"),
+        dict(scheme="vq", impl="host"),
+        dict(scheme="vq", gram_backend="pallas"),
+        dict(scheme="vq", protocol="poe"),
+    ],
+)
+def test_vq_cross_constraints(kw):
+    with pytest.raises(ValueError, match="vq"):
+        DGPConfig(**kw)
+
+
+def test_duplicate_registration_raises():
+    name = "test_dup_entry_xyzzy"
+    register_fusion(FusionSpec(name=name, fuse=lambda m, s, p: (m, s)))
+    with pytest.raises(ValueError, match="duplicate"):
+        register_fusion(FusionSpec(name=name, fuse=lambda m, s, p: (m, s)))
+    with pytest.raises(ValueError, match="duplicate"):
+        register_scheme(SchemeSpec(
+            name="per_symbol", run=lambda *a: None, reencode=lambda *a: None,
+        ))
+
+
+def test_registered_fusion_is_selectable():
+    # a brand-new fusion rule plugs into the batched serve path by name only
+    name = "test_mean_fusion_xyzzy"
+    if name not in FUSIONS:
+        register_fusion(FusionSpec(
+            name=name,
+            fuse=lambda mus, s2s, prior: (jnp.mean(mus, 0), jnp.mean(s2s, 0)),
+        ))
+    X, y, Xt = _problem()
+    est = DistributedGP(DGPConfig(protocol="broadcast", fusion=name,
+                                  bits_per_sample=16, steps=2))
+    art = est.fit(X, y, 3)
+    mu, s2 = est.predict(art, Xt)
+    assert np.all(np.isfinite(np.asarray(mu))) and np.all(np.asarray(s2) > 0)
+
+
+# --------------------------------------------------------------------------
+# the facade reaches every protocol x impl
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("protocol", ["center", "broadcast", "poe"])
+@pytest.mark.parametrize("impl", ["host", "batched", "mesh"])
+def test_facade_reaches_all_protocols_and_impls(protocol, impl):
+    X, y, Xt = _problem(seed=3)
+    cfg = DGPConfig(
+        protocol=protocol,
+        impl=impl,
+        bits_per_sample=0 if protocol == "poe" else 16,
+        fusion="rbcm" if protocol == "poe" else "kl",
+        steps=2,
+    )
+    est = DistributedGP(cfg)
+    art = est.fit(X, y, 4, key=jax.random.PRNGKey(3))
+    if impl == "host":
+        assert not isinstance(art, FittedProtocol)  # oracle model
+        if protocol == "center":
+            assert isinstance(art, CenterGP)
+    else:
+        assert isinstance(art, FittedProtocol)
+        assert art.impl == impl and art.config == cfg
+    mu, s2 = est.predict(art, Xt)
+    assert mu.shape == (Xt.shape[0],)
+    assert np.all(np.isfinite(np.asarray(mu))) and np.all(np.asarray(s2) > 0)
+
+
+def test_facade_matches_legacy_entry_point():
+    X, y, Xt = _problem(seed=4)
+    parts = split_machines(X, y, 4, jax.random.PRNGKey(4))
+    est = DistributedGP(DGPConfig(bits_per_sample=16, steps=5))
+    art = est.fit(parts=parts)
+    from repro.core.protocols import fit as new_fit, predict as new_predict
+
+    art_legacy = new_fit(parts, 16, "center", steps=5)
+    mu_a, s2_a = est.predict(art, Xt)
+    mu_b, s2_b = new_predict(art_legacy, Xt)
+    np.testing.assert_array_equal(np.asarray(mu_a), np.asarray(mu_b))
+    np.testing.assert_array_equal(np.asarray(s2_a), np.asarray(s2_b))
+    assert art.wire_bits == art_legacy.wire_bits
+
+
+def test_facade_fit_argument_errors():
+    X, y, _ = _problem()
+    est = DistributedGP()
+    with pytest.raises(ValueError, match="either"):
+        est.fit(X, y)  # m missing
+    parts = split_machines(X, y, 2, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="not both"):
+        est.fit(X, y, 2, parts=parts)
+    with pytest.raises(ValueError, match="not both"):
+        est.fit(parts=parts, key=jax.random.PRNGKey(7))  # key would be unused
+    with pytest.raises(TypeError):
+        DistributedGP(config="center")
+
+
+@pytest.mark.parametrize("impl", ["host", "batched"])
+def test_center_out_of_range_raises(impl):
+    X, y, _ = _problem()
+    est = DistributedGP(DGPConfig(protocol="center", center=7, impl=impl,
+                                  bits_per_sample=8, steps=0))
+    with pytest.raises(ValueError, match="center=7 out of range"):
+        est.fit(X, y, 4)
+
+
+@pytest.mark.parametrize("protocol", ["broadcast", "poe"])
+def test_host_oracles_honor_warm_start_params(protocol):
+    from repro.core import init_params
+
+    X, y, _ = _problem()
+    cfg = DGPConfig(protocol=protocol, impl="host",
+                    bits_per_sample=0 if protocol == "poe" else 8,
+                    fusion="rbcm" if protocol == "poe" else "kl", steps=0)
+    est = DistributedGP(cfg)
+    warm = init_params(a=3.0, b=2.0, noise=0.3)
+    model = est.fit(X, y, 3, params=warm)
+    # steps=0: training is a no-op, so fit must return exactly the warm start
+    np.testing.assert_allclose(float(model.params.log_a), float(warm.log_a))
+    np.testing.assert_allclose(float(model.params.log_noise), float(warm.log_noise))
+
+
+# --------------------------------------------------------------------------
+# scheme="vq": the optimal test channel on the wire
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("protocol", ["center", "broadcast"])
+def test_vq_end_to_end_with_matched_ledger(protocol):
+    X, y, Xt = _problem(seed=5, n=160, d=4, m=4)
+    bits = 16
+    vq = DistributedGP(DGPConfig(protocol=protocol, scheme="vq",
+                                 bits_per_sample=bits, steps=3))
+    ps = DistributedGP(DGPConfig(protocol=protocol, scheme="per_symbol",
+                                 bits_per_sample=bits, steps=3))
+    key = jax.random.PRNGKey(5)
+    art_vq = vq.fit(X, y, 4, key=key)
+    art_ps = ps.fit(X, y, 4, key=key)
+    assert art_vq.scheme == "vq" and art_ps.scheme == "per_symbol"
+    mu, s2 = vq.predict(art_vq, Xt)
+    assert np.all(np.isfinite(np.asarray(mu))) and np.all(np.asarray(s2) > 0)
+    # matched budgets: the channel's achieved Theorem-1 rate is ~R, so the
+    # ledgers (same side-info accounting) agree within a few percent
+    assert art_vq.wire_bits > 0
+    assert abs(art_vq.wire_bits - art_ps.wire_bits) <= 0.05 * art_ps.wire_bits
+    # the channel state rides in the artifact for streaming re-encode
+    for k in ("vq_A", "vq_W_half", "vq_rate_bits"):
+        assert k in art_vq.data
+
+
+def test_vq_update_charges_frozen_channel_rate():
+    X, y, Xt = _problem(seed=6, n=120, d=3, m=3)
+    est = DistributedGP(DGPConfig(protocol="center", scheme="vq",
+                                  bits_per_sample=12, steps=2))
+    art = est.fit(X, y, 3)
+    rng = np.random.default_rng(0)
+    n_new = 9
+    Xn = rng.normal(size=(n_new, 3)).astype(np.float32)
+    art2 = est.update(art, Xn, np.zeros(n_new, np.float32), machine=1)
+    rate = float(np.asarray(art.data["vq_rate_bits"][1]))
+    assert art2.wire_bits == art.wire_bits + int(np.ceil(n_new * rate))
+    # center-local points stay free, as with per-symbol
+    art3 = est.update(art, Xn, np.zeros(n_new, np.float32), machine=0)
+    assert art3.wire_bits == art.wire_bits
+    mu, s2 = est.predict(art2, Xt)
+    assert np.all(np.isfinite(np.asarray(mu))) and np.all(np.asarray(s2) > 0)
+
+
+def test_vq_checkpoint_roundtrip(tmp_path):
+    X, y, Xt = _problem(seed=7, n=100, d=3, m=3)
+    est = DistributedGP(DGPConfig(protocol="broadcast", scheme="vq",
+                                  bits_per_sample=10, steps=2))
+    art = est.fit(X, y, 3)
+    est.save(art, str(tmp_path))
+    loaded = est.load(str(tmp_path))
+    assert loaded.scheme == "vq" and loaded.config.scheme == "vq"
+    mu_a, s2_a = est.predict(art, Xt)
+    mu_b, s2_b = est.predict(loaded, Xt)
+    np.testing.assert_array_equal(np.asarray(mu_a), np.asarray(mu_b))
+    np.testing.assert_array_equal(np.asarray(s2_a), np.asarray(s2_b))
+
+
+# --------------------------------------------------------------------------
+# the config rides on the artifact and into meta.json
+# --------------------------------------------------------------------------
+
+
+def test_artifact_and_checkpoint_carry_config(tmp_path):
+    from repro.core.config import ARTIFACT_FORMAT_VERSION
+
+    X, y, Xt = _problem(seed=8)
+    cfg = DGPConfig(protocol="center", bits_per_sample=12, steps=2,
+                    gram_mode="nystrom_fitc")
+    est = DistributedGP(cfg)
+    art = est.fit(X, y, 3)
+    assert art.config == cfg
+    est.save(art, str(tmp_path))
+    with open(os.path.join(str(tmp_path), "meta_00000000.json")) as f:
+        meta = json.load(f)
+    assert meta["format_version"] == ARTIFACT_FORMAT_VERSION
+    assert meta["scheme"] == "per_symbol"
+    assert meta["config"]["protocol"] == "center"
+    assert meta["config"]["gram_mode"] == "nystrom_fitc"
+    assert meta["config"]["steps"] == 2
+    loaded = est.load(str(tmp_path))
+    assert loaded.config == cfg
+
+
+def test_future_format_version_refuses_to_load(tmp_path):
+    X, y, _ = _problem(seed=9, n=60, m=2)
+    est = DistributedGP(DGPConfig(bits_per_sample=8, steps=0))
+    est.save(est.fit(X, y, 2), str(tmp_path))
+    mp = os.path.join(str(tmp_path), "meta_00000000.json")
+    with open(mp) as f:
+        meta = json.load(f)
+    meta["format_version"] = 99
+    with open(mp, "w") as f:
+        json.dump(meta, f)
+    with pytest.raises(ValueError, match="format version 99"):
+        est.load(str(tmp_path))
+
+
+def test_vq_respects_max_bits_cap():
+    """When the per-dimension cap binds (d*max_bits < R), the vq target rate
+    clamps to the same ceiling the per-symbol allocator has, keeping the two
+    ledgers matched."""
+    X, y, _ = _problem(seed=10, n=90, d=3, m=3)
+    key = jax.random.PRNGKey(10)
+    arts = {}
+    for scheme in ("per_symbol", "vq"):
+        est = DistributedGP(DGPConfig(protocol="center", scheme=scheme,
+                                      bits_per_sample=24, max_bits=2, steps=0))
+        arts[scheme] = est.fit(X, y, 3, key=key)
+    lo, hi = sorted(a.wire_bits for a in arts.values())
+    assert hi - lo <= 0.05 * hi, arts

@@ -1,0 +1,89 @@
+"""The legacy entry points live on as DeprecationWarning wrappers.
+
+Locks the migration contract:
+  * each of the seven deprecated entry points (quantize_to_center,
+    single_center_gp, broadcast_gp, poe_baseline, fit, predict, update)
+    warns EXACTLY ONCE per process — the first call emits one
+    DeprecationWarning naming the replacement, repeat calls are silent;
+  * delegation is faithful: the wrappers return the same objects as the new
+    implementations;
+  * the old core.mesh_gp shim (deprecated two PRs ago) is gone for real.
+"""
+import warnings
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core import distributed_gp as dgp
+from repro.core.protocols import split_machines
+
+DEPRECATED = (
+    "quantize_to_center", "single_center_gp", "broadcast_gp", "poe_baseline",
+    "fit", "predict", "update",
+)
+
+
+def _tiny_problem():
+    rng = np.random.default_rng(0)
+    d = 3
+    X = rng.normal(size=(60, d)).astype(np.float32)
+    y = rng.normal(size=60).astype(np.float32)
+    Xt = rng.normal(size=(8, d)).astype(np.float32)
+    parts = split_machines(X, y, 3, jax.random.PRNGKey(0))
+    return parts, Xt
+
+
+def test_deprecated_wrappers_warn_exactly_once_each():
+    parts, Xt = _tiny_problem()
+    dgp._WARNED.clear()  # make the test independent of suite ordering
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        art = dgp.fit(parts, 8, "center", steps=0)
+        dgp.fit(parts, 8, "center", steps=0)
+        dgp.predict(art, Xt)
+        dgp.predict(art, Xt)
+        Xn = np.zeros((2, 3), np.float32)
+        dgp.update(art, Xn, np.zeros(2, np.float32), machine=0)
+        dgp.update(art, Xn, np.zeros(2, np.float32), machine=1)
+        dgp.quantize_to_center(parts, 8)
+        dgp.quantize_to_center(parts, 8)
+        dgp.single_center_gp(parts, 8, steps=0)
+        dgp.single_center_gp(parts, 8, steps=0)
+        dgp.broadcast_gp(parts, 8, Xt, steps=0)
+        dgp.broadcast_gp(parts, 8, Xt, steps=0)
+        dgp.poe_baseline(parts, Xt, steps=0)
+        dgp.poe_baseline(parts, Xt, steps=0)
+    ours = [
+        str(w.message) for w in rec
+        if issubclass(w.category, DeprecationWarning)
+        and str(w.message).startswith("repro.core.distributed_gp.")
+    ]
+    for name in DEPRECATED:
+        hits = [m for m in ours
+                if m.startswith(f"repro.core.distributed_gp.{name} is deprecated")]
+        assert len(hits) == 1, f"{name}: expected exactly 1 warning, got {hits}"
+    assert len(ours) == len(DEPRECATED)
+
+
+def test_wrappers_delegate_faithfully():
+    from repro.core import protocols
+
+    parts, Xt = _tiny_problem()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        art_old = dgp.fit(parts, 8, "center", steps=2)
+        mu_old, s2_old = dgp.predict(art_old, Xt)
+    art_new = protocols.fit(parts, 8, "center", steps=2)
+    mu_new, s2_new = protocols.predict(art_new, Xt)
+    np.testing.assert_array_equal(np.asarray(mu_old), np.asarray(mu_new))
+    np.testing.assert_array_equal(np.asarray(s2_old), np.asarray(s2_new))
+    assert type(art_old) is type(art_new)
+    assert art_old.wire_bits == art_new.wire_bits
+
+
+def test_mesh_gp_shim_is_gone():
+    with pytest.raises(ModuleNotFoundError):
+        import repro.core.mesh_gp  # noqa: F401
+    # its survivor lives in the protocols package
+    from repro.core.protocols.mesh import broadcast_gp_mesh  # noqa: F401

@@ -1,4 +1,4 @@
-"""Mesh-native broadcast GP (core.mesh_gp): the §5.2 protocol with devices as
+"""Mesh-native broadcast GP (core.protocols.mesh): the §5.2 protocol with devices as
 machines and repro.comm as the wire — 8-device subprocess."""
 import json
 import os
@@ -12,7 +12,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import numpy as np, jax
-from repro.core.mesh_gp import broadcast_gp_mesh
+from repro.core.protocols.mesh import broadcast_gp_mesh
 from repro.compat import make_mesh
 from repro.core.gp import train_gp
 
