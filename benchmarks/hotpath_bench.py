@@ -6,8 +6,12 @@ Times old-vs-new on three axes so the speedups are recorded numbers:
   program (dispatch counts are structural: ``steps`` host dispatches vs 1);
 * ``broadcast_gp`` with m=8: serial host protocol (scipy scheme fit + one
   dense solve per machine) vs the vmapped padded-shard protocol;
-* quantized gram assembly: unfused (decode X̂ to HBM, then matmul) vs the
-  fused dequantize+gram Pallas kernel (int codes straight to the MXU).
+* quantized gram assembly: unfused (decode X̂ to HBM, then matmul — two
+  dispatches) vs the fused unpack+dequantize+gram path consuming the PACKED
+  wire words (``kernels.qgram.qgram_packed``: the Pallas kernel on TPU, the
+  single-jit XLA program elsewhere).  A fused speedup below 1.0x is a
+  regression: the row gets a nonzero ``note`` in BENCH_hotpath.json so CI
+  artifacts surface it.
 
 Run standalone to write BENCH_hotpath.json:
   PYTHONPATH=src python -m benchmarks.hotpath_bench [--full]
@@ -86,7 +90,7 @@ def main(quick: bool = True):
     from repro.core import train_gp, broadcast_gp
     from repro.core.distributed_gp import pad_parts, _run_wire_protocol
     from repro.kernels.gram.ops import gram as gram_kernel
-    from repro.kernels.qgram.ops import qgram
+    from repro.kernels.qgram.ops import qgram_packed
     from repro.kernels.quant.ops import decode as quant_decode
 
     n, d, m = (240, 6, 8) if quick else (1000, 21, 40)
@@ -137,12 +141,16 @@ def main(quick: bool = True):
     emit(f"hotpath/broadcast_gp_m{m}_host", us_host)
     emit(f"hotpath/broadcast_gp_m{m}_batched", us_bat, speedup=us_host / us_bat)
 
-    # ---- quantized gram: unfused decode->HBM->matmul vs fused qgram ----
+    # ---- quantized gram: unfused decode->HBM->matmul vs fused packed qgram ----
+    from repro.core import jax_scheme
+
+    bits = 24
     shards = pad_parts(parts)
-    ws = _run_wire_protocol(shards.X, shards.mask, 24, 12, "broadcast", 0)
-    codes = np.asarray(ws.codes[1])
-    codes = jnp.asarray(np.where(codes < 0, 0, codes))
+    ws = _run_wire_protocol(shards.X, shards.mask, bits, 12, "broadcast", 0)
+    words = ws.codes[1]  # the packed wire plane, straight off the protocol
+    rates = ws.rates[1]
     cents = ws.scaled_cents[1]
+    codes = jax_scheme.unpack_codes(words, rates, total_bits=bits)
     Y = jnp.asarray(np.random.default_rng(1).normal(size=(n, d)).astype(np.float32))
 
     def unfused():
@@ -150,13 +158,20 @@ def main(quick: bool = True):
         return gram_kernel(xhat, Y)
 
     def fused():
-        return qgram(codes, cents, Y)
+        return qgram_packed(words, rates, cents, Y, total_bits=bits)
 
     ref, us_unfused = timed(lambda: jax.block_until_ready(unfused()))
     out, us_fused = timed(lambda: jax.block_until_ready(fused()))
     err = float(jnp.max(jnp.abs(ref - out)))
+    speedup = us_unfused / us_fused
+    derived = dict(speedup=speedup, max_abs_err=err)
+    if speedup < 1.0:
+        # visible in the uploaded BENCH artifact: the fusion is LOSING
+        derived["note"] = (
+            f"REGRESSION: fused qgram {speedup:.2f}x slower than unfused"
+        )
     emit("hotpath/qgram_unfused", us_unfused)
-    emit("hotpath/qgram_fused", us_fused, speedup=us_unfused / us_fused, max_abs_err=err)
+    emit("hotpath/qgram_fused", us_fused, **derived)
 
 
 if __name__ == "__main__":

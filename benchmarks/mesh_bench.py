@@ -63,6 +63,7 @@ for m in (2, 4, 8):
             "us_per_call": t_fit * 1e6,
             "derived": {"m": m, "n": n, "d": d, "bits": bits,
                         "wire_kbits": art.wire_bits / 1e3,
+                        "payload_kbits": art.payload_bits / 1e3,
                         "fp32_baseline_kbits": fp32_bits / 1e3,
                         "wire_vs_fp32": art.wire_bits / fp32_bits},
         })

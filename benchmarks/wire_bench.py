@@ -1,0 +1,195 @@
+"""Packed-wire benchmark: physical payload and checkpoint size (BENCH_wire.json).
+
+What the packed code plane (``jax_scheme.pack_codes``) buys over the old
+uint8/int32 wire, measured — not computed from a formula:
+
+* **payload**: bytes of the per-machine wire buffer at paper scale (d=21,
+  SARCOS) for bits/sample in {2, 4, 8} — packed uint32 words vs the uint8
+  codes the old mesh collective gathered vs the int32 plane the old
+  WireState/checkpoints carried.  The quick pass ASSERTS >= 4x reduction vs
+  the uint8 wire at bits <= 8 (the acceptance bar; vs int32 it is ~21x).
+* **roundtrip**: pack+unpack identity cost of the full (m, n, d) code tensor
+  (the wire's CPU-side overhead; it is noise next to one collective).
+* **ckpt**: on-disk bytes of a format-v3 artifact checkpoint (packed codes)
+  vs the same checkpoint re-written with the v2 unpacked int32 plane, plus a
+  bitwise predict check across save/load.
+* **qgram**: packed-fused unpack+dequantize+gram vs the unfused
+  decode->HBM->matmul pipeline (same number as BENCH_hotpath, recorded here
+  so the wire artifact is self-contained; >= 1.0x is the bar).
+
+Run standalone:  PYTHONPATH=src python -m benchmarks.wire_bench
+or through the driver: python -m benchmarks.run --json --only wire
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .common import timed, emit
+
+
+def _problem(n, d, m, seed=0):
+    from repro.core import split_machines
+
+    rng = np.random.default_rng(seed)
+    W = rng.normal(size=(d, 2))
+    X = (rng.normal(size=(n, d)) @ (rng.normal(size=(d, d)) / np.sqrt(d))).astype(
+        np.float32
+    )
+    y = (np.sin(X @ W[:, 0]) + 0.4 * (X @ W[:, 1]) + 0.05 * rng.normal(size=n)).astype(
+        np.float32
+    )
+    return split_machines(X, y, m, jax.random.PRNGKey(seed))
+
+
+def main(quick: bool = True):
+    from repro.core import fit, predict, save_artifact, load_artifact
+    from repro.core import jax_scheme
+    from repro.core.protocols.base import pad_parts
+    from repro.core.protocols.wire import _run_wire_protocol
+    from repro.kernels.gram.ops import gram as gram_kernel
+    from repro.kernels.qgram.ops import qgram_packed
+    from repro.kernels.quant.ops import decode as quant_decode
+
+    n, d, m = (504, 21, 8) if quick else (2000, 21, 40)
+    max_bits = 8
+    parts = _problem(n, d, m)
+    shards = pad_parts(parts)
+    n_pad = shards.X.shape[1]
+
+    from repro.comm.accounting import row_bits
+
+    # ---- payload: packed words vs the old uint8/int32 planes ----
+    for bits in (2, 4, 8):
+        ws, us_wire = timed(
+            lambda: jax.block_until_ready(
+                _run_wire_protocol(shards.X, shards.mask, bits, max_bits,
+                                   "broadcast", 0)
+            ),
+            repeats=1,
+        )
+        words = np.asarray(ws.codes)
+        packed_bytes = words.size * words.dtype.itemsize  # measured buffer
+        uint8_bytes = m * n_pad * d  # the old mesh wire (one byte per symbol)
+        int32_bytes = m * n_pad * d * 4  # the old WireState/ckpt plane
+        fp32_bytes = m * n_pad * d * 4  # unquantized baseline
+        red_u8 = uint8_bytes / packed_bytes
+        red_i32 = int32_bytes / packed_bytes
+        if quick and bits <= 8:
+            assert red_u8 >= 4.0, (
+                f"packed wire must be >=4x smaller than the uint8 wire at "
+                f"bits={bits} (got {red_u8:.2f}x)"
+            )
+        # roundtrip identity cost of the full code tensor through the plane
+        rbits = row_bits(bits, d, max_bits)
+        pack = jax.jit(jax.vmap(
+            lambda c, r, mk: jax_scheme.pack_codes(
+                c, r, total_bits=rbits, mask=mk
+            )
+        ))
+        unpack = jax.jit(jax.vmap(
+            lambda w, r, mk: jax_scheme.unpack_codes(
+                w, r, total_bits=rbits, mask=mk
+            )
+        ))
+        codes = unpack(ws.codes, ws.rates, shards.mask)
+        w2, us_pack = timed(
+            lambda: jax.block_until_ready(pack(codes, ws.rates, shards.mask))
+        )
+        np.testing.assert_array_equal(np.asarray(w2), words)
+        emit(
+            f"wire/payload_b{bits}",
+            us_wire,
+            packed_bytes=packed_bytes,
+            uint8_bytes=uint8_bytes,
+            int32_bytes=int32_bytes,
+            fp32_bytes=fp32_bytes,
+            reduction_vs_uint8=red_u8,
+            reduction_vs_int32=red_i32,
+            pack_roundtrip_us=us_pack,
+        )
+
+    # ---- ckpt: format-v3 packed artifact vs the v2 unpacked plane ----
+    bits = 8
+    art = fit(parts, bits, "center", steps=2 if quick else 50)
+    Xt = jnp.asarray(np.random.default_rng(1).normal(size=(32, d)).astype(np.float32))
+    mu0, s0 = predict(art, Xt)
+    with tempfile.TemporaryDirectory() as td:
+        _, us_save = timed(lambda: save_artifact(art, td), repeats=1)
+        ckpt = os.path.join(td, "ckpt_00000000.npz")
+        v3_bytes = os.path.getsize(ckpt)
+        arrays = dict(np.load(ckpt))
+        codes_bytes_v3 = arrays["wire/codes"].nbytes
+        # the same checkpoint with the pre-v3 unpacked int32 code plane
+        arrays["wire/codes"] = np.asarray(jax.vmap(
+            lambda w, r: jax_scheme.unpack_codes(
+                w, r, total_bits=row_bits(bits, d, art.max_bits)
+            )
+        )(jnp.asarray(arrays["wire/codes"]), jnp.asarray(arrays["wire/rates"])))
+        v2_path = os.path.join(td, "v2.npz")
+        np.savez(v2_path, **arrays)
+        v2_bytes = os.path.getsize(v2_path)
+        codes_bytes_v2 = arrays["wire/codes"].nbytes
+        art_l = load_artifact(td)
+        mu1, s1 = predict(art_l, Xt)
+        assert np.array_equal(np.asarray(mu1), np.asarray(mu0))
+        assert np.array_equal(np.asarray(s1), np.asarray(s0))
+    emit(
+        "wire/ckpt_v3_vs_v2",
+        us_save,
+        v3_bytes=v3_bytes,
+        v2_bytes=v2_bytes,
+        ckpt_reduction=v2_bytes / v3_bytes,
+        codes_bytes_v3=codes_bytes_v3,
+        codes_bytes_v2=codes_bytes_v2,
+        codes_reduction=codes_bytes_v2 / codes_bytes_v3,
+        bitwise_predict=1,
+    )
+
+    # ---- qgram: packed-fused vs unfused (the wire artifact's own copy) ----
+    bits = 24
+    ws = _run_wire_protocol(shards.X, shards.mask, bits, 12, "broadcast", 0)
+    words, rates, cents = ws.codes[1], ws.rates[1], ws.scaled_cents[1]
+    codes = jax_scheme.unpack_codes(words, rates, total_bits=bits)
+    Y = jnp.asarray(np.random.default_rng(2).normal(size=(n_pad, d)).astype(np.float32))
+
+    def unfused():
+        xhat = quant_decode(codes, cents)
+        return gram_kernel(xhat, Y)
+
+    def fused():
+        return qgram_packed(words, rates, cents, Y, total_bits=bits)
+
+    ref, us_unfused = timed(lambda: jax.block_until_ready(unfused()))
+    out, us_fused = timed(lambda: jax.block_until_ready(fused()))
+    speedup = us_unfused / us_fused
+    derived = dict(
+        speedup=speedup, max_abs_err=float(jnp.max(jnp.abs(ref - out)))
+    )
+    if speedup < 1.0:
+        derived["note"] = (
+            f"REGRESSION: packed-fused qgram {speedup:.2f}x vs unfused"
+        )
+    emit("wire/qgram_packed_fused", us_fused, **derived)
+    emit("wire/qgram_unfused", us_unfused)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from . import common
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default="BENCH_wire.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(quick=not args.full)
+    with open(args.out, "w") as f:
+        json.dump(common.RESULTS, f, indent=1)
+    print(f"# wrote {args.out}")

@@ -1,1 +1,8 @@
+from . import accounting
+from .accounting import (
+    payload_bits_formula,
+    payload_row_bits,
+    side_info_bits,
+    wire_bits_formula,
+)
 from .quantized_collectives import q_all_gather, q_psum, wire_bits_all_gather

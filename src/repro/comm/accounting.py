@@ -1,0 +1,87 @@
+"""The one wire-bit accounting used by every ledger in the repo.
+
+Two numbers describe what a protocol run cost (docs/wire_format.md):
+
+* the **Theorem-1 ledger** (``wire_bits``): the paper's §4 formula —
+  ``rates.sum()`` bits per valid transmitted row plus :func:`side_info_bits`
+  per transmitting machine.  Integer-identical across the host scipy oracle,
+  the batched vmapped wire, and the mesh collectives
+  (tests/test_conformance.py).
+* the **physical payload** (``payload_bits``): the bits of the packed uint32
+  words the wire actually carries (:func:`repro.core.jax_scheme.pack_codes`),
+  measured from the buffers (``dtype.itemsize * 8 * size``), plus the same
+  side info.  Exceeds the ledger only by per-word padding:
+  ``payload_bits - wire_bits == sum_j n_valid_j * (32 * W - rates_j.sum())``
+  with ``W = ceil(row_bits / 32)`` words per row.
+
+This module is import-cycle-free (stdlib only) so both ``repro.comm`` and
+``repro.core`` call sites can share it; ``wire_bits_all_gather`` and
+``q_all_gather``'s ``return_state`` ledger are pinned integer-equal to these
+helpers by tests/test_comm.py.
+"""
+from __future__ import annotations
+
+FP_BITS = 32  # fp32 side-info width
+WORD_BITS = 32  # the packed code plane's word width (jax_scheme.WORD_BITS)
+
+__all__ = [
+    "FP_BITS",
+    "WORD_BITS",
+    "side_info_bits",
+    "row_bits",
+    "payload_row_bits",
+    "wire_bits_formula",
+    "payload_bits_formula",
+]
+
+
+def side_info_bits(d: int, fp_bits: int = FP_BITS) -> int:
+    """Per-transmitting-machine side info: the paper's O(2 d^2) accounting —
+    one d x d covariance each way (Qy to the transmitter, the decode
+    transform back).  The simulation's collectives also move the per-dim
+    sigma/rates vectors and a redundant forward transform for the serving
+    artifact; those O(d) extras are not charged (see docs/wire_format.md)."""
+    return 2 * d * d * fp_bits
+
+
+def row_bits(bits_per_sample: int, d: int, max_bits: int) -> int:
+    """Payload bits one packed row can carry: the rate budget, capped by the
+    allocator's ceiling of ``max_bits`` bits per dimension."""
+    return min(int(bits_per_sample), d * int(max_bits))
+
+
+def payload_row_bits(bits_per_sample: int, d: int, max_bits: int) -> int:
+    """Physical bits per packed row: ``row_bits`` rounded up to whole uint32
+    words — the only slack between the ledger and the payload."""
+    r = row_bits(bits_per_sample, d, max_bits)
+    return ((r + WORD_BITS - 1) // WORD_BITS) * WORD_BITS
+
+
+def wire_bits_formula(rates, lengths, d: int, skip=None) -> int:
+    """The Theorem-1 ledger: ``rates_j.sum() * n_j`` + side info per
+    transmitting machine (machine ``skip`` — the §5.1 center — pays
+    nothing)."""
+    import numpy as np
+
+    rates = np.asarray(rates)
+    total = 0
+    for j, n_j in enumerate(lengths):
+        if j == skip:
+            continue
+        total += int(rates[j].sum()) * int(n_j) + side_info_bits(d)
+    return total
+
+
+def payload_bits_formula(
+    lengths, d: int, bits_per_sample: int, max_bits: int, skip=None
+) -> int:
+    """The physical packed-payload bits: whole uint32 words per valid row plus
+    side info per transmitting machine.  What the packed collectives measure
+    (tests/test_conformance.py pins measurement == formula)."""
+    per_row = payload_row_bits(bits_per_sample, d, max_bits)
+    total = 0
+    for j, n_j in enumerate(lengths):
+        if j == skip:
+            continue
+        total += per_row * int(n_j) + side_info_bits(d)
+    return total

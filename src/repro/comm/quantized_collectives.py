@@ -8,19 +8,24 @@ computation.  Instead of all-gathering fp32 (32d bits/sample), each shard
      ``mode="broadcast"`` (§5.2): psum to get the *other* shards' sum;
      ``mode="center"`` (§5.1): psum-select the center shard's covariance,
   2. fits the per-symbol scheme on-device (core.jax_scheme),
-  3. all-gathers the int codes (R bits/sample on the wire; the fp32
-     side-info — T/T_inv/sigma/rates, O(d^2) per shard — matches the paper's
-     O(d^2 + Rn) accounting),
-  4. decodes every peer's block with the peer's tables and substitutes its own
-     exact block.
+  3. packs its codes into the physical bit plane
+     (``jax_scheme.pack_codes``: R bits/row in whole uint32 words) and
+     all-gathers THOSE words — the wire carries ceil(R/32) words per row, not
+     a uint8/int32 per symbol — plus the fp32 side info (T_inv/sigma/rates,
+     O(d^2) per shard, the paper's O(d^2 + Rn) accounting),
+  4. unpacks + decodes every peer's block with the peer's tables and
+     substitutes its own exact block.
 
 ``mask`` marks valid rows of a padded shard (ragged machines on a uniform
 SPMD layout): masked rows are excluded from the moment estimate, decode to
-zero, carry the -1 sentinel code, and are NOT charged to the wire ledger.
+zero, pack to all-zero words, and are NOT charged to the wire ledger.
 ``return_state=True`` additionally returns everything the collective moved
-(gathered codes/side-info) plus ``wire_bits`` — the ledger computed from the
-actual payload: sum over transmitting shards of rates.sum() * n_valid plus
-2 d² fp32 of side info (the center shard transmits nothing in center mode).
+(gathered packed words/side-info) plus two ledgers (repro.comm.accounting):
+``wire_bits`` — the Theorem-1 formula (rates.sum() per valid row +
+side_info_bits(d) per transmitting shard) — and ``payload_bits`` — the bits
+of the packed payload the collective PHYSICALLY moved, measured from the
+word buffer itself (dtype.itemsize * 8 per word), equal to the formula up to
+per-word padding.  The center shard transmits nothing in center mode.
 
 ``q_psum(g, axis_name, bits)`` — gradient compression for the cross-pod
 all-reduce: per-tensor Gaussian scalar quantization (equiprobable-bin codebook
@@ -41,11 +46,16 @@ import jax.numpy as jnp
 
 from ..core import quantizers as Q
 from ..core import jax_scheme
+from .accounting import row_bits, side_info_bits
 
 
 def wire_bits_all_gather(n_per_shard: int, d: int, bits: int, n_shards: int, fp_bits=32):
-    """Bits each shard puts on the wire: codes + side info (vs fp32 baseline)."""
-    quantized = n_per_shard * bits + (d * d + 2 * d) * fp_bits
+    """Bits each shard puts on the wire: codes + side info (vs fp32 baseline).
+
+    Side info charges :func:`repro.comm.accounting.side_info_bits` — the ONE
+    formula shared with ``q_all_gather``'s ``return_state`` ledger and the
+    protocol ledgers (tests/test_comm.py pins both call sites equal)."""
+    quantized = n_per_shard * bits + side_info_bits(d, fp_bits)
     baseline = n_per_shard * d * fp_bits
     return quantized, baseline
 
@@ -71,12 +81,17 @@ def q_all_gather(
         "center" (§5.1, every shard targets the covariance of shard
         ``center``).
     return_state : also return a dict of what the collective moved —
-        ``codes`` (m, n_loc, d) int32 with -1 on masked rows, ``decoded``
+        ``codes`` (m, n_loc, W) uint32 PACKED words (the physical wire;
+        masked rows are all-zero words; unpack with
+        ``jax_scheme.unpack_codes`` at each shard's ``rates``), ``decoded``
         (m, n_loc, d) reconstructions WITHOUT the own-block substitution,
         ``T``/``T_inv``/``sigma``/``rates`` side info per shard, ``mask``
-        (m, n_loc), and ``wire_bits`` — the int32 ledger of actual payload
-        bits (codes at each shard's allocated rate over its VALID rows +
-        2 d² fp32 side info; the center shard is not charged in center mode).
+        (m, n_loc), ``wire_bits`` — the Theorem-1 ledger (each shard's
+        allocated rate over its VALID rows + ``accounting.side_info_bits``)
+        — and ``payload_bits`` — the packed payload physically moved,
+        measured from the word buffer (itemsize * 8 per word per valid row
+        + the same side info).  The center shard is not charged in center
+        mode.
     """
     n_loc, d = x.shape
     m = jax.lax.psum(1, axis_name)
@@ -105,22 +120,28 @@ def q_all_gather(
     tables = jax_scheme.scheme_tables(bits_per_sample, max_bits)
 
     codes = jax_scheme.encode(state, x, tables)
-    codes_small = codes.astype(jnp.uint8 if cap <= 8 else jnp.int32)
+    mask_l = jnp.ones((n_loc,), jnp.float32) if mask is None else mask
+    # the physical wire: every row's codes concatenated at their allocated
+    # widths into whole uint32 words (R bits/row + per-word padding), NOT a
+    # uint8/int32 per symbol — this buffer IS what the collective moves
+    rbits = row_bits(bits_per_sample, d, max_bits)
+    words = jax_scheme.pack_codes(
+        codes, state["rates"], total_bits=rbits, mask=mask_l
+    )
 
-    all_codes = jax.lax.all_gather(codes_small, axis_name)  # (m, n_loc, d) int wire
-    all_T = jax.lax.all_gather(state["T"], axis_name)  # side info O(d^2)
-    all_Tinv = jax.lax.all_gather(state["T_inv"], axis_name)
+    all_words = jax.lax.all_gather(words, axis_name)  # (m, n_loc, W) the wire
+    all_Tinv = jax.lax.all_gather(state["T_inv"], axis_name)  # side info O(d^2)
     all_sigma = jax.lax.all_gather(state["sigma"], axis_name)
     all_rates = jax.lax.all_gather(state["rates"], axis_name)
-    mask_l = jnp.ones((n_loc,), jnp.float32) if mask is None else mask
     all_mask = jax.lax.all_gather(mask_l, axis_name)
 
-    def dec(codes_j, Tinv_j, sigma_j, rates_j):
+    def dec(words_j, Tinv_j, sigma_j, rates_j):
+        codes_j = jax_scheme.unpack_codes(words_j, rates_j, total_bits=rbits)
         _, cents = tables
-        Xp = Q.dequantize(codes_j.astype(jnp.int32), sigma_j, rates_j, cents)
+        Xp = Q.dequantize(codes_j, sigma_j, rates_j, cents)
         return Xp @ Tinv_j.T
 
-    xhat = jax.vmap(dec)(all_codes, all_Tinv, all_sigma, all_rates)
+    xhat = jax.vmap(dec)(all_words, all_Tinv, all_sigma, all_rates)
     xhat = xhat * all_mask[..., None]  # masked rows decode to exactly zero
     # substitute own exact block
     own = jax.nn.one_hot(idx, m, dtype=x.dtype)[:, None, None]
@@ -128,17 +149,24 @@ def q_all_gather(
     if not return_state:
         return view
 
-    # the ledger, from what actually moved: each transmitting shard pays its
-    # allocated rate per VALID row plus 2 d^2 fp32 of side info
-    contrib = state["rates"].sum() * n_valid.astype(jnp.int32) + 2 * d * d * 32
+    # two ledgers (repro.comm.accounting): the Theorem-1 formula, and the
+    # packed payload MEASURED from the buffer the collective moved — each
+    # transmitting shard pays whole words per VALID row plus side info
+    n_valid_i = n_valid.astype(jnp.int32)
+    contrib = state["rates"].sum() * n_valid_i + side_info_bits(d)
+    row_payload = words.shape[-1] * words.dtype.itemsize * 8
+    pcontrib = row_payload * n_valid_i + side_info_bits(d)
     if mode == "center":
-        contrib = contrib * (idx != center).astype(jnp.int32)
+        transmits = (idx != center).astype(jnp.int32)
+        contrib = contrib * transmits
+        pcontrib = pcontrib * transmits
     wire_bits = jax.lax.psum(contrib, axis_name)
-    all_codes_i32 = jnp.where(
-        all_mask[..., None] > 0, all_codes.astype(jnp.int32), -1
-    )
+    payload_bits = jax.lax.psum(pcontrib, axis_name)
+    # T is the encoder's state, not wire traffic — gathered only because the
+    # serving artifact freezes it for streaming update()
+    all_T = jax.lax.all_gather(state["T"], axis_name)
     return view, {
-        "codes": all_codes_i32,
+        "codes": all_words,
         "decoded": xhat,
         "T": all_T,
         "T_inv": all_Tinv,
@@ -146,18 +174,33 @@ def q_all_gather(
         "rates": all_rates,
         "mask": all_mask,
         "wire_bits": wire_bits,
+        "payload_bits": payload_bits,
     }
+
+
+# codes per packed q_psum row: keeps every row's bit offsets far below the
+# uint32 ceiling of the packer (a single row would wrap past 2^32 bits for
+# ~10^8-element gradients) at <= ROW_CODES*bits-1 bits of tail padding total
+_PSUM_ROW_CODES = 1024
 
 
 def _q_psum_impl(g, axis_name: str, bits: int):
     flat = g.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
     sigma = jnp.sqrt(jnp.mean(flat * flat) + 1e-30)
     edges = jnp.asarray(Q.gauss_bin_edges(bits), jnp.float32) * sigma
     cents = jnp.asarray(Q.gauss_centroids(bits), jnp.float32)
-    codes = jnp.searchsorted(edges, flat).astype(jnp.uint8 if bits <= 8 else jnp.int32)
-    all_codes = jax.lax.all_gather(codes, axis_name)  # wire: bits/elem
+    codes = jnp.searchsorted(edges, flat).astype(jnp.int32)
+    # the wire: the tensor as packed rows of uniform bits-wide codes
+    k = min(_PSUM_ROW_CODES, n)
+    codes = jnp.pad(codes, (0, (-n) % k))
+    words = jax_scheme.pack_codes(codes.reshape(-1, k), bits)
+    all_words = jax.lax.all_gather(words, axis_name)  # bits/elem + word pad
     all_sigma = jax.lax.all_gather(sigma, axis_name)
-    vals = cents[all_codes.astype(jnp.int32)] * all_sigma[:, None]
+    all_codes = jax.vmap(
+        lambda w: jax_scheme.unpack_codes(w, bits, num=k).reshape(-1)[:n]
+    )(all_words)
+    vals = cents[all_codes] * all_sigma[:, None]
     return jnp.sum(vals, axis=0).reshape(g.shape).astype(g.dtype)
 
 

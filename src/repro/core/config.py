@@ -22,9 +22,12 @@ GRAM_BACKENDS = ("xla", "pallas")
 GRAM_MODES = ("nystrom", "nystrom_fitc", "direct", "dense")
 TRAIN_IMPLS = ("scan", "loop")
 
-# the artifact format written by save_artifact; bumped when meta.json's
-# layout changes (version 1 = pre-DGPConfig artifacts, loaded via defaults)
-ARTIFACT_FORMAT_VERSION = 2
+# the artifact format written by save_artifact; bumped when the checkpoint
+# layout changes.  1 = pre-DGPConfig artifacts (loaded via defaults);
+# 2 = config in meta.json, unpacked int32 wire codes; 3 = PACKED uint32 wire
+# codes + recorded payload_bits (v1/v2 still load — codes pack on restore;
+# see docs/wire_format.md)
+ARTIFACT_FORMAT_VERSION = 3
 
 
 def _ensure_registered() -> None:

@@ -31,6 +31,10 @@ __all__ = [
     "scaled_centroids",
     "scaled_centroids_batched",
     "masked_second_moment",
+    "pack_codes",
+    "unpack_codes",
+    "row_words",
+    "WORD_BITS",
     "SchemeState",
 ]
 
@@ -125,6 +129,154 @@ def scaled_centroids_batched(rates, sigma, tables):
     return jax.vmap(
         lambda r, s: scaled_centroids({"rates": r, "sigma": s}, tables)
     )(rates, sigma)
+
+
+# --------------------------------------------------------------------------
+# the packed code plane: b-bit codes <-> uint32 words
+#
+# This is THE on-wire / at-rest representation of quantized data: the
+# collectives all-gather these words (repro.comm), the fused dequantize+gram
+# kernels unpack them in-block (repro.kernels.qgram), WireState carries them,
+# and checkpoints persist them (format_version 3).  Layout (docs/wire_format.md):
+# the d codes of one row are concatenated LSB-first at their per-dimension
+# widths — dimension i occupies bits [sum(w[:i]), sum(w[:i]) + w[i]) of the
+# row's bitstream, and bit b of the stream lives in bit (b % 32) of word
+# (b // 32).  A row occupies ceil(total_bits / 32) words; trailing pad bits
+# are zero.  Width-0 dimensions occupy no bits and unpack to code 0.
+# --------------------------------------------------------------------------
+
+WORD_BITS = 32
+
+
+def row_words(total_bits: int) -> int:
+    """uint32 words per packed row of ``total_bits`` payload bits."""
+    return (int(total_bits) + WORD_BITS - 1) // WORD_BITS
+
+
+def _pack_layout(widths, num: int, total_bits):
+    """(widths (num,) uint32, offsets (num,) uint32, W) for one packed row.
+
+    ``widths`` may be a static python int (uniform b-bit codes; b in 0..32)
+    or a (num,) integer array (possibly traced — e.g. the scheme's per-dim
+    ``rates``), in which case the static ``total_bits`` upper bound on
+    ``widths.sum()`` is required to size the word buffer."""
+    if isinstance(widths, (int, np.integer)):
+        b = int(widths)
+        if not 0 <= b <= WORD_BITS:
+            raise ValueError(f"uniform code width must be in 0..32, got {b}")
+        w = jnp.full((num,), b, jnp.uint32)
+        total = num * b
+        if total >= 2**31:
+            # bit offsets are computed in uint32; a wider row would silently
+            # wrap.  Split the data into multiple rows instead (q_psum packs
+            # its flat tensor in fixed-size chunks for exactly this reason).
+            raise ValueError(
+                f"packed row of {total} bits overflows 32-bit offsets — "
+                "split into multiple rows"
+            )
+    else:
+        w = jnp.asarray(widths).astype(jnp.uint32)
+        if w.ndim != 1 or w.shape[0] != num:
+            raise ValueError(f"widths must be ({num},), got shape {w.shape}")
+        if total_bits is None:
+            raise ValueError(
+                "per-dimension widths need a static total_bits bound to size "
+                "the word buffer (shapes cannot depend on traced values)"
+            )
+        total = int(total_bits)
+    offs = jnp.cumsum(w) - w  # exclusive prefix sum
+    return w, offs, row_words(total)
+
+
+def _width_mask(w):
+    """(1 << w) - 1 as uint32, exact for w == 32 too."""
+    full = jnp.uint32(0xFFFFFFFF)
+    m = (jnp.uint32(1) << jnp.minimum(w, jnp.uint32(WORD_BITS - 1))) - jnp.uint32(1)
+    return jnp.where(w >= WORD_BITS, full, m)
+
+
+def pack_codes(codes, widths, *, total_bits=None, mask=None):
+    """Pack integer codes along the last axis into uint32 words.
+
+    codes : (..., d) integer array; dimension i holds values in
+        [0, 2^widths[i]).  Negative entries (the -1 padded-row sentinel) pack
+        as 0 — validity is the caller's ``mask``/lengths bookkeeping, exactly
+        as for the decoded arrays.  (Sentinel detection needs a sign bit, so
+        pass uint32 codes for uniform width 32.)
+    widths : static int b (uniform b-bit codes, b in 0..32) or a (d,) integer
+        array of per-dimension widths (the scheme's ``rates``; may be traced).
+    total_bits : static upper bound on ``sum(widths)`` — required when
+        ``widths`` is an array, ignored otherwise.
+    mask : optional (...,) row validity; invalid rows pack to all-zero words.
+
+    Returns (..., W) uint32, W = ceil(total/32).  jit/vmap/shard_map-safe:
+    shapes depend only on the static ``widths``/``total_bits``.
+    """
+    codes = jnp.asarray(codes)
+    d = codes.shape[-1]
+    w, offs, W = _pack_layout(widths, d, total_bits)
+    valid = jnp.ones(codes.shape, bool)
+    if jnp.issubdtype(codes.dtype, jnp.signedinteger):
+        valid &= codes >= 0
+    if mask is not None:
+        valid &= (jnp.asarray(mask) > 0)[..., None]
+    c = jnp.where(valid, codes, 0).astype(jnp.uint32) & _width_mask(w)
+    word = (offs // WORD_BITS).astype(jnp.int32)  # (d,)
+    bit = offs % WORD_BITS  # (d,) uint32
+    lo = c << bit
+    # bits that overflow word `word` spill into word+1; when bit == 0 nothing
+    # spills (and a shift by 32 would be undefined, hence the clamp)
+    hi = jnp.where(
+        bit > 0, c >> (WORD_BITS - jnp.maximum(bit, jnp.uint32(1))), jnp.uint32(0)
+    )
+    # disjoint bit fields: scatter-ADD never carries, so add == bitwise-or.
+    # The buffer has one spare word so `word + 1` of the last dimension stays
+    # in bounds (its `hi` is necessarily 0 there).
+    out = jnp.zeros(codes.shape[:-1] + (W + 1,), jnp.uint32)
+    out = out.at[..., word].add(lo).at[..., word + 1].add(hi)
+    return out[..., :W]
+
+
+def unpack_codes(words, widths, *, num=None, total_bits=None, mask=None,
+                 dtype=jnp.int32):
+    """Inverse of :func:`pack_codes`: (..., W) uint32 -> (..., d) codes.
+
+    widths : as in :func:`pack_codes`; ``num`` (the number of codes per row)
+        is required when ``widths`` is a static int, inferred from the array
+        otherwise.
+    mask : optional (...,) row validity; invalid rows come back as the -1
+        sentinel (matching the unpacked wire convention).
+    dtype : output dtype (int32 default; use uint32 for full-width codes).
+    """
+    words = jnp.asarray(words).astype(jnp.uint32)
+    if not isinstance(widths, (int, np.integer)):
+        num = jnp.asarray(widths).shape[0] if num is None else num
+    elif num is None:
+        raise ValueError("uniform-width unpack needs num (codes per row)")
+    w, offs, W = _pack_layout(widths, num, total_bits)
+    if words.shape[-1] != W:
+        raise ValueError(
+            f"expected {W} words per row for this layout, got {words.shape[-1]}"
+        )
+    if W == 0:  # zero-rate rows: every width is 0, every code is 0
+        out = jnp.zeros(words.shape[:-1] + (num,), dtype)
+    else:
+        word = (offs // WORD_BITS).astype(jnp.int32)
+        bit = offs % WORD_BITS
+        lo = words[..., word] >> bit
+        # the clamp keeps the gather in bounds for codes that end exactly at
+        # the buffer's edge; their spill contribution is masked to 0 below
+        hi_src = words[..., jnp.minimum(word + 1, W - 1)]
+        hi = jnp.where(
+            bit > 0,
+            hi_src << (WORD_BITS - jnp.maximum(bit, jnp.uint32(1))),
+            jnp.uint32(0),
+        )
+        out = ((lo | hi) & _width_mask(w)).astype(dtype)
+    if mask is not None:
+        out = jnp.where((jnp.asarray(mask) > 0)[..., None], out,
+                        jnp.asarray(-1, dtype))
+    return out
 
 
 def encode(state, X, tables):

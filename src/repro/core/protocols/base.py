@@ -95,27 +95,28 @@ class WireState(collections.namedtuple(
     spent), and ``codes``/``scaled_cents`` feed the fused dequantize+gram
     kernel under ``gram_backend="pallas"``.
 
-    Fields: codes (m, n_pad, d) int32 [padded rows = -1, decode to 0];
+    Fields: codes (m, n_pad, W) uint32 PACKED words — the physical code plane
+    (``jax_scheme.pack_codes``: each row's d codes concatenated at their
+    allocated widths, W = ceil(R/32); padded rows are all-zero words; unpack
+    at the machine's ``rates``).  This is the SAME buffer the mesh collectives
+    move, the packed qgram kernels consume, and format-v3 checkpoints store.
     decoded (m, n_pad, d) reconstructions [padded rows zero]; T_inv (m, d, d)
     decorrelating inverses; rates (m, d) int32 per-dim bit allocation;
     sigma (m, d); scaled_cents (m, d, C) qgram decode tables; T (m, d, d)
     forward transforms.  The ``vq`` scheme fills ``decoded`` only (identity
-    transforms, no int codes — its channel state rides in the artifact's
-    ``data`` dict instead)."""
+    transforms, a zero-width word buffer — its channel state rides in the
+    artifact's ``data`` dict instead)."""
 
     __slots__ = ()
 
 
 def _wire_bits(rates, lengths, d: int, skip=None) -> int:
-    """Paper §4 accounting: R bits/sample on the wire + O(2 d²) fp32 side info
-    per transmitting machine."""
-    rates = np.asarray(rates)
-    total = 0
-    for j, n_j in enumerate(lengths):
-        if j == skip:
-            continue
-        total += int(rates[j].sum()) * n_j + 2 * d * d * 32
-    return total
+    """Paper §4 accounting: R bits/sample on the wire + side info per
+    transmitting machine (the shared formula:
+    :func:`repro.comm.accounting.wire_bits_formula`)."""
+    from ...comm.accounting import wire_bits_formula
+
+    return wire_bits_formula(rates, lengths, d, skip=skip)
 
 
 def _mask_gram(G, mask_r, mask_c=None, pin_diag=True):
@@ -141,7 +142,7 @@ def _mask_gram(G, mask_r, mask_c=None, pin_diag=True):
     meta_fields=[
         "protocol", "kernel", "gram_mode", "fuse", "gram_backend",
         "n_center", "lengths", "block_order", "bits_per_sample", "max_bits",
-        "wire_bits", "impl", "scheme", "config",
+        "wire_bits", "impl", "scheme", "config", "payload_bits",
     ],
 )
 @dataclasses.dataclass
@@ -184,7 +185,9 @@ class FittedProtocol:
     names (see :mod:`repro.core.registry`); n_center (center's exact-block
     size K), lengths (per-machine true row counts), block_order (center's
     gram-row machine order), bits_per_sample, max_bits, wire_bits — the
-    paper's §4 ledger, extended by every :func:`update` — impl (``"batched"``
+    paper's §4 ledger, extended by every :func:`update` — payload_bits — the
+    measured packed payload (``repro.comm.accounting``; equals the ledger up
+    to per-word padding) — impl (``"batched"``
     single-host or ``"mesh"`` machines-as-devices: factors live sharded
     along the mesh axis and :func:`predict` runs as one shard_map program
     with a psum/KL fusion epilogue), and config — the full
@@ -212,6 +215,10 @@ class FittedProtocol:
     impl: str = "batched"
     scheme: str = "per_symbol"
     config: object | None = None  # DGPConfig (opaque here: no import cycle)
+    # the packed payload PHYSICALLY moved (measured, whole uint32 words per
+    # valid row + side info) — exceeds the Theorem-1 ``wire_bits`` ledger only
+    # by per-word padding; 0 on artifacts restored from pre-v3 checkpoints
+    payload_bits: int = 0
 
     # -- conveniences (the paper-facing entry points return artifacts) ------
 
@@ -429,8 +436,11 @@ def update(art: FittedProtocol, X_new, y_new, machine: int = 0) -> FittedProtoco
 
 
 def _reencode(art: FittedProtocol, machine: int, X_new):
-    """(X̂, wire_bits) for new symbols under ``machine``'s frozen scheme —
-    dispatched on the artifact's wire scheme (registry lookup)."""
+    """(X̂, wire_bits, payload_bits) for new symbols under ``machine``'s
+    frozen scheme — dispatched on the artifact's wire scheme (registry
+    lookup).  Per-symbol streams pass through the packed code plane (encode
+    -> pack -> unpack -> decode), so the payload charge is whole uint32
+    words per point while the ledger charge is the frozen allocated rate."""
     return SCHEMES.get(art.scheme).reencode(art, machine, X_new)
 
 
@@ -463,6 +473,7 @@ def save_artifact(art: FittedProtocol, directory: str, step: int = 0) -> str:
         "block_order": list(art.block_order) if art.block_order is not None else None,
         "bits_per_sample": art.bits_per_sample, "max_bits": art.max_bits,
         "wire_bits": art.wire_bits, "has_wire": art.wire is not None,
+        "payload_bits": art.payload_bits,  # v3: measured packed payload
         "impl": art.impl,  # provenance; restore is always single-host
         "scheme": art.scheme,
         "config": cfg.asdict() if cfg is not None else None,
@@ -470,16 +481,37 @@ def save_artifact(art: FittedProtocol, directory: str, step: int = 0) -> str:
     return _save(directory, step, art, meta)
 
 
+def _pack_legacy_wire(wire: WireState, meta: dict) -> WireState:
+    """Pre-v3 wire state (unpacked int32 codes) -> the packed code plane."""
+    from ...comm.accounting import row_bits
+    from .. import jax_scheme
+
+    m, n_pad, d = wire.codes.shape
+    if meta.get("scheme", "per_symbol") == "vq":
+        # vq never had codes (the stored plane was all -1 sentinels)
+        return wire._replace(codes=jnp.zeros((m, n_pad, 0), jnp.uint32))
+    rbits = row_bits(meta["bits_per_sample"], d, meta["max_bits"])
+    words = jax.vmap(
+        lambda c, r: jax_scheme.pack_codes(c, r, total_bits=rbits)
+    )(jnp.asarray(wire.codes), jnp.asarray(wire.rates))
+    return wire._replace(codes=words)
+
+
 def load_artifact(directory: str, step: int | None = None, shardings=None) -> FittedProtocol:
     """Restore a :func:`save_artifact` checkpoint into a fresh artifact.
 
     Always restores as a SINGLE-HOST artifact (``impl="batched"``): a mesh
     fit's checkpoint round-trips to an equivalent host-serving artifact
-    (sharded factors were gathered at save time).  Pre-redesign checkpoints
+    (sharded factors were gathered at save time).  Format version 3 stores
+    the wire codes PACKED (uint32 words — 4-16x smaller than the old int32
+    plane at b<=8); older checkpoints store unpacked int32 codes, which are
+    packed on load so every restored artifact carries the same in-memory
+    representation (predictions are bitwise identical either way —
+    tests/test_ckpt_backcompat.py).  Pre-redesign checkpoints
     (format version 1: no ``config``/``scheme`` in ``meta.json``) load too —
     the scheme defaults to ``per_symbol`` and a
     :class:`~repro.core.config.DGPConfig` is reconstructed from the legacy
-    metadata fields (tests/test_ckpt_backcompat.py).  ``shardings``:
+    metadata fields.  ``shardings``:
     optional — a single ``Sharding``/device applied to every leaf, or a
     ``{leaf_key: sharding}`` dict (keys as in the npz: ``factors/W``,
     ``data/Xc``, ``wire/codes``, ...) for per-leaf placement; leaves are
@@ -509,6 +541,12 @@ def load_artifact(directory: str, step: int | None = None, shardings=None) -> Fi
     wire = None
     if meta["has_wire"]:
         wire = WireState(*(put(f"wire/{f}") for f in WireState._fields))
+        if version < 3 and wire.codes.dtype != jnp.uint32:
+            # pre-v3 checkpoints stored the unpacked int32 code plane; pack
+            # it into the uint32 wire representation every consumer (qgram
+            # kernels, update(), re-save) now shares.  -1 sentinel rows pack
+            # to all-zero words, matching a fresh fit's layout.
+            wire = _pack_legacy_wire(wire, meta)
     cfg_dict = meta.get("config")
     config = (
         DGPConfig.from_dict(cfg_dict) if cfg_dict
@@ -527,6 +565,7 @@ def load_artifact(directory: str, step: int | None = None, shardings=None) -> Fi
         bits_per_sample=meta["bits_per_sample"], max_bits=meta["max_bits"],
         wire_bits=meta["wire_bits"], impl="batched",
         scheme=meta.get("scheme", "per_symbol"), config=config,
+        payload_bits=meta.get("payload_bits", 0),  # pre-v3: not recorded
     )
 
 

@@ -69,6 +69,7 @@ class HostBroadcastGP:
     wire_bits: int
     gram_mode: str
     fuse: str
+    payload_bits: int = 0  # packed-payload formula (accounting), for parity
 
     def predict(self, X_star):
         m = len(self.parts)
@@ -147,10 +148,16 @@ def fit_broadcast_host(parts, cfg, params=None) -> HostBroadcastGP:
         X0, y0, kernel=cfg.kernel, params=params, steps=cfg.steps, lr=cfg.lr,
         gram_override=gram0, impl=cfg.train_impl,
     )
+    from ...comm.accounting import payload_bits_formula
+
+    payload = payload_bits_formula(
+        [p[0].shape[0] for p in parts], parts[0][0].shape[1],
+        cfg.bits_per_sample, cfg.max_bits,
+    )
     return HostBroadcastGP(
         kernel=cfg.kernel, params=trained.params, parts=list(parts),
         decoded=decoded, wire_bits=wire, gram_mode=cfg.gram_mode,
-        fuse=cfg.fusion,
+        fuse=cfg.fusion, payload_bits=payload,
     )
 
 
@@ -159,7 +166,9 @@ def fit_broadcast_host(parts, cfg, params=None) -> HostBroadcastGP:
 # --------------------------------------------------------------------------
 
 
-def _train_inner_products(shards: PaddedShards, wire: WireState, backend: str):
+def _train_inner_products(
+    shards: PaddedShards, wire: WireState, backend: str, pack_bits: int = 0
+):
     """The query-independent inner-product tensors every machine view is
     assembled from (computed ONCE at fit time):
 
@@ -167,17 +176,22 @@ def _train_inner_products(shards: PaddedShards, wire: WireState, backend: str):
     B (m, m, n, n): B[j, i] = X̂_j Xs_i^T (decoded j against exact i)
 
     backend="pallas" computes A with the tiled gram kernel and B straight
-    from int codes with the fused dequantize+gram kernel."""
+    from the PACKED wire words with the fused unpack+dequantize+gram kernel
+    (``pack_bits``: the static row bit budget of the packed plane)."""
     X = shards.X
     if backend == "pallas":
         from ...kernels.gram.ops import gram as gram_kernel
-        from ...kernels.qgram.ops import qgram
+        from ...kernels.qgram.ops import qgram_packed
 
         A = jax.vmap(lambda a: gram_kernel(a, a))(X)
         proj = jnp.einsum("ind,jde->jine", X, wire.T_inv)  # (m_j, m_i, n, d)
         B = jax.vmap(
-            lambda c, t, ys: jax.vmap(lambda yy: qgram(c, t, yy))(ys)
-        )(wire.codes, wire.scaled_cents, proj)
+            lambda w, r, t, mk, ys: jax.vmap(
+                lambda yy: qgram_packed(
+                    w, r, t, yy, total_bits=pack_bits, mask=mk
+                )
+            )(ys)
+        )(wire.codes, wire.rates, wire.scaled_cents, shards.mask, proj)
         return A, B
     A = jnp.einsum("ind,imd->inm", X, X)
     B = jnp.einsum("jnd,imd->jinm", wire.decoded, X)
@@ -194,29 +208,38 @@ def _star_exact_products(Xs, X_star, backend: str):
     return jnp.einsum("td,ind->itn", X_star, Xs)
 
 
-def _decoded_inner_products(shards: PaddedShards, wire: WireState, backend: str):
+def _decoded_inner_products(
+    shards: PaddedShards, wire: WireState, backend: str, pack_bits: int = 0
+):
     """D (m, n_pad, m*n_pad): D[j] = X̂_j [X̂_0..X̂_m]^T (decoded-vs-decoded) —
     only the gram_mode="direct" views consume this, so it is computed only for
     them (fit time)."""
     m, n_pad, d = shards.X.shape
     dec_flat = wire.decoded.reshape(m * n_pad, d)
     if backend == "pallas":
-        from ...kernels.qgram.ops import qgram_batched
+        from ...kernels.qgram.ops import qgram_packed_batched
 
         proj = jnp.einsum("nd,jde->jne", dec_flat, wire.T_inv)
-        return qgram_batched(wire.codes, wire.scaled_cents, proj)
+        return qgram_packed_batched(
+            wire.codes, wire.rates, wire.scaled_cents, proj,
+            total_bits=pack_bits, mask=shards.mask,
+        )
     return jnp.einsum("jnd,Nd->jnN", wire.decoded, dec_flat)
 
 
-def _star_decoded_products(wire: WireState, X_star, backend: str):
+def _star_decoded_products(wire: WireState, X_star, backend: str,
+                           pack_bits: int = 0, mask=None):
     """E (m, t, n_pad): E[j] = X_star X̂_j^T — query-time products against the
-    reconstructions (gram_mode="direct" views only); straight from int codes
-    under the pallas backend."""
+    reconstructions (gram_mode="direct" views only); straight from the packed
+    wire words under the pallas backend."""
     if backend == "pallas":
-        from ...kernels.qgram.ops import qgram_batched
+        from ...kernels.qgram.ops import qgram_packed_batched
 
         proj_star = jnp.einsum("td,jde->jte", X_star, wire.T_inv)
-        return qgram_batched(wire.codes, wire.scaled_cents, proj_star).transpose(0, 2, 1)
+        return qgram_packed_batched(
+            wire.codes, wire.rates, wire.scaled_cents, proj_star,
+            total_bits=pack_bits, mask=mask,
+        ).transpose(0, 2, 1)
     return jnp.einsum("td,jnd->jtn", X_star, wire.decoded)
 
 
@@ -277,11 +300,14 @@ def broadcast_gp(
 
 
 def _fit_broadcast(parts, cfg, params=None) -> FittedProtocol:
+    from ...comm.accounting import row_bits
+
     m = len(parts)
     shards = pad_parts(parts)
     _, n_pad, d = shards.X.shape
     bits, kernel, gram_mode = cfg.bits_per_sample, cfg.kernel, cfg.gram_mode
     gram_backend, fuse = cfg.gram_backend, cfg.fusion
+    pack_bits = row_bits(bits, d, cfg.max_bits)
     if cfg.impl == "mesh":
         if gram_mode != "nystrom":
             raise NotImplementedError(
@@ -291,7 +317,7 @@ def _fit_broadcast(parts, cfg, params=None) -> FittedProtocol:
             raise NotImplementedError(
                 'impl="mesh" assembles grams device-local (gram_backend="xla")'
             )
-    wire_state, wire, extras = SCHEMES.get(cfg.scheme).run(
+    wire_state, wire, payload, extras = SCHEMES.get(cfg.scheme).run(
         shards, bits, cfg.max_bits, "broadcast", 0, cfg.impl
     )
 
@@ -313,7 +339,7 @@ def _fit_broadcast(parts, cfg, params=None) -> FittedProtocol:
         )
         ip_KN0 = X0s @ X_cols0.T
     else:
-        A, B = _train_inner_products(shards, wire_state, gram_backend)
+        A, B = _train_inner_products(shards, wire_state, gram_backend, pack_bits)
         ip_KK0 = A[0][:n0, :n0]
         ip_KN0 = jnp.concatenate(
             [ip_KK0] + [B[j, 0][: L[j], :n0].T for j in range(1, m)], axis=1
@@ -360,7 +386,7 @@ def _fit_broadcast(parts, cfg, params=None) -> FittedProtocol:
             fuse=fuse, gram_backend=gram_backend, n_center=0,
             lengths=shards.lengths, block_order=None, bits_per_sample=bits,
             max_bits=cfg.max_bits, wire_bits=int(wire), impl="mesh",
-            scheme=cfg.scheme, config=cfg,
+            scheme=cfg.scheme, config=cfg, payload_bits=int(payload),
         )
 
     if gram_mode == "nystrom":
@@ -383,7 +409,7 @@ def _fit_broadcast(parts, cfg, params=None) -> FittedProtocol:
 
         factors = jax.vmap(build)(jnp.arange(m))
     elif gram_mode == "direct":
-        D = _decoded_inner_products(shards, wire_state, gram_backend)
+        D = _decoded_inner_products(shards, wire_state, gram_backend, pack_bits)
 
         def build(i):
             mask_i = shards.mask[i]
@@ -430,6 +456,7 @@ def _fit_broadcast(parts, cfg, params=None) -> FittedProtocol:
         impl=cfg.impl,
         scheme=cfg.scheme,
         config=cfg,
+        payload_bits=int(payload),
     )
 
 
@@ -447,9 +474,14 @@ def _predict_broadcast_experts(art, X_star, sq_star, g_ss, noise):
 
         return jax.vmap(apply_i)(art.factors, C, sq_exact, mask)
     # direct views
+    from ...comm.accounting import row_bits
+
     sq_dec = art.data["sq_dec"]
     mask_flat = mask.reshape(-1)
-    E = _star_decoded_products(art.wire, X_star, art.gram_backend)
+    E = _star_decoded_products(
+        art.wire, X_star, art.gram_backend,
+        row_bits(art.bits_per_sample, Xs.shape[-1], art.max_bits), mask,
+    )
 
     def apply_i(i, fac):
         star_cols = E.at[i].set(C[i])  # (m, t, n_pad); block i exact
@@ -478,7 +510,7 @@ def _update_broadcast(art: FittedProtocol, X_new, y_new, j):
     noise = jnp.exp(p.log_noise)
     m = len(art.lengths)
     n_new = X_new.shape[0]
-    decoded, wire_add = _reencode(art, j, X_new)
+    decoded, wire_add, payload_add = _reencode(art, j, X_new)
     # machine j broadcast its codes once: every peer i sees X̂_new; machine j
     # itself keeps the exact points.  The new points extend every view's
     # COLUMNS (the rank-n_pad Nyström bases stay fixed).
@@ -506,6 +538,7 @@ def _update_broadcast(art: FittedProtocol, X_new, y_new, j):
         art, y=y2, factors=factors,
         lengths=_bump_length(art.lengths, j, n_new),
         wire_bits=art.wire_bits + wire_add,
+        payload_bits=art.payload_bits + payload_add,
     )
 
 

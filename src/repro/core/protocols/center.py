@@ -82,11 +82,11 @@ def _quantize_to_center_batched(
     """Batched §5.1 wire: run the registered wire scheme for every machine at
     once, then assemble the center's gram-row layout (exact center block
     first).  ``impl="mesh"`` runs the per-symbol wire as one shard_map
-    program on a machines-as-devices mesh (comm.q_all_gather is the channel;
-    ledger from the actual payload)."""
+    program on a machines-as-devices mesh (comm.q_all_gather is the channel,
+    moving the packed code plane; payload measured from the buffer)."""
     shards = pad_parts(parts)
     m, _, d = shards.X.shape
-    wire_state, wire, extras = SCHEMES.get(scheme).run(
+    wire_state, wire, payload, extras = SCHEMES.get(scheme).run(
         shards, bits_per_sample, max_bits, "center", center, impl
     )
     order = [center] + [j for j in range(m) if j != center]
@@ -100,7 +100,7 @@ def _quantize_to_center_batched(
     )
     return (
         X_recon, y_all, wire, shards.lengths[center], sq_norms, shards,
-        wire_state, order, extras,
+        wire_state, order, extras, payload,
     )
 
 
@@ -128,22 +128,32 @@ def quantize_to_center(
     return out[:5]
 
 
-def _pallas_ip_rows(wire: WireState, block_order, lengths, Xc, Y):
+def _pallas_ip_rows(wire: WireState, block_order, lengths, Xc, Y, pack_bits: int):
     """⟨x_i, y_j⟩ for every x in the center gram-row layout (N, p): center rows
     via the Pallas tiled gram on exact points; reconstructed rows straight
-    from int codes via the fused dequantize+gram kernel —
-    X̂ = dequant(codes) @ T_inv^T, so ⟨x̂, y⟩ = qgram(codes, Y @ T_inv).
-    Shared by the CenterGP fit-time builder and the FittedProtocol serve path."""
+    from the PACKED wire words via the fused unpack+dequantize+gram kernel —
+    X̂ = dequant(unpack(words)) @ T_inv^T, so ⟨x̂, y⟩ =
+    qgram_packed(words, Y @ T_inv).  ``pack_bits`` is the static row bit
+    budget the words were packed under (``accounting.row_bits``).  Shared by
+    the CenterGP fit-time builder and the FittedProtocol serve path."""
     from ...kernels.gram.ops import gram as gram_kernel
-    from ...kernels.qgram.ops import qgram_batched
+    from ...kernels.qgram.ops import qgram_packed_batched
 
     idx = list(block_order[1:])
-    codes = wire.codes[jnp.asarray(idx)]
+    n_pad = wire.codes.shape[1]
+    words = wire.codes[jnp.asarray(idx)]
+    rates = wire.rates[jnp.asarray(idx)]
     cents = wire.scaled_cents[jnp.asarray(idx)]
     T_inv = wire.T_inv[jnp.asarray(idx)]
+    mask = jnp.asarray(
+        np.arange(n_pad)[None, :] < np.asarray([lengths[j] for j in idx])[:, None],
+        jnp.float32,
+    )
     top = gram_kernel(Xc, Y)  # (n_c, p)
     proj = jnp.einsum("pd,mde->mpe", Y, T_inv)  # Y in each decorrelated basis
-    blocks = qgram_batched(codes, cents, proj)  # (m-1, n_pad, p)
+    blocks = qgram_packed_batched(
+        words, rates, cents, proj, total_bits=pack_bits, mask=mask
+    )  # (m-1, n_pad, p)
     rows = [top] + [blocks[i, : lengths[j]] for i, j in enumerate(idx)]
     return jnp.concatenate(rows, axis=0)
 
@@ -159,9 +169,11 @@ class CenterGP:
     gram_mode: str = "nystrom"
     sq_norms: jnp.ndarray | None = None  # exact |x|^2 for the FITC diagonal
     gram_backend: str = "xla"
-    wire: WireState | None = None  # int codes + tables (pallas/qgram path)
+    wire: WireState | None = None  # packed words + tables (pallas/qgram path)
     block_order: tuple | None = None  # non-center machine ids, X_recon order
     block_lengths: tuple | None = None  # their true row counts
+    pack_bits: int = 0  # static row bit budget of the packed wire codes
+    payload_bits: int = 0  # measured packed payload (accounting formula)
     _ip_cache: dict = dataclasses.field(default_factory=dict, repr=False)
 
     def __post_init__(self):
@@ -185,7 +197,7 @@ class CenterGP:
         """⟨x_i, y_j⟩ for every x in X_recon layout — see :func:`_pallas_ip_rows`."""
         return _pallas_ip_rows(
             self.wire, self.block_order, self.block_lengths,
-            self.X_recon[: self.n_center], Y,
+            self.X_recon[: self.n_center], Y, self.pack_bits,
         )
 
     def _ip(self, key: str):
@@ -315,12 +327,20 @@ def fit_center_host(parts, cfg, params: GPParams | None = None) -> CenterGP:
     one dense Cholesky per machine.  Returns the legacy :class:`CenterGP`
     model (protocol semantics identical to the batched artifact; locked by
     tests/test_batched_protocol.py / test_conformance.py)."""
+    from ...comm.accounting import payload_bits_formula
+
     _check_center(cfg, parts)
     X_recon, y_all, wire, n_c, sq_norms = _quantize_to_center_host(
         parts, cfg.bits_per_sample, cfg.center, cfg.max_bits
     )
+    d = X_recon.shape[1]
+    payload = payload_bits_formula(
+        [p[0].shape[0] for p in parts], d, cfg.bits_per_sample, cfg.max_bits,
+        skip=cfg.center,
+    )
     if cfg.gram_mode == "nystrom_fitc":  # exact |x|^2 side-channel (32 bits/pt)
         wire += 32 * (X_recon.shape[0] - n_c)
+        payload += 32 * (X_recon.shape[0] - n_c)
     model = CenterGP(
         kernel=cfg.kernel,
         params=params or init_params(),
@@ -331,6 +351,7 @@ def fit_center_host(parts, cfg, params: GPParams | None = None) -> CenterGP:
         gram_mode=cfg.gram_mode,
         sq_norms=sq_norms,
         gram_backend=cfg.gram_backend,
+        payload_bits=payload,
     )
     trained = train_gp(
         X_recon, y_all, kernel=cfg.kernel, params=model.params, steps=cfg.steps,
@@ -386,16 +407,21 @@ def single_center_gp(
 
 
 def _fit_center(parts, cfg, params: GPParams | None = None) -> FittedProtocol:
+    from ...comm.accounting import row_bits
+
     _check_center(cfg, parts)
-    (X_recon, y_all, wire, n_c, sq_norms, shards, wire_state, order, extras) = (
+    (X_recon, y_all, wire, n_c, sq_norms, shards, wire_state, order, extras,
+     payload) = (
         _quantize_to_center_batched(
             parts, cfg.bits_per_sample, cfg.center, cfg.max_bits, cfg.impl,
             cfg.scheme,
         )
     )
     kernel, gram_mode, gram_backend = cfg.kernel, cfg.gram_mode, cfg.gram_backend
+    d = X_recon.shape[1]
     if gram_mode == "nystrom_fitc":  # exact |x|^2 side-channel (32 bits/point)
         wire += 32 * (X_recon.shape[0] - n_c)
+        payload += 32 * (X_recon.shape[0] - n_c)
     builder = CenterGP(
         kernel=kernel,
         params=params or init_params(),
@@ -409,6 +435,8 @@ def _fit_center(parts, cfg, params: GPParams | None = None) -> FittedProtocol:
         wire=wire_state,
         block_order=tuple(order),
         block_lengths=shards.lengths,
+        pack_bits=row_bits(cfg.bits_per_sample, d, cfg.max_bits),
+        payload_bits=payload,
     )
     trained = train_gp(
         X_recon, y_all, kernel=kernel, params=builder.params, steps=cfg.steps,
@@ -475,6 +503,7 @@ def _fit_center(parts, cfg, params: GPParams | None = None) -> FittedProtocol:
         impl=cfg.impl,
         scheme=cfg.scheme,
         config=cfg,
+        payload_bits=int(payload),
     )
 
 
@@ -511,7 +540,12 @@ def _predict_center(art: FittedProtocol, X_star, sq_star, g_ss, noise):
 
 def _artifact_ip_rows(art, Y):
     """⟨x_i, y_j⟩ in the artifact's X_recon layout — see :func:`_pallas_ip_rows`."""
-    return _pallas_ip_rows(art.wire, art.block_order, art.lengths, art.data["Xc"], Y)
+    from ...comm.accounting import row_bits
+
+    pack_bits = row_bits(art.bits_per_sample, art.data["Xc"].shape[1], art.max_bits)
+    return _pallas_ip_rows(
+        art.wire, art.block_order, art.lengths, art.data["Xc"], Y, pack_bits
+    )
 
 
 def _update_center(art: FittedProtocol, X_new, y_new, j):
@@ -526,11 +560,12 @@ def _update_center(art: FittedProtocol, X_new, y_new, j):
     n_new = X_new.shape[0]
     center = art.block_order[0] if art.block_order else 0
     if j == center:  # the center's own data is local: exact, zero wire cost
-        decoded, wire_add = X_new, 0
+        decoded, wire_add, payload_add = X_new, 0, 0
     else:
-        decoded, wire_add = _reencode(art, j, X_new)
+        decoded, wire_add, payload_add = _reencode(art, j, X_new)
         if art.gram_mode == "nystrom_fitc":
             wire_add += 32 * n_new  # exact |x|^2 side channel
+            payload_add += 32 * n_new
     sq_new = jnp.sum(decoded**2, -1)
     sq_new_exact = jnp.sum(X_new**2, -1)
     k = gram_fn(art.kernel)
@@ -574,6 +609,7 @@ def _update_center(art: FittedProtocol, X_new, y_new, j):
         art, y=y2, factors=f, data=data,
         lengths=_bump_length(art.lengths, j, n_new),
         wire_bits=art.wire_bits + wire_add,
+        payload_bits=art.payload_bits + payload_add,
     )
 
 

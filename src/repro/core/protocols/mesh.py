@@ -83,10 +83,12 @@ def _mesh_wire_fn(m: int, total_bits: int, max_bits: int, mode: str, center: int
 def _run_wire_protocol_mesh(X, mask, total_bits: int, max_bits: int, mode: str, center: int):
     """The per-symbol wire protocol as a REAL device-mesh program (machines =
     devices along ``MESH_AXIS``; ``comm.q_all_gather`` is the only
-    inter-machine channel).  Returns the same :class:`~.base.WireState`
-    layout as the batched program (replicated arrays) plus the wire-bit
-    ledger computed from what the collective actually moved — integer-equal
-    to the host oracle's §4 accounting (tests/test_conformance.py)."""
+    inter-machine channel, and what it gathers is the PACKED uint32 code
+    plane).  Returns the same :class:`~.base.WireState` layout as the batched
+    program (replicated arrays; ``codes`` are the gathered packed words),
+    the Theorem-1 ledger, and the payload bits MEASURED from the buffer the
+    collective moved — integer-equal to the host oracle's §4 accounting /
+    the shared payload formula (tests/test_conformance.py)."""
     m, n_pad, d = X.shape
     st = _mesh_wire_fn(m, total_bits, max_bits, mode, center)(X, mask)
     tables = jax_scheme.scheme_tables(total_bits, max_bits)
@@ -95,7 +97,7 @@ def _run_wire_protocol_mesh(X, mask, total_bits: int, max_bits: int, mode: str, 
         st["codes"], st["decoded"], st["T_inv"], st["rates"], st["sigma"],
         cents, st["T"],
     )
-    return ws, int(st["wire_bits"])
+    return ws, int(st["wire_bits"]), int(st["payload_bits"])
 
 
 def _shard_machine_axis(tree, mesh: Mesh):

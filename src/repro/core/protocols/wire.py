@@ -21,10 +21,13 @@ by name (``repro.core.registry.SCHEMES``):
   ``R_j ≈ R`` plus the same O(2d²) fp32 side info as per-symbol (the
   receiver needs the channel/transform parameters either way).
 
-Every scheme returns the shared :class:`~.base.WireState` layout plus an
-``extras`` dict of scheme-private arrays that ride in the artifact's
-``data`` (the vq channel state lives there so streaming
-:func:`~.base.update` can re-encode new symbols under the FROZEN channel).
+Every scheme returns the shared :class:`~.base.WireState` layout (codes
+PACKED into the uint32 code plane — ``jax_scheme.pack_codes``, the same
+buffer the collectives move and checkpoints store), the Theorem-1 ledger,
+the measured physical payload bits, and an ``extras`` dict of scheme-private
+arrays that ride in the artifact's ``data`` (the vq channel state lives
+there so streaming :func:`~.base.update` can re-encode new symbols under the
+FROZEN channel).
 """
 from __future__ import annotations
 
@@ -51,10 +54,14 @@ __all__ = ["_run_wire_protocol", "PER_SYMBOL", "VQ"]
 @partial(jax.jit, static_argnames=("total_bits", "max_bits", "mode", "center"))
 def _run_wire_protocol(X, mask, total_bits: int, max_bits: int, mode: str, center: int):
     """Fit + encode + decode for EVERY machine under one jit: a single batched
-    eigh pair (fit), one batched quantize and one batched dequantize.
+    eigh pair (fit), one batched quantize and one batched dequantize; codes
+    leave the program PACKED (``jax_scheme.pack_codes`` — the physical code
+    plane; padded rows are all-zero words).
 
     mode="center": every machine targets the center's covariance (§5.1);
     mode="broadcast": machine j targets the sum of the others' (§5.2)."""
+    from ...comm.accounting import row_bits
+
     m, n_pad, d = X.shape
     n = jnp.maximum(mask.sum(axis=1), 1.0)
     S = jnp.einsum("mnd,mne->mde", X, X) / n[:, None, None]  # padded rows are 0
@@ -70,10 +77,15 @@ def _run_wire_protocol(X, mask, total_bits: int, max_bits: int, mode: str, cente
     codes = jax.vmap(lambda st, x: jax_scheme.encode(st, x, tables))(states, X)
     decoded = jax.vmap(lambda st, c: jax_scheme.decode(st, c, tables))(states, codes)
     decoded = decoded * mask[..., None]
-    codes = jnp.where(mask[..., None] > 0, codes, -1)
+    rbits = row_bits(total_bits, d, max_bits)
+    words = jax.vmap(
+        lambda st, c, mk: jax_scheme.pack_codes(
+            c, st["rates"], total_bits=rbits, mask=mk
+        )
+    )(states, codes, mask)
     cents = jax.vmap(lambda st: jax_scheme.scaled_centroids(st, tables))(states)
     return WireState(
-        codes, decoded, states["T_inv"], states["rates"], states["sigma"], cents,
+        words, decoded, states["T_inv"], states["rates"], states["sigma"], cents,
         states["T"],
     )
 
@@ -82,32 +94,47 @@ def _per_symbol_run(
     shards: PaddedShards, bits: int, max_bits: int, mode: str, center: int,
     impl: str,
 ):
+    from ...comm.accounting import payload_bits_formula
+
     m, n_pad, d = shards.X.shape
+    skip = center if mode == "center" else None
     if impl == "mesh":
         from . import mesh
 
-        ws, wire = mesh._run_wire_protocol_mesh(
+        ws, wire, payload = mesh._run_wire_protocol_mesh(
             shards.X, shards.mask, bits, max_bits, mode, center
         )
     else:
         ws = _run_wire_protocol(shards.X, shards.mask, bits, max_bits, mode, center)
-        wire = _wire_bits(
-            ws.rates, shards.lengths, d, skip=center if mode == "center" else None
-        )
-    return ws, int(wire), {}
+        wire = _wire_bits(ws.rates, shards.lengths, d, skip=skip)
+        payload = payload_bits_formula(shards.lengths, d, bits, max_bits, skip=skip)
+    return ws, int(wire), int(payload), {}
 
 
 def _per_symbol_reencode(art, machine: int, X_new):
-    """(X̂, wire_bits) for new symbols under machine's frozen codebooks."""
+    """(X̂, wire_bits, payload_bits) for new symbols under machine's frozen
+    codebooks — the stream passes through the SAME packed code plane as the
+    fit-time wire (encode -> pack -> unpack -> decode), so the physical
+    payload is whole uint32 words per point while the ledger charges the
+    frozen allocated rate."""
+    from ...comm.accounting import payload_row_bits, row_bits
+
     w = art.wire
     state = {
         "T": w.T[machine], "T_inv": w.T_inv[machine],
         "sigma": w.sigma[machine], "rates": w.rates[machine],
     }
+    d = X_new.shape[1]
     tables = jax_scheme.scheme_tables(art.bits_per_sample, art.max_bits)
-    _, decoded = jax_scheme.roundtrip(state, X_new, tables)
-    bits = int(np.asarray(w.rates[machine]).sum()) * X_new.shape[0]
-    return decoded, bits
+    codes = jax_scheme.encode(state, X_new, tables)
+    rbits = row_bits(art.bits_per_sample, d, art.max_bits)
+    words = jax_scheme.pack_codes(codes, state["rates"], total_bits=rbits)
+    codes_rt = jax_scheme.unpack_codes(words, state["rates"], total_bits=rbits)
+    decoded = jax_scheme.decode(state, codes_rt, tables)
+    n_new = X_new.shape[0]
+    bits = int(np.asarray(w.rates[machine]).sum()) * n_new
+    payload = payload_row_bits(art.bits_per_sample, d, art.max_bits) * n_new
+    return decoded, bits, payload
 
 
 PER_SYMBOL = register_scheme(SchemeSpec(
@@ -130,6 +157,8 @@ def _vq_run(
             "simulated host-side; there are no int codes for the mesh "
             "collectives to carry)"
         )
+    from ...comm.accounting import side_info_bits
+
     X = np.asarray(shards.X, np.float64)
     m, n_pad, d = X.shape
     # honor the per-symbol allocator's ceiling: max_bits caps each dimension's
@@ -160,12 +189,15 @@ def _vq_run(
         W_half[j] = ch.W_half
         rate_bits[j] = ch.rate_bits
         # honest accounting at the channel's ACHIEVED rate (≈ the target
-        # R by construction) + the per-symbol-matched O(2d²) side info
-        wire += math.ceil(L[j] * float(ch.rate_bits)) + 2 * d * d * 32
+        # R by construction) + the per-symbol-matched side info (the ONE
+        # shared formula: repro.comm.accounting.side_info_bits)
+        wire += math.ceil(L[j] * float(ch.rate_bits)) + side_info_bits(d)
 
     eye = np.broadcast_to(np.eye(d, dtype=np.float32), (m, d, d))
     ws = WireState(
-        codes=jnp.full((m, n_pad, d), -1, jnp.int32),
+        # the vq channel is continuous — there are no codes, packed or
+        # otherwise, so the packed-word slot is a zero-width uint32 buffer
+        codes=jnp.zeros((m, n_pad, 0), jnp.uint32),
         decoded=jnp.asarray(decoded),
         T_inv=jnp.asarray(eye),
         rates=jnp.zeros((m, d), jnp.int32),
@@ -178,7 +210,9 @@ def _vq_run(
         "vq_W_half": jnp.asarray(W_half),
         "vq_rate_bits": jnp.asarray(rate_bits),
     }
-    return ws, int(wire), extras
+    # block coding is simulated, so the ledger at the achieved rate IS the
+    # physical payload (no word quantization to pad against)
+    return ws, int(wire), int(wire), extras
 
 
 def _vq_reencode(art, machine: int, X_new):
@@ -199,7 +233,8 @@ def _vq_reencode(art, machine: int, X_new):
     key = jax.random.fold_in(jax.random.PRNGKey(1), art.wire_bits + machine)
     noise = jax.random.normal(key, X_new.shape, dtype=X_new.dtype)
     decoded = X_new @ A.T + noise @ W_half.T
-    return decoded, math.ceil(X_new.shape[0] * rate)
+    bits = math.ceil(X_new.shape[0] * rate)
+    return decoded, bits, bits  # simulated channel: payload == ledger
 
 
 VQ = register_scheme(SchemeSpec(name="vq", run=_vq_run, reencode=_vq_reencode))

@@ -100,15 +100,17 @@ class SchemeSpec:
     """A wire scheme: how machine shards become what the receiver sees.
 
     ``run`` executes the fit-time wire protocol for every machine at once and
-    returns ``(WireState, wire_bits, extras)`` — the ledger is the scheme's
-    honest bit accounting, ``extras`` are scheme-private arrays stashed in the
-    artifact's ``data`` dict (e.g. the vq test-channel parameters).
-    ``reencode`` encodes NEW symbols under the frozen fit-time state for
-    streaming :func:`~repro.core.protocols.base.update`."""
+    returns ``(WireState, wire_bits, payload_bits, extras)`` — ``wire_bits``
+    is the Theorem-1 ledger, ``payload_bits`` the packed payload physically
+    moved (``repro.comm.accounting``; equal up to per-word padding), and
+    ``extras`` are scheme-private arrays stashed in the artifact's ``data``
+    dict (e.g. the vq test-channel parameters).  ``reencode`` encodes NEW
+    symbols under the frozen fit-time state for streaming
+    :func:`~repro.core.protocols.base.update`."""
 
     name: str
-    run: Callable  # (shards, bits, max_bits, mode, center, impl) -> (ws, bits, extras)
-    reencode: Callable  # (art, machine, X_new) -> (decoded, wire_bits_added)
+    run: Callable  # (shards, bits, max_bits, mode, center, impl) -> (ws, bits, payload, extras)
+    reencode: Callable  # (art, machine, X_new) -> (decoded, wire_bits_added, payload_bits_added)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -78,7 +78,12 @@ class PerSymbolScheme:
         return int(self.rates.sum()) * n
 
     def side_info_bits(self, d: int) -> int:
-        return 2 * d * d * 32  # Qx and Qy exchanged (paper: O(2 d^2 + R n))
+        # Qx and Qy exchanged (paper: O(2 d^2 + R n)) — the ONE shared
+        # formula, repro.comm.accounting (deferred import: no core<->comm
+        # cycle at module load)
+        from ..comm.accounting import side_info_bits
+
+        return side_info_bits(d)
 
 
 @dataclasses.dataclass
@@ -100,7 +105,9 @@ class OptimalScheme:
         return int(np.ceil(self.channel.rate_bits * n))
 
     def side_info_bits(self, d: int) -> int:
-        return 2 * d * d * 32
+        from ..comm.accounting import side_info_bits
+
+        return side_info_bits(d)
 
 
 @dataclasses.dataclass

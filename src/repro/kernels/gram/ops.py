@@ -8,6 +8,8 @@ differentiable end-to-end when hyperparameter training runs with
 """
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 
@@ -23,8 +25,21 @@ def _pad_to(a, mult, axis):
     return jnp.pad(a, widths)
 
 
+@jax.jit
+def _gram_xla(x, y):
+    return jnp.asarray(x, jnp.float32) @ jnp.asarray(y, jnp.float32).T
+
+
 def _gram_impl(x, y, block, interpret):
     if interpret is None:
+        # off-TPU default: one jitted XLA matmul, not interpret-mode Pallas
+        # (interpret exists to CHECK the kernel; interpret=True or
+        # REPRO_FORCE_PALLAS=1 forces the kernel path — interpret mode
+        # off-TPU, for debugging only)
+        if jax.default_backend() != "tpu" and os.environ.get(
+            "REPRO_FORCE_PALLAS", ""
+        ) != "1":
+            return _gram_xla(x, y)
         interpret = jax.default_backend() != "tpu"
     n, p = x.shape[0], y.shape[0]
     bn, bp, bd = block

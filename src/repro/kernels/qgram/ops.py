@@ -1,10 +1,33 @@
-"""Public wrapper for the fused dequantize+gram kernel."""
+"""Public wrappers for the fused dequantize+gram kernels.
+
+Two entry points:
+
+* :func:`qgram_packed` / :func:`qgram_packed_batched` — the PRIMARY path:
+  consume the packed code plane (``jax_scheme.pack_codes`` uint32 words, the
+  same buffer the collectives move and the checkpoints store) and fuse
+  unpack + dequantize + gram in one tiled Pallas kernel
+  (:mod:`.packed`).  Off-TPU the default routes to an equivalent single-jit
+  XLA program instead of interpret-mode Pallas — interpret mode exists to
+  CHECK the kernel, not to win benchmarks.  Pass ``interpret=True`` (or set
+  ``REPRO_FORCE_PALLAS=1``) to force the Pallas kernel path anyway: compiled
+  on TPU, interpret mode everywhere else — for kernel debugging, never for
+  speed.  On TPU, block sizes are autotuned per shape
+  (:func:`_autotune_block`, cached).
+* :func:`qgram` / :func:`qgram_batched` — the legacy unpacked-int-code API,
+  kept for callers holding raw (n, d) int32 codes; same backend policy.
+"""
 from __future__ import annotations
+
+import functools
+import os
+import time
 
 import jax
 import jax.numpy as jnp
 
+from ...core import jax_scheme
 from .qgram import qgram_pallas, DEFAULT_BLOCK, DEFAULT_ECHUNK
+from .packed import qgram_packed_pallas, DEFAULT_BLOCK_PACKED
 
 
 def _pad_axis(a, mult, axis, value=0):
@@ -16,12 +39,163 @@ def _pad_axis(a, mult, axis, value=0):
     return jnp.pad(a, widths, constant_values=value)
 
 
+def _use_pallas() -> bool:
+    """Pallas kernel path on TPU (compiled) or when REPRO_FORCE_PALLAS=1
+    (interpret mode off-TPU — kernel debugging only); the single-jit XLA
+    fallback elsewhere.  On CPU the interpret-mode kernel LOSES to plain
+    XLA, so it is never the default (benchmarks/hotpath_bench.py records
+    the comparison)."""
+    return jax.default_backend() == "tpu" or os.environ.get(
+        "REPRO_FORCE_PALLAS", ""
+    ) == "1"
+
+
+# --------------------------------------------------------------------------
+# the packed plane: words straight from the wire/checkpoint
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("total_bits", "has_mask"))
+def _qgram_packed_xla(words, rates, scaled_cents, y, mask, total_bits, has_mask):
+    """XLA fallback: the same unpack -> decode -> matmul as ONE jitted
+    program (no intermediate dispatch, no HBM round-trip between stages)."""
+    codes = jax_scheme.unpack_codes(words, rates, total_bits=total_bits)
+    d = scaled_cents.shape[0]
+    xhat = scaled_cents[jnp.arange(d), codes]  # (n, d)
+    if has_mask:
+        xhat = xhat * mask[:, None]
+    return xhat @ jnp.asarray(y, jnp.float32).T
+
+
+_TUNE_CACHE: dict = {}
+_TUNE_CANDIDATES = ((128, 128), (256, 128), (128, 256), (256, 256))
+
+
+def _autotune_block(words, meta, cents, y, mask, echunk):
+    """Pick the fastest (bn, bp) for this shape by timing one compiled run of
+    each candidate (TPU path only; cached per shape).  Under a trace (vmap/
+    jit of the wrapper) there is nothing to time — fall back to the cached
+    winner for this shape or the default block."""
+    key = (words.shape, cents.shape, y.shape, echunk)
+    if key in _TUNE_CACHE:
+        return _TUNE_CACHE[key]
+    if any(isinstance(a, jax.core.Tracer) for a in (words, meta, cents, y, mask)):
+        return DEFAULT_BLOCK_PACKED
+    best, best_t = DEFAULT_BLOCK_PACKED, float("inf")
+    for bn, bp in _TUNE_CANDIDATES:
+        if words.shape[0] % bn or y.shape[0] % bp:
+            continue
+        try:
+            fn = lambda: qgram_packed_pallas(
+                words, meta, cents, y, mask, block=(bn, bp), echunk=echunk
+            )
+            jax.block_until_ready(fn())  # compile + warm
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            dt = time.perf_counter() - t0
+        except Exception:
+            continue
+        if dt < best_t:
+            best, best_t = (bn, bp), dt
+    _TUNE_CACHE[key] = best
+    return best
+
+
+def _pack_meta(rates, d_pad):
+    """(3, d_pad) int32 [word index, bit offset, width] rows for the kernel;
+    padded dimensions get width 0 (they unpack to code 0 and decode to the
+    zero-padded centroid rows)."""
+    w = jnp.asarray(rates, jnp.int32)
+    w = jnp.concatenate([w, jnp.zeros((d_pad - w.shape[0],), jnp.int32)])
+    offs = jnp.cumsum(w) - w
+    return jnp.stack([offs // 32, offs % 32, w])
+
+
+def qgram_packed(
+    words, rates, scaled_cents, y, *, total_bits: int, mask=None,
+    block=None, echunk=DEFAULT_ECHUNK, interpret=None,
+):
+    """G = decode(unpack(words)) @ y^T straight from the packed code plane.
+
+    words: (n, W) uint32 packed rows (``jax_scheme.pack_codes`` layout, W =
+    ceil(total_bits/32)); rates: (d,) per-dimension widths (may be traced);
+    scaled_cents: (d, C) from ``jax_scheme.scaled_centroids``; y: (p, d);
+    mask: optional (n,) row validity — masked rows produce zero output rows
+    (the packed twin of the old -1-sentinel behavior); total_bits: the static
+    row bit budget the words were packed under."""
+    words = jnp.asarray(words)
+    n = words.shape[0]
+    p = y.shape[0]
+    if words.shape[-1] == 0 or interpret is None:
+        if words.shape[-1] == 0 or not _use_pallas():
+            # zero-rate rows have no words at all — nothing for a kernel
+            # block to load; the XLA program handles the degenerate layout
+            m = None if mask is None else jnp.asarray(mask, jnp.float32)
+            return _qgram_packed_xla(
+                words, rates, scaled_cents, y, m, total_bits, mask is not None
+            )
+        interpret = jax.default_backend() != "tpu"
+    autotune = block is None and not interpret
+    bn, bp = DEFAULT_BLOCK_PACKED if block is None else block
+    # when autotuning, pad to the LARGEST candidate block so every (bn, bp)
+    # in the search space divides the shape and is actually reachable
+    pad_n = max(c[0] for c in _TUNE_CANDIDATES) if autotune else bn
+    pad_p = max(c[1] for c in _TUNE_CANDIDATES) if autotune else bp
+    mask_col = (
+        jnp.ones((n, 1), jnp.float32) if mask is None
+        else jnp.asarray(mask, jnp.float32)[:, None]
+    )
+    wpad = _pad_axis(words, pad_n, 0)
+    mpad = _pad_axis(mask_col, pad_n, 0)  # padded rows masked to zero
+    tpad = _pad_axis(_pad_axis(jnp.asarray(scaled_cents), 8, 0), echunk, 1)
+    d_pad = tpad.shape[0]
+    ypad = _pad_axis(_pad_axis(jnp.asarray(y, jnp.float32), pad_p, 0), d_pad, 1)
+    meta = _pack_meta(rates, d_pad)
+    if autotune:
+        bn, bp = _autotune_block(wpad, meta, tpad, ypad, mpad, echunk)
+    out = qgram_packed_pallas(
+        wpad, meta, tpad, ypad, mpad, block=(bn, bp), echunk=echunk,
+        interpret=interpret,
+    )
+    return out[:n, :p]
+
+
+def qgram_packed_batched(words, rates, scaled_cents, y, *, total_bits, mask=None, **kw):
+    """vmapped :func:`qgram_packed` over a leading machine axis.
+
+    words: (m, n, W); rates: (m, d); scaled_cents: (m, d, C); y: (p, d)
+    shared or (m, p, d) per-machine; mask: optional (m, n).  Returns
+    (m, n, p)."""
+    run = lambda w, r, t, yy, mk: qgram_packed(
+        w, r, t, yy, total_bits=total_bits, mask=mk, **kw
+    )
+    in_axes = (0, 0, 0, 0 if y.ndim == 3 else None, None if mask is None else 0)
+    return jax.vmap(run, in_axes=in_axes)(words, rates, scaled_cents, y, mask)
+
+
+# --------------------------------------------------------------------------
+# legacy unpacked-int-code API
+# --------------------------------------------------------------------------
+
+
+@jax.jit
+def _qgram_xla(codes, scaled_cents, y):
+    d = scaled_cents.shape[0]
+    xhat = jnp.where(
+        codes >= 0, scaled_cents[jnp.arange(d), jnp.maximum(codes, 0)], 0.0
+    )
+    return xhat @ jnp.asarray(y, jnp.float32).T
+
+
 def qgram(codes, scaled_cents, y, *, block=DEFAULT_BLOCK, echunk=DEFAULT_ECHUNK, interpret=None):
     """G = decode(codes) @ y^T without materializing the reconstruction.
 
-    codes: (n, d) int32 per-symbol codes; scaled_cents: (d, C) from
-    repro.kernels.quant.ops.build_scaled_tables; y: (p, d)."""
+    codes: (n, d) int32 per-symbol codes (-1 decodes to 0); scaled_cents:
+    (d, C); y: (p, d).  Prefer :func:`qgram_packed` — it eats the wire's
+    packed words directly."""
     if interpret is None:
+        if not _use_pallas():
+            return _qgram_xla(jnp.asarray(codes), scaled_cents, y)
         interpret = jax.default_backend() != "tpu"
     n, d = codes.shape
     p = y.shape[0]

@@ -1,9 +1,22 @@
-"""Pure-jnp oracle for the fused dequantize+gram kernel."""
+"""Pure-jnp oracles for the fused dequantize+gram kernels."""
 import jax.numpy as jnp
+
+from ...core import jax_scheme
 
 
 def qgram_ref(codes, scaled_cents, y):
     """decode then gram: G[i, j] = <cents[., codes[i, .]], y[j, .]>."""
     d = scaled_cents.shape[0]
     xhat = scaled_cents[jnp.arange(d), codes]  # (n, d)
+    return xhat @ jnp.asarray(y, jnp.float32).T
+
+
+def qgram_packed_ref(words, rates, scaled_cents, y, *, total_bits, mask=None):
+    """Oracle for the packed path: unpack, decode, gram — three separate
+    steps, every intermediate materialized."""
+    codes = jax_scheme.unpack_codes(words, rates, total_bits=total_bits)
+    d = scaled_cents.shape[0]
+    xhat = scaled_cents[jnp.arange(d), codes]
+    if mask is not None:
+        xhat = xhat * jnp.asarray(mask, jnp.float32)[:, None]
     return xhat @ jnp.asarray(y, jnp.float32).T

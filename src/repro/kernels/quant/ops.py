@@ -6,12 +6,28 @@ the Pallas kernels (interpret mode off-TPU).
 """
 from __future__ import annotations
 
+import os
+
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from ...core import quantizers as Q
 from .quant import encode_pallas, decode_pallas, DEFAULT_BLOCK, DEFAULT_ECHUNK
+from .ref import encode_ref, decode_ref
+
+
+def _xla_fallback() -> bool:
+    """Off-TPU default: run the jitted pure-XLA oracle instead of
+    interpret-mode Pallas (interpret=True or REPRO_FORCE_PALLAS=1 forces the
+    kernel path — interpret mode off-TPU, for debugging only)."""
+    return jax.default_backend() != "tpu" and os.environ.get(
+        "REPRO_FORCE_PALLAS", ""
+    ) != "1"
+
+
+_encode_xla = jax.jit(encode_ref)
+_decode_xla = jax.jit(decode_ref)
 
 
 def _pad_axis(a, mult, axis, value=0.0):
@@ -45,6 +61,8 @@ def build_scaled_tables(sigma, rates, echunk: int = DEFAULT_ECHUNK):
 
 def encode(x, scaled_edges, *, block=DEFAULT_BLOCK, echunk=DEFAULT_ECHUNK, interpret=None):
     if interpret is None:
+        if _xla_fallback():
+            return _encode_xla(jnp.asarray(x, jnp.float32), jnp.asarray(scaled_edges))
         interpret = jax.default_backend() != "tpu"
     n, d = x.shape
     bn, bd = block
@@ -56,6 +74,8 @@ def encode(x, scaled_edges, *, block=DEFAULT_BLOCK, echunk=DEFAULT_ECHUNK, inter
 
 def decode(codes, scaled_cents, *, block=DEFAULT_BLOCK, echunk=DEFAULT_ECHUNK, interpret=None):
     if interpret is None:
+        if _xla_fallback():
+            return _decode_xla(jnp.asarray(codes), jnp.asarray(scaled_cents))
         interpret = jax.default_backend() != "tpu"
     n, d = codes.shape
     bn, bd = block

@@ -93,7 +93,8 @@ def main():
     print(f"fit: protocol={cfg.protocol} scheme={cfg.scheme} impl={art.impl} "
           f"m={args.m} n={args.n} d={args.d} "
           f"R={cfg.bits_per_sample} -> {t_fit:.2f}s, "
-          f"wire {art.wire_bits/1e3:.1f} kbit")
+          f"wire {art.wire_bits/1e3:.1f} kbit "
+          f"(packed payload {art.payload_bits/1e3:.1f} kbit)")
 
     if args.artifact_dir:
         path = est.save(art, args.artifact_dir)

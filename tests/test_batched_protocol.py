@@ -60,9 +60,20 @@ def test_broadcast_wire_accounting_and_own_blocks():
     # greedy allocation hands out exactly R bits per sample on every machine
     rates = np.asarray(ws.rates)
     assert (rates.sum(axis=1) == 24).all()
-    # padded rows decode to exactly zero and carry the -1 sentinel code
+    # the wire is the packed code plane: R=24 bits/row in one uint32 word
+    words = np.asarray(ws.codes)
+    assert words.dtype == np.uint32 and words.shape[-1] == 1
+    # padded rows decode to exactly zero, pack to all-zero words, and unpack
+    # back to the -1 sentinel under the shard mask
+    from repro.core import jax_scheme
+
+    codes = np.asarray(jax.vmap(
+        lambda w, r, mk: jax_scheme.unpack_codes(w, r, total_bits=24, mask=mk)
+    )(ws.codes, ws.rates, shards.mask))
     for j, n_j in enumerate(shards.lengths):
-        assert np.all(np.asarray(ws.codes[j, n_j:]) == -1)
+        assert np.all(words[j, n_j:] == 0)
+        assert np.all(codes[j, n_j:] == -1)
+        assert np.all(codes[j, :n_j] >= 0)
         assert np.all(np.asarray(ws.decoded[j, n_j:]) == 0.0)
 
 

@@ -47,6 +47,11 @@ def test_legacy_artifact_loads_with_reconstructed_config():
     assert art.config.impl == "batched"
     # training knobs were never recorded pre-redesign: defaults
     assert art.config.steps == DGPConfig().steps
+    # the legacy int32 code plane is packed on load — every restored
+    # artifact carries the one shared wire representation; the payload was
+    # never measured pre-v3, so its ledger stays 0
+    assert art.wire.codes.dtype == np.uint32
+    assert art.payload_bits == 0
     Xt, mu_exp, s2_exp = _expected()
     mu, s2 = predict(art, Xt)
     np.testing.assert_array_equal(np.asarray(mu), mu_exp)

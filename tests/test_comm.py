@@ -134,16 +134,22 @@ def test_q_all_gather_bits_edges(bits):
 
 
 def test_q_all_gather_state_ledger_matches_formula():
-    """The ledger computed from the collective's payload (return_state) equals
-    rates.sum() * n_valid + 2 d^2 * 32 per transmitting shard, and masked rows
-    are neither decoded nor charged."""
+    """The return_state ledgers: ``wire_bits`` equals rates.sum() * n_valid +
+    side_info_bits(d) per transmitting shard, ``payload_bits`` — measured
+    from the packed word buffer the collective moved — equals the shared
+    payload formula EXACTLY (whole uint32 words per valid row), and masked
+    rows pack to all-zero words, unpack to -1 sentinels, and are neither
+    decoded nor charged."""
     import jax
     import numpy as np
     from jax.sharding import PartitionSpec as P
     from repro.comm import q_all_gather
+    from repro.comm.accounting import payload_bits_formula, side_info_bits
     from repro.compat import shard_map
+    from repro.core import jax_scheme
 
     m, n_loc, d = 4, 12, 5
+    bits = 15
     rng = np.random.default_rng(1)
     X = rng.normal(size=(m * n_loc, d)).astype(np.float32)
     mask = np.ones((m, n_loc), np.float32)
@@ -151,30 +157,76 @@ def test_q_all_gather_state_ledger_matches_formula():
     mask[3, 6:] = 0.0
 
     fn = shard_map(
-        lambda x, mk: q_all_gather(x, "m", 15, mask=mk[0], return_state=True)[1],
+        lambda x, mk: q_all_gather(x, "m", bits, mask=mk[0], return_state=True)[1],
         mesh=_mesh(m), in_specs=(P("m", None), P("m", None)), out_specs=P(),
         check_vma=False,
     )
     st = jax.jit(fn)(X, mask)
     rates = np.asarray(st["rates"])
     n_valid = mask.sum(axis=1).astype(int)
-    expect = sum(int(rates[j].sum()) * int(n_valid[j]) + 2 * d * d * 32
+    expect = sum(int(rates[j].sum()) * int(n_valid[j]) + side_info_bits(d)
                  for j in range(m))
     assert int(st["wire_bits"]) == expect
-    # masked rows: -1 sentinel codes, zero reconstructions
-    codes = np.asarray(st["codes"])
+    # physical payload: measured == formula, and == ledger + per-word padding
+    lengths = [int(v) for v in n_valid]
+    assert int(st["payload_bits"]) == payload_bits_formula(lengths, d, bits, 8)
+    words = np.asarray(st["codes"])
+    W = words.shape[-1]
+    pad = sum((32 * W - int(rates[j].sum())) * lengths[j] for j in range(m))
+    assert int(st["payload_bits"]) == int(st["wire_bits"]) + pad
+    # the wire is packed uint32 words; masked rows are all-zero words that
+    # unpack to -1 sentinels and decode to zero
+    assert words.dtype == np.uint32 and W == (bits + 31) // 32
     dec = np.asarray(st["decoded"])
-    assert np.all(codes[1, 9:] == -1) and np.all(dec[1, 9:] == 0.0)
-    assert np.all(codes[3, 6:] == -1) and np.all(dec[3, 6:] == 0.0)
+    assert np.all(words[1, 9:] == 0) and np.all(dec[1, 9:] == 0.0)
+    assert np.all(words[3, 6:] == 0) and np.all(dec[3, 6:] == 0.0)
+    codes = np.asarray(jax.vmap(
+        lambda w, r, mk: jax_scheme.unpack_codes(w, r, total_bits=bits, mask=mk)
+    )(st["codes"], st["rates"], st["mask"]))
+    assert np.all(codes[1, 9:] == -1) and np.all(codes[3, 6:] == -1)
+    assert np.all(codes[:, :6] >= 0)  # valid rows carry real codes
 
 
 def test_wire_bits_all_gather_accounting():
+    """Both comm ledger call sites charge the ONE shared side-info formula."""
     from repro.comm import wire_bits_all_gather
+    from repro.comm.accounting import side_info_bits
 
     q, base = wire_bits_all_gather(n_per_shard=100, d=8, bits=24, n_shards=4)
-    assert q == 100 * 24 + (8 * 8 + 16) * 32
+    assert q == 100 * 24 + side_info_bits(8)
+    assert q == 100 * 24 + 2 * 8 * 8 * 32  # the paper's O(2 d^2) exchange
     assert base == 100 * 8 * 32
     assert q < base  # the point of the paper
+
+
+def test_ledger_call_sites_integer_equal():
+    """The q_all_gather return_state ledger and the wire_bits_all_gather
+    formula are the same accounting: summed over shards they agree exactly
+    (uniform shards, no mask)."""
+    import jax
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.comm import q_all_gather, wire_bits_all_gather
+    from repro.compat import shard_map
+
+    m, n_loc, d, bits = 4, 16, 6, 21
+    rng = np.random.default_rng(3)
+    X = rng.normal(size=(m * n_loc, d)).astype(np.float32)
+    fn = shard_map(
+        lambda x: q_all_gather(x, "m", bits, return_state=True)[1],
+        mesh=_mesh(m), in_specs=P("m", None), out_specs=P(), check_vma=False,
+    )
+    st = jax.jit(fn)(X)
+    # wire_bits_all_gather charges bits/sample * n + side info per shard; the
+    # collective's ledger is that same number summed over all m shards
+    # (greedy allocation hands out exactly `bits` per sample here, and
+    # wire_bits_all_gather's n_per_shard counts samples * bits-per-sample as
+    # its per-shard code payload via n * bits)
+    rates = np.asarray(st["rates"])
+    assert (rates.sum(axis=1) == bits).all()
+    per_shard, _ = wire_bits_all_gather(n_per_shard=n_loc, d=d, bits=bits,
+                                        n_shards=m)
+    assert int(st["wire_bits"]) == m * per_shard
 
 
 def test_q_psum_fp_fallback_is_exact():

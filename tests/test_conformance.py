@@ -174,6 +174,123 @@ def test_poe_three_impls(method):
 
 
 # --------------------------------------------------------------------------
+# physical-equals-ledger: the packed payload vs the Theorem-1 formula
+# --------------------------------------------------------------------------
+
+
+def _exact_padding(art):
+    """The only admissible payload-vs-ledger slack: per-word padding —
+    sum_j n_j * (32 W - rates_j.sum()) over transmitting machines."""
+    W = art.wire.codes.shape[-1]
+    rates = np.asarray(art.wire.rates)
+    skip = art.block_order[0] if art.protocol == "center" else None
+    return sum(
+        (32 * W - int(rates[j].sum())) * n_j
+        for j, n_j in enumerate(art.lengths) if j != skip
+    )
+
+
+@pytest.mark.parametrize("protocol", ["center", "broadcast", "poe"])
+def test_payload_equals_ledger_three_impls(protocol):
+    """The acceptance contract of the packed wire: for every protocol x
+    {host, batched, mesh}, the measured bits of the packed collective payload
+    are integer-identical across impls and equal the Theorem-1 ledger up to
+    EXACTLY the per-word padding (no other slack)."""
+    from repro.core.config import DGPConfig
+    from repro.core.registry import PROTOCOLS
+
+    parts, _ = _ragged_parts((29, 37, 23, 31), 6, seed=11)
+    bits = 0 if protocol == "poe" else 19
+    art_b = fit(parts, bits, protocol, steps=2)
+    art_m = fit(parts, bits, protocol, steps=2, impl="mesh")
+    cfg_h = DGPConfig(
+        protocol=protocol, bits_per_sample=bits, steps=2, impl="host",
+        train_impl="loop",
+        gram_mode="dense" if protocol == "poe" else "nystrom",
+        fusion="rbcm" if protocol == "poe" else "kl",
+    )
+    host = PROTOCOLS.get(protocol).fit_host(parts, cfg_h)
+    host_payload = getattr(host, "payload_bits", 0)
+    assert art_b.payload_bits == art_m.payload_bits == host_payload
+    assert art_b.wire_bits == art_m.wire_bits
+    if protocol == "poe":  # zero-rate: no wire, no payload
+        assert art_b.payload_bits == art_b.wire_bits == 0
+        return
+    assert art_b.payload_bits == art_b.wire_bits + _exact_padding(art_b)
+    # the wire state all three consumers share really is the packed plane
+    assert art_b.wire.codes.dtype == jnp.uint32
+    assert art_m.wire.codes.dtype == jnp.uint32
+    np.testing.assert_array_equal(
+        np.asarray(art_m.wire.codes), np.asarray(art_b.wire.codes)
+    )
+
+
+def test_payload_streams_through_update():
+    """update() extends BOTH ledgers: the Theorem-1 charge at the frozen rate
+    and the physical charge in whole packed words."""
+    parts, Xt = _ragged_parts((24, 31, 27), 5, seed=12)
+    art = fit(parts, 17, "broadcast", steps=2)
+    W = art.wire.codes.shape[-1]
+    rng = np.random.default_rng(0)
+    Xn = rng.normal(size=(9, 5)).astype(np.float32)
+    art2 = update(art, Xn, np.zeros(9, np.float32), machine=1)
+    rate1 = int(np.asarray(art.wire.rates[1]).sum())
+    assert art2.wire_bits == art.wire_bits + 9 * rate1
+    assert art2.payload_bits == art.payload_bits + 9 * 32 * W
+    mu, s2 = predict(art2, Xt)
+    assert np.all(np.isfinite(np.asarray(mu))) and np.all(np.asarray(s2) > 0)
+
+
+def test_packed_artifact_bitwise_equals_unpacked_v2(tmp_path):
+    """A format-v2 checkpoint (unpacked int32 codes) restores to the SAME
+    artifact as its packed v3 twin: bitwise-identical predictions and an
+    identical in-memory packed wire plane."""
+    import json
+    import os
+
+    from repro.core import jax_scheme
+
+    parts, Xt = _problem(seed=13, m=3, n=120, d=5)
+    art = fit(parts, 18, "center", steps=3)
+    d3 = str(tmp_path / "v3")
+    save_artifact(art, d3)
+
+    # rewrite the checkpoint as a v2 artifact: unpack the code plane back to
+    # the legacy int32 (-1-sentinel) layout and stamp format_version 2
+    d2 = str(tmp_path / "v2")
+    os.makedirs(d2)
+    arrays = dict(np.load(os.path.join(d3, "ckpt_00000000.npz")))
+    with open(os.path.join(d3, "meta_00000000.json")) as f:
+        meta = json.load(f)
+    n_pad = arrays["wire/decoded"].shape[1]
+    mask = jnp.asarray(
+        np.arange(n_pad)[None, :] < np.asarray(art.lengths)[:, None], jnp.float32
+    )
+    arrays["wire/codes"] = np.asarray(jax.vmap(
+        lambda w, r, mk: jax_scheme.unpack_codes(
+            w, r, total_bits=18, mask=mk
+        )
+    )(jnp.asarray(arrays["wire/codes"]), jnp.asarray(arrays["wire/rates"]), mask))
+    meta["format_version"] = 2
+    del meta["payload_bits"]
+    np.savez(os.path.join(d2, "ckpt_00000000.npz"), **arrays)
+    with open(os.path.join(d2, "meta_00000000.json"), "w") as f:
+        json.dump(meta, f)
+
+    art3 = load_artifact(d3)
+    art2 = load_artifact(d2)
+    # v2 codes are packed on load: identical plane, bitwise-identical serving
+    assert art2.wire.codes.dtype == jnp.uint32
+    np.testing.assert_array_equal(
+        np.asarray(art2.wire.codes), np.asarray(art3.wire.codes)
+    )
+    mu3, s3 = predict(art3, Xt)
+    mu2, s2 = predict(art2, Xt)
+    np.testing.assert_array_equal(np.asarray(mu2), np.asarray(mu3))
+    np.testing.assert_array_equal(np.asarray(s2), np.asarray(s3))
+
+
+# --------------------------------------------------------------------------
 # the mesh serving artifact: sharded factors, shard_map serve, checkpointing
 # --------------------------------------------------------------------------
 

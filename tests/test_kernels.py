@@ -91,6 +91,54 @@ def test_qgram_fused_matches_ref(n, d, p, bits):
     np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-3)
 
 
+@pytest.mark.parametrize("n,d,p,bits", [(64, 8, 32, 24), (130, 20, 33, 60), (50, 6, 20, 0)])
+def test_qgram_packed_matches_ref(n, d, p, bits):
+    """The packed-word kernel (unpack in-block, shift/mask, one-hot decode)
+    against the three-step oracle — Pallas interpret AND the XLA fallback."""
+    from repro.core import jax_scheme as js
+    from repro.kernels.qgram.ops import qgram_packed
+    from repro.kernels.qgram.ref import qgram_packed_ref
+
+    rng = np.random.default_rng(n + d)
+    sigma, rates, (edges, cents) = _tables(rng, d, bits)
+    x = (rng.normal(size=(n, d)) * sigma).astype(np.float32)
+    y = rng.normal(size=(p, d)).astype(np.float32)
+    codes = encode(x, edges, interpret=True)
+    mask = (np.arange(n) < n - 5).astype(np.float32)
+    words = js.pack_codes(codes, jnp.asarray(rates), total_bits=bits,
+                          mask=jnp.asarray(mask))
+    kw = dict(total_bits=bits, mask=jnp.asarray(mask))
+    ref = np.asarray(qgram_packed_ref(words, jnp.asarray(rates), cents, y, **kw))
+    out_xla = np.asarray(qgram_packed(words, jnp.asarray(rates), cents, y, **kw))
+    np.testing.assert_allclose(out_xla, ref, rtol=1e-5, atol=1e-5)
+    if bits > 0:  # zero-rate rows have no words for a kernel block to load
+        out_pal = np.asarray(
+            qgram_packed(words, jnp.asarray(rates), cents, y, interpret=True, **kw)
+        )
+        np.testing.assert_allclose(out_pal, ref, rtol=1e-4, atol=1e-3)
+
+
+def test_qgram_packed_equals_unpacked_qgram():
+    """The packed kernel and the legacy int-code kernel are the same math:
+    identical grams from the same scheme output."""
+    from repro.core import jax_scheme as js
+    from repro.kernels.qgram.ops import qgram_packed
+
+    rng = np.random.default_rng(17)
+    n, d, p, bits = 70, 12, 40, 36
+    sigma, rates, (edges, cents) = _tables(rng, d, bits)
+    x = (rng.normal(size=(n, d)) * sigma).astype(np.float32)
+    y = rng.normal(size=(p, d)).astype(np.float32)
+    codes = encode(x, edges, interpret=True)
+    words = js.pack_codes(codes, jnp.asarray(rates), total_bits=bits)
+    packed = np.asarray(
+        qgram_packed(words, jnp.asarray(rates), cents, y, total_bits=bits,
+                     interpret=True)
+    )
+    unpacked = np.asarray(qgram(codes, cents, y, interpret=True))
+    np.testing.assert_allclose(packed, unpacked, rtol=1e-4, atol=1e-3)
+
+
 def test_qgram_equals_decode_then_gram():
     """The fusion must be exactly decode∘gram."""
     rng = np.random.default_rng(9)
