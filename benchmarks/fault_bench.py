@@ -1,0 +1,143 @@
+"""Degraded-mode benchmark (EXPERIMENTS.md §Robustness): what machine loss,
+channel corruption, and jitter escalation actually COST.
+
+Rows (written to BENCH_fault.json via benchmarks/run.py --json, or standalone):
+
+* ``fault/degraded_lost{k}_m8`` — broadcast/KL serving with k of 8 machines
+  masked out at predict time: SMSE against the ground-truth function, and
+  95% coverage (|y - mu| <= 1.96 sqrt(var)).  The contract is GRACEFUL
+  degradation — SMSE drifts up with k, coverage stays near nominal because
+  the KL fusion inflates variance by m/m_alive instead of overclaiming;
+* ``fault/crc_detect_rate{r}`` — empirical CRC-16 detection rate on packed
+  wire rows under a Bernoulli(r) bit-flip channel, plus the fraction of rows
+  the channel actually corrupted (the 16-bit check misses a corrupted row
+  with probability ~2^-16, so detect should print 1 at bench scale);
+* ``fault/chol_safe_overhead`` — chol_safe vs the bare jnp.linalg.cholesky it
+  wraps, on a well-conditioned Gram (the steady-state cost of the guardrail:
+  one isfinite reduction; the escalation loop never runs), and the
+  escalations needed to recover a rank-deficient Gram;
+* ``fault/predict_warm_degraded`` — warm degraded-mode predict latency vs the
+  healthy fast path, with the structural check that BOTH programs contain
+  zero factorizations.
+
+Run standalone to write BENCH_fault.json:
+  PYTHONPATH=src python -m benchmarks.fault_bench [--full]
+or through the driver: PYTHONPATH=src python -m benchmarks.run --json --only fault
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .common import timed, emit, smse
+
+
+def _problem(n, d, seed=0):
+    rng = np.random.default_rng(seed)
+    W = rng.normal(size=(d, 2))
+    f = lambda Z: np.sin(Z @ W[:, 0]) + 0.4 * (Z @ W[:, 1])
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    y = (f(X) + 0.05 * rng.normal(size=n)).astype(np.float32)
+    return X, y, f
+
+
+def main(quick: bool = True) -> None:
+    from repro.core import DGPConfig, DistributedGP, jax_scheme
+    from repro.core.distributed_gp import predict_op_counts
+    from repro.core.linalg_safe import DEFAULT_JITTER, chol_safe
+    from repro.faults import flip_words
+
+    m = 8
+    n, d, steps = (640, 6, 20) if quick else (2400, 8, 80)
+    n_test = 256
+    X, y, f = _problem(n, d)
+    rng = np.random.default_rng(1)
+    Xq = rng.normal(size=(n_test, d)).astype(np.float32)
+    yq = f(Xq)
+
+    est = DistributedGP(DGPConfig(protocol="broadcast", impl="batched",
+                                  bits_per_sample=16, steps=steps))
+    art = est.fit(X, y, m)
+
+    # ---- SMSE + coverage vs machines lost at serve time ----
+    for k in (0, 1, 2, 4):
+        av = np.ones(m, np.float32)
+        av[m - k:] = 0.0  # lose the last k machines
+        avail = None if k == 0 else av
+        (mu, var), us = timed(
+            lambda a=avail: jax.block_until_ready(est.predict(art, Xq, available=a))
+        )
+        mu, var = np.asarray(mu), np.asarray(var)
+        cov = float(np.mean(np.abs(yq - mu) <= 1.96 * np.sqrt(var)))
+        h = est.health(art, avail)
+        emit(f"fault/degraded_lost{k}_m8", us,
+             smse=smse(yq, mu), coverage=cov, finite=int(np.isfinite(mu).all()),
+             var_inflation=float(h.variance_inflation))
+
+    # ---- CRC detection rate vs flip rate on the packed plane ----
+    n_rows, W = (2000, 4) if quick else (20000, 4)
+    words = jnp.asarray(
+        np.random.default_rng(2).integers(0, 2**32, (n_rows, W), dtype=np.uint32)
+    )
+    crc_jit = jax.jit(jax_scheme.crc_words)
+    clean = crc_jit(words)
+    for rate in (0.001, 0.01, 0.05):
+        def channel(r=rate):
+            rx = flip_words(words, r, jax.random.PRNGKey(3))
+            return rx, crc_jit(rx)
+        (rx, dirty), us = timed(lambda: jax.block_until_ready(channel()))
+        corrupted = np.any(np.asarray(rx) != np.asarray(words), axis=-1)
+        caught = (np.asarray(dirty) != np.asarray(clean)) & corrupted
+        n_c = max(int(corrupted.sum()), 1)
+        emit(f"fault/crc_detect_rate{rate}", us,
+             detect=float(caught.sum() / n_c),
+             corrupted_frac=float(corrupted.sum() / n_rows))
+
+    # ---- chol_safe: steady-state overhead + escalation recovery ----
+    dim = 64 if quick else 256
+    A = np.random.default_rng(3).normal(size=(dim, dim))
+    good = jnp.asarray(A @ A.T + dim * np.eye(dim), jnp.float32)
+    bare = jax.jit(lambda M: jnp.linalg.cholesky(
+        M + DEFAULT_JITTER * jnp.eye(dim, dtype=M.dtype)))
+    safe = jax.jit(lambda M: chol_safe(M, DEFAULT_JITTER))
+    _, us_bare = timed(lambda: jax.block_until_ready(bare(good)), repeats=10)
+    _, us_safe = timed(lambda: jax.block_until_ready(safe(good)), repeats=10)
+    U = np.random.default_rng(4).normal(size=(dim, dim // 8)).astype(np.float32)
+    bad = jnp.asarray(U @ U.T)  # rank dim/8: bare cholesky returns NaN
+    L_bad = safe(bad)
+    recovered = int(np.isfinite(np.asarray(L_bad)).all())
+    emit("fault/chol_safe_overhead", us_safe,
+         us_bare=us_bare, overhead_pct=100.0 * (us_safe - us_bare) / us_bare,
+         rank_deficient_recovered=recovered)
+
+    # ---- warm degraded predict vs healthy fast path ----
+    av = np.ones(m, np.float32)
+    av[m - 1] = 0.0
+    est.predict(art, Xq)                    # trace healthy program
+    est.predict(art, Xq, available=av)      # trace degraded program
+    _, us_h = timed(lambda: jax.block_until_ready(est.predict(art, Xq)),
+                    repeats=10)
+    _, us_d = timed(
+        lambda: jax.block_until_ready(est.predict(art, Xq, available=av)),
+        repeats=10)
+    ops = predict_op_counts(art, Xq)
+    emit("fault/predict_warm_degraded", us_d,
+         us_healthy=us_h, cholesky_eqns=ops["cholesky"], eigh_eqns=ops["eigh"])
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    from . import common
+
+    print("name,us_per_call,derived")
+    main(quick=not args.full)
+    with open("BENCH_fault.json", "w") as fh:
+        json.dump(common.RESULTS, fh, indent=1)
+    print(f"# wrote BENCH_fault.json ({len(common.RESULTS)} rows)")

@@ -1,4 +1,6 @@
 from .ckpt import (
+    CorruptCheckpointError,
+    array_checksum,
     save_checkpoint,
     restore_checkpoint,
     latest_step,

@@ -13,9 +13,16 @@ from __future__ import annotations
 import json
 import os
 import re
+import zlib
 
 import numpy as np
 import jax
+
+
+class CorruptCheckpointError(ValueError):
+    """An artifact array failed its recorded CRC32 checksum on load (the
+    message names the bad array).  Raised instead of serving from silently
+    corrupted factors — catch it to fall back to an older step."""
 
 
 def _key_str(k):
@@ -76,25 +83,43 @@ def restore_checkpoint(directory: str, step: int, like_tree, shardings=None):
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+def array_checksum(arr) -> int:
+    """CRC32 of an array's raw bytes (C-contiguous) — the per-array integrity
+    record written into artifact ``meta.json`` (format v4)."""
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
 def save_artifact(directory: str, step: int, tree, meta: dict) -> str:
     """Checkpoint a pytree PLUS a json of static metadata, atomically.
 
     The npz carries the array leaves (same key-path layout as
     :func:`save_checkpoint`); ``meta`` must be json-serializable and carry
     whatever the caller needs to rebuild the object without a template
-    (:func:`load_artifact_arrays` hands both back)."""
-    path = save_checkpoint(directory, step, tree)
+    (:func:`load_artifact_arrays` hands both back).  A per-array CRC32
+    checksum table is recorded under ``meta["array_checksums"]`` (format v4)
+    so a bit-rotted npz fails loud at load instead of serving garbage."""
+    os.makedirs(directory, exist_ok=True)
+    flat, _ = _flatten(tree)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    tmp = path + ".tmp.npz"  # np.savez keeps the name when it ends in .npz
+    np.savez(tmp, **flat)
+    os.replace(tmp, path)
+    meta = dict(meta)
+    meta["array_checksums"] = {k: array_checksum(v) for k, v in flat.items()}
     meta_path = os.path.join(directory, f"meta_{step:08d}.json")
-    tmp = meta_path + ".tmp"
-    with open(tmp, "w") as f:
+    tmpm = meta_path + ".tmp"
+    with open(tmpm, "w") as f:
         json.dump(meta, f, indent=1)
-    os.replace(tmp, meta_path)
+    os.replace(tmpm, meta_path)
     return path
 
 
 def load_artifact_arrays(directory: str, step: int | None = None):
     """(meta, {key_path: np.ndarray}) for an artifact checkpoint; ``step=None``
-    loads the latest."""
+    loads the latest.  When the meta records ``array_checksums`` (format v4),
+    every array is verified against its CRC32 and a mismatch raises
+    :class:`CorruptCheckpointError` naming the bad array; older checkpoints
+    (v1-v3, no checksum table) load unverified."""
     if step is None:
         step = latest_step(directory)
         if step is None:
@@ -102,4 +127,20 @@ def load_artifact_arrays(directory: str, step: int | None = None):
     with open(os.path.join(directory, f"meta_{step:08d}.json")) as f:
         meta = json.load(f)
     data = np.load(os.path.join(directory, f"ckpt_{step:08d}.npz"))
-    return meta, {k: data[k] for k in data.files}
+    arrays = {k: data[k] for k in data.files}
+    checksums = meta.get("array_checksums")
+    if checksums:
+        for k, want in checksums.items():
+            if k not in arrays:
+                raise CorruptCheckpointError(
+                    f"artifact checkpoint step {step} is missing array {k!r} "
+                    f"recorded in meta_{step:08d}.json"
+                )
+            got = array_checksum(arrays[k])
+            if got != int(want):
+                raise CorruptCheckpointError(
+                    f"artifact array {k!r} failed its checksum at step {step}: "
+                    f"crc32 {got:#010x} != recorded {int(want):#010x} "
+                    f"(ckpt_{step:08d}.npz is corrupted)"
+                )
+    return meta, arrays

@@ -23,15 +23,18 @@ from __future__ import annotations
 
 FP_BITS = 32  # fp32 side-info width
 WORD_BITS = 32  # the packed code plane's word width (jax_scheme.WORD_BITS)
+CRC_BITS = 16  # per-row CRC-16-CCITT framing (jax_scheme.crc_words)
 
 __all__ = [
     "FP_BITS",
     "WORD_BITS",
+    "CRC_BITS",
     "side_info_bits",
     "row_bits",
     "payload_row_bits",
     "wire_bits_formula",
     "payload_bits_formula",
+    "integrity_bits_formula",
 ]
 
 
@@ -66,8 +69,8 @@ def wire_bits_formula(rates, lengths, d: int, skip=None) -> int:
     rates = np.asarray(rates)
     total = 0
     for j, n_j in enumerate(lengths):
-        if j == skip:
-            continue
+        if j == skip or int(n_j) == 0:
+            continue  # a machine with nothing to send sends nothing
         total += int(rates[j].sum()) * int(n_j) + side_info_bits(d)
     return total
 
@@ -81,7 +84,21 @@ def payload_bits_formula(
     per_row = payload_row_bits(bits_per_sample, d, max_bits)
     total = 0
     for j, n_j in enumerate(lengths):
-        if j == skip:
+        if j == skip or int(n_j) == 0:
             continue
         total += per_row * int(n_j) + side_info_bits(d)
+    return total
+
+
+def integrity_bits_formula(lengths, skip=None, crc_bits: int = CRC_BITS) -> int:
+    """The **integrity ledger**: CRC framing bits per valid transmitted row —
+    ``crc_bits * n_j`` for every transmitting machine (machine ``skip`` — the
+    §5.1 center — transmits nothing, so it carries no CRC either).  Charged
+    separately from ``wire_bits``/``payload_bits`` so the detection overhead
+    is visible in rate/distortion plots (docs/fault_model.md)."""
+    total = 0
+    for j, n_j in enumerate(lengths):
+        if j == skip or int(n_j) == 0:
+            continue
+        total += crc_bits * int(n_j)
     return total

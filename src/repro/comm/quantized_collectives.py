@@ -46,7 +46,7 @@ import jax.numpy as jnp
 
 from ..core import quantizers as Q
 from ..core import jax_scheme
-from .accounting import row_bits, side_info_bits
+from .accounting import CRC_BITS, row_bits, side_info_bits
 
 
 def wire_bits_all_gather(n_per_shard: int, d: int, bits: int, n_shards: int, fp_bits=32):
@@ -70,6 +70,7 @@ def q_all_gather(
     mode: str = "broadcast",
     center: int = 0,
     return_state: bool = False,
+    faults=None,
 ):
     """x: (n_loc, d) per shard -> (m, n_loc, d) reconstructions of every
     shard's block (own block exact).  Must run inside shard_map with
@@ -90,12 +91,35 @@ def q_all_gather(
         allocated rate over its VALID rows + ``accounting.side_info_bits``)
         — and ``payload_bits`` — the packed payload physically moved,
         measured from the word buffer (itemsize * 8 per word per valid row
-        + the same side info).  The center shard is not charged in center
-        mode.
+        + the same side info) — and ``integrity_bits`` — the per-row CRC
+        framing (``accounting.CRC_BITS`` per valid row).  The center shard
+        is not charged in center mode; a shard with no valid rows transmits
+        (and is charged) nothing.
+    faults : optional :class:`repro.faults.FaultPlan` injected INTO the
+        collective itself (docs/fault_model.md): ``drop`` zeroes the listed
+        machines' masks (they transmit nothing), non-finite rows are masked
+        out before the moment estimate (the NaN tripwire), and
+        ``flip_rate > 0`` XORs random bits into the gathered packed words —
+        rows whose CRC no longer matches are demoted to masked.  ``None``
+        (the default) leaves the collective's arithmetic untouched.
     """
     n_loc, d = x.shape
     m = jax.lax.psum(1, axis_name)
     idx = jax.lax.axis_index(axis_name)
+
+    if faults is not None and (faults.drop or faults.nan):
+        # collective-level injection: fold drops + the NaN tripwire into the
+        # validity mask BEFORE the moment estimate (a healthy fleet with
+        # faults=None never enters this branch, so the fault-free jaxpr —
+        # and its conformance-locked arithmetic — is untouched)
+        fmask = jnp.ones((n_loc,), jnp.float32) if mask is None else mask
+        row_ok = jnp.isfinite(x).all(axis=-1)
+        x = jnp.where(row_ok[:, None], x, 0.0)
+        fmask = fmask * row_ok.astype(jnp.float32)
+        if faults.drop:
+            alive = jnp.all(jnp.asarray(faults.drop, jnp.int32) != idx)
+            fmask = fmask * alive.astype(jnp.float32)
+        mask = fmask
 
     if mask is None:
         n_valid = jnp.float32(n_loc)
@@ -135,6 +159,26 @@ def q_all_gather(
     all_rates = jax.lax.all_gather(state["rates"], axis_name)
     all_mask = jax.lax.all_gather(mask_l, axis_name)
 
+    if faults is not None and faults.flip_rate > 0:
+        # the bit-flip channel: the transmitter's per-row CRC rides ahead of
+        # the payload; each receiver XORs the deterministic per-source noise
+        # into the gathered words (every receiver sees the SAME corrupted
+        # plane — the channel is between machines, not per link) and demotes
+        # rows whose CRC no longer matches to masked
+        from ..faults import flip_words
+
+        clean_crc = jax_scheme.crc_words(words, mask_l)
+        all_crc = jax.lax.all_gather(clean_crc, axis_name)
+        key = jax.random.PRNGKey(faults.seed)
+        all_words = jax.vmap(
+            lambda j, w: flip_words(w, faults.flip_rate, jax.random.fold_in(key, j))
+        )(jnp.arange(m), all_words)
+        rx_crc = jax.vmap(jax_scheme.crc_words)(all_words, all_mask)
+        surv = (rx_crc == all_crc).astype(jnp.float32)
+        # own words never cross the wire: the own block is substituted exact
+        own_row = jax.nn.one_hot(idx, m, dtype=jnp.float32)[:, None]
+        all_mask = all_mask * (surv * (1 - own_row) + own_row)
+
     def dec(words_j, Tinv_j, sigma_j, rates_j):
         codes_j = jax_scheme.unpack_codes(words_j, rates_j, total_bits=rbits)
         _, cents = tables
@@ -149,19 +193,25 @@ def q_all_gather(
     if not return_state:
         return view
 
-    # two ledgers (repro.comm.accounting): the Theorem-1 formula, and the
-    # packed payload MEASURED from the buffer the collective moved — each
-    # transmitting shard pays whole words per VALID row plus side info
+    # three ledgers (repro.comm.accounting): the Theorem-1 formula, the
+    # packed payload MEASURED from the buffer the collective moved, and the
+    # CRC framing — each transmitting shard pays whole words per VALID row
+    # plus side info; a shard with NO valid rows transmits nothing and is
+    # charged nothing (matching the formulas' n_j == 0 skip)
+    has_rows = (mask_l.sum() > 0).astype(jnp.int32)
     n_valid_i = n_valid.astype(jnp.int32)
-    contrib = state["rates"].sum() * n_valid_i + side_info_bits(d)
+    contrib = (state["rates"].sum() * n_valid_i + side_info_bits(d)) * has_rows
     row_payload = words.shape[-1] * words.dtype.itemsize * 8
-    pcontrib = row_payload * n_valid_i + side_info_bits(d)
+    pcontrib = (row_payload * n_valid_i + side_info_bits(d)) * has_rows
+    icontrib = CRC_BITS * n_valid_i * has_rows
     if mode == "center":
         transmits = (idx != center).astype(jnp.int32)
         contrib = contrib * transmits
         pcontrib = pcontrib * transmits
+        icontrib = icontrib * transmits
     wire_bits = jax.lax.psum(contrib, axis_name)
     payload_bits = jax.lax.psum(pcontrib, axis_name)
+    integrity_bits = jax.lax.psum(icontrib, axis_name)
     # T is the encoder's state, not wire traffic — gathered only because the
     # serving artifact freezes it for streaming update()
     all_T = jax.lax.all_gather(state["T"], axis_name)
@@ -175,6 +225,7 @@ def q_all_gather(
         "mask": all_mask,
         "wire_bits": wire_bits,
         "payload_bits": payload_bits,
+        "integrity_bits": integrity_bits,
     }
 
 
@@ -184,7 +235,7 @@ def q_all_gather(
 _PSUM_ROW_CODES = 1024
 
 
-def _q_psum_impl(g, axis_name: str, bits: int):
+def _q_psum_impl(g, axis_name: str, bits: int, faults=None):
     flat = g.reshape(-1).astype(jnp.float32)
     n = flat.shape[0]
     sigma = jnp.sqrt(jnp.mean(flat * flat) + 1e-30)
@@ -196,6 +247,17 @@ def _q_psum_impl(g, axis_name: str, bits: int):
     codes = jnp.pad(codes, (0, (-n) % k))
     words = jax_scheme.pack_codes(codes.reshape(-1, k), bits)
     all_words = jax.lax.all_gather(words, axis_name)  # bits/elem + word pad
+    if faults is not None and faults.flip_rate > 0:
+        # flips-only injection: gradients carry no per-row CRC (a corrupted
+        # code is just extra channel noise on an already-lossy reduce), so
+        # flipped bits pass straight into the decode
+        from ..faults import flip_words
+
+        m = jax.lax.psum(1, axis_name)
+        key = jax.random.PRNGKey(faults.seed)
+        all_words = jax.vmap(
+            lambda j, w: flip_words(w, faults.flip_rate, jax.random.fold_in(key, j))
+        )(jnp.arange(m), all_words)
     all_sigma = jax.lax.all_gather(sigma, axis_name)
     all_codes = jax.vmap(
         lambda w: jax_scheme.unpack_codes(w, bits, num=k).reshape(-1)[:n]
@@ -204,16 +266,16 @@ def _q_psum_impl(g, axis_name: str, bits: int):
     return jnp.sum(vals, axis=0).reshape(g.shape).astype(g.dtype)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
-def _q_psum(g, axis_name: str, bits: int):
-    return _q_psum_impl(g, axis_name, bits)
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def _q_psum(g, axis_name: str, bits: int, faults=None):
+    return _q_psum_impl(g, axis_name, bits, faults)
 
 
-def _q_psum_fwd(g, axis_name, bits):
-    return _q_psum_impl(g, axis_name, bits), None
+def _q_psum_fwd(g, axis_name, bits, faults):
+    return _q_psum_impl(g, axis_name, bits, faults), None
 
 
-def _q_psum_bwd(axis_name, bits, _, ct):
+def _q_psum_bwd(axis_name, bits, faults, _, ct):
     # straight-through: the backward pass of the EXACT psum.  y = psum(x) is
     # replicated, and every shard's downstream use of y produces its own
     # cotangent, so the adjoint sums them: grad_x = psum(ct).  (Returning ct
@@ -224,7 +286,7 @@ def _q_psum_bwd(axis_name, bits, _, ct):
 _q_psum.defvjp(_q_psum_fwd, _q_psum_bwd)
 
 
-def q_psum(g, axis_name: str, bits: int = 8):
+def q_psum(g, axis_name: str, bits: int = 8, faults=None):
     """Quantized all-reduce of a flat tensor g (any shape): per-shard Gaussian
     scalar quantization at ``bits`` bits/element, gather + decode + sum.
     Unbiased-ish (centroid decoder); exactness increases with bits.
@@ -232,9 +294,13 @@ def q_psum(g, axis_name: str, bits: int = 8):
     above the payload width buys nothing).  Differentiable via a
     straight-through custom VJP (backward = exact psum's backward).
 
+    ``faults``: optional :class:`repro.faults.FaultPlan`; only its
+    ``flip_rate`` applies (bit flips on the packed code rows — extra channel
+    noise, no CRC framing on gradients).  Must be hashable (it is static).
+
     NOTE: the result is replicated across ``axis_name`` by construction
     (sum of an all_gather), but shard_map's vma checker cannot infer that —
     pass ``check_vma=False`` to the enclosing jax.shard_map."""
     if bits >= 32:
         return jax.lax.psum(g, axis_name)
-    return _q_psum(g, axis_name, bits)
+    return _q_psum(g, axis_name, bits, faults)

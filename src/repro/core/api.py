@@ -100,13 +100,29 @@ class DistributedGP:
             return spec.fit_host(parts, cfg, params)
         return spec.fit(parts, cfg, params)
 
-    def predict(self, art, X_star):
+    def predict(self, art, X_star, available=None):
         """Serve one query batch: (mean, var) at ``X_star`` from the cached
         factors — no refit, no refactorization (see
-        :func:`~repro.core.protocols.base.predict`)."""
+        :func:`~repro.core.protocols.base.predict`).
+
+        ``available``: optional (m,) machine-availability mask for
+        degraded-mode serving — fusion renormalizes over surviving machines
+        (see :func:`~repro.core.protocols.base.serve_health` and
+        docs/fault_model.md)."""
         if isinstance(art, FittedProtocol):
-            return _base.predict(art, X_star)
-        return art.predict(X_star)  # host oracle models
+            return _base.predict(art, X_star, available)
+        return art.predict(X_star, available)  # host oracle models
+
+    def health(self, art, available=None):
+        """Degradation report for a fitted artifact (machines lost, rows
+        demoted, variance inflation) — see
+        :func:`~repro.core.protocols.base.serve_health`."""
+        if not isinstance(art, FittedProtocol):
+            raise TypeError(
+                "health() needs a FittedProtocol artifact (impl='host' oracle "
+                "models carry no shard table to report on)"
+            )
+        return _base.serve_health(art, available)
 
     def update(self, art, X_new, y_new, machine: int = 0):
         """Stream new points into a fitted artifact (frozen codebooks, rank-k

@@ -26,8 +26,9 @@ TRAIN_IMPLS = ("scan", "loop")
 # layout changes.  1 = pre-DGPConfig artifacts (loaded via defaults);
 # 2 = config in meta.json, unpacked int32 wire codes; 3 = PACKED uint32 wire
 # codes + recorded payload_bits (v1/v2 still load — codes pack on restore;
-# see docs/wire_format.md)
-ARTIFACT_FORMAT_VERSION = 3
+# see docs/wire_format.md); 4 = per-array CRC32 checksums + the integrity
+# ledger in meta.json (v1-v3 load unverified)
+ARTIFACT_FORMAT_VERSION = 4
 
 
 def _ensure_registered() -> None:
@@ -71,6 +72,9 @@ class DGPConfig:
     steps, lr, train_impl : hyperparameter-training knobs (Adam by marginal
         likelihood; ``scan`` compiles the loop into one program).
     center : which machine is the §5.1 center.
+    faults : optional :class:`~repro.faults.FaultPlan` injected at fit time —
+        dropped/NaN shards and packed-word bit flips (with CRC demotion of
+        corrupted rows); ``None`` = a healthy fleet (see docs/fault_model.md).
     """
 
     protocol: str = "center"
@@ -86,6 +90,7 @@ class DGPConfig:
     lr: float = 0.05
     train_impl: str = "scan"
     center: int = 0
+    faults: object = None  # FaultPlan | None (frozen+hashable, rides as static meta)
 
     def __post_init__(self):
         _ensure_registered()
@@ -133,6 +138,14 @@ class DGPConfig:
                     'scheme="vq" has no int wire codes for the pallas qgram '
                     'path: use gram_backend="xla"'
                 )
+        if self.faults is not None:
+            from ..faults import FaultPlan
+
+            if not isinstance(self.faults, FaultPlan):
+                raise TypeError(
+                    f"faults must be a repro.faults.FaultPlan or None, got "
+                    f"{type(self.faults).__name__}"
+                )
 
     # -- conversions ---------------------------------------------------------
 
@@ -143,7 +156,12 @@ class DGPConfig:
     @classmethod
     def from_dict(cls, d: dict) -> "DGPConfig":
         known = {f.name for f in dataclasses.fields(cls)}
-        return cls(**{k: v for k, v in d.items() if k in known})
+        d = {k: v for k, v in d.items() if k in known}
+        if isinstance(d.get("faults"), dict):
+            from ..faults import FaultPlan
+
+            d["faults"] = FaultPlan.from_dict(d["faults"])
+        return cls(**d)
 
     @classmethod
     def from_legacy_meta(cls, meta: dict) -> "DGPConfig":

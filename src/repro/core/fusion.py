@@ -20,21 +20,41 @@ def kl_fuse(mus, Sigmas):
     return mu, Sigma
 
 
-def kl_fuse_diag(mus, s2s):
-    """Diagonal/per-point special case: s2s (m, t) marginal variances."""
-    mu = jnp.mean(mus, axis=0)
-    s2 = jnp.mean(s2s + (mu[None, :] - mus) ** 2, axis=0)
-    return mu, s2
+def kl_fuse_diag(mus, s2s, w=None):
+    """Diagonal/per-point special case: s2s (m, t) marginal variances.
+
+    ``w``: optional (m,) availability weights for degraded-mode serving — the
+    barycenter renormalizes over surviving experts, and the fused variance is
+    inflated by the lost fraction ``m / sum(w)`` (losing experts must never
+    SHRINK uncertainty; docs/fault_model.md).  ``w=None`` is the healthy
+    fleet and keeps the original arithmetic bit-for-bit."""
+    if w is None:
+        mu = jnp.mean(mus, axis=0)
+        s2 = jnp.mean(s2s + (mu[None, :] - mus) ** 2, axis=0)
+        return mu, s2
+    m = mus.shape[0]
+    w = jnp.asarray(w, mus.dtype).reshape(m, 1)
+    m_eff = jnp.maximum(jnp.sum(w), 1.0)
+    mu = jnp.sum(w * mus, axis=0) / m_eff
+    s2 = jnp.sum(w * (s2s + (mu[None, :] - mus) ** 2), axis=0) / m_eff
+    return mu, s2 * (m / m_eff)
 
 
-def kl_fuse_diag_psum(mu_i, s2_i, axis_name: str):
+def kl_fuse_diag_psum(mu_i, s2_i, axis_name: str, w_i=None):
     """:func:`kl_fuse_diag` as a mesh collective epilogue: each device holds
     ITS machine's per-point predictive (mu_i, s2_i) (t,) and the barycenter is
-    two psums over ``axis_name`` (must run inside shard_map)."""
+    two psums over ``axis_name`` (must run inside shard_map).  ``w_i`` is the
+    device's own availability weight (the degraded form mirrors the stacked
+    one term for term)."""
     m = jax.lax.psum(1, axis_name)
-    mu = jax.lax.psum(mu_i, axis_name) / m
-    s2 = jax.lax.psum(s2_i + (mu - mu_i) ** 2, axis_name) / m
-    return mu, s2
+    if w_i is None:
+        mu = jax.lax.psum(mu_i, axis_name) / m
+        s2 = jax.lax.psum(s2_i + (mu - mu_i) ** 2, axis_name) / m
+        return mu, s2
+    m_eff = jnp.maximum(jax.lax.psum(w_i, axis_name), 1.0)
+    mu = jax.lax.psum(w_i * mu_i, axis_name) / m_eff
+    s2 = jax.lax.psum(w_i * (s2_i + (mu - mu_i) ** 2), axis_name) / m_eff
+    return mu, s2 * (m / m_eff)
 
 
 # KL barycenter as a registered fusion rule: the §5.2 default, selectable by
@@ -43,8 +63,8 @@ from .registry import FusionSpec, register_fusion  # noqa: E402
 
 register_fusion(FusionSpec(
     name="kl",
-    fuse=lambda mus, s2s, prior_var=None: kl_fuse_diag(mus, s2s),
-    fuse_psum=lambda mu_i, s2_i, prior_var, axis: kl_fuse_diag_psum(
-        mu_i, s2_i, axis
+    fuse=lambda mus, s2s, prior_var=None, w=None: kl_fuse_diag(mus, s2s, w),
+    fuse_psum=lambda mu_i, s2_i, prior_var, axis, w_i=None: kl_fuse_diag_psum(
+        mu_i, s2_i, axis, w_i
     ),
 ))

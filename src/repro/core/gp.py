@@ -21,6 +21,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from .linalg_safe import DEFAULT_JITTER, chol_jittered, chol_safe
 from .registry import KERNELS, KernelSpec, register_kernel
 
 __all__ = [
@@ -39,7 +40,8 @@ __all__ = [
     "train_gp",
 ]
 
-_JITTER = 1e-6
+# pinned in linalg_safe so every module shares ONE constant (and tolerance)
+_JITTER = DEFAULT_JITTER
 
 
 def _inner_products(X, X2, backend: str):
@@ -158,7 +160,9 @@ def posterior_factors(G, y, noise_var):
     noise = jnp.asarray(noise_var)
     noise = jnp.broadcast_to(noise, (n,)) if noise.ndim <= 1 else noise
     K = G + jnp.diag(noise + _JITTER)
-    L = jnp.linalg.cholesky(K)
+    # fit-time: jitter already on the diagonal; escalate only if the factor
+    # still comes back non-finite (rank-deficient gram)
+    L = chol_safe(K)
     alpha = jax.scipy.linalg.cho_solve((L, True), y)
     return {"L": L, "alpha": alpha}
 
@@ -188,8 +192,9 @@ def posterior_from_gram(G, G_star_n, g_star_star, y, noise_var):
 def nlml_from_gram(G, y, noise_var):
     """Negative log marginal likelihood -log N(y | 0, G + sigma^2 I)."""
     n = G.shape[0]
-    K = G + (noise_var + _JITTER) * jnp.eye(n, dtype=G.dtype)
-    L = jnp.linalg.cholesky(K)
+    # differentiated (training loss): one-shot jitter — while_loop escalation
+    # has no reverse-mode rule
+    L = chol_jittered(G, noise_var + _JITTER)
     alpha = jax.scipy.linalg.cho_solve((L, True), y)
     return (
         0.5 * y @ alpha

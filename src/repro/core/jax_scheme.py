@@ -34,6 +34,7 @@ __all__ = [
     "pack_codes",
     "unpack_codes",
     "row_words",
+    "crc_words",
     "WORD_BITS",
     "SchemeState",
 ]
@@ -276,6 +277,46 @@ def unpack_codes(words, widths, *, num=None, total_bits=None, mask=None,
     if mask is not None:
         out = jnp.where((jnp.asarray(mask) > 0)[..., None], out,
                         jnp.asarray(-1, dtype))
+    return out
+
+
+_CRC16_POLY = jnp.uint32(0x1021)  # CRC-16-CCITT
+_CRC16_INIT = jnp.uint32(0xFFFF)
+
+
+def crc_words(words, mask=None):
+    """Per-row CRC-16-CCITT over packed uint32 words — jit/vmap/shard_map-safe.
+
+    words : (..., W) uint32 packed rows (see :func:`pack_codes`).  The CRC is
+        computed bit-serially LSB-first over the row's W*32-bit stream —
+        exactly the order the bits occupy the wire — so any single flipped
+        bit (and any burst up to 16 bits) changes the checksum.
+    mask : optional (...,) row validity; invalid rows checksum to 0 (they
+        occupy no wire bits, so they carry no CRC either).
+
+    Returns (...,) uint32 in [0, 2^16).  W == 0 rows checksum to the init
+    value.  The 16 CRC bits per transmitted row are charged to the ledger as
+    ``integrity_bits`` (see :mod:`repro.comm.accounting`)."""
+    words = jnp.asarray(words).astype(jnp.uint32)
+    W = words.shape[-1]
+    if W == 0:
+        out = jnp.full(words.shape[:-1], _CRC16_INIT, jnp.uint32)
+    else:
+        def word_step(i, crc):
+            wd = words[..., i]
+
+            def bit_step(b, c):
+                bit = (wd >> b) & jnp.uint32(1)
+                fb = ((c >> 15) ^ bit) & jnp.uint32(1)
+                return (((c << 1) & jnp.uint32(0xFFFF))
+                        ^ (fb * _CRC16_POLY))
+
+            return jax.lax.fori_loop(0, WORD_BITS, bit_step, crc)
+
+        crc0 = jnp.full(words.shape[:-1], _CRC16_INIT, jnp.uint32)
+        out = jax.lax.fori_loop(0, W, word_step, crc0)
+    if mask is not None:
+        out = jnp.where(jnp.asarray(mask) > 0, out, jnp.uint32(0))
     return out
 
 

@@ -15,6 +15,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .linalg_safe import DEFAULT_JITTER, chol_jittered, chol_safe
+
 __all__ = [
     "nystrom_complete",
     "nystrom_cross",
@@ -27,7 +29,8 @@ __all__ = [
     "chol_append",
 ]
 
-_JITTER = 1e-6
+# pinned in linalg_safe so every module shares ONE constant (and tolerance)
+_JITTER = DEFAULT_JITTER
 
 
 def nystrom_complete(G_KK, G_KN, exact_diag=None):
@@ -36,7 +39,9 @@ def nystrom_complete(G_KK, G_KN, exact_diag=None):
     G_KK: (K, K) exact; G_KN: (K, N) first K rows (incl. the K x K block).
     exact_diag: optional (N,) true diagonal to pin (FITC correction)."""
     K = G_KK.shape[0]
-    L = jnp.linalg.cholesky(G_KK + _JITTER * jnp.trace(G_KK) / K * jnp.eye(K, dtype=G_KK.dtype))
+    # differentiated (training-loss gram_override path): one-shot jitter —
+    # lax.while_loop escalation has no reverse-mode rule
+    L = chol_jittered(G_KK, _JITTER * jnp.trace(G_KK) / K)
     W = jax.scipy.linalg.solve_triangular(L, G_KN, lower=True)  # (K, N)
     Ghat = W.T @ W
     if exact_diag is not None:
@@ -51,7 +56,7 @@ def nystrom_cross(G_KK, G_KN, G_star_K):
     Nyström-structured train gram amplifies y-components outside the rank-K
     span — see CenterGP.predict."""
     K = G_KK.shape[0]
-    L = jnp.linalg.cholesky(G_KK + _JITTER * jnp.trace(G_KK) / K * jnp.eye(K, dtype=G_KK.dtype))
+    L = chol_jittered(G_KK, _JITTER * jnp.trace(G_KK) / K)
     W = jax.scipy.linalg.solve_triangular(L, G_KN, lower=True)  # (K, N)
     B = jax.scipy.linalg.solve_triangular(L, G_star_K.T, lower=True)  # (K, t)
     return B.T @ W
@@ -79,11 +84,13 @@ def nystrom_factors(G_KK, G_KN, y, noise_var):
     consumes it per query batch with NO further factorization (triangular
     solves only) — the serve-path invariant ``FittedProtocol`` relies on."""
     K = G_KK.shape[0]
-    L = jnp.linalg.cholesky(G_KK + _JITTER * jnp.trace(G_KK) / K * jnp.eye(K, dtype=G_KK.dtype))
+    # fit-time: escalate jitter on non-finite factors (rank-deficient grams
+    # from corrupted/demoted wire rows) rather than serving NaNs
+    L = chol_safe(G_KK, _JITTER * jnp.trace(G_KK) / K)
     W = jax.scipy.linalg.solve_triangular(L, G_KN, lower=True)  # (K, N)
     s2 = noise_var + _JITTER
     M = s2 * jnp.eye(K, dtype=W.dtype) + W @ W.T
-    Lm = jnp.linalg.cholesky(M)
+    Lm = chol_safe(M)
     alpha = nystrom_kinv(W, Lm, s2, y)
     return {"L_KK": L, "W": W, "L_M": Lm, "alpha": alpha}
 
@@ -162,7 +169,7 @@ def chol_append(L, C_on, C_nn):
     Only the NEW k x k Schur block is factorized — O(n k^2 + k^3)."""
     X = jax.scipy.linalg.solve_triangular(L, C_on, lower=True)  # (n, k)
     S = C_nn - X.T @ X
-    Ls = jnp.linalg.cholesky(S)
+    Ls = chol_safe(S)
     n, k = C_on.shape
     top = jnp.concatenate([L, jnp.zeros((n, k), L.dtype)], axis=1)
     bot = jnp.concatenate([X.T, Ls], axis=1)

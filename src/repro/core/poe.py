@@ -5,6 +5,12 @@ and robust BCM (rBCM, Deisenroth & Ng 2015).
 Each expert i contributes a Gaussian predictive N(mu_i, s2_i) per test point;
 the combiners differ in precision weighting.  ``prior_var`` is the prior
 k(x*, x*) + sigma_eps^2 needed by (r)BCM.
+
+Every combiner takes optional availability weights ``w`` (m,): degraded-mode
+serving renormalizes the product over surviving experts (a 0 weight removes
+that expert's factor entirely — and its prior correction, for the committee
+machines).  ``w=None`` is the healthy fleet and keeps the original
+arithmetic untouched (docs/fault_model.md).
 """
 from __future__ import annotations
 
@@ -14,35 +20,61 @@ import jax.numpy as jnp
 __all__ = ["poe", "gpoe", "bcm", "rbcm", "combine", "combine_psum"]
 
 
-def poe(mus, s2s, prior_var=None):
+def _weights(w, m, dtype):
+    return jnp.asarray(w, dtype).reshape(m, 1)
+
+
+def poe(mus, s2s, prior_var=None, w=None):
     """PoE: precision-weighted product.  mus/s2s: (m, t)."""
-    prec = jnp.sum(1.0 / s2s, axis=0)
-    mu = jnp.sum(mus / s2s, axis=0) / prec
+    if w is None:
+        prec = jnp.sum(1.0 / s2s, axis=0)
+        mu = jnp.sum(mus / s2s, axis=0) / prec
+        return mu, 1.0 / prec
+    w = _weights(w, mus.shape[0], mus.dtype)
+    prec = jnp.maximum(jnp.sum(w / s2s, axis=0), 1e-12)
+    mu = jnp.sum(w * mus / s2s, axis=0) / prec
     return mu, 1.0 / prec
 
 
-def gpoe(mus, s2s, prior_var=None, betas=None):
+def gpoe(mus, s2s, prior_var=None, betas=None, w=None):
     """Generalized PoE with weights beta_i (default 1/m so variances don't
-    collapse with m)."""
+    collapse with m; under availability weights, beta_i = w_i / sum(w))."""
     m = mus.shape[0]
-    betas = jnp.full((m, 1), 1.0 / m) if betas is None else betas
-    prec = jnp.sum(betas / s2s, axis=0)
+    if betas is None:
+        if w is None:
+            betas = jnp.full((m, 1), 1.0 / m)
+        else:
+            w = _weights(w, m, mus.dtype)
+            betas = w / jnp.maximum(jnp.sum(w), 1.0)
+    prec = jnp.maximum(jnp.sum(betas / s2s, axis=0), 1e-12)
     mu = jnp.sum(betas * mus / s2s, axis=0) / prec
     return mu, 1.0 / prec
 
 
-def bcm(mus, s2s, prior_var):
-    """BCM (Tresp 2000): PoE with the (m-1)-fold prior correction."""
+def bcm(mus, s2s, prior_var, w=None):
+    """BCM (Tresp 2000): PoE with the (m-1)-fold prior correction (under
+    availability weights, the (sum(w)-1)-fold correction)."""
     m = mus.shape[0]
-    prec = jnp.sum(1.0 / s2s, axis=0) - (m - 1.0) / prior_var
+    if w is None:
+        prec = jnp.sum(1.0 / s2s, axis=0) - (m - 1.0) / prior_var
+        prec = jnp.maximum(prec, 1e-12)
+        mu = jnp.sum(mus / s2s, axis=0) / prec
+        return mu, 1.0 / prec
+    w = _weights(w, m, mus.dtype)
+    m_eff = jnp.sum(w)
+    prec = jnp.sum(w / s2s, axis=0) - (m_eff - 1.0) / prior_var
     prec = jnp.maximum(prec, 1e-12)
-    mu = jnp.sum(mus / s2s, axis=0) / prec
+    mu = jnp.sum(w * mus / s2s, axis=0) / prec
     return mu, 1.0 / prec
 
 
-def rbcm(mus, s2s, prior_var):
-    """Robust BCM: beta_i = 0.5 (log prior_var - log s2_i) (Deisenroth & Ng)."""
+def rbcm(mus, s2s, prior_var, w=None):
+    """Robust BCM: beta_i = 0.5 (log prior_var - log s2_i) (Deisenroth & Ng);
+    availability weights scale the betas, so a lost expert contributes
+    neither evidence nor prior correction."""
     betas = 0.5 * (jnp.log(prior_var) - jnp.log(s2s))  # (m, t)
+    if w is not None:
+        betas = betas * _weights(w, mus.shape[0], mus.dtype)
     prec = jnp.sum(betas / s2s, axis=0) + (1.0 - jnp.sum(betas, axis=0)) / prior_var
     prec = jnp.maximum(prec, 1e-12)
     mu = jnp.sum(betas * mus / s2s, axis=0) / prec
@@ -52,32 +84,51 @@ def rbcm(mus, s2s, prior_var):
 _COMBINERS = {"poe": poe, "gpoe": gpoe, "bcm": bcm, "rbcm": rbcm}
 
 
-def combine(method: str, mus, s2s, prior_var=None):
-    return _COMBINERS[method](jnp.asarray(mus), jnp.asarray(s2s), prior_var)
+def combine(method: str, mus, s2s, prior_var=None, w=None):
+    return _COMBINERS[method](jnp.asarray(mus), jnp.asarray(s2s), prior_var, w=w)
 
 
-def combine_psum(method: str, mu_i, s2_i, prior_var, axis_name: str):
+def combine_psum(method: str, mu_i, s2_i, prior_var, axis_name: str, w_i=None):
     """The PoE-family combiners as mesh collective epilogues: each device
     holds ITS expert's (mu_i, s2_i) (t,) and every sum over experts becomes a
     ``lax.psum`` over ``axis_name`` (must run inside shard_map).  Agrees with
-    :func:`combine` on the stacked predictives."""
+    :func:`combine` on the stacked predictives (``w_i`` is the device's own
+    availability weight; the degraded form mirrors the stacked one term for
+    term)."""
     m = jax.lax.psum(1, axis_name)
     if method == "poe":
-        prec = jax.lax.psum(1.0 / s2_i, axis_name)
-        mu = jax.lax.psum(mu_i / s2_i, axis_name) / prec
+        if w_i is None:
+            prec = jax.lax.psum(1.0 / s2_i, axis_name)
+            mu = jax.lax.psum(mu_i / s2_i, axis_name) / prec
+            return mu, 1.0 / prec
+        prec = jnp.maximum(jax.lax.psum(w_i / s2_i, axis_name), 1e-12)
+        mu = jax.lax.psum(w_i * mu_i / s2_i, axis_name) / prec
         return mu, 1.0 / prec
     if method == "gpoe":
-        beta = 1.0 / m
-        prec = jax.lax.psum(beta / s2_i, axis_name)
-        mu = jax.lax.psum(beta * mu_i / s2_i, axis_name) / prec
+        if w_i is None:
+            beta_i = 1.0 / m
+        else:
+            beta_i = w_i / jnp.maximum(jax.lax.psum(w_i, axis_name), 1.0)
+        prec = jax.lax.psum(beta_i / s2_i, axis_name)
+        if w_i is not None:
+            prec = jnp.maximum(prec, 1e-12)
+        mu = jax.lax.psum(beta_i * mu_i / s2_i, axis_name) / prec
         return mu, 1.0 / prec
     if method == "bcm":
-        prec = jax.lax.psum(1.0 / s2_i, axis_name) - (m - 1.0) / prior_var
+        if w_i is None:
+            prec = jax.lax.psum(1.0 / s2_i, axis_name) - (m - 1.0) / prior_var
+            prec = jnp.maximum(prec, 1e-12)
+            mu = jax.lax.psum(mu_i / s2_i, axis_name) / prec
+            return mu, 1.0 / prec
+        m_eff = jax.lax.psum(w_i, axis_name)
+        prec = jax.lax.psum(w_i / s2_i, axis_name) - (m_eff - 1.0) / prior_var
         prec = jnp.maximum(prec, 1e-12)
-        mu = jax.lax.psum(mu_i / s2_i, axis_name) / prec
+        mu = jax.lax.psum(w_i * mu_i / s2_i, axis_name) / prec
         return mu, 1.0 / prec
     if method == "rbcm":
         beta_i = 0.5 * (jnp.log(prior_var) - jnp.log(s2_i))
+        if w_i is not None:
+            beta_i = beta_i * w_i
         prec = jax.lax.psum(beta_i / s2_i, axis_name) + (
             1.0 - jax.lax.psum(beta_i, axis_name)
         ) / prior_var

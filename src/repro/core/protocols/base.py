@@ -36,6 +36,9 @@ __all__ = [
     "pad_parts",
     "PaddedShards",
     "WireState",
+    "WireRun",
+    "ServeHealth",
+    "serve_health",
     "FittedProtocol",
     "fit",
     "predict",
@@ -110,6 +113,22 @@ class WireState(collections.namedtuple(
     __slots__ = ()
 
 
+class WireRun(collections.namedtuple(
+    "WireRun",
+    "state wire_bits payload_bits integrity_bits extras shards rows_demoted",
+)):
+    """What one ``SchemeSpec.run`` produced: the :class:`WireState`, the three
+    ledgers (Theorem-1 ``wire_bits``, measured packed ``payload_bits``, CRC
+    ``integrity_bits`` — all integers, all charged for what was TRANSMITTED,
+    before any demotion), scheme-private ``extras``, the possibly
+    fault-compacted :class:`PaddedShards` the protocol must assemble from
+    (compaction moves each machine's CRC-surviving rows to the front, with
+    ``lengths``/``mask`` shrunk to match), and ``rows_demoted`` — how many
+    transmitted rows the receiver's CRC check rejected and masked out."""
+
+    __slots__ = ()
+
+
 def _wire_bits(rates, lengths, d: int, skip=None) -> int:
     """Paper §4 accounting: R bits/sample on the wire + side info per
     transmitting machine (the shared formula:
@@ -143,6 +162,7 @@ def _mask_gram(G, mask_r, mask_c=None, pin_diag=True):
         "protocol", "kernel", "gram_mode", "fuse", "gram_backend",
         "n_center", "lengths", "block_order", "bits_per_sample", "max_bits",
         "wire_bits", "impl", "scheme", "config", "payload_bits",
+        "integrity_bits", "rows_demoted",
     ],
 )
 @dataclasses.dataclass
@@ -219,12 +239,21 @@ class FittedProtocol:
     # valid row + side info) — exceeds the Theorem-1 ``wire_bits`` ledger only
     # by per-word padding; 0 on artifacts restored from pre-v3 checkpoints
     payload_bits: int = 0
+    # the CRC framing ledger (repro.comm.accounting.CRC_BITS per transmitted
+    # row) and how many transmitted rows the receiver's CRC check demoted to
+    # masked rows; 0 on artifacts restored from pre-v4 checkpoints
+    integrity_bits: int = 0
+    rows_demoted: int = 0
 
     # -- conveniences (the paper-facing entry points return artifacts) ------
 
-    def predict(self, X_star):
+    def predict(self, X_star, available=None):
         """Serve one query batch from the cached factors — see :func:`predict`."""
-        return predict(self, X_star)
+        return predict(self, X_star, available)
+
+    def health(self, available=None) -> "ServeHealth":
+        """Degradation status of this artifact — see :func:`serve_health`."""
+        return serve_health(self, available)
 
     def update(self, X_new, y_new, machine: int = 0):
         """Stream in new points — see :func:`update`."""
@@ -275,6 +304,38 @@ def _as_config(
         lr=float(lr),
         train_impl=train_impl,
     )
+
+
+def _apply_fit_faults(parts, cfg):
+    """Dataset-level fault injection at fit() entry (drop/NaN shards from
+    ``cfg.faults``) plus the guards that make the remaining fleet trainable:
+    the §5.1 center and the broadcast/PoE training machine (machine 0) must
+    survive — predict-time availability masks are where arbitrary machine
+    loss is served.  Returns ``(parts, rows_removed)``."""
+    plan = getattr(cfg, "faults", None) if cfg is not None else None
+    if plan is None:
+        return parts, 0
+    from ...faults import apply_to_parts
+
+    new_parts, removed = apply_to_parts(parts, plan)
+    lengths = [int(p[0].shape[0]) for p in new_parts]
+    if not any(lengths):
+        raise ValueError(
+            "fault plan removed every row from every machine — nothing to fit"
+        )
+    if cfg.protocol == "center" and lengths[cfg.center] == 0:
+        raise ValueError(
+            f"fault plan emptied the center machine ({cfg.center}) — the "
+            "§5.1 protocol cannot fit without its exact block; drop a "
+            "non-center machine or serve an old artifact degraded instead"
+        )
+    if cfg.protocol in ("broadcast", "poe") and lengths[0] == 0:
+        raise ValueError(
+            "fault plan emptied machine 0, where broadcast/poe train their "
+            "hyperparameters — drop a different machine (prediction-time "
+            "availability masks handle arbitrary loss)"
+        )
+    return new_parts, removed
 
 
 def fit(
@@ -357,13 +418,25 @@ def serve_trace_count(protocol: str = "center") -> int:
     return _SERVE_TRACES[protocol]
 
 
-def _predict_impl(art: FittedProtocol, X_star):
+def _predict_impl(art: FittedProtocol, X_star, avail=None):
     _SERVE_TRACES[art.protocol] += 1  # runs at trace time only
     p = art.params
     noise = jnp.exp(p.log_noise)
-    sq_star = jnp.sum(X_star**2, -1)
+    # tripwire: non-finite query rows are sanitized before the kernel map
+    # (one NaN row would otherwise poison the whole batch through the solve)
+    # and answered with the prior predictive below.  For finite inputs every
+    # select is an identity, so the healthy path is bitwise unchanged.
+    finite_row = jnp.isfinite(X_star).all(axis=-1)
+    Xq = jnp.where(finite_row[:, None], X_star, 0.0)
+    sq_star = jnp.sum(Xq**2, -1)
     g_ss = prior_diag(art.kernel, p, sq_star)
-    return PROTOCOLS.get(art.protocol).predict(art, X_star, sq_star, g_ss, noise)
+    mu, var = PROTOCOLS.get(art.protocol).predict(
+        art, Xq, sq_star, g_ss, noise, avail
+    )
+    ok = finite_row & jnp.isfinite(mu) & jnp.isfinite(var)
+    mu = jnp.where(ok, mu, 0.0)
+    var = jnp.where(ok, var, g_ss + noise)  # degrade to the prior, not NaN
+    return mu, var
 
 
 _predict_jit = jax.jit(_predict_impl)
@@ -375,7 +448,26 @@ def _uses_mesh_predict(art: FittedProtocol) -> bool:
     return art.impl == "mesh" and art.protocol in ("broadcast", "poe")
 
 
-def predict(art: FittedProtocol, X_star):
+def _availability(art: FittedProtocol, available):
+    """Normalize a machine-availability mask to (m,) float32 — or ``None``
+    for the all-alive fast path (statically identical to the pre-fault
+    program).  ``None`` in means "derive from the artifact": machines whose
+    shards were emptied by fit-time faults are marked down automatically."""
+    m = len(art.lengths)
+    if available is None:
+        if all(n > 0 for n in art.lengths):
+            return None
+        return jnp.asarray([1.0 if n > 0 else 0.0 for n in art.lengths],
+                           jnp.float32)
+    av = np.asarray(available, np.float32).reshape(-1)
+    if av.shape[0] != m:
+        raise ValueError(
+            f"available mask has {av.shape[0]} entries for m={m} machines"
+        )
+    return jnp.asarray((av > 0).astype(np.float32))
+
+
+def predict(art: FittedProtocol, X_star, available=None):
     """Serve one query batch from a fitted artifact: (mean, var) at X_star.
 
     ONE jitted program per artifact shape, O(t) per query batch: the cross
@@ -384,15 +476,24 @@ def predict(art: FittedProtocol, X_star):
     refactorization, no hyperparameter step happens here — verify with
     :func:`predict_op_counts` / :func:`serve_trace_count`.  Retraces only
     when the artifact's shapes change (a fresh :func:`fit`, an
-    :func:`update`, or a new query-batch size).  Mesh broadcast/PoE
-    artifacts serve through one shard_map program with a psum/KL fusion
-    epilogue instead (:func:`.mesh._predict_mesh_impl`)."""
+    :func:`update`, a new query-batch size, or a new availability pattern).
+    Mesh broadcast/PoE artifacts serve through one shard_map program with a
+    psum/KL fusion epilogue instead (:func:`.mesh._predict_mesh_impl`).
+
+    ``available``: optional (m,) machine-availability mask (1 = alive) for
+    degraded-mode serving — broadcast/PoE fusions renormalize over the
+    surviving experts (variance inflated accordingly, see
+    docs/fault_model.md); the center protocol serves its last-good factor
+    set regardless (the center holds everything), with the loss reported by
+    :func:`serve_health`.  ``None`` derives the mask from the artifact
+    (machines emptied by fit-time faults are already marked down)."""
     X_star = jnp.asarray(X_star, jnp.float32)
+    avail = _availability(art, available)
     if _uses_mesh_predict(art):
         from . import mesh
 
-        return mesh._predict_mesh_jit(art, X_star)
-    return _predict_jit(art, X_star)
+        return mesh._predict_mesh_jit(art, X_star, avail)
+    return _predict_jit(art, X_star, avail)
 
 
 # --------------------------------------------------------------------------
@@ -426,6 +527,23 @@ def update(art: FittedProtocol, X_new, y_new, machine: int = 0) -> FittedProtoco
         raise ValueError("update expects X_new (n_new, d), y_new (n_new,)")
     if not 0 <= machine < len(art.lengths):
         raise ValueError(f"machine {machine} out of range (m={len(art.lengths)})")
+    # tripwire: a NaN/Inf point would poison the rank-k factor growth (and
+    # every subsequent predict) — drop hostile rows, loudly, instead
+    finite = np.isfinite(np.asarray(X_new)).all(axis=1) & np.isfinite(
+        np.asarray(y_new)
+    )
+    if not finite.all():
+        import warnings
+
+        warnings.warn(
+            f"update(): dropping {int((~finite).sum())} non-finite point(s) "
+            f"of {finite.size} (machine {machine})",
+            stacklevel=2,
+        )
+        if not finite.any():
+            return art  # nothing usable arrived; the artifact is unchanged
+        keep = jnp.asarray(np.flatnonzero(finite))
+        X_new, y_new = X_new[keep], y_new[keep]
     if art.impl == "mesh":
         # the rank-k growth runs on host arrays (mixing mesh-sharded and
         # fresh single-device operands in eager ops is ill-defined); the next
@@ -446,6 +564,55 @@ def _reencode(art: FittedProtocol, machine: int, X_new):
 
 def _bump_length(lengths: tuple, j: int, n_new: int) -> tuple:
     return tuple(n + (n_new if i == j else 0) for i, n in enumerate(lengths))
+
+
+# --------------------------------------------------------------------------
+# degraded-mode health reporting
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeHealth:
+    """Degradation status of a serving artifact — what :func:`predict` is
+    actually working with, instead of NaNs.
+
+    status : ``"ok"`` (full fleet, nothing demoted) or ``"degraded"``.
+    machines / machines_lost : fleet size and the indices serving no rows
+        (dropped at fit time or masked out by the availability argument).
+    rows_demoted : transmitted rows the receiver's CRC check rejected.
+    variance_inflation : the factor applied to the fused predictive variance
+        by the KL barycenter's survivor renormalization (``m / m_alive``);
+        1.0 for precision-weighted PoE-family fusions (their variance widens
+        intrinsically as experts leave) and for the center protocol."""
+
+    status: str
+    machines: int
+    machines_lost: tuple
+    rows_demoted: int
+    variance_inflation: float
+
+
+def serve_health(art: FittedProtocol, available=None) -> ServeHealth:
+    """Report what :func:`predict` degrades to under the given availability
+    (``None`` = derived from the artifact, as in :func:`predict`)."""
+    m = len(art.lengths)
+    avail = _availability(art, available)
+    if avail is None:
+        alive = [True] * m
+    else:
+        alive = [bool(a) for a in np.asarray(avail) > 0]
+    lost = tuple(j for j in range(m) if not alive[j] or art.lengths[j] == 0)
+    n_alive = m - len(lost)
+    demoted = int(getattr(art, "rows_demoted", 0))
+    inflation = 1.0
+    if lost and art.protocol in ("broadcast", "poe") and art.fuse == "kl" \
+            and n_alive > 0:
+        inflation = m / n_alive
+    status = "ok" if not lost and demoted == 0 else "degraded"
+    return ServeHealth(
+        status=status, machines=m, machines_lost=lost,
+        rows_demoted=demoted, variance_inflation=inflation,
+    )
 
 
 # --------------------------------------------------------------------------
@@ -474,6 +641,8 @@ def save_artifact(art: FittedProtocol, directory: str, step: int = 0) -> str:
         "bits_per_sample": art.bits_per_sample, "max_bits": art.max_bits,
         "wire_bits": art.wire_bits, "has_wire": art.wire is not None,
         "payload_bits": art.payload_bits,  # v3: measured packed payload
+        "integrity_bits": art.integrity_bits,  # v4: CRC framing ledger
+        "rows_demoted": art.rows_demoted,
         "impl": art.impl,  # provenance; restore is always single-host
         "scheme": art.scheme,
         "config": cfg.asdict() if cfg is not None else None,
@@ -566,6 +735,8 @@ def load_artifact(directory: str, step: int | None = None, shardings=None) -> Fi
         wire_bits=meta["wire_bits"], impl="batched",
         scheme=meta.get("scheme", "per_symbol"), config=config,
         payload_bits=meta.get("payload_bits", 0),  # pre-v3: not recorded
+        integrity_bits=meta.get("integrity_bits", 0),  # pre-v4: not recorded
+        rows_demoted=meta.get("rows_demoted", 0),
     )
 
 
@@ -602,7 +773,9 @@ def predict_op_counts(art: FittedProtocol, X_star, ops=("cholesky", "eigh")) -> 
         fn = mesh._predict_mesh_impl
     else:
         fn = _predict_impl
-    jaxpr = jax.make_jaxpr(fn)(art, jnp.asarray(X_star, jnp.float32))
+    jaxpr = jax.make_jaxpr(fn)(
+        art, jnp.asarray(X_star, jnp.float32), _availability(art, None)
+    )
     counts = {op: 0 for op in ops}
     for eqn in _walk_jaxpr(jaxpr.jaxpr):
         if eqn.primitive.name in counts:

@@ -70,8 +70,9 @@ class HostBroadcastGP:
     gram_mode: str
     fuse: str
     payload_bits: int = 0  # packed-payload formula (accounting), for parity
+    integrity_bits: int = 0  # CRC framing formula (accounting), for parity
 
-    def predict(self, X_star):
+    def predict(self, X_star, available=None):
         m = len(self.parts)
         k = gram_fn(self.kernel)
         p = self.params
@@ -112,20 +113,39 @@ class HostBroadcastGP:
         mus = jnp.stack(mus)
         s2s = jnp.stack(s2s)
         prior = jnp.diagonal(k(p, X_star, X_star)) + jnp.exp(p.log_noise)
-        return FUSIONS.get(self.fuse).fuse(mus, s2s, prior)
+        spec = FUSIONS.get(self.fuse)
+        if available is None:  # legacy 3-arg fusions keep the healthy path
+            return spec.fuse(mus, s2s, prior)
+        w = (jnp.asarray(available, jnp.float32) > 0).astype(jnp.float32)
+        return spec.fuse(mus, s2s, prior, w)
 
 
 def fit_broadcast_host(parts, cfg, params=None) -> HostBroadcastGP:
     """Serial reference §5.2 fit: one scipy scheme fit per machine and shared
     hypers trained at machine 0 on its Nyström view (warm-started from
     ``params`` when given)."""
+    plan = getattr(cfg, "faults", None)
+    if plan is not None and plan.flip_rate > 0:
+        raise NotImplementedError(
+            "the host oracle has no packed wire plane to corrupt: inject "
+            'flip faults with impl="batched" or impl="mesh"'
+        )
+    parts, _ = base._apply_fit_faults(parts, cfg)
     m = len(parts)
-    S = [second_moment(Xj) for Xj, _ in parts]
+    S = [
+        second_moment(Xj) if np.asarray(Xj).shape[0]
+        else np.zeros((np.asarray(Xj).shape[1],) * 2, np.float32)
+        for Xj, _ in parts
+    ]
     S_tot = sum(S)
     # every machine encodes ONCE against the sum of the others' covariances
+    # (a machine emptied by faults transmits nothing and is charged nothing)
     wire = 0
     decoded = []
     for j, (Xj, yj) in enumerate(parts):
+        if np.asarray(Xj).shape[0] == 0:
+            decoded.append(jnp.asarray(Xj, jnp.float32))
+            continue
         sch = PerSymbolScheme(cfg.bits_per_sample, cfg.max_bits).fit(
             np.asarray(S[j]), np.asarray(S_tot - S[j])
         )
@@ -148,16 +168,17 @@ def fit_broadcast_host(parts, cfg, params=None) -> HostBroadcastGP:
         X0, y0, kernel=cfg.kernel, params=params, steps=cfg.steps, lr=cfg.lr,
         gram_override=gram0, impl=cfg.train_impl,
     )
-    from ...comm.accounting import payload_bits_formula
+    from ...comm.accounting import integrity_bits_formula, payload_bits_formula
 
     payload = payload_bits_formula(
         [p[0].shape[0] for p in parts], parts[0][0].shape[1],
         cfg.bits_per_sample, cfg.max_bits,
     )
+    integrity = integrity_bits_formula([p[0].shape[0] for p in parts])
     return HostBroadcastGP(
         kernel=cfg.kernel, params=trained.params, parts=list(parts),
         decoded=decoded, wire_bits=wire, gram_mode=cfg.gram_mode,
-        fuse=cfg.fusion, payload_bits=payload,
+        fuse=cfg.fusion, payload_bits=payload, integrity_bits=integrity,
     )
 
 
@@ -302,6 +323,7 @@ def broadcast_gp(
 def _fit_broadcast(parts, cfg, params=None) -> FittedProtocol:
     from ...comm.accounting import row_bits
 
+    parts, _ = base._apply_fit_faults(parts, cfg)
     m = len(parts)
     shards = pad_parts(parts)
     _, n_pad, d = shards.X.shape
@@ -317,9 +339,15 @@ def _fit_broadcast(parts, cfg, params=None) -> FittedProtocol:
             raise NotImplementedError(
                 'impl="mesh" assembles grams device-local (gram_backend="xla")'
             )
-    wire_state, wire, payload, extras = SCHEMES.get(cfg.scheme).run(
-        shards, bits, cfg.max_bits, "broadcast", 0, cfg.impl
+    run = SCHEMES.get(cfg.scheme).run(
+        shards, bits, cfg.max_bits, "broadcast", 0, cfg.impl,
+        getattr(cfg, "faults", None),
     )
+    # CRC demotion may have compacted rows out of the shard table: every
+    # assembly below reads the (possibly shrunk) post-wire shards
+    wire_state, shards = run.state, run.shards
+    wire, payload = run.wire_bits, run.payload_bits
+    extras = run.extras
 
     sq_exact = jnp.sum(shards.X**2, -1)  # (m, n)
     sq_dec = jnp.sum(wire_state.decoded**2, -1)
@@ -332,7 +360,7 @@ def _fit_broadcast(parts, cfg, params=None) -> FittedProtocol:
     if cfg.impl == "mesh":
         # machine-0-local training inputs, straight from the wire output (the
         # batched A/B tensors below exist only to vmap the m simulated views)
-        X0s = jnp.asarray(parts[0][0], jnp.float32)
+        X0s = jnp.asarray(shards.X[0, :n0], jnp.float32)
         ip_KK0 = X0s @ X0s.T
         X_cols0 = jnp.concatenate(
             [X0s] + [wire_state.decoded[j, : L[j]] for j in range(1, m)], axis=0
@@ -346,9 +374,10 @@ def _fit_broadcast(parts, cfg, params=None) -> FittedProtocol:
         )
     sq0 = sq_exact[0][:n0]
     sq_cols0 = jnp.concatenate([sq0] + [sq_dec[j][: L[j]] for j in range(1, m)])
-    y0 = jnp.concatenate([p[1] for p in parts], axis=0)
+    y0 = jnp.concatenate([shards.y[j, : L[j]] for j in range(m)], axis=0)
     X0 = jnp.concatenate(
-        [parts[0][0]] + [wire_state.decoded[j, : L[j]] for j in range(1, m)], axis=0
+        [shards.X[0, :n0]] + [wire_state.decoded[j, : L[j]] for j in range(1, m)],
+        axis=0,
     )
 
     def gram0(p):
@@ -387,6 +416,8 @@ def _fit_broadcast(parts, cfg, params=None) -> FittedProtocol:
             lengths=shards.lengths, block_order=None, bits_per_sample=bits,
             max_bits=cfg.max_bits, wire_bits=int(wire), impl="mesh",
             scheme=cfg.scheme, config=cfg, payload_bits=int(payload),
+            integrity_bits=int(run.integrity_bits),
+            rows_demoted=int(run.rows_demoted),
         )
 
     if gram_mode == "nystrom":
@@ -457,6 +488,8 @@ def _fit_broadcast(parts, cfg, params=None) -> FittedProtocol:
         scheme=cfg.scheme,
         config=cfg,
         payload_bits=int(payload),
+        integrity_bits=int(run.integrity_bits),
+        rows_demoted=int(run.rows_demoted),
     )
 
 
@@ -495,9 +528,14 @@ def _predict_broadcast_experts(art, X_star, sq_star, g_ss, noise):
     return jax.vmap(apply_i)(jnp.arange(m), art.factors)
 
 
-def _predict_broadcast(art: FittedProtocol, X_star, sq_star, g_ss, noise):
+def _predict_broadcast(art: FittedProtocol, X_star, sq_star, g_ss, noise,
+                       avail=None):
     mus, s2s = _predict_broadcast_experts(art, X_star, sq_star, g_ss, noise)
-    return FUSIONS.get(art.fuse).fuse(mus, s2s, g_ss + noise)
+    spec = FUSIONS.get(art.fuse)
+    if avail is None:  # healthy fast path; legacy 3-arg fusions still plug in
+        return spec.fuse(mus, s2s, g_ss + noise)
+    # degraded serving: the fusion renormalizes over surviving machines
+    return spec.fuse(mus, s2s, g_ss + noise, avail)
 
 
 def _update_broadcast(art: FittedProtocol, X_new, y_new, j):
@@ -534,11 +572,14 @@ def _update_broadcast(art: FittedProtocol, X_new, y_new, j):
     factors = jax.vmap(upd)(
         art.factors, ip_new, art.data["sq_exact"], sq_new, art.data["mask"]
     )
+    from ...comm.accounting import CRC_BITS
+
     return dataclasses.replace(
         art, y=y2, factors=factors,
         lengths=_bump_length(art.lengths, j, n_new),
         wire_bits=art.wire_bits + wire_add,
         payload_bits=art.payload_bits + payload_add,
+        integrity_bits=art.integrity_bits + CRC_BITS * n_new,
     )
 
 

@@ -54,8 +54,8 @@ def _quantize_to_center_host(
     S_c = second_moment(parts[center][0])
     Xs, ys, sqs, wire = [], [], [], 0
     for j, (Xj, yj) in enumerate(parts):
-        if j == center:
-            Xs.append(Xj)
+        if j == center or np.asarray(Xj).shape[0] == 0:
+            Xs.append(Xj)  # empty (dropped) machines transmit nothing
         else:
             S_j = second_moment(Xj)
             sch = PerSymbolScheme(bits_per_sample, max_bits).fit(
@@ -77,30 +77,40 @@ def _quantize_to_center_host(
 
 def _quantize_to_center_batched(
     parts, bits_per_sample: int, center: int, max_bits: int,
-    impl: str = "batched", scheme: str = "per_symbol",
+    impl: str = "batched", scheme: str = "per_symbol", faults=None,
 ):
     """Batched §5.1 wire: run the registered wire scheme for every machine at
     once, then assemble the center's gram-row layout (exact center block
     first).  ``impl="mesh"`` runs the per-symbol wire as one shard_map
     program on a machines-as-devices mesh (comm.q_all_gather is the channel,
-    moving the packed code plane; payload measured from the buffer)."""
+    moving the packed code plane; payload measured from the buffer).
+
+    Assembly reads the scheme run's RETURNED shards (not ``parts``): under a
+    ``faults`` plan with wire corruption the run demotes CRC-flagged rows and
+    compacts the survivors, so the shards are the receiver's honest view —
+    for a clean run they are bitwise what ``pad_parts(parts)`` produced."""
     shards = pad_parts(parts)
     m, _, d = shards.X.shape
-    wire_state, wire, payload, extras = SCHEMES.get(scheme).run(
-        shards, bits_per_sample, max_bits, "center", center, impl
+    run = SCHEMES.get(scheme).run(
+        shards, bits_per_sample, max_bits, "center", center, impl, faults
     )
+    wire_state, shards = run.state, run.shards
     order = [center] + [j for j in range(m) if j != center]
-    blocks = [parts[center][0]] + [
+    blocks = [shards.X[center, : shards.lengths[center]]] + [
         wire_state.decoded[j, : shards.lengths[j]] for j in order[1:]
     ]
     X_recon = jnp.concatenate(blocks, axis=0)
-    y_all = jnp.concatenate([parts[j][1] for j in order], axis=0)
+    y_all = jnp.concatenate(
+        [shards.y[j, : shards.lengths[j]] for j in order], axis=0
+    )
     sq_norms = jnp.concatenate(
-        [jnp.sum(jnp.asarray(parts[j][0]) ** 2, axis=-1) for j in order], axis=0
+        [jnp.sum(shards.X[j, : shards.lengths[j]] ** 2, axis=-1) for j in order],
+        axis=0,
     )
     return (
-        X_recon, y_all, wire, shards.lengths[center], sq_norms, shards,
-        wire_state, order, extras, payload,
+        X_recon, y_all, run.wire_bits, shards.lengths[center], sq_norms,
+        shards, wire_state, order, run.extras, run.payload_bits,
+        run.integrity_bits, run.rows_demoted,
     )
 
 
@@ -174,6 +184,7 @@ class CenterGP:
     block_lengths: tuple | None = None  # their true row counts
     pack_bits: int = 0  # static row bit budget of the packed wire codes
     payload_bits: int = 0  # measured packed payload (accounting formula)
+    integrity_bits: int = 0  # CRC framing ledger (accounting.CRC_BITS/row)
     _ip_cache: dict = dataclasses.field(default_factory=dict, repr=False)
 
     def __post_init__(self):
@@ -252,7 +263,10 @@ class CenterGP:
             return nystrom_complete(G_KK, G_KN, exact_diag=self._exact_diag(params))
         return nystrom_complete(G_KK, G_KN)
 
-    def predict(self, X_star):
+    def predict(self, X_star, available=None):
+        # ``available`` is accepted for surface parity with the fused-family
+        # models but ignored: the center already holds every decoded shard
+        # locally, so serve-time machine loss does not change the predictive
         if self.gram_backend == "pallas":
             return self._predict_pallas(X_star)
         k = gram_fn(self.kernel)
@@ -327,17 +341,25 @@ def fit_center_host(parts, cfg, params: GPParams | None = None) -> CenterGP:
     one dense Cholesky per machine.  Returns the legacy :class:`CenterGP`
     model (protocol semantics identical to the batched artifact; locked by
     tests/test_batched_protocol.py / test_conformance.py)."""
-    from ...comm.accounting import payload_bits_formula
+    from ...comm.accounting import integrity_bits_formula, payload_bits_formula
 
     _check_center(cfg, parts)
+    plan = getattr(cfg, "faults", None)
+    if plan is not None and plan.flip_rate > 0.0:
+        raise NotImplementedError(
+            "wire corruption (flip_rate) needs the packed code plane — the "
+            'host oracle has none; use impl="batched" or "mesh"'
+        )
+    parts, _ = base._apply_fit_faults(parts, cfg)
     X_recon, y_all, wire, n_c, sq_norms = _quantize_to_center_host(
         parts, cfg.bits_per_sample, cfg.center, cfg.max_bits
     )
     d = X_recon.shape[1]
+    lengths = [p[0].shape[0] for p in parts]
     payload = payload_bits_formula(
-        [p[0].shape[0] for p in parts], d, cfg.bits_per_sample, cfg.max_bits,
-        skip=cfg.center,
+        lengths, d, cfg.bits_per_sample, cfg.max_bits, skip=cfg.center,
     )
+    integrity = integrity_bits_formula(lengths, skip=cfg.center)
     if cfg.gram_mode == "nystrom_fitc":  # exact |x|^2 side-channel (32 bits/pt)
         wire += 32 * (X_recon.shape[0] - n_c)
         payload += 32 * (X_recon.shape[0] - n_c)
@@ -352,6 +374,7 @@ def fit_center_host(parts, cfg, params: GPParams | None = None) -> CenterGP:
         sq_norms=sq_norms,
         gram_backend=cfg.gram_backend,
         payload_bits=payload,
+        integrity_bits=integrity,
     )
     trained = train_gp(
         X_recon, y_all, kernel=cfg.kernel, params=model.params, steps=cfg.steps,
@@ -410,11 +433,12 @@ def _fit_center(parts, cfg, params: GPParams | None = None) -> FittedProtocol:
     from ...comm.accounting import row_bits
 
     _check_center(cfg, parts)
+    parts, _ = base._apply_fit_faults(parts, cfg)
     (X_recon, y_all, wire, n_c, sq_norms, shards, wire_state, order, extras,
-     payload) = (
+     payload, integrity, rows_demoted) = (
         _quantize_to_center_batched(
             parts, cfg.bits_per_sample, cfg.center, cfg.max_bits, cfg.impl,
-            cfg.scheme,
+            cfg.scheme, getattr(cfg, "faults", None),
         )
     )
     kernel, gram_mode, gram_backend = cfg.kernel, cfg.gram_mode, cfg.gram_backend
@@ -437,6 +461,7 @@ def _fit_center(parts, cfg, params: GPParams | None = None) -> FittedProtocol:
         block_lengths=shards.lengths,
         pack_bits=row_bits(cfg.bits_per_sample, d, cfg.max_bits),
         payload_bits=payload,
+        integrity_bits=integrity,
     )
     trained = train_gp(
         X_recon, y_all, kernel=kernel, params=builder.params, steps=cfg.steps,
@@ -504,10 +529,15 @@ def _fit_center(parts, cfg, params: GPParams | None = None) -> FittedProtocol:
         scheme=cfg.scheme,
         config=cfg,
         payload_bits=int(payload),
+        integrity_bits=int(integrity),
+        rows_demoted=int(rows_demoted),
     )
 
 
-def _predict_center(art: FittedProtocol, X_star, sq_star, g_ss, noise):
+def _predict_center(art: FittedProtocol, X_star, sq_star, g_ss, noise, avail=None):
+    # the center holds every factor locally, so machine availability cannot
+    # change what it serves: the artifact IS the last-good decoded state
+    # (losses are surfaced through base.serve_health instead)
     p = art.params
     Xc = art.data["Xc"]
     K = art.n_center
@@ -560,9 +590,12 @@ def _update_center(art: FittedProtocol, X_new, y_new, j):
     n_new = X_new.shape[0]
     center = art.block_order[0] if art.block_order else 0
     if j == center:  # the center's own data is local: exact, zero wire cost
-        decoded, wire_add, payload_add = X_new, 0, 0
+        decoded, wire_add, payload_add, integrity_add = X_new, 0, 0, 0
     else:
+        from ...comm.accounting import CRC_BITS
+
         decoded, wire_add, payload_add = _reencode(art, j, X_new)
+        integrity_add = CRC_BITS * n_new  # streamed rows carry CRC framing too
         if art.gram_mode == "nystrom_fitc":
             wire_add += 32 * n_new  # exact |x|^2 side channel
             payload_add += 32 * n_new
@@ -610,6 +643,7 @@ def _update_center(art: FittedProtocol, X_new, y_new, j):
         lengths=_bump_length(art.lengths, j, n_new),
         wire_bits=art.wire_bits + wire_add,
         payload_bits=art.payload_bits + payload_add,
+        integrity_bits=art.integrity_bits + integrity_add,
     )
 
 

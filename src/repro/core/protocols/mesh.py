@@ -86,9 +86,10 @@ def _run_wire_protocol_mesh(X, mask, total_bits: int, max_bits: int, mode: str, 
     inter-machine channel, and what it gathers is the PACKED uint32 code
     plane).  Returns the same :class:`~.base.WireState` layout as the batched
     program (replicated arrays; ``codes`` are the gathered packed words),
-    the Theorem-1 ledger, and the payload bits MEASURED from the buffer the
-    collective moved — integer-equal to the host oracle's §4 accounting /
-    the shared payload formula (tests/test_conformance.py)."""
+    the Theorem-1 ledger, the payload bits MEASURED from the buffer the
+    collective moved, and the CRC integrity bits — all integer-equal to the
+    host oracle's §4 accounting / the shared formulas
+    (tests/test_conformance.py)."""
     m, n_pad, d = X.shape
     st = _mesh_wire_fn(m, total_bits, max_bits, mode, center)(X, mask)
     tables = jax_scheme.scheme_tables(total_bits, max_bits)
@@ -97,7 +98,10 @@ def _run_wire_protocol_mesh(X, mask, total_bits: int, max_bits: int, mode: str, 
         st["codes"], st["decoded"], st["T_inv"], st["rates"], st["sigma"],
         cents, st["T"],
     )
-    return ws, int(st["wire_bits"]), int(st["payload_bits"])
+    return (
+        ws, int(st["wire_bits"]), int(st["payload_bits"]),
+        int(st["integrity_bits"]),
+    )
 
 
 def _shard_machine_axis(tree, mesh: Mesh):
@@ -166,17 +170,24 @@ def _mesh_poe_factor_fn(m: int, kernel: str):
 # --------------------------------------------------------------------------
 
 
-def _predict_mesh_impl(art, X_star):
+def _predict_mesh_impl(art, X_star, avail=None):
     """Mesh serving: ONE shard_map program — each device applies ITS machine's
     cached factors to the query batch (triangular solves only, exactly like
     the batched path) and the predictives meet in a psum/KL fusion epilogue
     (eqs. 62-64 as two psums; the PoE combiners as precision-weighted psums;
     any registered fusion with a ``fuse_psum`` form plugs in).  Factors/data
-    stay sharded along the mesh axis throughout."""
+    stay sharded along the mesh axis throughout.
+
+    ``avail``: optional replicated (m,) float availability mask — degraded
+    serving renormalizes the psum fusion over surviving machines (each device
+    reads its own weight ``w_i = avail[axis_index]``).  ``None`` (the healthy
+    fleet) keeps the unweighted epilogue; each distinct availability pattern
+    costs one retrace, like any other static serve knob."""
     _SERVE_TRACES[art.protocol] += 1  # runs at trace time only
     m = len(art.lengths)
     mesh = machine_mesh(m)
     has_extra = "X_extra" in art.data
+    weighted = avail is not None
     fusion = FUSIONS.get(art.fuse)
     if fusion.fuse_psum is None:
         raise NotImplementedError(
@@ -184,18 +195,21 @@ def _predict_mesh_impl(art, X_star):
             "checkpointed single-host artifact instead"
         )
 
-    def body(fac, Xs_blk, mask_blk, sq_blk, em_blk, Xe, X_star, p):
+    def body(fac, Xs_blk, mask_blk, sq_blk, em_blk, Xe, X_star, av, p):
         fac_i = jax.tree.map(lambda a: a[0], fac)
         Xi, mi, sqi = Xs_blk[0], mask_blk[0], sq_blk[0]
         noise = jnp.exp(p.log_noise)
         sq_star = jnp.sum(X_star**2, -1)
         g_ss = prior_diag(art.kernel, p, sq_star)
+        w_i = av[jax.lax.axis_index(MESH_AXIS)] if weighted else None
         G_sK = kernel_from_inner(
             art.kernel, p, X_star @ Xi.T, sq_star, sqi
         ) * mi[None, :]
         if art.protocol == "broadcast":
             mu_i, s2_i = nystrom_apply(fac_i, G_sK, g_ss, noise)
-            return fusion.fuse_psum(mu_i, s2_i, g_ss + noise, MESH_AXIS)
+            if not weighted:  # legacy 4-arg fuse_psum keeps the healthy path
+                return fusion.fuse_psum(mu_i, s2_i, g_ss + noise, MESH_AXIS)
+            return fusion.fuse_psum(mu_i, s2_i, g_ss + noise, MESH_AXIS, w_i)
         # poe: streamed extras (update()) ride along as appended columns
         G_sn = G_sK
         if has_extra:
@@ -203,21 +217,24 @@ def _predict_mesh_impl(art, X_star):
             G_e = kernel_from_inner(art.kernel, p, X_star @ Xe.T, sq_star, sq_e)
             G_sn = jnp.concatenate([G_sn, G_e * em_blk[0][None, :]], axis=1)
         mu_i, s2_i = posterior_apply(fac_i, G_sn, g_ss)
-        return fusion.fuse_psum(mu_i, s2_i, g_ss + noise, MESH_AXIS)
+        if not weighted:
+            return fusion.fuse_psum(mu_i, s2_i, g_ss + noise, MESH_AXIS)
+        return fusion.fuse_psum(mu_i, s2_i, g_ss + noise, MESH_AXIS, w_i)
 
     fn = shard_map(
         body, mesh=mesh,
         in_specs=(
             P(MESH_AXIS), P(MESH_AXIS), P(MESH_AXIS), P(MESH_AXIS),
-            P(MESH_AXIS), P(), P(), P(),
+            P(MESH_AXIS), P(), P(), P(), P(),
         ),
         out_specs=(P(), P()), check_vma=False,
     )
     em = art.data["extra_mask"] if has_extra else art.data["mask"][:, :0]
     Xe = art.data["X_extra"] if has_extra else X_star[:0]
+    av = None if avail is None else jnp.asarray(avail, jnp.float32)
     return fn(
         art.factors, art.data["Xs"], art.data["mask"], art.data["sq_exact"],
-        em, Xe, X_star, art.params,
+        em, Xe, X_star, av, art.params,
     )
 
 

@@ -44,7 +44,7 @@ class HostPoEGP:
     parts: list
     method: str
 
-    def predict(self, X_star):
+    def predict(self, X_star, available=None):
         p = self.params
         k = gram_fn(self.kernel)
         noise = jnp.exp(p.log_noise)
@@ -60,10 +60,16 @@ class HostPoEGP:
         mus, s2s = zip(*[expert(Xj, yj) for Xj, yj in self.parts])
         mus, s2s = jnp.stack(mus), jnp.stack(s2s)
         prior = jnp.diagonal(k(p, X_star, X_star)) + noise
-        return FUSIONS.get(self.method).fuse(mus, s2s, prior)
+        spec = FUSIONS.get(self.method)
+        if available is None:  # legacy 3-arg fusions keep the healthy path
+            return spec.fuse(mus, s2s, prior)
+        w = (jnp.asarray(available, jnp.float32) > 0).astype(jnp.float32)
+        return spec.fuse(mus, s2s, prior, w)
 
 
 def fit_poe_host(parts, cfg, params=None) -> HostPoEGP:
+    # zero-rate: nothing crosses the wire, so only fit-time data faults apply
+    parts, _ = base._apply_fit_faults(parts, cfg)
     # shared hypers trained on machine 0's local data (standard practice:
     # the PoE family shares one hyperparameter set across experts)
     trained = train_gp(
@@ -124,6 +130,9 @@ def poe_baseline(
 
 
 def _fit_poe(parts, cfg, params=None) -> FittedProtocol:
+    # zero-rate: nothing crosses the wire, so only fit-time data faults apply
+    # (flip_rate has no packed plane to corrupt here and is a no-op)
+    parts, _ = base._apply_fit_faults(parts, cfg)
     # shared hypers trained on machine 0's local data (standard practice: the
     # PoE family shares one hyperparameter set across experts)
     kernel, method, gram_backend = cfg.kernel, cfg.fusion, cfg.gram_backend
@@ -215,9 +224,13 @@ def _predict_poe_experts(art, X_star, sq_star, g_ss):
     return jax.vmap(apply_j)(art.factors, C, sq_exact, mask, em)
 
 
-def _predict_poe(art: FittedProtocol, X_star, sq_star, g_ss, noise):
+def _predict_poe(art: FittedProtocol, X_star, sq_star, g_ss, noise, avail=None):
     mus, s2s = _predict_poe_experts(art, X_star, sq_star, g_ss)
-    return FUSIONS.get(art.fuse).fuse(mus, s2s, g_ss + noise)
+    spec = FUSIONS.get(art.fuse)
+    if avail is None:  # healthy fast path; legacy 3-arg fusions still plug in
+        return spec.fuse(mus, s2s, g_ss + noise)
+    # degraded serving: the combiner renormalizes over surviving experts
+    return spec.fuse(mus, s2s, g_ss + noise, avail)
 
 
 def _update_poe(art: FittedProtocol, X_new, y_new, j):

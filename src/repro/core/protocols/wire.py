@@ -41,7 +41,7 @@ import jax.numpy as jnp
 from .. import jax_scheme
 from ..rate_distortion import distortion_for_rate, make_test_channel, sample_test_channel
 from ..registry import SchemeSpec, register_scheme
-from .base import PaddedShards, WireState, _wire_bits
+from .base import PaddedShards, WireRun, WireState, _wire_bits
 
 __all__ = ["_run_wire_protocol", "PER_SYMBOL", "VQ"]
 
@@ -90,25 +90,92 @@ def _run_wire_protocol(X, mask, total_bits: int, max_bits: int, mode: str, cente
     )
 
 
+def _corrupt_and_demote(ws: WireState, shards: PaddedShards, bits: int,
+                        max_bits: int, skip, plan):
+    """The noisy-channel receiver: flip bits in every transmitted machine's
+    packed words (Bernoulli(``plan.flip_rate``) per bit, keyed per machine),
+    recompute each row's CRC-16, and DEMOTE rows whose checksum mismatches to
+    masked rows — compacting each machine's survivors to the front so the
+    protocol assembly sees a plain shorter shard.  Rows whose corruption
+    collides with the CRC (prob 2^-16) survive with their corrupted decode:
+    the receiver is honest about what it can detect.
+
+    Runs host-side on the packed plane AFTER the wire program: batched and
+    mesh produce identical words (conformance-locked), so the demotion
+    pattern is identical across impls by construction.  Returns
+    ``(ws, shards, rows_demoted)`` with codes/decoded/X/y/mask/lengths all
+    moved consistently; the ledgers are NOT touched (the bits were
+    transmitted regardless of what survived)."""
+    from ...comm.accounting import row_bits
+    from ...faults import flip_words
+
+    m, n_pad, d = shards.X.shape
+    rbits = row_bits(bits, d, max_bits)
+    tables = jax_scheme.scheme_tables(bits, max_bits)
+    words = np.array(ws.codes)  # (m, n_pad, W)
+    decoded = np.array(ws.decoded)
+    X = np.array(shards.X)
+    y = np.array(shards.y)
+    mask = np.array(shards.mask)
+    key = jax.random.PRNGKey(plan.seed)
+    new_lengths, demoted = [], 0
+    for j in range(m):
+        L = int(shards.lengths[j])
+        if j == skip or L == 0 or words.shape[-1] == 0:
+            new_lengths.append(L)
+            continue  # never transmits (or has nothing to) — nothing to flip
+        wj = jnp.asarray(words[j, :L])
+        crc_clean = jax_scheme.crc_words(wj)
+        rx = flip_words(wj, plan.flip_rate, jax.random.fold_in(key, j))
+        ok = np.asarray(jax_scheme.crc_words(rx) == crc_clean)
+        state = {"T": ws.T[j], "T_inv": ws.T_inv[j],
+                 "sigma": ws.sigma[j], "rates": ws.rates[j]}
+        codes_rx = jax_scheme.unpack_codes(rx, ws.rates[j], total_bits=rbits)
+        dec_rx = np.asarray(jax_scheme.decode(state, codes_rx, tables))
+        idx = np.flatnonzero(ok)
+        k = idx.size
+        demoted += L - k
+        rx = np.asarray(rx)
+        for buf, rows in ((words, rx[idx]), (decoded, dec_rx[idx]),
+                          (X, X[j, :L][idx]), (y, y[j, :L][idx])):
+            buf[j] = 0
+            buf[j, :k] = rows
+        mask[j] = 0.0
+        mask[j, :k] = 1.0
+        new_lengths.append(k)
+    shards = PaddedShards(
+        jnp.asarray(X), jnp.asarray(y), jnp.asarray(mask), tuple(new_lengths)
+    )
+    ws = ws._replace(codes=jnp.asarray(words), decoded=jnp.asarray(decoded))
+    return ws, shards, demoted
+
+
 def _per_symbol_run(
     shards: PaddedShards, bits: int, max_bits: int, mode: str, center: int,
-    impl: str,
+    impl: str, faults=None,
 ):
-    from ...comm.accounting import payload_bits_formula
+    from ...comm.accounting import integrity_bits_formula, payload_bits_formula
 
     m, n_pad, d = shards.X.shape
     skip = center if mode == "center" else None
     if impl == "mesh":
         from . import mesh
 
-        ws, wire, payload = mesh._run_wire_protocol_mesh(
+        ws, wire, payload, integrity = mesh._run_wire_protocol_mesh(
             shards.X, shards.mask, bits, max_bits, mode, center
         )
     else:
         ws = _run_wire_protocol(shards.X, shards.mask, bits, max_bits, mode, center)
         wire = _wire_bits(ws.rates, shards.lengths, d, skip=skip)
         payload = payload_bits_formula(shards.lengths, d, bits, max_bits, skip=skip)
-    return ws, int(wire), int(payload), {}
+        integrity = integrity_bits_formula(shards.lengths, skip=skip)
+    rows_demoted = 0
+    if faults is not None and faults.flip_rate > 0.0:
+        ws, shards, rows_demoted = _corrupt_and_demote(
+            ws, shards, bits, max_bits, skip, faults
+        )
+    return WireRun(ws, int(wire), int(payload), int(integrity), {}, shards,
+                   rows_demoted)
 
 
 def _per_symbol_reencode(art, machine: int, X_new):
@@ -149,13 +216,19 @@ PER_SYMBOL = register_scheme(SchemeSpec(
 
 def _vq_run(
     shards: PaddedShards, bits: int, max_bits: int, mode: str, center: int,
-    impl: str,
+    impl: str, faults=None,
 ):
     if impl != "batched":
         raise NotImplementedError(
             'scheme="vq" runs on impl="batched" only (the test channel is '
             "simulated host-side; there are no int codes for the mesh "
             "collectives to carry)"
+        )
+    if faults is not None and faults.flip_rate > 0.0:
+        raise NotImplementedError(
+            'scheme="vq" simulates a continuous test channel — there are no '
+            'packed words to bit-flip; use scheme="per_symbol" for wire '
+            "corruption experiments"
         )
     from ...comm.accounting import side_info_bits
 
@@ -178,6 +251,8 @@ def _vq_run(
     for j in range(m):
         if mode == "center" and j == center:
             continue  # never transmits: its block stays exact, update() is free
+        if L[j] == 0:
+            continue  # an empty (dropped) machine sends nothing
         Qy = S[center] if mode == "center" else S_tot - S[j]
         D = distortion_for_rate(S[j], Qy, float(bits))
         ch = make_test_channel(S[j], Qy, D)
@@ -211,8 +286,9 @@ def _vq_run(
         "vq_rate_bits": jnp.asarray(rate_bits),
     }
     # block coding is simulated, so the ledger at the achieved rate IS the
-    # physical payload (no word quantization to pad against)
-    return ws, int(wire), int(wire), extras
+    # physical payload (no word quantization to pad against) — and with no
+    # packed rows there is no CRC framing to charge (integrity_bits = 0)
+    return WireRun(ws, int(wire), int(wire), 0, extras, shards, 0)
 
 
 def _vq_reencode(art, machine: int, X_new):

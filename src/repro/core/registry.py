@@ -88,11 +88,19 @@ class KernelSpec:
 class FusionSpec:
     """How per-machine predictive Gaussians meet: ``fuse`` on stacked
     ``(m, t)`` predictives (batched/host impls), ``fuse_psum`` as a mesh
-    collective epilogue (``None`` if the fusion has no mesh form)."""
+    collective epilogue (``None`` if the fusion has no mesh form).
+
+    Both MAY accept an optional machine-availability weight vector ``w``
+    (per-device scalar ``w_i`` in the psum form): degraded-mode serving
+    renormalizes the fusion over surviving machines (docs/fault_model.md).
+    The protocols only pass ``w`` when a degraded mask is actually in play,
+    so a fusion registered without the parameter still serves the healthy
+    path — it just cannot be used with ``predict(..., available=...)``.
+    """
 
     name: str
-    fuse: Callable  # (mus, s2s, prior_var) -> (mu, s2)
-    fuse_psum: Callable | None = None  # (mu_i, s2_i, prior_var, axis) -> ...
+    fuse: Callable  # (mus, s2s, prior_var, w=None) -> (mu, s2)
+    fuse_psum: Callable | None = None  # (mu_i, s2_i, prior_var, axis, w_i=None) -> ...
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,16 +108,19 @@ class SchemeSpec:
     """A wire scheme: how machine shards become what the receiver sees.
 
     ``run`` executes the fit-time wire protocol for every machine at once and
-    returns ``(WireState, wire_bits, payload_bits, extras)`` — ``wire_bits``
-    is the Theorem-1 ledger, ``payload_bits`` the packed payload physically
-    moved (``repro.comm.accounting``; equal up to per-word padding), and
-    ``extras`` are scheme-private arrays stashed in the artifact's ``data``
-    dict (e.g. the vq test-channel parameters).  ``reencode`` encodes NEW
-    symbols under the frozen fit-time state for streaming
-    :func:`~repro.core.protocols.base.update`."""
+    returns a :class:`~repro.core.protocols.base.WireRun`: the shared
+    ``WireState``, three ledgers (``wire_bits`` the Theorem-1 formula,
+    ``payload_bits`` the packed payload physically moved, ``integrity_bits``
+    the per-row CRC framing — ``repro.comm.accounting``), an ``extras`` dict
+    of scheme-private arrays stashed in the artifact's ``data`` (e.g. the vq
+    test-channel parameters), the possibly fault-compacted ``shards`` the
+    protocol must assemble from, and the count of CRC-demoted rows.  The
+    optional ``faults`` plan injects wire corruption (docs/fault_model.md).
+    ``reencode`` encodes NEW symbols under the frozen fit-time state for
+    streaming :func:`~repro.core.protocols.base.update`."""
 
     name: str
-    run: Callable  # (shards, bits, max_bits, mode, center, impl) -> (ws, bits, payload, extras)
+    run: Callable  # (shards, bits, max_bits, mode, center, impl, faults=None) -> WireRun
     reencode: Callable  # (art, machine, X_new) -> (decoded, wire_bits_added, payload_bits_added)
 
 
@@ -122,7 +133,7 @@ class ProtocolSpec:
 
     name: str
     fit: Callable  # (parts, cfg, params=None) -> FittedProtocol
-    predict: Callable  # (art, X_star, sq_star, g_ss, noise) -> (mu, s2)
+    predict: Callable  # (art, X_star, sq_star, g_ss, noise, avail=None) -> (mu, s2)
     update: Callable  # (art, X_new, y_new, machine) -> FittedProtocol
     fit_host: Callable | None = None  # (parts, cfg, params=None) -> oracle model
 

@@ -12,14 +12,17 @@ import jax
 import jax.numpy as jnp
 
 from .gp import GPParams, init_params, gram_fn
+from .linalg_safe import DEFAULT_JITTER, chol_jittered
 
 __all__ = ["SGPR", "train_sgpr", "elbo"]
 
-_JITTER = 1e-6
+# pinned in linalg_safe so every module shares ONE constant (and tolerance)
+_JITTER = DEFAULT_JITTER
 
 
 def _chol(K):
-    return jnp.linalg.cholesky(K + _JITTER * jnp.eye(K.shape[0], dtype=K.dtype))
+    # the ELBO (and hence _chol) sits under jax.grad — one-shot jitter only
+    return chol_jittered(K, _JITTER)
 
 
 def elbo(params: GPParams, Z, X, y, kernel: str):

@@ -1,0 +1,152 @@
+"""Seedable, jit-compatible fault plans for the distributed-GP stack.
+
+A :class:`FaultPlan` is a frozen, hashable description of what goes wrong —
+which machines drop out, which shards are NaN-poisoned, the bit-flip rate on
+the packed uint32 wire plane, and which machines straggle.  It rides on
+:class:`~repro.core.config.DGPConfig` (static treedef metadata, hence the
+all-tuple fields) and is consumed at three layers:
+
+* **dataset faults** (:func:`apply_to_parts`) — drop/NaN whole shards before
+  the protocol ever sees them; non-finite rows are filtered (and counted)
+  rather than propagated, which is the generic hostile-input tripwire.
+* **wire faults** (:func:`flip_words` + the CRC demotion path in
+  ``protocols/wire.py`` and ``comm.q_all_gather(faults=...)``) — XOR random
+  bit masks into the packed code words, exactly as a noisy channel would.
+* **serve faults** (``launch/serve_gp.py --chaos``) — stragglers sleep
+  host-side; drops become predict-time availability masks.
+
+Constructors compose with ``|``::
+
+    plan = drop_machine(1) | corrupt_words(0.01, seed=7)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "FaultPlan",
+    "drop_machine",
+    "corrupt_words",
+    "nan_shard",
+    "straggler",
+    "flip_words",
+    "apply_to_parts",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """What goes wrong, declaratively.  All fields are tuples/scalars so the
+    plan is hashable (it becomes static jit metadata via DGPConfig)."""
+
+    drop: tuple = ()          # machine indices that send nothing
+    nan: tuple = ()           # machine indices whose shards are NaN-poisoned
+    nan_frac: float = 0.5     # fraction of rows poisoned in a nan shard
+    flip_rate: float = 0.0    # per-bit flip probability on packed words
+    straggle: tuple = ()      # ((machine, delay_seconds), ...)
+    seed: int = 0             # PRNG seed for the bit-flip channel
+
+    def __or__(self, other: "FaultPlan") -> "FaultPlan":
+        if not isinstance(other, FaultPlan):
+            return NotImplemented
+        return FaultPlan(
+            drop=tuple(sorted(set(self.drop) | set(other.drop))),
+            nan=tuple(sorted(set(self.nan) | set(other.nan))),
+            nan_frac=max(self.nan_frac, other.nan_frac),
+            flip_rate=max(self.flip_rate, other.flip_rate),
+            straggle=tuple(sorted(set(self.straggle) | set(other.straggle))),
+            seed=self.seed if self.flip_rate >= other.flip_rate else other.seed,
+        )
+
+    @property
+    def active(self) -> bool:
+        return bool(self.drop or self.nan or self.flip_rate or self.straggle)
+
+    def asdict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FaultPlan":
+        return cls(
+            drop=tuple(d.get("drop", ())),
+            nan=tuple(d.get("nan", ())),
+            nan_frac=float(d.get("nan_frac", 0.5)),
+            flip_rate=float(d.get("flip_rate", 0.0)),
+            straggle=tuple(tuple(s) for s in d.get("straggle", ())),
+            seed=int(d.get("seed", 0)),
+        )
+
+
+def drop_machine(*js: int) -> FaultPlan:
+    """Machines ``js`` send nothing (empty shards / zeroed masks)."""
+    return FaultPlan(drop=tuple(sorted(int(j) for j in js)))
+
+
+def corrupt_words(rate: float, seed: int = 0) -> FaultPlan:
+    """Flip each bit of every transmitted packed word with prob ``rate``."""
+    return FaultPlan(flip_rate=float(rate), seed=int(seed))
+
+
+def nan_shard(*js: int) -> FaultPlan:
+    """NaN-poison (half of) the rows of machines ``js``."""
+    return FaultPlan(nan=tuple(sorted(int(j) for j in js)))
+
+
+def straggler(j: int, delay: float) -> FaultPlan:
+    """Machine ``j`` answers ``delay`` seconds late (serve-loop only)."""
+    return FaultPlan(straggle=((int(j), float(delay)),))
+
+
+def flip_words(words, rate: float, key):
+    """XOR a Bernoulli(rate) bit mask into uint32 ``words`` — jit-compatible.
+
+    Each of the 32 bits of each word flips independently with probability
+    ``rate``.  Returns the corrupted words (same shape/dtype)."""
+    import jax
+    import jax.numpy as jnp
+
+    words = jnp.asarray(words, jnp.uint32)
+    if rate <= 0.0:
+        return words
+    u = jax.random.uniform(key, words.shape + (32,))
+    bits = (u < rate).astype(jnp.uint32)
+    mask = (bits << jnp.arange(32, dtype=jnp.uint32)).sum(
+        axis=-1, dtype=jnp.uint32
+    )
+    return words ^ mask
+
+
+def apply_to_parts(parts, plan: "FaultPlan | None"):
+    """Apply dataset-level faults to per-machine ``(X_j, y_j)`` shards.
+
+    * dropped machines become empty shards (0 rows, d preserved);
+    * NaN shards have ``nan_frac`` of their rows poisoned — then the generic
+      finite-row filter removes every non-finite row and counts it.
+
+    Returns ``(new_parts, rows_removed)``.  Host-side (numpy): this runs once
+    at fit() entry, before any tracing."""
+    if plan is None or not (plan.drop or plan.nan):
+        return parts, 0
+    drop, nan = set(plan.drop), set(plan.nan)
+    rng = np.random.default_rng(plan.seed)
+    out, removed = [], 0
+    for j, (Xj, yj) in enumerate(parts):
+        Xj = np.asarray(Xj)
+        yj = np.asarray(yj)
+        if j in drop:
+            removed += Xj.shape[0]
+            out.append((Xj[:0], yj[:0]))
+            continue
+        if j in nan and Xj.shape[0]:
+            Xj, yj = Xj.copy(), yj.copy()
+            k = max(1, int(round(plan.nan_frac * Xj.shape[0])))
+            idx = rng.choice(Xj.shape[0], size=k, replace=False)
+            Xj[idx] = np.nan
+        finite = np.isfinite(Xj).all(axis=1) & np.isfinite(yj)
+        if not finite.all():
+            removed += int((~finite).sum())
+            Xj, yj = Xj[finite], yj[finite]
+        out.append((Xj, yj))
+    return out, removed

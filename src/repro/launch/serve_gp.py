@@ -14,11 +14,65 @@ round-trips through the checkpoint (save -> load) so what is timed is exactly
 the production story: a server process that never refits — it loads factors
 and answers.  Warm-path structure is printed at the end (retraces,
 cholesky/eigh equation counts) alongside latency/throughput.
+
+The loop is hardened for unattended runs: fit and checkpoint-load retry with
+exponential backoff, ``--timeout-ms`` tracks per-request latency against a
+budget, ``--chaos`` injects a :class:`repro.faults.FaultPlan` (drops, NaN
+shards, packed-word bit flips, stragglers) and periodically serves under a
+degraded availability mask with a health report, and a mesh reload-parity
+failure exits nonzero instead of serving a diverged artifact.
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
+
+
+def _retry(label: str, fn, attempts: int = 3, backoff: float = 0.5):
+    """Run ``fn()`` with exponential-backoff retries; re-raise after the last
+    attempt (transient load/fit failures should not kill an unattended
+    server, persistent ones should)."""
+    for k in range(attempts):
+        try:
+            return fn()
+        except Exception as e:  # noqa: BLE001 - last attempt re-raises
+            if k == attempts - 1:
+                raise
+            wait = backoff * (2 ** k)
+            print(f"  [{label}] attempt {k + 1}/{attempts} failed "
+                  f"({type(e).__name__}: {e}); retrying in {wait:.1f}s",
+                  file=sys.stderr)
+            time.sleep(wait)
+
+
+def _parse_chaos(spec: str):
+    """``--chaos`` spec -> FaultPlan: comma-joined ``drop:J``, ``nan:J``,
+    ``flip:RATE``, ``straggle:J@SECONDS`` clauses, e.g.
+    ``drop:1,flip:0.01,straggle:3@0.2``."""
+    from repro.faults import FaultPlan, corrupt_words, drop_machine, nan_shard, straggler
+
+    plan = FaultPlan()
+    for clause in spec.split(","):
+        clause = clause.strip()
+        if not clause:
+            continue
+        kind, _, val = clause.partition(":")
+        if kind == "drop":
+            plan = plan | drop_machine(int(val))
+        elif kind == "nan":
+            plan = plan | nan_shard(int(val))
+        elif kind == "flip":
+            plan = plan | corrupt_words(float(val))
+        elif kind == "straggle":
+            j, _, delay = val.partition("@")
+            plan = plan | straggler(int(j), float(delay or 0.1))
+        else:
+            raise ValueError(
+                f"unknown chaos clause {clause!r} (known: drop:J, nan:J, "
+                "flip:RATE, straggle:J@SECONDS)"
+            )
+    return plan
 
 
 def main():
@@ -53,6 +107,16 @@ def main():
                     help="machines-as-devices: force --m host devices (CPU) "
                          "and run the wire protocol, factor builds, and "
                          "serving as shard_map programs (impl='mesh')")
+    ap.add_argument("--chaos", default=None,
+                    help="fault-injection spec, e.g. 'drop:1,flip:0.01,"
+                         "straggle:3@0.2' (see docs/fault_model.md); every "
+                         "7th serve batch also runs under a degraded "
+                         "availability mask with a health report")
+    ap.add_argument("--timeout-ms", type=float, default=0.0,
+                    help="per-request latency budget; over-budget requests "
+                         "are counted and reported (0 = no budget)")
+    ap.add_argument("--retries", type=int, default=3,
+                    help="fit/load attempts before giving up")
     args = ap.parse_args()
 
     if args.mesh:
@@ -69,6 +133,7 @@ def main():
     fusion = args.fusion
     if fusion is None:
         fusion = "rbcm" if args.protocol == "poe" else "kl"
+    chaos = _parse_chaos(args.chaos) if args.chaos else None
     cfg = DGPConfig(
         protocol=args.protocol,
         scheme=args.scheme,
@@ -78,8 +143,11 @@ def main():
         gram_mode="dense" if args.protocol == "poe" else args.gram_mode,
         bits_per_sample=0 if args.protocol == "poe" else args.bits,
         steps=args.steps,
+        faults=chaos,
     )
     est = DistributedGP(cfg)
+    if chaos is not None:
+        print(f"chaos: {chaos}")
 
     rng = np.random.default_rng(0)
     W = rng.normal(size=(args.d, 2))
@@ -88,38 +156,73 @@ def main():
     y = (f(X) + 0.05 * rng.normal(size=args.n)).astype(np.float32)
 
     t0 = time.perf_counter()
-    art = est.fit(X, y, args.m, key=jax.random.PRNGKey(0))
+    art = _retry("fit", lambda: est.fit(X, y, args.m, key=jax.random.PRNGKey(0)),
+                 attempts=args.retries)
     t_fit = time.perf_counter() - t0
     print(f"fit: protocol={cfg.protocol} scheme={cfg.scheme} impl={art.impl} "
           f"m={args.m} n={args.n} d={args.d} "
           f"R={cfg.bits_per_sample} -> {t_fit:.2f}s, "
           f"wire {art.wire_bits/1e3:.1f} kbit "
-          f"(packed payload {art.payload_bits/1e3:.1f} kbit)")
+          f"(packed payload {art.payload_bits/1e3:.1f} kbit, "
+          f"crc {art.integrity_bits/1e3:.1f} kbit, "
+          f"{art.rows_demoted} rows demoted)")
 
     if args.artifact_dir:
         path = est.save(art, args.artifact_dir)
         if args.mesh:
             # the checkpoint round-trips to a single-host artifact; keep
             # serving the sharded mesh copy, but verify the round trip
-            loaded = est.load(args.artifact_dir)
+            loaded = _retry("load", lambda: est.load(args.artifact_dir),
+                            attempts=args.retries)
             Xv = rng.normal(size=(8, args.d)).astype(np.float32)
             dmu = float(np.max(np.abs(np.asarray(est.predict(art, Xv)[0])
                                       - np.asarray(est.predict(loaded, Xv)[0]))))
+            if not np.isfinite(dmu) or dmu > 1e-4:
+                print(f"FATAL: single-host reload of {path} diverges from the "
+                      f"mesh artifact (max |dmu| = {dmu:.3e} > 1e-4) — "
+                      "refusing to serve", file=sys.stderr)
+                sys.exit(1)
             print(f"artifact: saved {path}; single-host reload agrees to "
                   f"{dmu:.1e} (serving the sharded mesh copy); recorded "
                   f"config: {loaded.config.protocol}/{loaded.config.scheme}")
         else:
-            art = est.load(args.artifact_dir)
+            art = _retry("load", lambda: est.load(args.artifact_dir),
+                         attempts=args.retries)
             print(f"artifact: saved+reloaded {path} (serving the loaded copy)")
 
+    # degraded-mode serving under chaos: every 7th batch drops the chaos
+    # plan's machines (or the last machine when the plan names none) and the
+    # fusion renormalizes over survivors
+    degraded_avail = None
+    if chaos is not None and args.protocol in ("broadcast", "poe"):
+        lost = set(chaos.drop) or {args.m - 1}
+        degraded_avail = np.asarray(
+            [0.0 if j in lost else 1.0 for j in range(args.m)], np.float32
+        )
+        h = est.health(art, degraded_avail)
+        print(f"health (degraded mask): status={h.status} "
+              f"lost={list(h.machines_lost)} demoted={h.rows_demoted} "
+              f"var_inflation={h.variance_inflation:.2f}")
+    stragglers = dict(chaos.straggle) if chaos is not None else {}
+
     lat, machine, n_updates = [], 1 % args.m, 0
+    n_over = 0  # requests over the --timeout-ms budget
     c0 = None  # trace-count snapshot taken after the first (tracing) batch
     for q in range(args.queries):
         Xq = rng.normal(size=(args.batch, args.d)).astype(np.float32)
+        if stragglers and (q % args.m) in stragglers:
+            # a straggler holds up its slot of the serve rotation
+            time.sleep(stragglers[q % args.m])
         t0 = time.perf_counter()
-        mu, var = est.predict(art, Xq)
+        if degraded_avail is not None and (q + 1) % 7 == 0:
+            mu, var = est.predict(art, Xq, available=degraded_avail)
+        else:
+            mu, var = est.predict(art, Xq)
         jax.block_until_ready(mu)
-        lat.append(time.perf_counter() - t0)
+        dt = time.perf_counter() - t0
+        lat.append(dt)
+        if args.timeout_ms and dt * 1e3 > args.timeout_ms and q > 0:
+            n_over += 1
         if c0 is None:
             c0 = serve_trace_count(args.protocol)
         if args.stream_every and (q + 1) % args.stream_every == 0:
@@ -141,6 +244,9 @@ def main():
     print(f"serve: {args.queries} batches x {args.batch} pts | warm p50 "
           f"{np.percentile(lat_ms, 50):.2f} ms, p99 {np.percentile(lat_ms, 99):.2f} ms"
           f" | {args.batch/ (np.median(lat_ms)/1e3):.0f} queries/s")
+    if args.timeout_ms:
+        print(f"timeout budget: {n_over}/{args.queries - 1} warm requests over "
+              f"{args.timeout_ms:.0f} ms")
     print(f"warm path: retraces={retraces} (expected {n_updates}, one per "
           f"streamed growth) cholesky_eqns={ops['cholesky']} "
           f"eigh_eqns={ops['eigh']} (0/0 = no refit, no refactorization)")

@@ -213,9 +213,20 @@ def test_payload_equals_ledger_three_impls(protocol):
     host_payload = getattr(host, "payload_bits", 0)
     assert art_b.payload_bits == art_m.payload_bits == host_payload
     assert art_b.wire_bits == art_m.wire_bits
-    if protocol == "poe":  # zero-rate: no wire, no payload
+    # the CRC framing ledger: integer-identical across impls and equal to the
+    # accounting formula (CRC_BITS per transmitted row, n_j == 0 skipped)
+    from repro.comm.accounting import integrity_bits_formula
+
+    host_integrity = getattr(host, "integrity_bits", 0)
+    assert art_b.integrity_bits == art_m.integrity_bits == host_integrity
+    if protocol == "poe":  # zero-rate: no wire, no payload, no framing
         assert art_b.payload_bits == art_b.wire_bits == 0
+        assert art_b.integrity_bits == 0
         return
+    skip = art_b.block_order[0] if protocol == "center" else None
+    assert art_b.integrity_bits == integrity_bits_formula(
+        art_b.lengths, skip=skip
+    )
     assert art_b.payload_bits == art_b.wire_bits + _exact_padding(art_b)
     # the wire state all three consumers share really is the packed plane
     assert art_b.wire.codes.dtype == jnp.uint32
@@ -273,6 +284,7 @@ def test_packed_artifact_bitwise_equals_unpacked_v2(tmp_path):
     )(jnp.asarray(arrays["wire/codes"]), jnp.asarray(arrays["wire/rates"]), mask))
     meta["format_version"] = 2
     del meta["payload_bits"]
+    del meta["array_checksums"]  # v4-only: a real v2 artifact has no table
     np.savez(os.path.join(d2, "ckpt_00000000.npz"), **arrays)
     with open(os.path.join(d2, "meta_00000000.json"), "w") as f:
         json.dump(meta, f)
