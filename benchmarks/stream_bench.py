@@ -1,0 +1,163 @@
+"""Streaming-ingest benchmark (EXPERIMENTS.md §Streaming): sustained
+update() throughput while serving, against the pre-bucketing baseline.
+
+Before the capacity-bucketed buffers, every update() re-dispatched a fresh
+program over grown (exact-size) arrays: ~2.9e6 us per 16-point batch at
+m=40 paper scale, plus a ~415e3 us predict recompile before the first query
+against the grown artifact (BENCH_serve.json, serve/update_stream_m40).
+With device-resident bucketed streaming, consecutive in-bucket updates are
+ONE cached jit program and the warm predict program reads the same buffers.
+
+Rows (written to BENCH_stream.json via benchmarks/run.py --json):
+
+* ``stream/update_in_bucket_m40`` — p50/p90 latency of a 16-point in-bucket
+  update at paper scale.  ``update_retraces`` and
+  ``first_predict_new_traces`` are ASSERTED zero over the measured window
+  (the retrace-free contract, same counters tests/test_streaming.py pins);
+  ``speedup_vs_baseline`` is p50 against the 2.9s pre-bucketing baseline
+  and is asserted >= 20x;
+* ``stream/ingest_while_serving_m40`` — sustained points/sec through an
+  update+predict serving loop (every batch is queried right after it lands).
+
+Run standalone to write BENCH_stream.json:
+  PYTHONPATH=src python -m benchmarks.stream_bench [--full]
+or through the driver: PYTHONPATH=src python -m benchmarks.run --json --only stream
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+from .common import emit
+
+# the pre-bucketing cost of streaming at paper scale, measured by
+# serve_bench on this repo before the bucketed-buffer refactor: one
+# 16-point update re-dispatched over exact-size grown arrays (~2.9s), and
+# the first predict against the grown artifact recompiled (~415 ms)
+BASELINE_UPDATE_US = 2.9e6
+BASELINE_FIRST_PREDICT_US = 415e3
+
+# gates (quick CI scale, generous vs. observed): the acceptance contract
+MAX_P50_UPDATE_US = 145e3  # >= 20x the 2.9s baseline
+MIN_SPEEDUP = 20.0
+
+
+def _problem(n, d, m, seed=0):
+    from repro.core import split_machines
+
+    rng = np.random.default_rng(seed)
+    W = rng.normal(size=(d, 2))
+    f = lambda Z: np.sin(Z @ W[:, 0]) + 0.4 * (Z @ W[:, 1])
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    y = (f(X) + 0.05 * rng.normal(size=n)).astype(np.float32)
+    parts = split_machines(X, y, m, jax.random.PRNGKey(seed))
+    return parts, f
+
+
+def main(quick: bool = True) -> None:
+    from repro.core.protocols import fit, predict, update
+    from repro.core.protocols import serve_trace_count, update_trace_count
+
+    m, n, d, bits = 40, 1200, 8, 24  # paper scale (§6): 40 machines
+    batch, iters = 16, (20 if quick else 50)
+    parts, f = _problem(n, d, m)
+    rng = np.random.default_rng(1)
+    Xq = rng.normal(size=(128, d)).astype(np.float32)
+
+    art = fit(parts, bits, "center", steps=10 if quick else 30)
+    predict(art, Xq)
+    center = art.block_order[0]
+    machines = [j for j in range(m) if j != center]
+
+    def batch_at(i):
+        Xn = rng.normal(size=(batch, d)).astype(np.float32)
+        yn = f(Xn).astype(np.float32)
+        return Xn, yn, machines[i % len(machines)]
+
+    # one growth into the 2048 bucket (next_pow2(1216)), then warm the
+    # in-bucket update program and the bucketed serve program
+    Xn, yn, j = batch_at(0)
+    art = update(art, Xn, yn, machine=j)
+    predict(art, Xq)
+    Xn, yn, j = batch_at(1)
+    art = update(art, Xn, yn, machine=j)
+    predict(art, Xq)
+
+    # ---- measured window: in-bucket updates, each followed by a query ----
+    u0 = update_trace_count("center")
+    c0 = serve_trace_count("center")
+    upd_lat, points = [], 0
+    t_loop = time.perf_counter()
+    for i in range(iters):
+        Xn, yn, j = batch_at(2 + i)
+        t0 = time.perf_counter()
+        art = update(art, Xn, yn, machine=j)
+        jax.block_until_ready(art.factors)
+        upd_lat.append((time.perf_counter() - t0) * 1e6)
+        mu, s2 = predict(art, Xq)
+        jax.block_until_ready((mu, s2))
+        points += batch
+    loop_s = time.perf_counter() - t_loop
+    retraces = update_trace_count("center") - u0
+    first_predict_traces = serve_trace_count("center") - c0
+
+    p50 = float(np.percentile(upd_lat, 50))
+    p90 = float(np.percentile(upd_lat, 90))
+    speedup = BASELINE_UPDATE_US / p50
+    pts_per_sec = points / loop_s
+
+    # the acceptance gates: asserted, not just recorded
+    assert retraces == 0, (
+        f"in-bucket update retraced {retraces}x over {iters} iterations"
+    )
+    assert first_predict_traces == 0, (
+        f"predict recompiled {first_predict_traces}x after in-bucket updates"
+    )
+    assert p50 <= MAX_P50_UPDATE_US, (
+        f"p50 in-bucket update {p50:.0f}us exceeds gate {MAX_P50_UPDATE_US:.0f}us"
+    )
+    assert speedup >= MIN_SPEEDUP, (
+        f"speedup {speedup:.1f}x vs {BASELINE_UPDATE_US:.2g}us baseline "
+        f"below the {MIN_SPEEDUP}x gate"
+    )
+
+    emit(
+        "stream/update_in_bucket_m40",
+        p50,
+        p50_update_us=p50,
+        p90_update_us=p90,
+        update_retraces=retraces,
+        first_predict_new_traces=first_predict_traces,
+        speedup_vs_baseline=speedup,
+        baseline_update_us=BASELINE_UPDATE_US,
+        baseline_first_predict_us=BASELINE_FIRST_PREDICT_US,
+        batch=batch,
+        iters=iters,
+    )
+    emit(
+        "stream/ingest_while_serving_m40",
+        loop_s * 1e6 / iters,
+        ingest_points_per_sec=pts_per_sec,
+        points_total=points,
+        capacity=int(art.y.shape[-1]),
+        lengths_total=sum(art.lengths),
+    )
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    import json
+
+    from . import common
+
+    print("name,us_per_call,derived")
+    main(quick=not args.full)
+    with open("BENCH_stream.json", "w") as fh:
+        json.dump(common.RESULTS, fh, indent=1)
+    print(f"# wrote BENCH_stream.json ({len(common.RESULTS)} rows)", flush=True)

@@ -7,6 +7,13 @@ Artifact checkpoints (:func:`save_artifact` / :func:`load_artifact_arrays`)
 pair the npz with a sidecar json of static metadata, so a registered-dataclass
 pytree like ``core.distributed_gp.FittedProtocol`` can be restored WITHOUT the
 original object as a template (the caller rebuilds from metadata + key paths).
+
+Array leaves are saved exactly as they flatten — including the streaming
+capacity padding of a format-v5 artifact (docs/wire_format.md): the
+``stream/*`` int32 leaves (per-machine counts, the occupied-column counter,
+the three wire ledgers) ride along as ordinary pytree keys, and the padded
+buffers restore at their saved capacity so a reloaded artifact streams on in
+the same bucket, bitwise.
 """
 from __future__ import annotations
 

@@ -27,8 +27,11 @@ TRAIN_IMPLS = ("scan", "loop")
 # 2 = config in meta.json, unpacked int32 wire codes; 3 = PACKED uint32 wire
 # codes + recorded payload_bits (v1/v2 still load — codes pack on restore;
 # see docs/wire_format.md); 4 = per-array CRC32 checksums + the integrity
-# ledger in meta.json (v1-v3 load unverified)
-ARTIFACT_FORMAT_VERSION = 4
+# ledger in meta.json (v1-v3 load unverified); 5 = streaming buffers:
+# capacity-padded factor arrays plus the stream/* leaves (per-machine counts,
+# occupied-column counter, device-resident ledgers) — v1-v4 load at exact
+# capacity and pad up on their first update()
+ARTIFACT_FORMAT_VERSION = 5
 
 
 def _ensure_registered() -> None:

@@ -35,6 +35,7 @@ from .protocols import poe as _poe
 from .protocols.base import (  # noqa: F401
     FittedProtocol,
     PaddedShards,
+    StreamState,
     WireState,
     load_artifact,
     pad_parts,
@@ -42,11 +43,12 @@ from .protocols.base import (  # noqa: F401
     save_artifact,
     serve_trace_count,
     split_machines,
-    _bump_length,
+    update_trace_count,
     _mask_gram,
     _reencode,
     _wire_bits,
     _SERVE_TRACES,
+    _UPDATE_TRACES,
 )
 from .protocols.center import CenterGP, _pallas_ip_rows  # noqa: F401
 from .protocols.broadcast import (  # noqa: F401
@@ -77,6 +79,7 @@ __all__ = [
     "save_artifact",
     "load_artifact",
     "serve_trace_count",
+    "update_trace_count",
     "predict_op_counts",
     "quantize_to_center",
     "single_center_gp",

@@ -27,6 +27,7 @@ __all__ = [
     "chol_update",
     "chol_update_rank",
     "chol_append",
+    "chol_append_at",
 ]
 
 # pinned in linalg_safe so every module shares ONE constant (and tolerance)
@@ -174,3 +175,24 @@ def chol_append(L, C_on, C_nn):
     top = jnp.concatenate([L, jnp.zeros((n, k), L.dtype)], axis=1)
     bot = jnp.concatenate([X.T, Ls], axis=1)
     return jnp.concatenate([top, bot], axis=0)
+
+
+def chol_append_at(L, C_on, C_nn, pos):
+    """Capacity-aware :func:`chol_append`: write the bordered factor rows IN
+    PLACE at (traced) slot ``pos`` of a padded-capacity factor buffer instead
+    of growing the array.
+
+    ``L`` is (C, C) with the live block in ``[:pos, :pos]`` and every padded
+    slot holding the identity pattern (unit diagonal, zeros elsewhere — see
+    ``streaming.grow_to_capacity``); ``C_on`` is (C, k) with zero rows at
+    every slot >= ``pos``.  Under that contract the forward solve is EXACT:
+    padded rows of ``X = L^{-1} C_on`` come out zero (0 right-hand side, zero
+    off-diagonals, unit pivot), so ``S = C_nn - X^T X`` equals the true Schur
+    complement of the live block and the written rows ``[X^T | chol(S)]``
+    reproduce :func:`chol_append` bit-for-bit in the occupied slots.  Shapes
+    never change, so consecutive in-bucket appends reuse one traced program
+    (the retrace-free streaming contract of ``base.update``)."""
+    X = jax.scipy.linalg.solve_triangular(L, C_on, lower=True)  # (C, k)
+    S = C_nn - X.T @ X
+    rows = jax.lax.dynamic_update_slice(X.T, chol_safe(S), (0, pos))  # (k, C)
+    return jax.lax.dynamic_update_slice(L, rows, (pos, 0))

@@ -24,6 +24,7 @@ from . import base, wire, center, broadcast, poe, mesh  # noqa: F401 (registrati
 from .base import (
     FittedProtocol,
     PaddedShards,
+    StreamState,
     WireState,
     fit,
     load_artifact,
@@ -34,6 +35,7 @@ from .base import (
     serve_trace_count,
     split_machines,
     update,
+    update_trace_count,
 )
 from .center import CenterGP, quantize_to_center, single_center_gp
 from .broadcast import HostBroadcastGP, broadcast_gp
@@ -44,6 +46,7 @@ from .wire import _run_wire_protocol  # noqa: F401 (benchmarks/tests import it)
 __all__ = [
     "FittedProtocol",
     "PaddedShards",
+    "StreamState",
     "WireState",
     "fit",
     "predict",
@@ -53,6 +56,7 @@ __all__ = [
     "pad_parts",
     "split_machines",
     "serve_trace_count",
+    "update_trace_count",
     "predict_op_counts",
     "CenterGP",
     "quantize_to_center",

@@ -39,6 +39,7 @@ __all__ = [
     "WireRun",
     "ServeHealth",
     "serve_health",
+    "StreamState",
     "FittedProtocol",
     "fit",
     "predict",
@@ -46,6 +47,7 @@ __all__ = [
     "save_artifact",
     "load_artifact",
     "serve_trace_count",
+    "update_trace_count",
     "predict_op_counts",
 ]
 
@@ -157,12 +159,58 @@ def _mask_gram(G, mask_r, mask_c=None, pin_diag=True):
 
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=["params", "y", "factors", "data", "wire"],
+    data_fields=[
+        "counts", "cols", "wire_bits", "payload_bits", "integrity_bits",
+        "rows_demoted",
+    ],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class StreamState:
+    """The device-resident mutable state of a streaming artifact.
+
+    Everything :func:`update` changes per batch that is NOT a factor/data
+    buffer lives here as int32 ARRAY leaves — per-machine row counts, the
+    occupied-column counter of the capacity-padded buffers, and the three §4
+    ledgers plus the CRC demotion count.  Keeping these as pytree data (not
+    treedef metadata) is what makes consecutive updates and the warm predict
+    share one traced program: bumping a ledger changes a leaf's value, never
+    the treedef, so the jit cache keyed on (treedef, avals) still hits.
+
+    ``counts`` (m,): true rows per machine (fit survivors + streamed rows).
+    ``cols`` (): occupied column slots of the padded buffers — the append
+    position of the next update.  Distinct from ``counts.sum()`` in the
+    expert layouts (broadcast columns start at m*n_pad; PoE at n_pad) and
+    after CRC demotions (demoted fit rows keep their padded slot).
+    ``wire_bits`` / ``payload_bits`` / ``integrity_bits`` (): the Theorem-1
+    ledger, the measured packed payload, and the CRC framing ledger.
+    ``rows_demoted`` (): transmitted rows rejected by the receiver's CRC."""
+
+    counts: jnp.ndarray
+    cols: jnp.ndarray
+    wire_bits: jnp.ndarray
+    payload_bits: jnp.ndarray
+    integrity_bits: jnp.ndarray
+    rows_demoted: jnp.ndarray
+
+    @classmethod
+    def make(cls, counts, cols, wire_bits=0, payload_bits=0,
+             integrity_bits=0, rows_demoted=0) -> "StreamState":
+        i32 = lambda v: jnp.asarray(v, jnp.int32)
+        return cls(
+            counts=i32(counts), cols=i32(cols), wire_bits=i32(wire_bits),
+            payload_bits=i32(payload_bits), integrity_bits=i32(integrity_bits),
+            rows_demoted=i32(rows_demoted),
+        )
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["params", "y", "factors", "data", "wire", "stream"],
     meta_fields=[
         "protocol", "kernel", "gram_mode", "fuse", "gram_backend",
-        "n_center", "lengths", "block_order", "bits_per_sample", "max_bits",
-        "wire_bits", "impl", "scheme", "config", "payload_bits",
-        "integrity_bits", "rows_demoted",
+        "n_center", "fit_lengths", "block_order", "bits_per_sample",
+        "max_bits", "impl", "scheme", "config",
     ],
 )
 @dataclasses.dataclass
@@ -180,34 +228,39 @@ class FittedProtocol:
     Array fields (pytree leaves)
     ----------------------------
     params : trained :class:`~repro.core.gp.GPParams` (log-space hypers).
-    y : targets in the artifact's column layout — center: (N,) flat
-        [center block first]; broadcast: (m·n_pad,) mask-zeroed; poe:
-        (m, n_pad) mask-zeroed.
+    y : targets in the artifact's column layout — center: (C,) flat
+        [center block first]; broadcast: (C,) mask-zeroed; poe: (m, C)
+        mask-zeroed — where C is the CAPACITY of the streaming buffers
+        (``stream.cols`` columns occupied; a fresh fit is exact-size).
     factors : dict of cached solve factors, keyed per gram_mode —
         ``L_KK``/``W``/``L_M``/``alpha`` (Nyström woodbury form, see
         ``nystrom.nystrom_factors``) and/or ``L``/``alpha`` (dense
         ``gp.posterior_factors``).  Broadcast/PoE hold a leading machine
-        axis (one batched factor set, NOT m objects).
+        axis (one batched factor set, NOT m objects).  The column-growable
+        members live at capacity (padded exactly: zero columns / identity
+        Cholesky slots — see :mod:`.streaming`).
     data : dict of query-time arrays — the Nyström bases (``Xc`` for center,
-        ``Xs``+``mask`` for broadcast/poe), reconstructions (``X_recon``),
-        squared norms (``sq_cols``/``sq_exact``/``sq_dec``), scheme extras
-        (the ``vq`` test-channel state ``vq_A``/``vq_W_half``/
-        ``vq_rate_bits``), and — after a PoE :func:`update` — streamed
-        extras (``X_extra``/``extra_mask``/``y_extra``).
+        ``Xs``+``mask`` for broadcast/poe), reconstructions (``X_recon``)
+        with their column-validity mask (``valid``), squared norms
+        (``sq_cols``/``sq_exact``/``sq_dec``), and scheme extras (the ``vq``
+        test-channel state ``vq_A``/``vq_W_half``/``vq_rate_bits``).
     wire : :class:`WireState` — the frozen fit-once scheme state (codebooks,
         transforms, int codes).  :func:`update` re-encodes new symbols with
         it; the pallas backend decodes grams straight from its codes.  None
         for the zero-rate PoE baseline.
+    stream : :class:`StreamState` — the device-resident row counts, occupied
+        column counter, and §4 ledgers :func:`update` extends.  The legacy
+        integer views (``lengths``/``wire_bits``/``payload_bits``/
+        ``integrity_bits``/``rows_demoted``) are read-only properties that
+        synchronize these leaves to host.
 
     Static metadata (treedef)
     -------------------------
     protocol / kernel / gram_mode / fuse / gram_backend / scheme — registry
     names (see :mod:`repro.core.registry`); n_center (center's exact-block
-    size K), lengths (per-machine true row counts), block_order (center's
-    gram-row machine order), bits_per_sample, max_bits, wire_bits — the
-    paper's §4 ledger, extended by every :func:`update` — payload_bits — the
-    measured packed payload (``repro.comm.accounting``; equals the ledger up
-    to per-word padding) — impl (``"batched"``
+    size K), fit_lengths (per-machine FIT-TIME row counts — frozen, the
+    streaming counts live in ``stream``), block_order (center's gram-row
+    machine order), bits_per_sample, max_bits, impl (``"batched"``
     single-host or ``"mesh"`` machines-as-devices: factors live sharded
     along the mesh axis and :func:`predict` runs as one shard_map program
     with a psum/KL fusion epilogue), and config — the full
@@ -221,29 +274,50 @@ class FittedProtocol:
     factors: dict
     data: dict
     wire: WireState | None
+    stream: StreamState
     protocol: str
     kernel: str
     gram_mode: str
     fuse: str
     gram_backend: str
     n_center: int
-    lengths: tuple
+    fit_lengths: tuple
     block_order: tuple | None
     bits_per_sample: int
     max_bits: int
-    wire_bits: int
     impl: str = "batched"
     scheme: str = "per_symbol"
     config: object | None = None  # DGPConfig (opaque here: no import cycle)
-    # the packed payload PHYSICALLY moved (measured, whole uint32 words per
-    # valid row + side info) — exceeds the Theorem-1 ``wire_bits`` ledger only
-    # by per-word padding; 0 on artifacts restored from pre-v3 checkpoints
-    payload_bits: int = 0
-    # the CRC framing ledger (repro.comm.accounting.CRC_BITS per transmitted
-    # row) and how many transmitted rows the receiver's CRC check demoted to
-    # masked rows; 0 on artifacts restored from pre-v4 checkpoints
-    integrity_bits: int = 0
-    rows_demoted: int = 0
+
+    # -- legacy integer views (host sync of the StreamState leaves) ---------
+
+    @property
+    def lengths(self) -> tuple:
+        """Per-machine true row counts (fit survivors + streamed rows)."""
+        return tuple(
+            int(v) for v in np.asarray(jax.device_get(self.stream.counts))
+        )
+
+    @property
+    def wire_bits(self) -> int:
+        """The paper's §4 Theorem-1 ledger, extended by every update."""
+        return int(jax.device_get(self.stream.wire_bits))
+
+    @property
+    def payload_bits(self) -> int:
+        """The packed payload PHYSICALLY moved (whole uint32 words per valid
+        row + side info); exceeds the ledger only by per-word padding."""
+        return int(jax.device_get(self.stream.payload_bits))
+
+    @property
+    def integrity_bits(self) -> int:
+        """The CRC framing ledger (accounting.CRC_BITS per transmitted row)."""
+        return int(jax.device_get(self.stream.integrity_bits))
+
+    @property
+    def rows_demoted(self) -> int:
+        """Transmitted rows the receiver's CRC check demoted to masked rows."""
+        return int(jax.device_get(self.stream.rows_demoted))
 
     # -- conveniences (the paper-facing entry points return artifacts) ------
 
@@ -453,11 +527,14 @@ def _availability(art: FittedProtocol, available):
     for the all-alive fast path (statically identical to the pre-fault
     program).  ``None`` in means "derive from the artifact": machines whose
     shards were emptied by fit-time faults are marked down automatically."""
-    m = len(art.lengths)
+    # fit_lengths is the sync-free source of truth for the zero pattern:
+    # update() refuses machines that transmitted nothing at fit time, so a
+    # machine's row count is zero iff its FIT row count is zero
+    m = len(art.fit_lengths)
     if available is None:
-        if all(n > 0 for n in art.lengths):
+        if all(n > 0 for n in art.fit_lengths):
             return None
-        return jnp.asarray([1.0 if n > 0 else 0.0 for n in art.lengths],
+        return jnp.asarray([1.0 if n > 0 else 0.0 for n in art.fit_lengths],
                            jnp.float32)
     av = np.asarray(available, np.float32).reshape(-1)
     if av.shape[0] != m:
@@ -497,8 +574,21 @@ def predict(art: FittedProtocol, X_star, available=None):
 
 
 # --------------------------------------------------------------------------
-# update: streaming append via rank-k factor updates
+# update: streaming append via rank-k factor updates (device-resident)
 # --------------------------------------------------------------------------
+
+# Incremented INSIDE each protocol's traced update body (the serve-trace
+# idiom): consecutive in-bucket update() calls must leave it flat —
+# tests/test_streaming.py and benchmarks/stream_bench.py assert exactly that.
+_UPDATE_TRACES: collections.Counter = collections.Counter()
+
+
+def update_trace_count(protocol: str = "center") -> int:
+    """How many times the streaming :func:`update` program has been
+    (re)traced for a protocol — consecutive in-bucket updates hold this
+    constant (the retrace-free streaming contract; a bucket crossing costs
+    exactly one retrace)."""
+    return _UPDATE_TRACES[protocol]
 
 
 def update(art: FittedProtocol, X_new, y_new, machine: int = 0) -> FittedProtocol:
@@ -510,23 +600,41 @@ def update(art: FittedProtocol, X_new, y_new, machine: int = 0) -> FittedProtoco
     symbols, charging the frozen per-machine rate to the ledger — no scheme
     refit, no new side info.  The cached factors then grow by rank-k updates
     (``nystrom.chol_update_rank`` for the Nyström woodbury core,
-    ``nystrom.chol_append`` for dense factors) instead of refactorizing the
-    train gram.  Returns a NEW artifact (the input is unchanged); the next
-    :func:`predict` retraces once for the grown shapes, then serves warm
-    again.
+    ``nystrom.chol_append_at`` for dense factors) written IN PLACE into the
+    capacity-padded buffers (:mod:`.streaming`), so the whole append runs as
+    ONE device-resident jitted program whose traced shapes never change
+    within a bucket: consecutive updates hit the jit cache
+    (:func:`update_trace_count` stays flat), and the warm :func:`predict`
+    program reads the same buffers, so the first predict after an in-bucket
+    update does not recompile either.  Per-symbol streams run the full wire
+    plane (encode→pack→CRC→unpack→decode) INSIDE the traced program; the
+    ``machine`` index is traced too, so every machine shares one cache
+    entry.  Returns a NEW artifact (the input is unchanged).
 
     Center protocol: points landing on the center are exact and cost 0 wire
     bits; the rank-K Nyström basis stays fixed either way (appended points
     extend the columns, not the basis).  Broadcast: default "nystrom" mode
     only.  PoE: the new points extend ``machine``'s expert (zero-rate,
-    exact).  Within-tolerance agreement with a from-scratch refit on the
-    concatenated data is locked by tests/test_serving.py."""
+    exact).  A machine that transmitted no rows at fit time (dropped or
+    fully demoted) has no frozen codebooks and is REFUSED.  Under a
+    ``flip_rate`` fault plan the streamed batch is corrupted on the wire
+    like a fit-time batch: CRC-failing rows are demoted (only the new rows
+    are at risk), the full transmission is still charged to the ledgers.
+    Within-tolerance agreement with a from-scratch refit on the concatenated
+    data is locked by tests/test_serving.py and tests/test_streaming.py."""
     X_new = jnp.asarray(X_new, jnp.float32)
     y_new = jnp.asarray(y_new, jnp.float32)
     if X_new.ndim != 2 or y_new.ndim != 1 or y_new.shape[0] != X_new.shape[0]:
         raise ValueError("update expects X_new (n_new, d), y_new (n_new,)")
-    if not 0 <= machine < len(art.lengths):
-        raise ValueError(f"machine {machine} out of range (m={len(art.lengths)})")
+    m = len(art.fit_lengths)
+    if not 0 <= machine < m:
+        raise ValueError(f"machine {machine} out of range (m={m})")
+    if art.fit_lengths[machine] == 0:
+        raise ValueError(
+            f"machine {machine} transmitted no rows at fit time (dropped or "
+            "fully demoted) — it has no frozen codebooks to stream under; "
+            "route the batch to a surviving machine or refit"
+        )
     # tripwire: a NaN/Inf point would poison the rank-k factor growth (and
     # every subsequent predict) — drop hostile rows, loudly, instead
     finite = np.isfinite(np.asarray(X_new)).all(axis=1) & np.isfinite(
@@ -544,13 +652,75 @@ def update(art: FittedProtocol, X_new, y_new, machine: int = 0) -> FittedProtoco
             return art  # nothing usable arrived; the artifact is unchanged
         keep = jnp.asarray(np.flatnonzero(finite))
         X_new, y_new = X_new[keep], y_new[keep]
-    if art.impl == "mesh":
-        # the rank-k growth runs on host arrays (mixing mesh-sharded and
-        # fresh single-device operands in eager ops is ill-defined); the next
-        # mesh predict reshards the grown factors along the machine axis
-        pull = lambda t: jax.tree.map(lambda a: jnp.asarray(jax.device_get(a)), t)
-        art = dataclasses.replace(art, factors=pull(art.factors), data=pull(art.data))
-    return PROTOCOLS.get(art.protocol).update(art, X_new, y_new, machine)
+    if X_new.shape[0] == 0:
+        return art  # a (0, d) batch: nothing to append, nothing to charge
+    pre = _prepare_update(art, X_new, y_new, machine)
+    if isinstance(pre, FittedProtocol):
+        return pre  # every transmitted row was demoted: ledger-only bump
+    X_new, y_new, pre = pre
+    from . import streaming
+
+    art = streaming.ensure_capacity(art, X_new.shape[0])
+    return PROTOCOLS.get(art.protocol).update(art, X_new, y_new, machine, pre)
+
+
+def _prepare_update(art: FittedProtocol, X_new, y_new, machine: int):
+    """Host-side update prep: decide which re-encode path the batch takes.
+
+    Returns ``(X_new, y_new, pre)`` where ``pre`` is either ``None`` — the
+    fully-traced path: the protocol's jitted update program re-encodes
+    in-jit via ``SchemeSpec.reencode_traced`` (per-symbol transmitting
+    machines; one cache entry shared by every machine) — or a 5-tuple
+    ``(decoded, wire_add, payload_add, integrity_add, demoted_add)`` of
+    precomputed arrays (the vq scheme's host-sampled channel, the center's
+    own exact points, and fault-corrupted batches).  When a fault plan
+    demotes EVERY row, returns the ledger-bumped artifact directly."""
+    n_new = X_new.shape[0]
+    spec = SCHEMES.get(art.scheme)
+    center = art.block_order[0] if art.block_order else 0
+    is_center_point = art.protocol == "center" and machine == center
+    transmits = art.wire is not None and art.protocol != "poe" \
+        and not is_center_point
+    plan = getattr(art.config, "faults", None) if art.config is not None \
+        else None
+    fitc_side = 32 * n_new if (
+        art.protocol == "center" and art.gram_mode == "nystrom_fitc"
+    ) else 0  # exact |x|^2 side channel rides along with transmitted rows
+
+    if transmits and plan is not None and \
+            getattr(plan, "flip_rate", 0.0) > 0.0 and \
+            spec.update_corrupt is not None:
+        keep_idx, decoded, w_add, p_add, i_add, demoted = spec.update_corrupt(
+            art, machine, X_new, plan
+        )
+        w_add, p_add = w_add + fitc_side, p_add + fitc_side
+        if keep_idx.size == 0:
+            # the receiver kept nothing, but the bits still moved: charge the
+            # ledgers and the demotion count, leave factors/counts untouched
+            s = art.stream
+            return dataclasses.replace(art, stream=StreamState.make(
+                s.counts, s.cols,
+                s.wire_bits + w_add, s.payload_bits + p_add,
+                s.integrity_bits + i_add, s.rows_demoted + demoted,
+            ))
+        idx = jnp.asarray(keep_idx)
+        pre = (decoded, jnp.int32(w_add), jnp.int32(p_add), jnp.int32(i_add),
+               jnp.int32(demoted))
+        return X_new[idx], y_new[idx], pre
+    if transmits and spec.reencode_traced is None:
+        # host-side scheme (vq samples its simulated channel eagerly); its
+        # test-channel stream carries no CRC framing (integrity delta 0)
+        decoded, w_add, p_add = spec.reencode(art, machine, X_new)
+        pre = (jnp.asarray(decoded, jnp.float32), jnp.int32(w_add + fitc_side),
+               jnp.int32(p_add + fitc_side), jnp.int32(0), jnp.int32(0))
+        return X_new, y_new, pre
+    if is_center_point:
+        # the center's own data is local: exact, zero wire cost
+        pre = (X_new, jnp.int32(0), jnp.int32(0), jnp.int32(0), jnp.int32(0))
+        return X_new, y_new, pre
+    # per-symbol transmitting machines (and the zero-rate PoE experts, which
+    # never re-encode): fully traced — the jitted program does the wire work
+    return X_new, y_new, None
 
 
 def _reencode(art: FittedProtocol, machine: int, X_new):
@@ -560,10 +730,6 @@ def _reencode(art: FittedProtocol, machine: int, X_new):
     -> pack -> unpack -> decode), so the payload charge is whole uint32
     words per point while the ledger charge is the frozen allocated rate."""
     return SCHEMES.get(art.scheme).reencode(art, machine, X_new)
-
-
-def _bump_length(lengths: tuple, j: int, n_new: int) -> tuple:
-    return tuple(n + (n_new if i == j else 0) for i, n in enumerate(lengths))
 
 
 # --------------------------------------------------------------------------
@@ -595,13 +761,15 @@ class ServeHealth:
 def serve_health(art: FittedProtocol, available=None) -> ServeHealth:
     """Report what :func:`predict` degrades to under the given availability
     (``None`` = derived from the artifact, as in :func:`predict`)."""
-    m = len(art.lengths)
+    m = len(art.fit_lengths)
     avail = _availability(art, available)
     if avail is None:
         alive = [True] * m
     else:
         alive = [bool(a) for a in np.asarray(avail) > 0]
-    lost = tuple(j for j in range(m) if not alive[j] or art.lengths[j] == 0)
+    lost = tuple(
+        j for j in range(m) if not alive[j] or art.fit_lengths[j] == 0
+    )
     n_alive = m - len(lost)
     demoted = int(getattr(art, "rows_demoted", 0))
     inflation = 1.0
@@ -637,6 +805,7 @@ def save_artifact(art: FittedProtocol, directory: str, step: int = 0) -> str:
         "gram_mode": art.gram_mode, "fuse": art.fuse,
         "gram_backend": art.gram_backend, "n_center": art.n_center,
         "lengths": list(art.lengths),
+        "fit_lengths": list(art.fit_lengths),  # v5: frozen fit-time counts
         "block_order": list(art.block_order) if art.block_order is not None else None,
         "bits_per_sample": art.bits_per_sample, "max_bits": art.max_bits,
         "wire_bits": art.wire_bits, "has_wire": art.wire is not None,
@@ -680,7 +849,12 @@ def load_artifact(directory: str, step: int | None = None, shardings=None) -> Fi
     (format version 1: no ``config``/``scheme`` in ``meta.json``) load too —
     the scheme defaults to ``per_symbol`` and a
     :class:`~repro.core.config.DGPConfig` is reconstructed from the legacy
-    metadata fields.  ``shardings``:
+    metadata fields.  Format version 5 persists the streaming state
+    (``stream/*`` leaves: per-machine counts, occupied-column counter, the
+    ledgers) and capacity-padded factor buffers; v1-v4 checkpoints load at
+    exact capacity with the state rebuilt from the json integers (their
+    first :func:`update` pads up), and pre-v5 PoE streamed extras are folded
+    into the shared capacity layout.  ``shardings``:
     optional — a single ``Sharding``/device applied to every leaf, or a
     ``{leaf_key: sharding}`` dict (keys as in the npz: ``factors/W``,
     ``data/Xc``, ``wire/codes``, ...) for per-leaf placement; leaves are
@@ -724,19 +898,61 @@ def load_artifact(directory: str, step: int | None = None, shardings=None) -> Fi
     # restored artifacts always serve single-host; the recorded config keeps
     # the fit-time impl as provenance, the reconstruction pins "batched"
     config = dataclasses.replace(config, impl="batched")
+    protocol, y = meta["protocol"], put("y")
+    stream_fields = [f.name for f in dataclasses.fields(StreamState)]
+    if all(f"stream/{f}" in arrays for f in stream_fields):
+        # v5 streaming checkpoints persist the StreamState leaves directly
+        # (checked by presence, not version: re-stamped copies keep working)
+        stream = StreamState(*(put(f"stream/{f}") for f in stream_fields))
+    else:
+        # v1-v4: derive the occupied-column count from the exact-size arrays
+        # (pre-streaming artifacts ARE their own capacity) and lift the json
+        # integer ledgers onto device
+        if protocol == "poe":
+            cols = int(y.shape[-1])
+            if "X_extra" in data:  # legacy streamed extras: folded below
+                cols += int(data["X_extra"].shape[0])
+        else:
+            cols = int(y.shape[0])
+        stream = StreamState.make(
+            meta["lengths"], cols, meta["wire_bits"],
+            meta.get("payload_bits", 0),  # pre-v3: not recorded
+            meta.get("integrity_bits", 0),  # pre-v4: not recorded
+            meta.get("rows_demoted", 0),
+        )
+    if protocol == "center" and "valid" not in data:
+        # pre-v5 center artifacts carried no column-validity mask (every
+        # column was live); the padded predict path multiplies it in
+        data["valid"] = jnp.ones_like(y)
+    if protocol == "poe" and "X_extra" in data:
+        # pre-v5 streamed PoE extras lived in side arrays (X_extra/extra_mask/
+        # y_extra); fold them into the capacity layout every expert now
+        # shares — the dense factors already carry the [n_pad | extras]
+        # column order, so the fold appends in that same order
+        Xe = data.pop("X_extra")
+        em = data.pop("extra_mask")
+        ye = data.pop("y_extra")
+        mcnt = em.shape[0]
+        y = jnp.concatenate([y, ye[None, :] * em], axis=1)
+        data["Xs"] = jnp.concatenate(
+            [data["Xs"], jnp.broadcast_to(Xe[None], (mcnt,) + Xe.shape)], axis=1
+        )
+        data["mask"] = jnp.concatenate([data["mask"], em], axis=1)
+        sq_e = jnp.sum(Xe**2, -1)
+        data["sq_exact"] = jnp.concatenate(
+            [data["sq_exact"], jnp.broadcast_to(sq_e[None], em.shape)], axis=1
+        )
     return FittedProtocol(
-        params=params, y=put("y"), factors=factors, data=data, wire=wire,
-        protocol=meta["protocol"], kernel=meta["kernel"],
+        params=params, y=y, factors=factors, data=data, wire=wire,
+        stream=stream,
+        protocol=protocol, kernel=meta["kernel"],
         gram_mode=meta["gram_mode"], fuse=meta["fuse"],
         gram_backend=meta["gram_backend"], n_center=meta["n_center"],
-        lengths=tuple(meta["lengths"]),
+        fit_lengths=tuple(meta.get("fit_lengths", meta["lengths"])),
         block_order=tuple(meta["block_order"]) if meta["block_order"] is not None else None,
         bits_per_sample=meta["bits_per_sample"], max_bits=meta["max_bits"],
-        wire_bits=meta["wire_bits"], impl="batched",
+        impl="batched",
         scheme=meta.get("scheme", "per_symbol"), config=config,
-        payload_bits=meta.get("payload_bits", 0),  # pre-v3: not recorded
-        integrity_bits=meta.get("integrity_bits", 0),  # pre-v4: not recorded
-        rows_demoted=meta.get("rows_demoted", 0),
     )
 
 

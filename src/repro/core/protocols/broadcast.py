@@ -40,11 +40,11 @@ from . import base, mesh
 from .base import (
     FittedProtocol,
     PaddedShards,
+    StreamState,
     WireState,
     pad_parts,
-    _bump_length,
     _mask_gram,
-    _reencode,
+    _UPDATE_TRACES,
 )
 
 __all__ = ["broadcast_gp", "HostBroadcastGP", "fit_broadcast_host"]
@@ -411,13 +411,15 @@ def _fit_broadcast(parts, cfg, params=None) -> FittedProtocol:
         )
         return FittedProtocol(
             params=p, y=y_flat, factors=factors, data=data, wire=wire_state,
+            stream=StreamState.make(
+                shards.lengths, y_flat.shape[0], int(wire), int(payload),
+                int(run.integrity_bits), int(run.rows_demoted),
+            ),
             protocol="broadcast", kernel=kernel, gram_mode=gram_mode,
             fuse=fuse, gram_backend=gram_backend, n_center=0,
-            lengths=shards.lengths, block_order=None, bits_per_sample=bits,
-            max_bits=cfg.max_bits, wire_bits=int(wire), impl="mesh",
-            scheme=cfg.scheme, config=cfg, payload_bits=int(payload),
-            integrity_bits=int(run.integrity_bits),
-            rows_demoted=int(run.rows_demoted),
+            fit_lengths=shards.lengths, block_order=None,
+            bits_per_sample=bits, max_bits=cfg.max_bits, impl="mesh",
+            scheme=cfg.scheme, config=cfg,
         )
 
     if gram_mode == "nystrom":
@@ -473,23 +475,23 @@ def _fit_broadcast(parts, cfg, params=None) -> FittedProtocol:
         factors=factors,
         data=data,
         wire=wire_state,
+        stream=StreamState.make(
+            shards.lengths, y_flat.shape[0], int(wire), int(payload),
+            int(run.integrity_bits), int(run.rows_demoted),
+        ),
         protocol="broadcast",
         kernel=kernel,
         gram_mode=gram_mode,
         fuse=fuse,
         gram_backend=gram_backend,
         n_center=0,
-        lengths=shards.lengths,
+        fit_lengths=shards.lengths,
         block_order=None,
         bits_per_sample=bits,
         max_bits=cfg.max_bits,
-        wire_bits=int(wire),
         impl=cfg.impl,
         scheme=cfg.scheme,
         config=cfg,
-        payload_bits=int(payload),
-        integrity_bits=int(run.integrity_bits),
-        rows_demoted=int(run.rows_demoted),
     )
 
 
@@ -538,31 +540,38 @@ def _predict_broadcast(art: FittedProtocol, X_star, sq_star, g_ss, noise,
     return spec.fuse(mus, s2s, g_ss + noise, avail)
 
 
-def _update_broadcast(art: FittedProtocol, X_new, y_new, j):
-    if art.gram_mode != "nystrom":
-        raise NotImplementedError(
-            'streaming update of broadcast artifacts supports gram_mode='
-            '"nystrom" only'
-        )
+@jax.jit
+def _update_broadcast_jit(art, X_new, y_new, j, pre):
+    """Device-resident §5.2 streaming append (batched impl): machine ``j``
+    broadcast its codes once — every peer i sees X̂_new, machine j itself
+    keeps the exact points — and the new points extend every view's COLUMNS
+    in place at the occupied-column cursor (the rank-n_pad Nyström bases
+    stay fixed).  ``j`` is traced: one cache entry serves every machine."""
+    _UPDATE_TRACES["broadcast"] += 1  # runs at trace time only
     p = art.params
     noise = jnp.exp(p.log_noise)
-    m = len(art.lengths)
+    m = len(art.fit_lengths)
     n_new = X_new.shape[0]
-    decoded, wire_add, payload_add = _reencode(art, j, X_new)
-    # machine j broadcast its codes once: every peer i sees X̂_new; machine j
-    # itself keeps the exact points.  The new points extend every view's
-    # COLUMNS (the rank-n_pad Nyström bases stay fixed).
+    if pre is None:
+        decoded, w_add, p_add, i_add = SCHEMES.get(art.scheme).reencode_traced(
+            art, j, X_new
+        )
+        d_add = jnp.int32(0)
+    else:  # host-precomputed batch (vq channel or faulted transmission)
+        decoded, w_add, p_add, i_add, d_add = pre
     reps = jnp.broadcast_to(decoded, (m, n_new, decoded.shape[1]))
-    reps = reps.at[j].set(X_new)
+    own = jnp.arange(m)[:, None, None] == j  # traced j: where, not .at[j]
+    reps = jnp.where(own, X_new[None], reps)
     sq_new = jnp.sum(reps**2, -1)  # (m, n_new)
     ip_new = jnp.einsum("ind,ied->ine", art.data["Xs"], reps)  # (m, n_pad, n_new)
-    y2 = jnp.concatenate([art.y, y_new])
+    pos = art.stream.cols
+    y2 = jax.lax.dynamic_update_slice(art.y, y_new, (pos,))
     s2 = noise + _JITTER
 
     def upd(fac, ipn, sqi, sqn, mi):
         G_KN_new = kernel_from_inner(art.kernel, p, ipn, sqi, sqn) * mi[:, None]
         W_new = jax.scipy.linalg.solve_triangular(fac["L_KK"], G_KN_new, lower=True)
-        W2 = jnp.concatenate([fac["W"], W_new], axis=1)
+        W2 = jax.lax.dynamic_update_slice(fac["W"], W_new, (0, pos))
         L_M2 = chol_update_rank(fac["L_M"], W_new)
         return {
             "L_KK": fac["L_KK"], "W": W2, "L_M": L_M2,
@@ -572,15 +581,27 @@ def _update_broadcast(art: FittedProtocol, X_new, y_new, j):
     factors = jax.vmap(upd)(
         art.factors, ip_new, art.data["sq_exact"], sq_new, art.data["mask"]
     )
-    from ...comm.accounting import CRC_BITS
-
-    return dataclasses.replace(
-        art, y=y2, factors=factors,
-        lengths=_bump_length(art.lengths, j, n_new),
-        wire_bits=art.wire_bits + wire_add,
-        payload_bits=art.payload_bits + payload_add,
-        integrity_bits=art.integrity_bits + CRC_BITS * n_new,
+    s = art.stream
+    stream = StreamState(
+        counts=s.counts.at[j].add(n_new), cols=s.cols + n_new,
+        wire_bits=s.wire_bits + w_add, payload_bits=s.payload_bits + p_add,
+        integrity_bits=s.integrity_bits + i_add,
+        rows_demoted=s.rows_demoted + d_add,
     )
+    return dataclasses.replace(art, y=y2, factors=factors, stream=stream)
+
+
+def _update_broadcast(art: FittedProtocol, X_new, y_new, j, pre=None):
+    if art.gram_mode != "nystrom":
+        raise NotImplementedError(
+            'streaming update of broadcast artifacts supports gram_mode='
+            '"nystrom" only'
+        )
+    if art.impl == "mesh":
+        # the sharded factors grow IN PLACE on their devices: re-encode and
+        # rank-k growth run as one shard_map program, no host pull
+        return mesh._update_mesh_jit(art, X_new, y_new, jnp.int32(j), pre)
+    return _update_broadcast_jit(art, X_new, y_new, jnp.int32(j), pre)
 
 
 register_protocol(ProtocolSpec(

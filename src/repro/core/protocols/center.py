@@ -37,12 +37,18 @@ from ..nystrom import (
     nystrom_apply,
     nystrom_kinv,
     chol_update_rank,
-    chol_append,
+    chol_append_at,
     _JITTER,
 )
 from ..registry import SCHEMES, ProtocolSpec, register_protocol
 from . import base
-from .base import FittedProtocol, WireState, pad_parts, _bump_length, _reencode
+from .base import (
+    FittedProtocol,
+    StreamState,
+    WireState,
+    pad_parts,
+    _UPDATE_TRACES,
+)
 
 __all__ = ["quantize_to_center", "CenterGP", "single_center_gp"]
 
@@ -506,7 +512,14 @@ def _fit_center(parts, cfg, params: GPParams | None = None) -> FittedProtocol:
     else:
         raise ValueError(f"unknown gram mode {gram_mode!r}")
 
-    data = {"Xc": Xc, "X_recon": X_recon, "sq_cols": sq_cols, "sq_exact": sq_norms}
+    data = {
+        "Xc": Xc, "X_recon": X_recon, "sq_cols": sq_cols,
+        "sq_exact": sq_norms,
+        # column-validity mask of the streaming buffers: all-live at fit time
+        # (SE kernels do not vanish at padded zero points, so the padded
+        # predict/update programs multiply this in)
+        "valid": jnp.ones_like(y_all),
+    }
     data.update(extras)
     return FittedProtocol(
         params=p,
@@ -514,23 +527,23 @@ def _fit_center(parts, cfg, params: GPParams | None = None) -> FittedProtocol:
         factors=factors,
         data=data,
         wire=wire_state,
+        stream=StreamState.make(
+            shards.lengths, y_all.shape[0], int(wire), int(payload),
+            int(integrity), int(rows_demoted),
+        ),
         protocol="center",
         kernel=kernel,
         gram_mode=gram_mode,
         fuse="",
         gram_backend=gram_backend,
         n_center=K,
-        lengths=shards.lengths,
+        fit_lengths=shards.lengths,
         block_order=tuple(order),
         bits_per_sample=cfg.bits_per_sample,
         max_bits=cfg.max_bits,
-        wire_bits=int(wire),
         impl=cfg.impl,
         scheme=cfg.scheme,
         config=cfg,
-        payload_bits=int(payload),
-        integrity_bits=int(integrity),
-        rows_demoted=int(rows_demoted),
     )
 
 
@@ -564,7 +577,10 @@ def _predict_center(art: FittedProtocol, X_star, sq_star, g_ss, noise, avail=Non
         ip_sN = _artifact_ip_rows(art, X_star).T  # (t, N)
         G_sn = kernel_from_inner(art.kernel, p, ip_sN, sq_star, sq_cols)
     else:
-        G_sn = gram_fn(art.kernel)(p, X_star, art.data["X_recon"])
+        # padded capacity slots hold the zero point, where SE kernels do NOT
+        # vanish — the validity mask zeroes those cross-columns exactly
+        G_sn = gram_fn(art.kernel)(p, X_star, art.data["X_recon"]) \
+            * art.data["valid"][None, :]
     return posterior_apply(art.factors, G_sn, g_ss)
 
 
@@ -573,78 +589,106 @@ def _artifact_ip_rows(art, Y):
     from ...comm.accounting import row_bits
 
     pack_bits = row_bits(art.bits_per_sample, art.data["Xc"].shape[1], art.max_bits)
+    # fit_lengths, not the live counts: this path reads the fit-time wire
+    # codes (pallas direct artifacts refuse streaming updates), and the
+    # static tuple keeps the block layout out of the traced program
     return _pallas_ip_rows(
-        art.wire, art.block_order, art.lengths, art.data["Xc"], Y, pack_bits
+        art.wire, art.block_order, art.fit_lengths, art.data["Xc"], Y, pack_bits
     )
 
 
-def _update_center(art: FittedProtocol, X_new, y_new, j):
+@jax.jit
+def _update_center_jit(art, X_new, y_new, j, pre):
+    """The device-resident streaming append: one traced program per
+    (capacity, n_new, pre-treedef) — the machine index ``j`` is traced, so
+    every machine shares the cache entry, and all state (factors, buffers,
+    ledgers) moves as pytree leaves with fixed shapes."""
+    _UPDATE_TRACES["center"] += 1  # runs at trace time only
+    p = art.params
+    noise = jnp.exp(p.log_noise)
+    n_new = X_new.shape[0]
+    s2 = noise + _JITTER
+    if pre is None:
+        # transmitting machine, jit-safe scheme: the full wire plane
+        # (encode→pack→CRC→unpack→decode) runs inside this program
+        decoded, w_add, p_add, i_add = SCHEMES.get(art.scheme).reencode_traced(
+            art, j, X_new
+        )
+        d_add = jnp.int32(0)
+        if art.gram_mode == "nystrom_fitc":
+            w_add = w_add + 32 * n_new  # exact |x|^2 side channel
+            p_add = p_add + 32 * n_new
+    else:  # host-precomputed batch (center-local, vq channel, or faulted)
+        decoded, w_add, p_add, i_add, d_add = pre
+    pos = art.stream.cols
+    sq_new = jnp.sum(decoded**2, -1)
+    sq_new_exact = jnp.sum(X_new**2, -1)
+    k = gram_fn(art.kernel)
+    Xc = art.data["Xc"]
+    valid = art.data["valid"]
+    y2 = jax.lax.dynamic_update_slice(art.y, y_new, (pos,))
+    f = dict(art.factors)
+
+    if art.gram_mode == "nystrom":
+        # columns append on the woodbury form: W gains L_KK^{-1} G_K,new IN
+        # PLACE at the occupied-column cursor, and L_M = chol(s2 I + W W^T)
+        # takes a rank-n_new update (zero padded W columns contribute nothing)
+        W_new = jax.scipy.linalg.solve_triangular(
+            f["L_KK"], k(p, Xc, decoded), lower=True
+        )
+        f["W"] = jax.lax.dynamic_update_slice(f["W"], W_new, (0, pos))
+        f["L_M"] = chol_update_rank(f["L_M"], W_new)
+        f["alpha"] = nystrom_kinv(f["W"], f["L_M"], s2, y2)
+    elif art.gram_mode == "direct":
+        # the validity mask zeroes cross-covariances against padded slots
+        # (k(x, 0) != 0 for SE), keeping chol_append_at's zero-row contract
+        G_on = k(p, art.data["X_recon"], decoded) * valid[:, None]
+        G_nn = k(p, decoded) + s2 * jnp.eye(n_new, dtype=G_on.dtype)
+        f["L"] = chol_append_at(f["L"], G_on, G_nn, pos)
+        f["alpha"] = jax.scipy.linalg.cho_solve((f["L"], True), y2)
+    else:  # nystrom_fitc: bordered dense factor through the Nyström map
+        W_new = jax.scipy.linalg.solve_triangular(
+            f["L_KK"], k(p, Xc, decoded), lower=True
+        )
+        G_on = f["W"].T @ W_new  # padded W columns are zero: zero rows, exact
+        corr = jnp.maximum(
+            prior_diag(art.kernel, p, sq_new_exact) - jnp.sum(W_new**2, 0), 0.0
+        )
+        G_nn = W_new.T @ W_new + jnp.diag(corr) + s2 * jnp.eye(n_new)
+        f["L"] = chol_append_at(f["L"], G_on, G_nn, pos)
+        f["alpha"] = jax.scipy.linalg.cho_solve((f["L"], True), y2)
+        f["W"] = jax.lax.dynamic_update_slice(f["W"], W_new, (0, pos))
+
+    data = dict(art.data)
+    zero = jnp.int32(0)
+    data["X_recon"] = jax.lax.dynamic_update_slice(
+        data["X_recon"], decoded, (pos, zero)
+    )
+    data["sq_cols"] = jax.lax.dynamic_update_slice(data["sq_cols"], sq_new, (pos,))
+    data["sq_exact"] = jax.lax.dynamic_update_slice(
+        data["sq_exact"], sq_new_exact, (pos,)
+    )
+    data["valid"] = jax.lax.dynamic_update_slice(
+        valid, jnp.ones((n_new,), valid.dtype), (pos,)
+    )
+    s = art.stream
+    stream = StreamState(
+        counts=s.counts.at[j].add(n_new), cols=s.cols + n_new,
+        wire_bits=s.wire_bits + w_add, payload_bits=s.payload_bits + p_add,
+        integrity_bits=s.integrity_bits + i_add,
+        rows_demoted=s.rows_demoted + d_add,
+    )
+    return dataclasses.replace(art, y=y2, factors=f, data=data, stream=stream)
+
+
+def _update_center(art: FittedProtocol, X_new, y_new, j, pre=None):
     if art.gram_backend == "pallas" and art.gram_mode != "nystrom":
         raise NotImplementedError(
             "streaming update of pallas-backed center artifacts supports "
             'gram_mode="nystrom" only (direct/fitc query paths read the '
             "fit-time wire codes, which update does not extend)"
         )
-    p = art.params
-    noise = jnp.exp(p.log_noise)
-    n_new = X_new.shape[0]
-    center = art.block_order[0] if art.block_order else 0
-    if j == center:  # the center's own data is local: exact, zero wire cost
-        decoded, wire_add, payload_add, integrity_add = X_new, 0, 0, 0
-    else:
-        from ...comm.accounting import CRC_BITS
-
-        decoded, wire_add, payload_add = _reencode(art, j, X_new)
-        integrity_add = CRC_BITS * n_new  # streamed rows carry CRC framing too
-        if art.gram_mode == "nystrom_fitc":
-            wire_add += 32 * n_new  # exact |x|^2 side channel
-            payload_add += 32 * n_new
-    sq_new = jnp.sum(decoded**2, -1)
-    sq_new_exact = jnp.sum(X_new**2, -1)
-    k = gram_fn(art.kernel)
-    Xc = art.data["Xc"]
-    y2 = jnp.concatenate([art.y, y_new])
-    f = dict(art.factors)
-    s2 = noise + _JITTER
-
-    if art.gram_mode == "nystrom":
-        # columns append on the woodbury form: W gains L_KK^{-1} G_K,new and
-        # L_M = chol(s2 I + W W^T) takes a rank-n_new update
-        W_new = jax.scipy.linalg.solve_triangular(
-            f["L_KK"], k(p, Xc, decoded), lower=True
-        )
-        f["W"] = jnp.concatenate([f["W"], W_new], axis=1)
-        f["L_M"] = chol_update_rank(f["L_M"], W_new)
-        f["alpha"] = nystrom_kinv(f["W"], f["L_M"], s2, y2)
-    elif art.gram_mode == "direct":
-        G_on = k(p, art.data["X_recon"], decoded)  # (N, n_new)
-        G_nn = k(p, decoded) + s2 * jnp.eye(n_new, dtype=G_on.dtype)
-        f["L"] = chol_append(f["L"], G_on, G_nn)
-        f["alpha"] = jax.scipy.linalg.cho_solve((f["L"], True), y2)
-    else:  # nystrom_fitc: bordered dense factor through the Nyström map
-        W_new = jax.scipy.linalg.solve_triangular(
-            f["L_KK"], k(p, Xc, decoded), lower=True
-        )
-        G_on = f["W"].T @ W_new
-        corr = jnp.maximum(
-            prior_diag(art.kernel, p, sq_new_exact) - jnp.sum(W_new**2, 0), 0.0
-        )
-        G_nn = W_new.T @ W_new + jnp.diag(corr) + s2 * jnp.eye(n_new)
-        f["L"] = chol_append(f["L"], G_on, G_nn)
-        f["alpha"] = jax.scipy.linalg.cho_solve((f["L"], True), y2)
-        f["W"] = jnp.concatenate([f["W"], W_new], axis=1)
-
-    data = dict(art.data)
-    data["X_recon"] = jnp.concatenate([data["X_recon"], decoded], axis=0)
-    data["sq_cols"] = jnp.concatenate([data["sq_cols"], sq_new])
-    data["sq_exact"] = jnp.concatenate([data["sq_exact"], sq_new_exact])
-    return dataclasses.replace(
-        art, y=y2, factors=f, data=data,
-        lengths=_bump_length(art.lengths, j, n_new),
-        wire_bits=art.wire_bits + wire_add,
-        payload_bits=art.payload_bits + payload_add,
-        integrity_bits=art.integrity_bits + integrity_add,
-    )
+    return _update_center_jit(art, X_new, y_new, jnp.int32(j), pre)
 
 
 register_protocol(ProtocolSpec(

@@ -11,6 +11,7 @@ is locked to the host/batched impls by tests/test_conformance.py.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import numpy as np
@@ -29,10 +30,17 @@ from ..gp import (
     posterior_apply,
     posterior_from_gram,
 )
-from ..nystrom import nystrom_factors, nystrom_apply
+from ..nystrom import (
+    nystrom_factors,
+    nystrom_apply,
+    nystrom_kinv,
+    chol_update_rank,
+    chol_append_at,
+    _JITTER,
+)
 from ..fusion import kl_fuse_diag
-from ..registry import FUSIONS
-from .base import WireState, _mask_gram, _SERVE_TRACES
+from ..registry import FUSIONS, SCHEMES
+from .base import StreamState, WireState, _mask_gram, _SERVE_TRACES, _UPDATE_TRACES
 
 __all__ = [
     "MESH_AXIS",
@@ -184,9 +192,8 @@ def _predict_mesh_impl(art, X_star, avail=None):
     fleet) keeps the unweighted epilogue; each distinct availability pattern
     costs one retrace, like any other static serve knob."""
     _SERVE_TRACES[art.protocol] += 1  # runs at trace time only
-    m = len(art.lengths)
+    m = len(art.fit_lengths)
     mesh = machine_mesh(m)
-    has_extra = "X_extra" in art.data
     weighted = avail is not None
     fusion = FUSIONS.get(art.fuse)
     if fusion.fuse_psum is None:
@@ -195,29 +202,23 @@ def _predict_mesh_impl(art, X_star, avail=None):
             "checkpointed single-host artifact instead"
         )
 
-    def body(fac, Xs_blk, mask_blk, sq_blk, em_blk, Xe, X_star, av, p):
+    def body(fac, Xs_blk, mask_blk, sq_blk, X_star, av, p):
         fac_i = jax.tree.map(lambda a: a[0], fac)
         Xi, mi, sqi = Xs_blk[0], mask_blk[0], sq_blk[0]
         noise = jnp.exp(p.log_noise)
         sq_star = jnp.sum(X_star**2, -1)
         g_ss = prior_diag(art.kernel, p, sq_star)
         w_i = av[jax.lax.axis_index(MESH_AXIS)] if weighted else None
+        # streamed points live in the capacity-padded buffers (mask-zeroed
+        # where invalid), so one uniform apply serves updated artifacts too
         G_sK = kernel_from_inner(
             art.kernel, p, X_star @ Xi.T, sq_star, sqi
         ) * mi[None, :]
         if art.protocol == "broadcast":
             mu_i, s2_i = nystrom_apply(fac_i, G_sK, g_ss, noise)
-            if not weighted:  # legacy 4-arg fuse_psum keeps the healthy path
-                return fusion.fuse_psum(mu_i, s2_i, g_ss + noise, MESH_AXIS)
-            return fusion.fuse_psum(mu_i, s2_i, g_ss + noise, MESH_AXIS, w_i)
-        # poe: streamed extras (update()) ride along as appended columns
-        G_sn = G_sK
-        if has_extra:
-            sq_e = jnp.sum(Xe**2, -1)
-            G_e = kernel_from_inner(art.kernel, p, X_star @ Xe.T, sq_star, sq_e)
-            G_sn = jnp.concatenate([G_sn, G_e * em_blk[0][None, :]], axis=1)
-        mu_i, s2_i = posterior_apply(fac_i, G_sn, g_ss)
-        if not weighted:
+        else:  # poe
+            mu_i, s2_i = posterior_apply(fac_i, G_sK, g_ss)
+        if not weighted:  # legacy 4-arg fuse_psum keeps the healthy path
             return fusion.fuse_psum(mu_i, s2_i, g_ss + noise, MESH_AXIS)
         return fusion.fuse_psum(mu_i, s2_i, g_ss + noise, MESH_AXIS, w_i)
 
@@ -225,20 +226,145 @@ def _predict_mesh_impl(art, X_star, avail=None):
         body, mesh=mesh,
         in_specs=(
             P(MESH_AXIS), P(MESH_AXIS), P(MESH_AXIS), P(MESH_AXIS),
-            P(MESH_AXIS), P(), P(), P(), P(),
+            P(), P(), P(),
         ),
         out_specs=(P(), P()), check_vma=False,
     )
-    em = art.data["extra_mask"] if has_extra else art.data["mask"][:, :0]
-    Xe = art.data["X_extra"] if has_extra else X_star[:0]
     av = None if avail is None else jnp.asarray(avail, jnp.float32)
     return fn(
         art.factors, art.data["Xs"], art.data["mask"], art.data["sq_exact"],
-        em, Xe, X_star, av, art.params,
+        X_star, av, art.params,
     )
 
 
 _predict_mesh_jit = jax.jit(_predict_mesh_impl)
+
+
+# --------------------------------------------------------------------------
+# mesh streaming: the update is a shard_map program too (no host pull)
+# --------------------------------------------------------------------------
+
+
+def _update_mesh_impl(art, X_new, y_new, j, pre):
+    """Mesh streaming append: ONE jitted program in which the new batch is
+    re-encoded through the frozen codebooks (encode→pack→CRC→unpack→decode,
+    all on device via the scheme's traced reencode) and the SHARDED factors
+    grow in place on their own devices under shard_map — the ledgers extend
+    as device-resident int32 leaves and nothing is pulled to host.  The
+    machine index ``j`` and append cursor are traced, so consecutive
+    in-bucket updates hit one cache entry regardless of target machine."""
+    _UPDATE_TRACES[art.protocol] += 1  # runs at trace time only
+    m = len(art.fit_lengths)
+    mesh = machine_mesh(m)
+    kernel = art.kernel
+    n_new = X_new.shape[0]
+    pos = art.stream.cols
+    zero = jnp.int32(0)
+
+    if art.protocol == "broadcast":
+        if pre is None:
+            # the full wire plane runs inside this traced program; the
+            # decoded batch is replicated to every device like fit time
+            decoded, w_add, p_add, i_add = SCHEMES.get(
+                art.scheme
+            ).reencode_traced(art, j, X_new)
+            d_add = jnp.int32(0)
+        else:  # host-precomputed batch (faulted transmission)
+            decoded, w_add, p_add, i_add, d_add = pre
+        y2 = jax.lax.dynamic_update_slice(art.y, y_new, (pos,))
+
+        def body(fac, Xs_blk, mask_blk, sq_blk, Xn, dec, y2r, pr, jj, ps):
+            i = jax.lax.axis_index(MESH_AXIS)
+            fac_i = jax.tree.map(lambda a: a[0], fac)
+            Xi, mi, sqi = Xs_blk[0], mask_blk[0], sq_blk[0]
+            s2 = jnp.exp(pr.log_noise) + _JITTER
+            X_eff = jnp.where(i == jj, Xn, dec)  # own batch exact, peers X̂
+            sqn = jnp.sum(X_eff**2, -1)
+            G_KN_new = kernel_from_inner(
+                kernel, pr, Xi @ X_eff.T, sqi, sqn
+            ) * mi[:, None]
+            W_new = jax.scipy.linalg.solve_triangular(
+                fac_i["L_KK"], G_KN_new, lower=True
+            )
+            W2 = jax.lax.dynamic_update_slice(fac_i["W"], W_new, (0, ps))
+            L_M2 = chol_update_rank(fac_i["L_M"], W_new)
+            fac2 = {
+                "L_KK": fac_i["L_KK"], "W": W2, "L_M": L_M2,
+                "alpha": nystrom_kinv(W2, L_M2, s2, y2r),
+            }
+            return jax.tree.map(lambda a: a[None], fac2)
+
+        factors = shard_map(
+            body, mesh=mesh,
+            in_specs=(
+                P(MESH_AXIS), P(MESH_AXIS), P(MESH_AXIS), P(MESH_AXIS),
+                P(), P(), P(), P(), P(), P(),
+            ),
+            out_specs=P(MESH_AXIS), check_vma=False,
+        )(
+            art.factors, art.data["Xs"], art.data["mask"],
+            art.data["sq_exact"], X_new, decoded, y2, art.params, j, pos,
+        )
+        data = art.data
+    else:  # poe: zero-rate, the batch is machine j's own exact data
+        w_add = p_add = i_add = d_add = jnp.int32(0)
+        valid = jnp.broadcast_to(
+            (jnp.arange(m)[:, None] == j).astype(jnp.float32), (m, n_new)
+        )
+        y2 = jax.lax.dynamic_update_slice(
+            art.y, valid * y_new[None, :], (zero, pos)
+        )
+
+        def body(fac, Xs_blk, mask_blk, sq_blk, Xn, y2r, pr, jj, ps):
+            i = jax.lax.axis_index(MESH_AXIS)
+            fac_i = jax.tree.map(lambda a: a[0], fac)
+            Xi, mi, sqi = Xs_blk[0], mask_blk[0], sq_blk[0]
+            s2 = jnp.exp(pr.log_noise) + _JITTER
+            nn = Xn.shape[0]
+            vi = jnp.where(i == jj, 1.0, 0.0) * jnp.ones((nn,), jnp.float32)
+            Xi2 = jax.lax.dynamic_update_slice(Xi, Xn, (ps, 0))
+            mi2 = jax.lax.dynamic_update_slice(mi, vi, (ps,))
+            sqi2 = jax.lax.dynamic_update_slice(sqi, jnp.sum(Xn**2, -1), (ps,))
+            kf = gram_fn(kernel)
+            # OLD mask in the cross block: zero rows at/after the cursor keep
+            # chol_append_at's contract; non-owners (vi=0) append decoupled
+            # unit rows, masked out of their predict columns by mi2
+            G_on = kf(pr, Xi2, Xn) * (mi[:, None] * vi[None, :])
+            G_nn = _mask_gram(kf(pr, Xn), vi) + s2 * jnp.eye(nn)
+            L2 = chol_append_at(fac_i["L"], G_on, G_nn, ps)
+            fac2 = {
+                "L": L2,
+                "alpha": jax.scipy.linalg.cho_solve((L2, True), y2r[i]),
+            }
+            lift = lambda a: a[None]
+            return jax.tree.map(lift, fac2), Xi2[None], mi2[None], sqi2[None]
+
+        factors, Xs2, mask2, sq2 = shard_map(
+            body, mesh=mesh,
+            in_specs=(
+                P(MESH_AXIS), P(MESH_AXIS), P(MESH_AXIS), P(MESH_AXIS),
+                P(), P(), P(), P(), P(),
+            ),
+            out_specs=(P(MESH_AXIS),) * 4, check_vma=False,
+        )(
+            art.factors, art.data["Xs"], art.data["mask"],
+            art.data["sq_exact"], X_new, y2, art.params, j, pos,
+        )
+        data = dict(art.data)
+        data["Xs"], data["mask"], data["sq_exact"] = Xs2, mask2, sq2
+
+    s = art.stream
+    stream = StreamState(
+        counts=s.counts.at[j].add(n_new), cols=s.cols + n_new,
+        wire_bits=s.wire_bits + w_add, payload_bits=s.payload_bits + p_add,
+        integrity_bits=s.integrity_bits + i_add,
+        rows_demoted=s.rows_demoted + d_add,
+    )
+    return dataclasses.replace(art, y=y2, factors=factors, data=data,
+                               stream=stream)
+
+
+_update_mesh_jit = jax.jit(_update_mesh_impl)
 
 
 # --------------------------------------------------------------------------

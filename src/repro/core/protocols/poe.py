@@ -21,10 +21,16 @@ from ..gp import (
     posterior_from_gram,
     train_gp,
 )
-from ..nystrom import chol_append, _JITTER
+from ..nystrom import chol_append_at, _JITTER
 from ..registry import FUSIONS, ProtocolSpec, register_protocol
 from . import base, mesh
-from .base import FittedProtocol, pad_parts, _bump_length, _mask_gram
+from .base import (
+    FittedProtocol,
+    StreamState,
+    pad_parts,
+    _mask_gram,
+    _UPDATE_TRACES,
+)
 
 __all__ = ["poe_baseline", "HostPoEGP", "fit_poe_host"]
 
@@ -159,10 +165,12 @@ def _fit_poe(parts, cfg, params=None) -> FittedProtocol:
         )
         return FittedProtocol(
             params=p, y=shards.y * shards.mask, factors=factors, data=data,
-            wire=None, protocol="poe", kernel=kernel, gram_mode="dense",
+            wire=None,
+            stream=StreamState.make(shards.lengths, shards.y.shape[-1]),
+            protocol="poe", kernel=kernel, gram_mode="dense",
             fuse=method, gram_backend=gram_backend, n_center=0,
-            lengths=shards.lengths, block_order=None, bits_per_sample=0,
-            max_bits=0, wire_bits=0, impl="mesh", scheme=cfg.scheme,
+            fit_lengths=shards.lengths, block_order=None, bits_per_sample=0,
+            max_bits=0, impl="mesh", scheme=cfg.scheme,
             config=cfg,
         )
     if gram_backend == "pallas":
@@ -183,17 +191,17 @@ def _fit_poe(parts, cfg, params=None) -> FittedProtocol:
         factors=factors,
         data={"Xs": shards.X, "mask": shards.mask, "sq_exact": sq_exact},
         wire=None,
+        stream=StreamState.make(shards.lengths, shards.y.shape[-1]),
         protocol="poe",
         kernel=kernel,
         gram_mode="dense",
         fuse=method,
         gram_backend=gram_backend,
         n_center=0,
-        lengths=shards.lengths,
+        fit_lengths=shards.lengths,
         block_order=None,
         bits_per_sample=0,
         max_bits=0,
-        wire_bits=0,
         impl=cfg.impl,
         scheme=cfg.scheme,
         config=cfg,
@@ -206,22 +214,16 @@ def _predict_poe_experts(art, X_star, sq_star, g_ss):
     p = art.params
     Xs, mask = art.data["Xs"], art.data["mask"]
     sq_exact = art.data["sq_exact"]
+    # streamed points live IN the capacity-padded expert buffers (the mask
+    # zeroes non-own and padded columns), so one uniform apply serves both
+    # fresh fits and updated artifacts with no shape-changing branches
     C = _star_exact_products(Xs, X_star, art.gram_backend)
-    has_extra = "X_extra" in art.data
-    if has_extra:
-        Xe = art.data["X_extra"]
-        C_e = X_star @ Xe.T  # (t, e); streamed extras ride the xla path
-        sq_e = jnp.sum(Xe**2, -1)
-        G_e = kernel_from_inner(art.kernel, p, C_e, sq_star, sq_e)
 
-    def apply_j(fac, Cj, sqj, mj, emj):
+    def apply_j(fac, Cj, sqj, mj):
         G_sn = kernel_from_inner(art.kernel, p, Cj, sq_star, sqj) * mj[None, :]
-        if has_extra:
-            G_sn = jnp.concatenate([G_sn, G_e * emj[None, :]], axis=1)
         return posterior_apply(fac, G_sn, g_ss)
 
-    em = art.data["extra_mask"] if has_extra else mask[:, :0]
-    return jax.vmap(apply_j)(art.factors, C, sq_exact, mask, em)
+    return jax.vmap(apply_j)(art.factors, C, sq_exact, mask)
 
 
 def _predict_poe(art: FittedProtocol, X_star, sq_star, g_ss, noise, avail=None):
@@ -233,51 +235,65 @@ def _predict_poe(art: FittedProtocol, X_star, sq_star, g_ss, noise, avail=None):
     return spec.fuse(mus, s2s, g_ss + noise, avail)
 
 
-def _update_poe(art: FittedProtocol, X_new, y_new, j):
+@jax.jit
+def _update_poe_jit(art, X_new, y_new, j, pre):
+    """Device-resident zero-rate streaming append (batched impl): the points
+    are machine ``j``'s own exact data, written into EVERY expert's
+    capacity-padded buffer at the shared occupied-column cursor but valid
+    (mask 1) only on expert j — non-owners get decoupled unit rows in their
+    bordered factor, exactly like fit-time padding.  ``j`` is traced."""
+    _UPDATE_TRACES["poe"] += 1  # runs at trace time only
+    del pre  # zero-rate: nothing crosses the wire, nothing to precompute
     p = art.params
     noise = jnp.exp(p.log_noise)
-    m = len(art.lengths)
+    m = len(art.fit_lengths)
     n_new = X_new.shape[0]
     k = gram_fn(art.kernel)
     s2 = noise + _JITTER
     Xs, mask = art.data["Xs"], art.data["mask"]
-    # zero-rate: the points are machine j's own exact data; other experts
-    # never see them (valid only on row j), matching the fit-time masking
-    valid = jnp.zeros((m, n_new), jnp.float32).at[j].set(1.0)
-    Xe_old = art.data.get("X_extra")
-    em_old = art.data.get("extra_mask")
-    ye_old = art.data.get("y_extra")
+    pos = art.stream.cols
+    zero = jnp.int32(0)
+    valid = (jnp.arange(m)[:, None] == j).astype(jnp.float32)  # (m, 1)
+    valid = jnp.broadcast_to(valid, (m, n_new))
+    sq_new = jnp.sum(X_new**2, -1)
+    y2 = jax.lax.dynamic_update_slice(
+        art.y, valid * y_new[None, :], (zero, pos)
+    )
+    Xs2 = jax.lax.dynamic_update_slice(
+        Xs, jnp.broadcast_to(X_new[None], (m,) + X_new.shape), (zero, pos, zero)
+    )
+    mask2 = jax.lax.dynamic_update_slice(mask, valid, (zero, pos))
+    sq2 = jax.lax.dynamic_update_slice(
+        art.data["sq_exact"], jnp.broadcast_to(sq_new[None], (m, n_new)),
+        (zero, pos),
+    )
 
-    def upd(fac, Xi, sqi, mi, vi, emi, yi, yei):
-        G_on = k(p, Xi, X_new) * (mi[:, None] * vi[None, :])
-        if Xe_old is not None:
-            G_on_e = k(p, Xe_old, X_new) * (emi[:, None] * vi[None, :])
-            G_on = jnp.concatenate([G_on, G_on_e], axis=0)
+    def upd(fac, Xi2, mi, vi, yi2):
+        # OLD mask: zero at the cursor and beyond, so the cross block G_on
+        # keeps chol_append_at's zero-rows-at-padded-slots contract
+        G_on = k(p, Xi2, X_new) * (mi[:, None] * vi[None, :])
         G_nn = _mask_gram(k(p, X_new), vi) + s2 * jnp.eye(n_new)
-        L2 = chol_append(fac["L"], G_on, G_nn)
-        y_cols = jnp.concatenate(
-            [yi] + ([yei * emi] if Xe_old is not None else []) + [y_new * vi]
-        )
-        return {"L": L2, "alpha": jax.scipy.linalg.cho_solve((L2, True), y_cols)}
+        L2 = chol_append_at(fac["L"], G_on, G_nn, pos)
+        return {"L": L2, "alpha": jax.scipy.linalg.cho_solve((L2, True), yi2)}
 
-    em_arg = em_old if em_old is not None else mask[:, :0]
-    factors = jax.vmap(
-        lambda fac, Xi, sqi, mi, vi, emi, yi: upd(fac, Xi, sqi, mi, vi, emi, yi, ye_old)
-    )(art.factors, Xs, art.data["sq_exact"], mask, valid, em_arg, art.y)
+    factors = jax.vmap(upd)(art.factors, Xs2, mask, valid, y2)
     data = dict(art.data)
-    data["X_extra"] = (
-        jnp.concatenate([Xe_old, X_new]) if Xe_old is not None else X_new
+    data["Xs"], data["mask"], data["sq_exact"] = Xs2, mask2, sq2
+    s = art.stream
+    stream = StreamState(
+        counts=s.counts.at[j].add(n_new), cols=s.cols + n_new,
+        wire_bits=s.wire_bits, payload_bits=s.payload_bits,
+        integrity_bits=s.integrity_bits, rows_demoted=s.rows_demoted,
     )
-    data["extra_mask"] = (
-        jnp.concatenate([em_old, valid], axis=1) if em_old is not None else valid
-    )
-    data["y_extra"] = (
-        jnp.concatenate([ye_old, y_new]) if ye_old is not None else y_new
-    )
-    return dataclasses.replace(
-        art, factors=factors, data=data,
-        lengths=_bump_length(art.lengths, j, n_new),
-    )
+    return dataclasses.replace(art, y=y2, factors=factors, data=data,
+                               stream=stream)
+
+
+def _update_poe(art: FittedProtocol, X_new, y_new, j, pre=None):
+    if art.impl == "mesh":
+        # sharded expert buffers grow in place on their devices (shard_map)
+        return mesh._update_mesh_jit(art, X_new, y_new, jnp.int32(j), pre)
+    return _update_poe_jit(art, X_new, y_new, jnp.int32(j), pre)
 
 
 register_protocol(ProtocolSpec(

@@ -1,0 +1,152 @@
+"""Capacity-padded ("bucketed") factor buffers for retrace-free streaming.
+
+The streaming contract of :func:`~.base.update` is that consecutive in-bucket
+appends are ONE device-resident jitted program: traced shapes never change, so
+the jit cache hits and the warm :func:`~.base.predict` program (which reads
+the same buffers) does not recompile either.  That requires every
+column-growable array of a :class:`~.base.FittedProtocol` — targets, factor
+columns, reconstruction rows, validity masks — to live at a padded CAPACITY
+(the bucket), with the occupied prefix tracked by the device-resident
+``StreamState.cols`` counter instead of by array shape.
+
+Capacity grows geometrically (:func:`next_pow2` of the required column
+count), so a stream of updates crosses O(log n) buckets total; each crossing
+is the only host round-trip (``np.pad`` + re-``device_put``) and the only
+retrace.  A fresh :func:`~.base.fit` produces exact-size buffers (bitwise
+identical to the pre-streaming artifacts), so the FIRST update always grows —
+after that, updates within a bucket are pure cache hits.
+
+Padding is constructed so the padded programs are EXACT, not approximate:
+
+* targets / ``alpha`` / Nyström ``W`` columns pad with zeros (zero columns
+  contribute nothing to means or variances);
+* dense Cholesky factors pad with the identity pattern (unit diagonal, zeros
+  elsewhere), so forward/backward solves against zero right-hand sides return
+  exact zeros at the padded slots (see :func:`~repro.core.nystrom.
+  chol_append_at`);
+* kernel cross-columns against padded basis rows are zeroed through the
+  artifact's validity masks (``data["valid"]`` for the center layout,
+  ``data["mask"]`` for the expert layouts) — SE kernels do NOT vanish at the
+  zero point, so masking is load-bearing.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+__all__ = ["next_pow2", "ensure_capacity"]
+
+
+def next_pow2(n: int) -> int:
+    """The smallest power of two >= n (the capacity bucket for n columns)."""
+    n = int(n)
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+# --------------------------------------------------------------------------
+# host-side pad primitives (run only at bucket crossings)
+# --------------------------------------------------------------------------
+
+
+def _pad_last(a, cap: int):
+    a = np.asarray(jax.device_get(a))
+    pad = [(0, 0)] * a.ndim
+    pad[-1] = (0, cap - a.shape[-1])
+    return np.pad(a, pad)
+
+
+def _pad_rows(a, cap: int):
+    """Grow axis -2 (row axis of (..., n, d) point buffers) to ``cap``."""
+    a = np.asarray(jax.device_get(a))
+    pad = [(0, 0)] * a.ndim
+    pad[-2] = (0, cap - a.shape[-2])
+    return np.pad(a, pad)
+
+
+def _pad_chol(L, cap: int):
+    """Grow (..., n, n) Cholesky factors to (..., cap, cap) with the identity
+    pattern in the new slots — the contract ``chol_append_at`` appends under
+    (unit pivots keep the factor SPD and make padded solve outputs exact 0)."""
+    L = np.asarray(jax.device_get(L))
+    n = L.shape[-1]
+    out = np.zeros(L.shape[:-2] + (cap, cap), L.dtype)
+    out[..., :n, :n] = L
+    idx = np.arange(n, cap)
+    out[..., idx, idx] = 1.0
+    return out
+
+
+# --------------------------------------------------------------------------
+# per-protocol growth
+# --------------------------------------------------------------------------
+
+# which leaves grow, and how, per protocol.  Everything NOT listed keeps its
+# fit-time shape (and device placement) untouched: the Nyström core factors
+# L_KK/L_M are rank-K and never grow; broadcast data (the fixed shard bases)
+# never grows; scheme extras (vq_*) are fit-frozen.
+_GROWTH = {
+    "center": {
+        "factors": {"W": _pad_last, "alpha": _pad_last, "L": _pad_chol},
+        "data": {"X_recon": _pad_rows, "sq_cols": _pad_last,
+                 "sq_exact": _pad_last, "valid": _pad_last},
+    },
+    "broadcast": {
+        "factors": {"W": _pad_last, "alpha": _pad_last},
+        "data": {},
+    },
+    "poe": {
+        "factors": {"L": _pad_chol, "alpha": _pad_last},
+        "data": {"Xs": _pad_rows, "mask": _pad_last, "sq_exact": _pad_last},
+    },
+}
+
+
+def ensure_capacity(art, n_new: int):
+    """Return ``art`` (unchanged) if ``n_new`` more columns fit the current
+    bucket, else a grown copy at the next power-of-two capacity.
+
+    This is the ONE host synchronization point of the streaming path: the
+    occupied-column counter is pulled off device to decide whether the bucket
+    overflows.  In-bucket updates take the first branch and stay fully
+    device-resident."""
+    cols = int(jax.device_get(art.stream.cols))
+    capacity = int(art.y.shape[-1])
+    need = cols + int(n_new)
+    if need <= capacity:
+        return art
+    return _grow(art, next_pow2(need))
+
+
+def _grow(art, cap: int):
+    spec = _GROWTH.get(art.protocol)
+    if spec is None:
+        raise NotImplementedError(
+            f"streaming capacity growth is not defined for protocol "
+            f"{art.protocol!r}"
+        )
+    factors = dict(art.factors)
+    for key, pad in spec["factors"].items():
+        if key in factors:
+            factors[key] = jnp.asarray(pad(factors[key], cap))
+    data = dict(art.data)
+    for key, pad in spec["data"].items():
+        if key in data:
+            data[key] = jnp.asarray(pad(data[key], cap))
+    y = jnp.asarray(_pad_last(art.y, cap))
+    if art.impl == "mesh" and art.protocol in ("broadcast", "poe"):
+        # mesh artifacts keep their grown leaves sharded along the machine
+        # axis (the update program is a shard_map over them)
+        from . import mesh
+
+        msh = mesh.machine_mesh(len(art.fit_lengths))
+        sharded_factors = {
+            k: v for k, v in factors.items() if k in spec["factors"]
+        }
+        factors.update(mesh._shard_machine_axis(sharded_factors, msh))
+        if art.protocol == "poe":
+            sharded_data = {k: v for k, v in data.items() if k in spec["data"]}
+            data.update(mesh._shard_machine_axis(sharded_data, msh))
+    return dataclasses.replace(art, y=y, factors=factors, data=data)

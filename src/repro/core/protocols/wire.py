@@ -204,8 +204,84 @@ def _per_symbol_reencode(art, machine: int, X_new):
     return decoded, bits, payload
 
 
+def _per_symbol_reencode_traced(art, machine, X_new):
+    """The jit-safe form of :func:`_per_symbol_reencode`: ``machine`` is a
+    TRACED int32 scalar (the frozen per-machine state is gathered, not
+    indexed statically), every table/shape is derived from static artifact
+    metadata, and the three ledger deltas come back as traced int32 scalars.
+    This is what lets ``base.update`` run encode→pack→CRC→unpack→decode
+    inside ONE device-resident program that is reused for every machine and
+    every in-bucket batch without retracing."""
+    from ...comm.accounting import CRC_BITS, payload_row_bits, row_bits
+
+    w = art.wire
+    state = {
+        "T": w.T[machine], "T_inv": w.T_inv[machine],
+        "sigma": w.sigma[machine], "rates": w.rates[machine],
+    }
+    n_new, d = X_new.shape
+    tables = jax_scheme.scheme_tables(art.bits_per_sample, art.max_bits)
+    codes = jax_scheme.encode(state, X_new, tables)
+    rbits = row_bits(art.bits_per_sample, d, art.max_bits)
+    words = jax_scheme.pack_codes(codes, state["rates"], total_bits=rbits)
+    # the CRC the receiver checks rides the same plane (charged below)
+    codes_rt = jax_scheme.unpack_codes(words, state["rates"], total_bits=rbits)
+    decoded = jax_scheme.decode(state, codes_rt, tables)
+    wire_add = jnp.sum(state["rates"]).astype(jnp.int32) * n_new
+    payload_add = jnp.int32(
+        payload_row_bits(art.bits_per_sample, d, art.max_bits) * n_new
+    )
+    integrity_add = jnp.int32(CRC_BITS * n_new)
+    return decoded, wire_add, payload_add, integrity_add
+
+
+def _per_symbol_update_corrupt(art, machine: int, X_new, plan):
+    """Noisy-channel transmission of a STREAMED batch (the update-time analog
+    of :func:`_corrupt_and_demote`): encode the new rows under machine's
+    frozen codebooks, pack, flip bits at ``plan.flip_rate`` (keyed on the
+    pre-update ledger so successive batches draw fresh corruption), CRC-check
+    against the clean words, and demote failed rows.  Returns
+    ``(keep_idx, decoded, wire_add, payload_add, integrity_add, demoted)`` —
+    the ledger deltas charge the FULL transmitted batch (the bits moved
+    regardless of what survived), ``decoded`` holds only the survivors'
+    received reconstructions (CRC collisions keep their corrupted decode:
+    the receiver is honest about what it can detect)."""
+    from ...comm.accounting import CRC_BITS, payload_row_bits, row_bits
+    from ...faults import flip_words
+
+    w = art.wire
+    state = {
+        "T": w.T[machine], "T_inv": w.T_inv[machine],
+        "sigma": w.sigma[machine], "rates": w.rates[machine],
+    }
+    n_new, d = X_new.shape
+    tables = jax_scheme.scheme_tables(art.bits_per_sample, art.max_bits)
+    codes = jax_scheme.encode(state, X_new, tables)
+    rbits = row_bits(art.bits_per_sample, d, art.max_bits)
+    words = jax_scheme.pack_codes(codes, state["rates"], total_bits=rbits)
+    crc_clean = jax_scheme.crc_words(words)
+    key = jax.random.fold_in(
+        jax.random.PRNGKey(plan.seed), art.wire_bits + machine
+    )
+    rx = flip_words(words, plan.flip_rate, key)
+    ok = np.asarray(jax_scheme.crc_words(rx) == crc_clean)
+    codes_rx = jax_scheme.unpack_codes(rx, state["rates"], total_bits=rbits)
+    dec_rx = jnp.asarray(jax_scheme.decode(state, codes_rx, tables))
+    keep_idx = np.flatnonzero(ok)
+    wire_add = int(np.asarray(w.rates[machine]).sum()) * n_new
+    payload_add = payload_row_bits(art.bits_per_sample, d, art.max_bits) * n_new
+    integrity_add = CRC_BITS * n_new
+    demoted = n_new - keep_idx.size
+    return (
+        keep_idx, dec_rx[jnp.asarray(keep_idx)], wire_add, payload_add,
+        integrity_add, demoted,
+    )
+
+
 PER_SYMBOL = register_scheme(SchemeSpec(
     name="per_symbol", run=_per_symbol_run, reencode=_per_symbol_reencode,
+    reencode_traced=_per_symbol_reencode_traced,
+    update_corrupt=_per_symbol_update_corrupt,
 ))
 
 

@@ -117,11 +117,28 @@ class SchemeSpec:
     protocol must assemble from, and the count of CRC-demoted rows.  The
     optional ``faults`` plan injects wire corruption (docs/fault_model.md).
     ``reencode`` encodes NEW symbols under the frozen fit-time state for
-    streaming :func:`~repro.core.protocols.base.update`."""
+    streaming :func:`~repro.core.protocols.base.update`.
+
+    ``reencode_traced`` is the optional jit-safe form of ``reencode``: it runs
+    INSIDE the protocols' device-resident update programs (``machine`` is a
+    traced int32 scalar) and returns the decoded batch plus the three traced
+    int32 ledger deltas, so consecutive in-bucket updates hit one jit cache
+    entry.  Schemes whose reencode is inherently host-side (``vq`` samples a
+    simulated channel keyed on the python ledger) leave it ``None`` and the
+    update dispatch precomputes the batch eagerly instead.
+
+    ``update_corrupt`` is the optional noisy-channel hook for streamed
+    batches: under a ``flip_rate`` fault plan it transmits the new rows
+    through the scheme's physical plane (encode→pack→flip→CRC→unpack→decode,
+    host-side like the fit-time ``_corrupt_and_demote``), returning the
+    surviving row indices, their received decodes, the FULL transmitted
+    ledger deltas, and the demoted-row count."""
 
     name: str
     run: Callable  # (shards, bits, max_bits, mode, center, impl, faults=None) -> WireRun
     reencode: Callable  # (art, machine, X_new) -> (decoded, wire_bits_added, payload_bits_added)
+    reencode_traced: Callable | None = None  # (art, machine_traced, X_new) -> (decoded, wire+, payload+, integrity+)
+    update_corrupt: Callable | None = None  # (art, machine, X_new, plan) -> (keep_idx, decoded, wire+, payload+, integrity+, demoted)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,7 +151,7 @@ class ProtocolSpec:
     name: str
     fit: Callable  # (parts, cfg, params=None) -> FittedProtocol
     predict: Callable  # (art, X_star, sq_star, g_ss, noise, avail=None) -> (mu, s2)
-    update: Callable  # (art, X_new, y_new, machine) -> FittedProtocol
+    update: Callable  # (art, X_new, y_new, machine, pre=None) -> FittedProtocol
     fit_host: Callable | None = None  # (parts, cfg, params=None) -> oracle model
 
 

@@ -431,3 +431,72 @@ def test_hyp_protocol_kernels_host_vs_batched(kernel, bits, m, seed):
     mu_b, v_b = art_b.predict(Xt)
     np.testing.assert_allclose(np.asarray(mu_b), np.asarray(mu_h), atol=5e-3)
     np.testing.assert_allclose(np.asarray(v_b), np.asarray(v_h), atol=5e-3)
+
+
+# --------------------------------------------------------------------------
+# streamed updates: cross-impl ledgers, codes, and sharding
+# --------------------------------------------------------------------------
+
+
+def test_streamed_ledgers_integer_equal_formula_batched_mesh():
+    """After an identical streamed sequence, all three ledgers are
+    INTEGER-equal between the batched and mesh impls and equal to the
+    accounting formulas (the host expectation: frozen rate per row, whole
+    packed words, CRC framing — and no new side info, the codebooks are
+    frozen)."""
+    from repro.comm.accounting import (
+        integrity_bits_formula, payload_bits_formula, side_info_bits,
+        wire_bits_formula,
+    )
+
+    parts, Xt = _problem(seed=21, m=4)
+    d = parts[0][0].shape[1]
+    ab = fit(parts, 20, "broadcast", steps=3)
+    am = fit(parts, 20, "broadcast", steps=3, impl="mesh")
+    rates = np.asarray(ab.wire.rates)
+    exp_w, exp_p, exp_i = ab.wire_bits, ab.payload_bits, ab.integrity_bits
+    rng = np.random.default_rng(1)
+    for j, n_new in [(1, 6), (3, 4), (1, 5), (2, 7)]:
+        Xn = rng.normal(size=(n_new, d)).astype(np.float32)
+        yn = np.zeros(n_new, np.float32)
+        ab = update(ab, Xn, yn, machine=j)
+        am = update(am, Xn, yn, machine=j)
+        L = [n_new if q == j else 0 for q in range(4)]
+        exp_w += wire_bits_formula(rates, L, d) - side_info_bits(d)
+        exp_p += payload_bits_formula(
+            L, d, ab.bits_per_sample, ab.max_bits
+        ) - side_info_bits(d)
+        exp_i += integrity_bits_formula(L)
+    assert ab.wire_bits == am.wire_bits == exp_w
+    assert ab.payload_bits == am.payload_bits == exp_p
+    assert ab.integrity_bits == am.integrity_bits == exp_i
+    assert ab.lengths == am.lengths
+    # the packed code plane both consumers carry is still identical word for
+    # word (streaming must not disturb the fit-frozen wire state)
+    np.testing.assert_array_equal(
+        np.asarray(am.wire.codes), np.asarray(ab.wire.codes)
+    )
+    mu_b, s2_b = predict(ab, Xt)
+    mu_m, s2_m = predict(am, Xt)
+    assert _max_abs(mu_m, mu_b) <= 1e-3
+    assert _max_abs(s2_m, s2_b) <= 1e-3
+
+
+@pytest.mark.parametrize("protocol", ["broadcast", "poe"])
+def test_mesh_update_keeps_factors_sharded(protocol):
+    """The mesh update program grows the factors IN PLACE on their devices:
+    after a streamed sequence (including a bucket growth) every factor leaf
+    is still sharded along the machine mesh axis — no host pull."""
+    parts, Xt = _problem(seed=22, m=4)
+    d = parts[0][0].shape[1]
+    bits = 0 if protocol == "poe" else 24
+    art = fit(parts, bits, protocol, steps=3, impl="mesh")
+    rng = np.random.default_rng(2)
+    for j, n_new in [(1, 8), (2, 5)]:  # first update grows the bucket
+        Xn = rng.normal(size=(n_new, d)).astype(np.float32)
+        art = update(art, Xn, np.zeros(n_new, np.float32), machine=j)
+    for leaf in jax.tree_util.tree_leaves(art.factors):
+        assert leaf.sharding.spec[0] == MESH_AXIS
+    assert art.data["Xs"].sharding.spec[0] == MESH_AXIS
+    mu, s2 = predict(art, Xt)
+    assert np.all(np.isfinite(np.asarray(mu))) and np.all(np.asarray(s2) > 0)

@@ -535,3 +535,89 @@ def test_legacy_checkpoint_without_checksums_loads(tmp_path):
     mu0, s20 = est.predict(art, Xt)
     np.testing.assert_allclose(np.asarray(mu), np.asarray(mu0), atol=1e-5)
     np.testing.assert_allclose(np.asarray(s2), np.asarray(s20), atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# faults x streaming: updates against a degraded fleet, corrupted batches
+# --------------------------------------------------------------------------
+
+
+def test_update_to_dropped_machine_is_refused():
+    """A machine that transmitted nothing at fit time has no frozen codebooks
+    to stream under: update() targeting it fails loud, and routing the batch
+    to a survivor works."""
+    X, y, Xt = _data(seed=20)
+    est = DistributedGP(_cfg(faults=drop_machine(3)))
+    art = est.fit(X, y, M)
+    assert art.lengths[3] == 0
+    rng = np.random.default_rng(20)
+    Xn = rng.normal(size=(5, D)).astype(np.float32)
+    yn = np.zeros(5, np.float32)
+    with pytest.raises(ValueError, match="no rows at fit time"):
+        est.update(art, Xn, yn, machine=3)
+    art2 = est.update(art, Xn, yn, machine=1)  # survivors still stream
+    assert art2.lengths[1] == art.lengths[1] + 5
+    assert art2.lengths[3] == 0
+    mu, var = est.predict(art2, Xt)
+    assert _finite(mu, var) and np.all(np.asarray(var) > 0)
+
+
+def test_corrupt_update_batch_demotes_only_new_rows():
+    """Under a flip-rate plan a streamed batch crosses the physical wire:
+    CRC-failing NEW rows are demoted (fit-time rows are untouchable), the
+    FULL transmission is still charged to all three ledgers, and the
+    artifact keeps serving."""
+    from repro.comm.accounting import CRC_BITS
+
+    X, y, Xt = _data(seed=21)
+    est = DistributedGP(_cfg(faults=corrupt_words(0.05, seed=7)))
+    art = est.fit(X, y, M)
+    n_new = 40
+    rng = np.random.default_rng(21)
+    Xn = rng.normal(size=(n_new, D)).astype(np.float32)
+    yn = np.zeros(n_new, np.float32)
+    art2 = est.update(art, Xn, yn, machine=1)
+    demoted_new = art2.rows_demoted - art.rows_demoted
+    survived = art2.lengths[1] - art.lengths[1]
+    # every transmitted row is accounted for: kept or demoted, nothing lost
+    assert survived + demoted_new == n_new
+    assert demoted_new > 0  # 5%/bit over 32-bit words: corruption is certain
+    assert survived > 0
+    # only machine 1's count moved
+    for j in range(M):
+        if j != 1:
+            assert art2.lengths[j] == art.lengths[j]
+    # the ledgers charge what was TRANSMITTED, not what survived
+    rate1 = int(np.asarray(art.wire.rates[1]).sum())
+    W = art.wire.codes.shape[-1]
+    assert art2.wire_bits == art.wire_bits + n_new * rate1
+    assert art2.payload_bits == art.payload_bits + n_new * 32 * W
+    assert art2.integrity_bits == art.integrity_bits + n_new * CRC_BITS
+    h = est.health(art2)
+    assert h.status == "degraded" and h.rows_demoted == art2.rows_demoted
+    mu, var = est.predict(art2, Xt)
+    assert _finite(mu, var) and np.all(np.asarray(var) > 0)
+
+
+def test_degraded_mask_predict_correct_after_updates():
+    """Availability-masked serving stays correct on a streamed (bucketed)
+    artifact: the KL-fused variance still never shrinks under machine loss,
+    and batched == mesh on identically streamed artifacts."""
+    X, y, Xt = _data(seed=22)
+    ab = DistributedGP(_cfg()).fit(X, y, M)
+    am = DistributedGP(_cfg("mesh")).fit(X, y, M)
+    rng = np.random.default_rng(22)
+    for j, n_new in [(1, 6), (4, 9)]:
+        Xn = rng.normal(size=(n_new, D)).astype(np.float32)
+        yn = np.zeros(n_new, np.float32)
+        ab = DistributedGP(_cfg()).update(ab, Xn, yn, machine=j)
+        am = DistributedGP(_cfg("mesh")).update(am, Xn, yn, machine=j)
+    av = np.ones(M, np.float32)
+    av[[2, 6]] = 0.0
+    mu_b, s2_b = DistributedGP(_cfg()).predict(ab, Xt, available=av)
+    mu_m, s2_m = DistributedGP(_cfg("mesh")).predict(am, Xt, available=av)
+    assert _finite(mu_b, s2_b, mu_m, s2_m)
+    np.testing.assert_allclose(np.asarray(mu_m), np.asarray(mu_b), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2_m), np.asarray(s2_b), atol=1e-4)
+    _, s2_full = DistributedGP(_cfg()).predict(ab, Xt)
+    assert np.all(np.asarray(s2_b) >= np.asarray(s2_full) - 1e-6)
