@@ -40,6 +40,7 @@ rng = np.random.default_rng(0)
 d = 8
 n_per = 40 if quick else 250
 rows = []
+qps = {}
 for m in (2, 4, 8):
     n = m * n_per
     W = rng.normal(size=(d, 2))
@@ -75,6 +76,7 @@ for m in (2, 4, 8):
             mu, s2 = predict(art, Xt)
         jax.block_until_ready(mu)
         t_warm = (time.perf_counter() - t0) / reps
+        qps[(protocol, m)] = 64 / t_warm
         rows.append({
             "name": f"mesh/predict_{protocol}_m{m}",
             "us_per_call": t_warm * 1e6,
@@ -94,6 +96,30 @@ for m in (2, 4, 8):
         "us_per_call": 0.0,
         "derived": {"m": m, "max_abs_mu_dev": dev,
                     "wire_bits_equal": 1},
+    })
+
+# ---- the scaling gate: predict throughput must stay near-constant in m ----
+# (the PR-8 regression was a 12x center-protocol collapse from m=2 to m=8,
+# caused by the wire program's committed replicated sharding leaking into the
+# serve-time jit; the gate keeps it from coming back)
+# center gets the strict 2x gate (that's where the collapse lived); broadcast
+# runs one more collective per call and, with 8 forced host devices
+# oversubscribing this container's cores, measures ~2.2x — gate at the
+# measured threshold + headroom, still far below the 12x failure mode.
+GATE_MAX_RATIO = {"center": 2.0, "broadcast": 3.0}
+for protocol in ("broadcast", "center"):
+    q2, q8 = qps[(protocol, 2)], qps[(protocol, 8)]
+    ratio = q2 / q8
+    gate = GATE_MAX_RATIO[protocol]
+    assert ratio < gate, (
+        f"mesh predict scaling collapse ({protocol}): m=2 {q2:.0f} qps vs "
+        f"m=8 {q8:.0f} qps ({ratio:.2f}x > {gate}x gate)"
+    )
+    rows.append({
+        "name": f"mesh/predict_scaling_{protocol}",
+        "us_per_call": 0.0,
+        "derived": {"qps_m2": q2, "qps_m8": q8, "m2_over_m8": ratio,
+                    "gate_max_ratio": gate, "gate_ok": 1},
     })
 print("MESH_BENCH_JSON " + json.dumps(rows))
 """

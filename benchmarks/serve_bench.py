@@ -73,10 +73,40 @@ def main(quick: bool = True) -> None:
     assert retraces == 0, f"warm predict retraced {retraces}x"
     assert ops == {"cholesky": 0, "eigh": 0}, f"warm predict refactorizes: {ops}"
     assert us_warm < us_cold, "warm predict must beat cold fit+predict"
+    WARM_GATE_US = 6400.0  # PR-8 acceptance: fused-epilogue warm serve p50
+    assert us_warm < WARM_GATE_US, (
+        f"warm predict p50 {us_warm:.0f}us blew the {WARM_GATE_US:.0f}us gate"
+    )
     emit("serve/predict_warm_m40", us_warm, qps=t_batch / (us_warm / 1e6),
          batch=t_batch, speedup_vs_cold=us_cold / us_warm,
          retraces_warm_loop=retraces,
-         cholesky_eqns=ops["cholesky"], eigh_eqns=ops["eigh"])
+         cholesky_eqns=ops["cholesky"], eigh_eqns=ops["eigh"],
+         p50_gate_us=WARM_GATE_US, gate_ok=1)
+
+    # ---- fused vs unfused serve epilogue on the same problem ----
+    # (the fused path serves on the K-sized nystrom_serve_cache operands:
+    # matmuls only, no O(t N K) triangular solve in the hot loop)
+    import dataclasses
+    from repro.core.api import DistributedGP
+    from repro.core.config import DGPConfig
+
+    cfg_u = dataclasses.replace(
+        art.config if isinstance(art.config, DGPConfig)
+        else DGPConfig.from_dict(dict(art.config)),
+        serve_epilogue="unfused",
+    )
+    art_unf = DistributedGP(cfg_u).fit(parts=parts)
+    assert "Ainv" not in art_unf.factors
+    _, us_unf = timed(lambda: jax.block_until_ready(predict(art_unf, Xq)),
+                      repeats=20)
+    mu_f, v_f = predict(art, Xq)
+    mu_u, v_u = predict(art_unf, Xq)
+    dev = float(max(np.max(np.abs(np.asarray(mu_f) - np.asarray(mu_u))),
+                    np.max(np.abs(np.asarray(v_f) - np.asarray(v_u)))))
+    assert dev < 1e-3, f"fused/unfused serve divergence {dev}"
+    emit("serve/predict_warm_unfused_m40", us_unf,
+         fused_us=us_warm, unfused_over_fused=us_unf / us_warm,
+         max_abs_dev=dev)
 
     # ---- streaming update: frozen codebooks, rank-k factor growth ----
     n_new = 16

@@ -15,12 +15,14 @@ import dataclasses
 from . import quantizers as Q
 from .registry import FUSIONS, KERNELS, PROTOCOLS, SCHEMES
 
-__all__ = ["DGPConfig", "IMPLS", "GRAM_BACKENDS", "GRAM_MODES", "TRAIN_IMPLS"]
+__all__ = ["DGPConfig", "IMPLS", "GRAM_BACKENDS", "GRAM_MODES", "TRAIN_IMPLS",
+           "SERVE_EPILOGUES"]
 
 IMPLS = ("host", "batched", "mesh")
 GRAM_BACKENDS = ("xla", "pallas")
 GRAM_MODES = ("nystrom", "nystrom_fitc", "direct", "dense")
 TRAIN_IMPLS = ("scan", "loop")
+SERVE_EPILOGUES = ("fused", "unfused")
 
 # the artifact format written by save_artifact; bumped when the checkpoint
 # layout changes.  1 = pre-DGPConfig artifacts (loaded via defaults);
@@ -30,8 +32,10 @@ TRAIN_IMPLS = ("scan", "loop")
 # ledger in meta.json (v1-v3 load unverified); 5 = streaming buffers:
 # capacity-padded factor arrays plus the stream/* leaves (per-machine counts,
 # occupied-column counter, device-resident ledgers) — v1-v4 load at exact
-# capacity and pad up on their first update()
-ARTIFACT_FORMAT_VERSION = 5
+# capacity and pad up on their first update(); 6 = fused-serve-epilogue
+# cache keys (factors/Ainv, factors/U, factors/walpha) on Nyström artifacts —
+# v1-v5 load fine and simply serve on the unfused path (the keys are absent)
+ARTIFACT_FORMAT_VERSION = 6
 
 
 def _ensure_registered() -> None:
@@ -75,6 +79,11 @@ class DGPConfig:
     steps, lr, train_impl : hyperparameter-training knobs (Adam by marginal
         likelihood; ``scan`` compiles the loop into one program).
     center : which machine is the §5.1 center.
+    serve_epilogue : ``fused`` (default) precomputes the K-sized serve cache
+        (``nystrom_serve_cache``) at fit time so predict runs the fused
+        matmul-only epilogue; ``unfused`` keeps the legacy O(t N K)
+        solve-based serve path (parity/debugging — the two are algebraically
+        equal, asserted by tests/test_kernel_runtime.py).
     faults : optional :class:`~repro.faults.FaultPlan` injected at fit time —
         dropped/NaN shards and packed-word bit flips (with CRC demotion of
         corrupted rows); ``None`` = a healthy fleet (see docs/fault_model.md).
@@ -93,6 +102,7 @@ class DGPConfig:
     lr: float = 0.05
     train_impl: str = "scan"
     center: int = 0
+    serve_epilogue: str = "fused"
     faults: object = None  # FaultPlan | None (frozen+hashable, rides as static meta)
 
     def __post_init__(self):
@@ -107,6 +117,7 @@ class DGPConfig:
         _check_choice("gram_backend", self.gram_backend, GRAM_BACKENDS)
         _check_choice("gram_mode", self.gram_mode, GRAM_MODES)
         _check_choice("train_impl", self.train_impl, TRAIN_IMPLS)
+        _check_choice("serve_epilogue", self.serve_epilogue, SERVE_EPILOGUES)
         if self.bits_per_sample < 0:
             raise ValueError(f"bits_per_sample must be >= 0, got {self.bits_per_sample}")
         if self.max_bits < 0:

@@ -9,7 +9,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["kl_fuse", "kl_fuse_diag", "kl_fuse_diag_psum"]
+__all__ = ["kl_fuse", "kl_fuse_diag", "kl_fuse_diag_psum", "kl_moments",
+           "kl_finalize"]
 
 
 def kl_fuse(mus, Sigmas):
@@ -57,6 +58,28 @@ def kl_fuse_diag_psum(mu_i, s2_i, axis_name: str, w_i=None):
     return mu, s2 * (m / m_eff)
 
 
+def kl_moments(mu_i, s2_i, prior_var=None, w_i=None):
+    """One machine's KL-barycenter moment rows: ``[w mu_i, w (s2_i + mu_i^2),
+    w]`` — summing these across machines (ONE collective) is sufficient
+    statistics for eqs. 63-64, since
+
+        mean_i (s2_i + (mu - mu_i)^2) = mean_i (s2_i + mu_i^2) - mu^2 ."""
+    one = jnp.ones_like(mu_i)
+    if w_i is None:
+        return jnp.stack([mu_i, s2_i + mu_i * mu_i, one])
+    return jnp.stack([w_i * mu_i, w_i * (s2_i + mu_i * mu_i), w_i * one])
+
+
+def kl_finalize(S, m, prior_var=None):
+    """Fused KL barycenter from summed moments (degraded form mirrors
+    :func:`kl_fuse_diag`: renormalize over survivors, inflate by the lost
+    fraction ``m / m_eff``)."""
+    m_eff = jnp.maximum(S[2], 1.0)
+    mu = S[0] / m_eff
+    s2 = (S[1] / m_eff - mu * mu) * (m / m_eff)
+    return mu, jnp.maximum(s2, 1e-12)
+
+
 # KL barycenter as a registered fusion rule: the §5.2 default, selectable by
 # name next to the PoE-family combiners (see repro.core.registry).
 from .registry import FusionSpec, register_fusion  # noqa: E402
@@ -67,4 +90,6 @@ register_fusion(FusionSpec(
     fuse_psum=lambda mu_i, s2_i, prior_var, axis, w_i=None: kl_fuse_diag_psum(
         mu_i, s2_i, axis, w_i
     ),
+    moments=kl_moments,
+    finalize=kl_finalize,
 ))

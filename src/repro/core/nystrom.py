@@ -23,6 +23,8 @@ __all__ = [
     "nystrom_posterior",
     "nystrom_factors",
     "nystrom_apply",
+    "nystrom_serve_cache",
+    "nystrom_apply_cached",
     "nystrom_kinv",
     "chol_update",
     "chol_update_rank",
@@ -107,6 +109,50 @@ def nystrom_apply(factors, G_star_K, g_star_star, noise_var):
     mean = G_sN @ alpha
     V = jax.vmap(lambda v: nystrom_kinv(W, Lm, s2, v), in_axes=1, out_axes=1)(G_sN.T)
     var = g_star_star - jnp.sum(G_sN.T * V, axis=0)
+    return mean, jnp.maximum(var, 1e-12)
+
+
+def nystrom_serve_cache(factors):
+    """Fused-serve-epilogue operands, precomputed from :func:`nystrom_factors`
+    output — all K-sized and CAPACITY-INDEPENDENT (K never grows under
+    streaming updates, so these need no ``streaming._GROWTH`` entries):
+
+      Ainv   = L_KK^{-1}        (K, K)  explicit triangular inverse
+      U      = W W^T            (K, K)
+      walpha = W alpha          (K,)
+
+    With these, :func:`nystrom_apply_cached` serves a query batch with
+    matmuls only — no triangular solve against the O(N)-sized ``W`` in the
+    hot path.  The keys live in the artifact's ``factors`` dict, so they
+    round-trip through checkpoints; artifacts saved before the cache existed
+    simply lack the keys and serve on the unfused path."""
+    L, W, alpha = factors["L_KK"], factors["W"], factors["alpha"]
+    K = L.shape[0]
+    Ainv = jax.scipy.linalg.solve_triangular(
+        L, jnp.eye(K, dtype=L.dtype), lower=True
+    )
+    return {"Ainv": Ainv, "U": W @ W.T, "walpha": W @ alpha}
+
+
+def nystrom_apply_cached(factors, G_star_K, g_star_star, noise_var):
+    """Fused-epilogue twin of :func:`nystrom_apply`: algebraically equal, but
+    O(t K^2 + K^3) matmuls against the :func:`nystrom_serve_cache` operands
+    instead of O(t N K) solves against W.  Derivation: with
+    B = L_KK^{-1} G_*K^T the Nyström cross-covariance is G_*N = B^T W, so
+
+      mean = G_*N alpha = B^T (W alpha)
+      quad = diag(G_*N (Ghat + s2 I)^{-1} G_*N^T) = diag(B^T P B),
+      P    = (U - U M^{-1} U) / s2            (woodbury through L_M)
+
+    — no per-column :func:`nystrom_kinv`, no O(N) operand anywhere."""
+    Ainv, U, Lm, walpha = (
+        factors["Ainv"], factors["U"], factors["L_M"], factors["walpha"],
+    )
+    s2 = noise_var + _JITTER
+    B = Ainv @ G_star_K.T  # (K, t)
+    mean = B.T @ walpha
+    P = (U - U @ jax.scipy.linalg.cho_solve((Lm, True), U)) / s2  # (K, K)
+    var = g_star_star - jnp.sum(B * (P @ B), axis=0)
     return mean, jnp.maximum(var, 1e-12)
 
 

@@ -17,7 +17,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["poe", "gpoe", "bcm", "rbcm", "combine", "combine_psum"]
+__all__ = ["poe", "gpoe", "bcm", "rbcm", "combine", "combine_psum",
+           "combine_moments", "combine_finalize"]
 
 
 def _weights(w, m, dtype):
@@ -138,6 +139,42 @@ def combine_psum(method: str, mu_i, s2_i, prior_var, axis_name: str, w_i=None):
     raise ValueError(f"unknown combiner {method!r}")
 
 
+def combine_moments(method: str, mu_i, s2_i, prior_var=None, w_i=None):
+    """One expert's moment rows for the fused (single-collective) epilogue.
+
+    PoE-family combiners are sums of per-expert precision terms, so the rows
+    ``[w/s2_i, w mu_i/s2_i, w]`` (betas folded in for rbcm) summed across
+    experts carry everything :func:`combine_finalize` needs."""
+    w = jnp.ones_like(mu_i) if w_i is None else w_i * jnp.ones_like(mu_i)
+    if method == "rbcm":
+        beta = 0.5 * (jnp.log(prior_var) - jnp.log(s2_i)) * w
+        return jnp.stack([beta / s2_i, beta * mu_i / s2_i, beta])
+    if method not in _COMBINERS:
+        raise ValueError(f"unknown combiner {method!r}")
+    return jnp.stack([w / s2_i, w * mu_i / s2_i, w])
+
+
+def combine_finalize(method: str, S, m, prior_var=None):
+    """Fused combiner from summed moment rows ``S`` (healthy fleet has
+    ``S[2] == m``, so the degraded renormalizations reduce to the original
+    arithmetic term for term)."""
+    if method == "poe":
+        prec = jnp.maximum(S[0], 1e-12)
+        return S[1] / prec, 1.0 / prec
+    if method == "gpoe":
+        # betas = w / m_eff: fold the normalization in at finalize time
+        m_eff = jnp.maximum(S[2], 1.0)
+        prec = jnp.maximum(S[0] / m_eff, 1e-12)
+        return S[1] / jnp.maximum(S[0], 1e-12), 1.0 / prec
+    if method == "bcm":
+        prec = jnp.maximum(S[0] - (S[2] - 1.0) / prior_var, 1e-12)
+        return S[1] / prec, 1.0 / prec
+    if method == "rbcm":
+        prec = jnp.maximum(S[0] + (1.0 - S[2]) / prior_var, 1e-12)
+        return S[1] / prec, 1.0 / prec
+    raise ValueError(f"unknown combiner {method!r}")
+
+
 # The zero-rate combiners double as registered fusion rules so broadcast
 # artifacts can fuse with any of them by name (fuse="rbcm" etc.).
 from functools import partial as _partial  # noqa: E402
@@ -149,5 +186,7 @@ for _name in _COMBINERS:
         name=_name,
         fuse=_partial(combine, _name),
         fuse_psum=_partial(combine_psum, _name),
+        moments=_partial(combine_moments, _name),
+        finalize=_partial(combine_finalize, _name),
     ))
 del _name

@@ -31,6 +31,8 @@ from ..nystrom import (
     nystrom_posterior,
     nystrom_factors,
     nystrom_apply,
+    nystrom_serve_cache,
+    nystrom_apply_cached,
     nystrom_kinv,
     chol_update_rank,
     _JITTER,
@@ -396,11 +398,12 @@ def _fit_broadcast(parts, cfg, params=None) -> FittedProtocol:
     mask_flat = shards.mask.reshape(-1)  # column layout is block j at slot j
     y_flat = (shards.y * shards.mask).reshape(-1)
 
+    fused_serve = getattr(cfg, "serve_epilogue", "fused") == "fused"
     if cfg.impl == "mesh":
         # one shard_map program: device i assembles & factorizes ITS view;
         # the factor set lives sharded along the mesh axis
         msh = mesh.machine_mesh(m)
-        factors = mesh._mesh_broadcast_factor_fn(m, kernel)(
+        factors = mesh._mesh_broadcast_factor_fn(m, kernel, fused_serve)(
             shards.X, shards.mask, wire_state.decoded, sq_dec, mask_flat,
             y_flat, p,
         )
@@ -438,7 +441,10 @@ def _fit_broadcast(parts, cfg, params=None) -> FittedProtocol:
             G_KN = kernel_from_inner(kernel, p, ip_KN, sq_exact[i], sq_cols) * (
                 mask_i[:, None] * mask_flat[None, :]
             )
-            return nystrom_factors(G_KK, G_KN, y_flat, noise)
+            fac = nystrom_factors(G_KK, G_KN, y_flat, noise)
+            if fused_serve:
+                fac.update(nystrom_serve_cache(fac))
+            return fac
 
         factors = jax.vmap(build)(jnp.arange(m))
     elif gram_mode == "direct":
@@ -503,8 +509,12 @@ def _predict_broadcast_experts(art, X_star, sq_star, g_ss, noise):
     C = _star_exact_products(Xs, X_star, art.gram_backend)
     if art.gram_mode == "nystrom":
 
+        cached = "Ainv" in art.factors  # static: key presence decides the path
+
         def apply_i(fac, Ci, sqi, mi):
             G_sK = kernel_from_inner(art.kernel, p, Ci, sq_star, sqi) * mi[None, :]
+            if cached:
+                return nystrom_apply_cached(fac, G_sK, g_ss, noise)
             return nystrom_apply(fac, G_sK, g_ss, noise)
 
         return jax.vmap(apply_i)(art.factors, C, sq_exact, mask)
@@ -530,10 +540,51 @@ def _predict_broadcast_experts(art, X_star, sq_star, g_ss, noise):
     return jax.vmap(apply_i)(jnp.arange(m), art.factors)
 
 
+def _predict_broadcast_fused(art, spec, X_star, sq_star, g_ss, noise, avail):
+    """One-launch serve epilogue (pallas backend + cached Nyström factors):
+    the per-expert cached apply AND the fusion moment rows run as a single
+    ``kernels.epilogue`` call; only the method's cheap ``finalize`` remains
+    outside.  Algebraically equal to experts + ``spec.fuse`` (asserted by
+    tests/test_kernel_runtime.py for every fusion method)."""
+    from ...kernels.epilogue.ops import epilogue_moments
+
+    p = art.params
+    f = art.factors
+    Xs, mask = art.data["Xs"], art.data["mask"]
+    sq_exact = art.data["sq_exact"]
+    m = Xs.shape[0]
+    C = _star_exact_products(Xs, X_star, art.gram_backend)
+    G = jax.vmap(
+        lambda Ci, sqi, mi: kernel_from_inner(art.kernel, p, Ci, sq_star, sqi)
+        * mi[None, :]
+    )(C, sq_exact, mask)
+    s2 = noise + _JITTER
+    # the woodbury quad-form projector P = (U - U M^{-1} U)/s2 per expert
+    P = jax.vmap(
+        lambda U, Lm: (U - U @ jax.scipy.linalg.cho_solve((Lm, True), U)) / s2
+    )(f["U"], f["L_M"])
+    w = jnp.ones((m,), jnp.float32) if avail is None else jnp.asarray(
+        avail, jnp.float32
+    )
+    prior = g_ss + noise
+    S = epilogue_moments(G, f["Ainv"], P, f["walpha"], g_ss, prior, w,
+                         fuse=art.fuse)
+    return spec.finalize(S, m, prior)
+
+
 def _predict_broadcast(art: FittedProtocol, X_star, sq_star, g_ss, noise,
                        avail=None):
-    mus, s2s = _predict_broadcast_experts(art, X_star, sq_star, g_ss, noise)
     spec = FUSIONS.get(art.fuse)
+    if (
+        art.gram_backend == "pallas"
+        and art.gram_mode == "nystrom"
+        and "Ainv" in art.factors
+        and spec.moments is not None
+        and spec.finalize is not None
+    ):
+        return _predict_broadcast_fused(art, spec, X_star, sq_star, g_ss,
+                                        noise, avail)
+    mus, s2s = _predict_broadcast_experts(art, X_star, sq_star, g_ss, noise)
     if avail is None:  # healthy fast path; legacy 3-arg fusions still plug in
         return spec.fuse(mus, s2s, g_ss + noise)
     # degraded serving: the fusion renormalizes over surviving machines
@@ -573,10 +624,17 @@ def _update_broadcast_jit(art, X_new, y_new, j, pre):
         W_new = jax.scipy.linalg.solve_triangular(fac["L_KK"], G_KN_new, lower=True)
         W2 = jax.lax.dynamic_update_slice(fac["W"], W_new, (0, pos))
         L_M2 = chol_update_rank(fac["L_M"], W_new)
-        return {
+        out = {
             "L_KK": fac["L_KK"], "W": W2, "L_M": L_M2,
             "alpha": nystrom_kinv(W2, L_M2, s2, y2),
         }
+        if "U" in fac:  # fused-serve cache rides along: U grows by the new
+            # columns' outer product (exact — appended W columns), walpha
+            # re-contracts against the updated alpha, Ainv never changes
+            out["Ainv"] = fac["Ainv"]
+            out["U"] = fac["U"] + W_new @ W_new.T
+            out["walpha"] = W2 @ out["alpha"]
+        return out
 
     factors = jax.vmap(upd)(
         art.factors, ip_new, art.data["sq_exact"], sq_new, art.data["mask"]

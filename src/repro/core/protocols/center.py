@@ -35,6 +35,8 @@ from ..nystrom import (
     nystrom_posterior,
     nystrom_factors,
     nystrom_apply,
+    nystrom_serve_cache,
+    nystrom_apply_cached,
     nystrom_kinv,
     chol_update_rank,
     chol_append_at,
@@ -498,6 +500,8 @@ def _fit_center(parts, cfg, params: GPParams | None = None) -> FittedProtocol:
 
     if gram_mode == "nystrom":
         factors = nystrom_factors(G_KK, G_KN, y_all, noise)
+        if getattr(cfg, "serve_epilogue", "fused") == "fused":
+            factors.update(nystrom_serve_cache(factors))
     elif gram_mode == "nystrom_fitc":
         G = nystrom_complete(G_KK, G_KN, exact_diag=builder._exact_diag(p))
         factors = posterior_factors(G, y_all, noise)
@@ -563,6 +567,8 @@ def _predict_center(art: FittedProtocol, X_star, sq_star, g_ss, noise, avail=Non
     else:
         G_sK = gram_fn(art.kernel)(p, X_star, Xc)
     if art.gram_mode == "nystrom":
+        if "Ainv" in art.factors:  # fused serve epilogue: K-sized matmuls only
+            return nystrom_apply_cached(art.factors, G_sK, g_ss, noise)
         return nystrom_apply(art.factors, G_sK, g_ss, noise)
     if art.gram_mode == "nystrom_fitc":
         # FITC-consistent test covariance: Q_*N = G_*K G_KK^{-1} G_KN from the
@@ -639,6 +645,12 @@ def _update_center_jit(art, X_new, y_new, j, pre):
         f["W"] = jax.lax.dynamic_update_slice(f["W"], W_new, (0, pos))
         f["L_M"] = chol_update_rank(f["L_M"], W_new)
         f["alpha"] = nystrom_kinv(f["W"], f["L_M"], s2, y2)
+        if "U" in f:
+            # fused-epilogue cache maintenance: U takes the same rank-n_new
+            # update as L_M (padded W columns are zero, so the incremental
+            # form is exact); walpha is an O(K C) recompute; Ainv is fixed
+            f["U"] = f["U"] + W_new @ W_new.T
+            f["walpha"] = f["W"] @ f["alpha"]
     elif art.gram_mode == "direct":
         # the validity mask zeroes cross-covariances against padded slots
         # (k(x, 0) != 0 for SE), keeping chol_append_at's zero-row contract

@@ -33,6 +33,8 @@ from ..gp import (
 from ..nystrom import (
     nystrom_factors,
     nystrom_apply,
+    nystrom_serve_cache,
+    nystrom_apply_cached,
     nystrom_kinv,
     chol_update_rank,
     chol_append_at,
@@ -100,6 +102,17 @@ def _run_wire_protocol_mesh(X, mask, total_bits: int, max_bits: int, mode: str, 
     (tests/test_conformance.py)."""
     m, n_pad, d = X.shape
     st = _mesh_wire_fn(m, total_bits, max_bits, mode, center)(X, mask)
+    # UNSHARD the replicated outputs.  shard_map's out_specs=P() leaves every
+    # array COMMITTED to NamedSharding(mesh, P()) — replicated over all m
+    # devices — and that sharding is sticky: any downstream jit that consumes
+    # these arrays (the center protocol's host predict, train_gp's scan)
+    # compiles as an m-way SPMD program with per-dispatch cross-device
+    # synchronization, which is what collapsed mesh predict throughput as m
+    # grew (23.2k -> 1.9k qps from m=2 to m=8).  One host pull here at fit
+    # time erases the committed sharding (this function already host-syncs to
+    # int() the ledger scalars); the mesh-served protocols explicitly
+    # re-shard what they need via _shard_machine_axis.
+    st = jax.tree.map(lambda a: jnp.asarray(jax.device_get(a)), st)
     tables = jax_scheme.scheme_tables(total_bits, max_bits)
     cents = jax_scheme.scaled_centroids_batched(st["rates"], st["sigma"], tables)
     ws = WireState(
@@ -119,11 +132,13 @@ def _shard_machine_axis(tree, mesh: Mesh):
 
 
 @functools.lru_cache(maxsize=None)
-def _mesh_broadcast_factor_fn(m: int, kernel: str):
+def _mesh_broadcast_factor_fn(m: int, kernel: str, fused_serve: bool = True):
     """Per-machine §5.2 Nyström factor build as ONE shard_map program: device i
     assembles ITS view (own block exact, peers from the wire reconstructions)
     and factorizes it locally; the factor set comes out SHARDED along the
-    mesh axis (out_specs P(MESH_AXIS))."""
+    mesh axis (out_specs P(MESH_AXIS)).  ``fused_serve`` additionally builds
+    the K-sized ``nystrom_serve_cache`` operands device-local, so mesh serving
+    runs the fused matmul-only epilogue."""
     mesh = machine_mesh(m)
 
     def body(x_blk, mask_blk, dec, sq_dec, mask_flat, y_flat, p):
@@ -143,6 +158,8 @@ def _mesh_broadcast_factor_fn(m: int, kernel: str):
             mi[:, None] * mask_flat[None, :]
         )
         fac = nystrom_factors(G_KK, G_KN, y_flat, noise)
+        if fused_serve:
+            fac.update(nystrom_serve_cache(fac))
         return jax.tree.map(lambda a: a[None], fac)
 
     return jax.jit(shard_map(
@@ -196,11 +213,14 @@ def _predict_mesh_impl(art, X_star, avail=None):
     mesh = machine_mesh(m)
     weighted = avail is not None
     fusion = FUSIONS.get(art.fuse)
-    if fusion.fuse_psum is None:
+    fused_moments = fusion.moments is not None and fusion.finalize is not None
+    if fusion.fuse_psum is None and not fused_moments:
         raise NotImplementedError(
-            f"fusion {art.fuse!r} has no mesh (psum) form — serve the "
-            "checkpointed single-host artifact instead"
+            f"fusion {art.fuse!r} has no mesh (psum or moments) form — serve "
+            "the checkpointed single-host artifact instead"
         )
+    # static: key presence selects the fused matmul-only apply
+    cached = art.protocol == "broadcast" and "Ainv" in art.factors
 
     def body(fac, Xs_blk, mask_blk, sq_blk, X_star, av, p):
         fac_i = jax.tree.map(lambda a: a[0], fac)
@@ -215,12 +235,25 @@ def _predict_mesh_impl(art, X_star, avail=None):
             art.kernel, p, X_star @ Xi.T, sq_star, sqi
         ) * mi[None, :]
         if art.protocol == "broadcast":
-            mu_i, s2_i = nystrom_apply(fac_i, G_sK, g_ss, noise)
+            if cached:
+                mu_i, s2_i = nystrom_apply_cached(fac_i, G_sK, g_ss, noise)
+            else:
+                mu_i, s2_i = nystrom_apply(fac_i, G_sK, g_ss, noise)
         else:  # poe
             mu_i, s2_i = posterior_apply(fac_i, G_sK, g_ss)
+        prior = g_ss + noise
+        if fused_moments:
+            # fused epilogue: ONE stacked psum carries the (3, t) moment rows
+            # instead of the 2-3 collectives of fuse_psum — halves the
+            # per-dispatch collective cost that dominates mesh serve latency
+            # (m is static: no psum(1) just to count machines)
+            S = jax.lax.psum(
+                fusion.moments(mu_i, s2_i, prior, w_i), MESH_AXIS
+            )
+            return fusion.finalize(S, m, prior)
         if not weighted:  # legacy 4-arg fuse_psum keeps the healthy path
-            return fusion.fuse_psum(mu_i, s2_i, g_ss + noise, MESH_AXIS)
-        return fusion.fuse_psum(mu_i, s2_i, g_ss + noise, MESH_AXIS, w_i)
+            return fusion.fuse_psum(mu_i, s2_i, prior, MESH_AXIS)
+        return fusion.fuse_psum(mu_i, s2_i, prior, MESH_AXIS, w_i)
 
     fn = shard_map(
         body, mesh=mesh,
@@ -292,6 +325,10 @@ def _update_mesh_impl(art, X_new, y_new, j, pre):
                 "L_KK": fac_i["L_KK"], "W": W2, "L_M": L_M2,
                 "alpha": nystrom_kinv(W2, L_M2, s2, y2r),
             }
+            if "U" in fac_i:  # fused-serve cache rides along device-local
+                fac2["Ainv"] = fac_i["Ainv"]
+                fac2["U"] = fac_i["U"] + W_new @ W_new.T
+                fac2["walpha"] = W2 @ fac2["alpha"]
             return jax.tree.map(lambda a: a[None], fac2)
 
         factors = shard_map(

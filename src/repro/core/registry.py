@@ -96,11 +96,23 @@ class FusionSpec:
     The protocols only pass ``w`` when a degraded mask is actually in play,
     so a fusion registered without the parameter still serves the healthy
     path — it just cannot be used with ``predict(..., available=...)``.
+
+    ``moments`` / ``finalize`` are the optional ONE-COLLECTIVE decomposition
+    of the fusion, used by the fused serve epilogue: ``moments`` maps one
+    machine's predictive to a fixed (3, t) stack of locally-computable moment
+    rows, ``finalize`` maps the ACROSS-MACHINE SUM of those stacks (one
+    ``psum`` on mesh, one reduce in the fused kernel) plus the static fleet
+    size ``m`` back to the fused ``(mu, s2)``.  Every builtin fusion provides
+    them; a custom fusion registered without them still serves through
+    ``fuse``/``fuse_psum`` (the mesh epilogue then pays the legacy
+    multi-psum path).
     """
 
     name: str
     fuse: Callable  # (mus, s2s, prior_var, w=None) -> (mu, s2)
     fuse_psum: Callable | None = None  # (mu_i, s2_i, prior_var, axis, w_i=None) -> ...
+    moments: Callable | None = None  # (mu_i, s2_i, prior_var, w_i=None) -> (3, t)
+    finalize: Callable | None = None  # (S, m, prior_var) -> (mu, s2)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,18 +1,29 @@
 """Public wrapper for the decode-attention kernel: pads S to a chunk multiple
-(padded slots get kpos = -1, masked inside), normalizes acc/denom."""
+(padded slots get kpos = -1, masked inside), normalizes acc/denom.  Backend
+selection is the unified runtime policy (:func:`repro.kernels.runtime
+.choose`) — this family used to run interpret-mode Pallas unconditionally
+off-TPU; it now gets the same jitted-XLA fallback as the others."""
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 
+from .. import runtime
 from .decode_attn import decode_attn_pallas, DEFAULT_CHUNK
+from .ref import decode_attn_ref
 
 
-def decode_attn(q, K, V, kpos, pos, *, window=None, chunk=DEFAULT_CHUNK, interpret=None):
-    """q: (B,KV,G,hd); K/V: (B,S,KV,hd); kpos: (B,S) int32 (-1 = empty slot);
-    pos: scalar int32.  Returns (B,KV,G,hd) fp32."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+_decode_attn_xla = functools.partial(jax.jit, static_argnames=("window",))(
+    lambda q, K, V, kpos, pos, window=None: decode_attn_ref(
+        q, K, V, kpos, pos, window=window
+    )
+)
+
+
+def _decode_attn_kernel_path(q, K, V, kpos, pos, *, interpret: bool,
+                             window=None, chunk=DEFAULT_CHUNK):
     B, S = K.shape[:2]
     C = min(chunk, max(S, 1))
     pad = (-S) % C
@@ -26,3 +37,24 @@ def decode_attn(q, K, V, kpos, pos, *, window=None, chunk=DEFAULT_CHUNK, interpr
         chunk=C, window=window, interpret=interpret,
     )
     return acc / jnp.maximum(d[..., None], 1e-30)
+
+
+runtime.register_kernel_op(runtime.KernelImpl(
+    name="decode_attn",
+    pallas=_decode_attn_kernel_path,
+    xla=lambda q, K, V, kpos, pos, window=None, chunk=None: _decode_attn_xla(
+        q, K, V, kpos, pos, window=window
+    ),
+    ref=decode_attn_ref,
+))
+
+
+def decode_attn(q, K, V, kpos, pos, *, window=None, chunk=DEFAULT_CHUNK, interpret=None):
+    """q: (B,KV,G,hd); K/V: (B,S,KV,hd); kpos: (B,S) int32 (-1 = empty slot);
+    pos: scalar int32.  Returns (B,KV,G,hd) fp32."""
+    d = runtime.choose(interpret)
+    if d.kind == "xla":
+        return _decode_attn_xla(q, K, V, kpos, pos, window=window)
+    return _decode_attn_kernel_path(
+        q, K, V, kpos, pos, interpret=d.interpret, window=window, chunk=chunk
+    )

@@ -1,0 +1,4 @@
+from .ops import epilogue_moments
+from .ref import epilogue_moments_ref, EPILOGUE_FUSES
+
+__all__ = ["epilogue_moments", "epilogue_moments_ref", "EPILOGUE_FUSES"]

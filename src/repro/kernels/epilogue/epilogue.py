@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: fused Nyström serve epilogue (decode-attn pattern).
+
+Grid (m,): one step per expert, streaming that expert's (t, K) cross-gram
+tile and its K x K cached operands HBM->VMEM; the (ROWS, t) fp32 moment
+accumulator lives in the revisited output tile across steps (the same
+output-accumulator-only shape as the gram and decode_attn kernels).  Each
+step runs the expert's cached apply — two MXU matmuls against ``Ainv`` and
+the woodbury projector ``P`` — and folds the resulting predictive straight
+into the fusion's moment rows, so the whole serve tail between the
+cross-gram and ``finalize`` is ONE kernel launch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# fp32 sublane tile: the (3, t) moment rows ride in an 8-row output block
+ROWS = 8
+LANE = 128
+
+
+def _epilogue_kernel(g_ref, a_ref, p_ref, wa_ref, gss_ref, prior_ref, w_ref,
+                     o_ref, *, fuse):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    G = g_ref[0]        # (t, K)
+    A = a_ref[0]        # (K, K)  Ainv
+    P = p_ref[0]        # (K, K)
+    wa = wa_ref[0]      # (1, K)
+    gss = gss_ref[...]  # (1, t)
+    prior = prior_ref[...]
+    w = w_ref[...]      # (1, t) — expert weight broadcast over test points
+
+    # B^T = G Ainv^T : the triangular solve of nystrom_apply, cached as a matmul
+    Bt = jax.lax.dot_general(
+        G, A, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (t, K)
+    mu = jnp.sum(Bt * wa, axis=1, keepdims=True).T  # (1, t)
+    Q = jax.lax.dot_general(
+        Bt, P, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (t, K) = B^T P  (P symmetric)
+    quad = jnp.sum(Bt * Q, axis=1, keepdims=True).T
+    s2 = jnp.maximum(gss - quad, 1e-12)  # expert predictive variance
+
+    # fusion moment rows — MUST mirror FusionSpec.moments term for term
+    if fuse == "none":
+        r0, r1, r2 = mu, s2, w
+    elif fuse == "kl":
+        r0, r1, r2 = w * mu, w * (s2 + mu * mu), w
+    elif fuse == "rbcm":
+        beta = 0.5 * (jnp.log(prior) - jnp.log(s2)) * w
+        r0, r1, r2 = beta / s2, beta * mu / s2, beta
+    else:  # poe / gpoe / bcm share precision rows
+        r0, r1, r2 = w / s2, w * mu / s2, w
+
+    pad = jnp.zeros((ROWS - 3, mu.shape[1]), jnp.float32)
+    o_ref[...] += jnp.concatenate([r0, r1, r2, pad], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("fuse", "interpret"))
+def epilogue_pallas(G, Ainv, P, walpha, gss, prior, w, *, fuse,
+                    interpret=False):
+    """G: (m, t, K); Ainv/P: (m, K, K); walpha: (m, 1, K); gss/prior: (1, t);
+    w: (m, t).  t and K must be LANE-multiples (ops.py pads).  Returns the
+    (ROWS, t) accumulator; rows 0..2 are the summed fusion moments S."""
+    m, t, K = G.shape
+    return pl.pallas_call(
+        functools.partial(_epilogue_kernel, fuse=fuse),
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((1, t, K), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, K, K), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, K, K), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1, K), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, t), lambda i: (0, 0)),
+            pl.BlockSpec((1, t), lambda i: (0, 0)),
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROWS, t), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ROWS, t), jnp.float32),
+        interpret=interpret,
+    )(G, Ainv, P, walpha, gss, prior, w)

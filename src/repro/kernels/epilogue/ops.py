@@ -1,0 +1,72 @@
+"""Jit'd public wrapper for the fused serve epilogue: pads (t, K) to lane
+multiples, routes backend selection through the unified kernel runtime, and
+slices the moment rows back out.
+
+Padding is harmless by construction: padded K columns of ``G``/``Ainv``/
+``P``/``walpha`` are zero (so they contribute nothing to the matmuls) and
+padded t columns carry ``gss = prior = 1`` (so the rbcm logs and PoE
+precisions stay finite) — the caller only ever sees rows ``[:, :t]``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .. import runtime
+from .epilogue import epilogue_pallas, LANE
+from .ref import epilogue_moments_ref, EPILOGUE_FUSES  # noqa: F401
+
+_epilogue_xla = functools.partial(jax.jit, static_argnames=("fuse",))(
+    epilogue_moments_ref
+)
+
+
+def _pad_to(a, mult, axis, value=0.0):
+    pad = (-a.shape[axis]) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+def _epilogue_kernel_path(G, Ainv, P, walpha, gss, prior, w, *, fuse,
+                          interpret: bool):
+    m, t, K = G.shape
+    f32 = functools.partial(jnp.asarray, dtype=jnp.float32)
+    Gp = _pad_to(_pad_to(f32(G), LANE, 1), LANE, 2)
+    Ap = _pad_to(_pad_to(f32(Ainv), LANE, 1), LANE, 2)
+    Pp = _pad_to(_pad_to(f32(P), LANE, 1), LANE, 2)
+    wap = _pad_to(f32(walpha)[:, None, :], LANE, 2)  # (m, 1, Kp)
+    gssp = _pad_to(f32(gss)[None, :], LANE, 1, value=1.0)  # (1, tp)
+    priorp = _pad_to(f32(prior)[None, :], LANE, 1, value=1.0)
+    tp = gssp.shape[1]
+    wp = f32(w)[:, None] * jnp.ones((m, tp), jnp.float32)  # (m, tp)
+    S = epilogue_pallas(Gp, Ap, Pp, wap, gssp, priorp, wp,
+                        fuse=fuse, interpret=interpret)
+    return S[:3, :t]
+
+
+runtime.register_kernel_op(runtime.KernelImpl(
+    name="epilogue",
+    pallas=_epilogue_kernel_path,
+    xla=lambda G, Ainv, P, walpha, gss, prior, w, fuse: _epilogue_xla(
+        G, Ainv, P, walpha, gss, prior, w, fuse=fuse
+    ),
+    ref=epilogue_moments_ref,
+))
+
+
+def epilogue_moments(G, Ainv, P, walpha, gss, prior, w, *, fuse,
+                     interpret: bool | None = None):
+    """Summed fusion moment rows S (3, t) for a fleet of cached Nyström
+    experts — the fused serve epilogue (see ref.py for operand shapes).
+    Callers finish with the fusion's ``finalize(S, m, prior)``."""
+    d = runtime.choose(interpret)
+    if d.kind == "xla":
+        return _epilogue_xla(G, Ainv, P, walpha, gss, prior, w, fuse=fuse)
+    return _epilogue_kernel_path(
+        G, Ainv, P, walpha, gss, prior, w, fuse=fuse, interpret=d.interpret
+    )

@@ -1,0 +1,57 @@
+"""Reference (pure-jnp) fused serve epilogue.
+
+One op covers the whole post-gram serve tail for a fleet of Nyström experts:
+per-expert cached apply (mean + variance against the ``nystrom_serve_cache``
+operands) AND the fusion moment rows, summed across experts.  The caller
+finishes with the method's ``finalize`` (a handful of elementwise flops) —
+so the entire epilogue between the cross-gram and the fused (mu, s2) is one
+kernel launch instead of m solve/apply/fuse dispatches.
+
+Inputs (m experts, t test points, K retained columns):
+  G      (m, t, K)  masked cross-covariances G_*K per expert
+  Ainv   (m, K, K)  explicit L_KK^{-1} (nystrom_serve_cache)
+  P      (m, K, K)  woodbury quad-form projector (U - U M^{-1} U) / s2
+  walpha (m, K)     W alpha
+  gss    (t,)       prior test variance k(x*, x*) (noise-free)
+  prior  (t,)       fusion prior variance k(x*, x*) + noise ((r)bcm only)
+  w      (m,)       availability weights (healthy fleet: all ones)
+
+``fuse`` selects the moment rows (must match ``FusionSpec.moments`` exactly):
+  none       [mu_i, s2_i, w]        (single expert; finalize is identity)
+  kl         [w mu, w (s2 + mu^2), w]
+  poe/gpoe/bcm  [w/s2, w mu/s2, w]
+  rbcm       beta-folded precision rows
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["epilogue_moments_ref", "EPILOGUE_FUSES"]
+
+EPILOGUE_FUSES = ("none", "kl", "poe", "gpoe", "bcm", "rbcm")
+
+
+def _moment_rows(fuse, mu, s2, prior, w):
+    """(m, t) per-expert predictives -> (m, 3, t) moment rows."""
+    if fuse == "none":
+        return jnp.stack([mu, s2, w], axis=1)
+    if fuse == "kl":
+        return jnp.stack([w * mu, w * (s2 + mu * mu), w], axis=1)
+    if fuse == "rbcm":
+        beta = 0.5 * (jnp.log(prior)[None, :] - jnp.log(s2)) * w
+        return jnp.stack([beta / s2, beta * mu / s2, beta], axis=1)
+    if fuse in ("poe", "gpoe", "bcm"):
+        return jnp.stack([w / s2, w * mu / s2, w], axis=1)
+    raise ValueError(
+        f"unknown epilogue fuse {fuse!r}: known are {', '.join(EPILOGUE_FUSES)}"
+    )
+
+
+def epilogue_moments_ref(G, Ainv, P, walpha, gss, prior, w, *, fuse):
+    """Summed moment rows S (3, t) of the fused serve epilogue."""
+    Bt = jnp.einsum("mtk,mjk->mtj", G, Ainv)  # B^T = G Ainv^T  (m, t, K)
+    mu = jnp.einsum("mtj,mj->mt", Bt, walpha)
+    quad = jnp.einsum("mtj,mjk,mtk->mt", Bt, P, Bt)
+    s2 = jnp.maximum(gss[None, :] - quad, 1e-12)
+    wc = jnp.asarray(w, mu.dtype)[:, None] * jnp.ones_like(mu)
+    return jnp.sum(_moment_rows(fuse, mu, s2, prior, wc), axis=0)

@@ -1,5 +1,5 @@
-"""Jit'd public wrapper for the gram kernel: pads to block multiples, selects
-interpret mode off-TPU, unpads the result.
+"""Jit'd public wrapper for the gram kernel: pads to block multiples, routes
+backend selection through the unified kernel runtime, unpads the result.
 
 ``gram`` carries a custom VJP (dX = g @ Y, dY = g^T @ X — both themselves gram
 products, routed back through the kernel), so kernels that consume it stay
@@ -8,12 +8,12 @@ differentiable end-to-end when hyperparameter training runs with
 """
 from __future__ import annotations
 
-import os
-
 import jax
 import jax.numpy as jnp
 
+from .. import runtime
 from .gram import gram_pallas, DEFAULT_BLOCK
+from .ref import gram_ref
 
 
 def _pad_to(a, mult, axis):
@@ -25,28 +25,31 @@ def _pad_to(a, mult, axis):
     return jnp.pad(a, widths)
 
 
-@jax.jit
-def _gram_xla(x, y):
-    return jnp.asarray(x, jnp.float32) @ jnp.asarray(y, jnp.float32).T
+_gram_xla = jax.jit(gram_ref)
 
 
-def _gram_impl(x, y, block, interpret):
-    if interpret is None:
-        # off-TPU default: one jitted XLA matmul, not interpret-mode Pallas
-        # (interpret exists to CHECK the kernel; interpret=True or
-        # REPRO_FORCE_PALLAS=1 forces the kernel path — interpret mode
-        # off-TPU, for debugging only)
-        if jax.default_backend() != "tpu" and os.environ.get(
-            "REPRO_FORCE_PALLAS", ""
-        ) != "1":
-            return _gram_xla(x, y)
-        interpret = jax.default_backend() != "tpu"
+def _gram_kernel_path(x, y, *, interpret: bool, block=DEFAULT_BLOCK):
     n, p = x.shape[0], y.shape[0]
     bn, bp, bd = block
     xp = _pad_to(_pad_to(jnp.asarray(x, jnp.float32), bn, 0), bd, 1)
     yp = _pad_to(_pad_to(jnp.asarray(y, jnp.float32), bp, 0), bd, 1)
     out = gram_pallas(xp, yp, block=block, interpret=interpret)
     return out[:n, :p]
+
+
+runtime.register_kernel_op(runtime.KernelImpl(
+    name="gram",
+    pallas=_gram_kernel_path,
+    xla=lambda x, y, block=None: _gram_xla(x, y),
+    ref=gram_ref,
+))
+
+
+def _gram_impl(x, y, block, interpret):
+    d = runtime.choose(interpret)
+    if d.kind == "xla":
+        return _gram_xla(x, y)
+    return _gram_kernel_path(x, y, interpret=d.interpret, block=block)
 
 
 @jax.custom_vjp

@@ -5,20 +5,21 @@ Two entry points:
 * :func:`qgram_packed` / :func:`qgram_packed_batched` — the PRIMARY path:
   consume the packed code plane (``jax_scheme.pack_codes`` uint32 words, the
   same buffer the collectives move and the checkpoints store) and fuse
-  unpack + dequantize + gram in one tiled Pallas kernel
-  (:mod:`.packed`).  Off-TPU the default routes to an equivalent single-jit
-  XLA program instead of interpret-mode Pallas — interpret mode exists to
-  CHECK the kernel, not to win benchmarks.  Pass ``interpret=True`` (or set
-  ``REPRO_FORCE_PALLAS=1``) to force the Pallas kernel path anyway: compiled
-  on TPU, interpret mode everywhere else — for kernel debugging, never for
-  speed.  On TPU, block sizes are autotuned per shape
-  (:func:`_autotune_block`, cached).
+  unpack + dequantize + gram in one tiled Pallas kernel (:mod:`.packed`).
 * :func:`qgram` / :func:`qgram_batched` — the legacy unpacked-int-code API,
-  kept for callers holding raw (n, d) int32 codes; same backend policy.
+  kept for callers holding raw (n, d) int32 codes.
+
+Backend selection is the unified runtime policy
+(:func:`repro.kernels.runtime.choose`): compiled Pallas on TPU, the
+equivalent single-jit XLA program elsewhere, ``interpret=True`` /
+``REPRO_FORCE_PALLAS=1`` to force the kernel path for debugging.  On the
+compiled path, block sizes are autotuned per (shape, dtype, bits, backend)
+through the runtime's PERSISTENT cache (:func:`repro.kernels.runtime
+.autotune`): the sweep runs once per key per cache file, warm processes pad
+only to the cached winner instead of the largest tune candidate.
 """
 from __future__ import annotations
 
-import functools
 import os
 import time
 
@@ -26,8 +27,10 @@ import jax
 import jax.numpy as jnp
 
 from ...core import jax_scheme
+from .. import runtime
 from .qgram import qgram_pallas, DEFAULT_BLOCK, DEFAULT_ECHUNK
 from .packed import qgram_packed_pallas, DEFAULT_BLOCK_PACKED
+from .ref import qgram_ref, qgram_packed_ref
 
 
 def _pad_axis(a, mult, axis, value=0):
@@ -39,20 +42,12 @@ def _pad_axis(a, mult, axis, value=0):
     return jnp.pad(a, widths, constant_values=value)
 
 
-def _use_pallas() -> bool:
-    """Pallas kernel path on TPU (compiled) or when REPRO_FORCE_PALLAS=1
-    (interpret mode off-TPU — kernel debugging only); the single-jit XLA
-    fallback elsewhere.  On CPU the interpret-mode kernel LOSES to plain
-    XLA, so it is never the default (benchmarks/hotpath_bench.py records
-    the comparison)."""
-    return jax.default_backend() == "tpu" or os.environ.get(
-        "REPRO_FORCE_PALLAS", ""
-    ) == "1"
-
-
 # --------------------------------------------------------------------------
 # the packed plane: words straight from the wire/checkpoint
 # --------------------------------------------------------------------------
+
+
+import functools
 
 
 @functools.partial(jax.jit, static_argnames=("total_bits", "has_mask"))
@@ -67,38 +62,70 @@ def _qgram_packed_xla(words, rates, scaled_cents, y, mask, total_bits, has_mask)
     return xhat @ jnp.asarray(y, jnp.float32).T
 
 
-_TUNE_CACHE: dict = {}
 _TUNE_CANDIDATES = ((128, 128), (256, 128), (128, 256), (256, 256))
 
 
-def _autotune_block(words, meta, cents, y, mask, echunk):
-    """Pick the fastest (bn, bp) for this shape by timing one compiled run of
-    each candidate (TPU path only; cached per shape).  Under a trace (vmap/
-    jit of the wrapper) there is nothing to time — fall back to the cached
-    winner for this shape or the default block."""
-    key = (words.shape, cents.shape, y.shape, echunk)
-    if key in _TUNE_CACHE:
-        return _TUNE_CACHE[key]
-    if any(isinstance(a, jax.core.Tracer) for a in (words, meta, cents, y, mask)):
-        return DEFAULT_BLOCK_PACKED
-    best, best_t = DEFAULT_BLOCK_PACKED, float("inf")
-    for bn, bp in _TUNE_CANDIDATES:
-        if words.shape[0] % bn or y.shape[0] % bp:
-            continue
-        try:
-            fn = lambda: qgram_packed_pallas(
-                words, meta, cents, y, mask, block=(bn, bp), echunk=echunk
+def _interpret_autotune() -> bool:
+    """Normally the sweep only runs on the compiled (TPU) path — timing the
+    interpreter is meaningless.  REPRO_AUTOTUNE_INTERPRET=1 lets tests drive
+    the full autotune round-trip (sweep -> persist -> warm hit) on CPU."""
+    return os.environ.get("REPRO_AUTOTUNE_INTERPRET", "") == "1"
+
+
+def _padded_inputs(words, rates, scaled_cents, y, mask, echunk, bn, bp):
+    """Pad every operand to the given block (rows masked to zero)."""
+    n = words.shape[0]
+    mask_col = (
+        jnp.ones((n, 1), jnp.float32) if mask is None
+        else jnp.asarray(mask, jnp.float32)[:, None]
+    )
+    wpad = _pad_axis(words, bn, 0)
+    mpad = _pad_axis(mask_col, bn, 0)
+    tpad = _pad_axis(_pad_axis(jnp.asarray(scaled_cents), 8, 0), echunk, 1)
+    d_pad = tpad.shape[0]
+    ypad = _pad_axis(_pad_axis(jnp.asarray(y, jnp.float32), bp, 0), d_pad, 1)
+    meta = _pack_meta(rates, d_pad)
+    return wpad, meta, tpad, ypad, mpad
+
+
+def _autotune_block(words, rates, scaled_cents, y, mask, echunk, total_bits,
+                    interpret):
+    """Resolve the (bn, bp) block for this logical shape via the runtime's
+    persistent cache: a warm hit (this process or any earlier one that wrote
+    the cache file) returns immediately with ZERO sweeps; a miss times one
+    compiled run of each candidate on max-candidate-padded inputs, persists
+    the winner, and returns it."""
+    key = runtime.cache_key(
+        "qgram_packed",
+        shapes=(words.shape, scaled_cents.shape, y.shape),
+        dtype=words.dtype,
+        bits=total_bits,
+        extra=(f"echunk={echunk}",),
+    )
+    max_bn = max(c[0] for c in _TUNE_CANDIDATES)
+    max_bp = max(c[1] for c in _TUNE_CANDIDATES)
+    padded = None  # built lazily: only a cache MISS pays the max-pad
+
+    def measure(cand):
+        nonlocal padded
+        if padded is None:
+            padded = _padded_inputs(
+                words, rates, scaled_cents, y, mask, echunk, max_bn, max_bp
             )
-            jax.block_until_ready(fn())  # compile + warm
-            t0 = time.perf_counter()
-            jax.block_until_ready(fn())
-            dt = time.perf_counter() - t0
-        except Exception:
-            continue
-        if dt < best_t:
-            best, best_t = (bn, bp), dt
-    _TUNE_CACHE[key] = best
-    return best
+        wpad, meta, tpad, ypad, mpad = padded
+        bn, bp = cand
+        if wpad.shape[0] % bn or ypad.shape[0] % bp:
+            return None
+        fn = lambda: qgram_packed_pallas(
+            wpad, meta, tpad, ypad, mpad, block=(bn, bp), echunk=echunk,
+            interpret=interpret,
+        )
+        jax.block_until_ready(fn())  # compile + warm
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        return time.perf_counter() - t0
+
+    return runtime.autotune(key, _TUNE_CANDIDATES, measure, DEFAULT_BLOCK_PACKED)
 
 
 def _pack_meta(rates, d_pad):
@@ -109,6 +136,38 @@ def _pack_meta(rates, d_pad):
     w = jnp.concatenate([w, jnp.zeros((d_pad - w.shape[0],), jnp.int32)])
     offs = jnp.cumsum(w) - w
     return jnp.stack([offs // 32, offs % 32, w])
+
+
+def _qgram_packed_kernel_path(
+    words, rates, scaled_cents, y, *, total_bits, interpret,
+    mask=None, block=None, echunk=DEFAULT_ECHUNK,
+):
+    words = jnp.asarray(words)
+    n, p = words.shape[0], y.shape[0]
+    traced = any(
+        isinstance(a, jax.core.Tracer)
+        for a in (words, rates, scaled_cents, y)
+        + (() if mask is None else (mask,))
+    )
+    autotune = (
+        block is None and not traced and (not interpret or _interpret_autotune())
+    )
+    if autotune:
+        bn, bp = _autotune_block(
+            words, rates, scaled_cents, y, mask, echunk, total_bits, interpret
+        )
+    else:
+        bn, bp = DEFAULT_BLOCK_PACKED if block is None else block
+    # pad to the CHOSEN block only — the old path padded every autotuned call
+    # to the largest tune candidate even when the cached winner was small
+    wpad, meta, tpad, ypad, mpad = _padded_inputs(
+        words, rates, scaled_cents, y, mask, echunk, bn, bp
+    )
+    out = qgram_packed_pallas(
+        wpad, meta, tpad, ypad, mpad, block=(bn, bp), echunk=echunk,
+        interpret=interpret,
+    )
+    return out[:n, :p]
 
 
 def qgram_packed(
@@ -124,40 +183,18 @@ def qgram_packed(
     (the packed twin of the old -1-sentinel behavior); total_bits: the static
     row bit budget the words were packed under."""
     words = jnp.asarray(words)
-    n = words.shape[0]
-    p = y.shape[0]
-    if words.shape[-1] == 0 or interpret is None:
-        if words.shape[-1] == 0 or not _use_pallas():
-            # zero-rate rows have no words at all — nothing for a kernel
-            # block to load; the XLA program handles the degenerate layout
-            m = None if mask is None else jnp.asarray(mask, jnp.float32)
-            return _qgram_packed_xla(
-                words, rates, scaled_cents, y, m, total_bits, mask is not None
-            )
-        interpret = jax.default_backend() != "tpu"
-    autotune = block is None and not interpret
-    bn, bp = DEFAULT_BLOCK_PACKED if block is None else block
-    # when autotuning, pad to the LARGEST candidate block so every (bn, bp)
-    # in the search space divides the shape and is actually reachable
-    pad_n = max(c[0] for c in _TUNE_CANDIDATES) if autotune else bn
-    pad_p = max(c[1] for c in _TUNE_CANDIDATES) if autotune else bp
-    mask_col = (
-        jnp.ones((n, 1), jnp.float32) if mask is None
-        else jnp.asarray(mask, jnp.float32)[:, None]
+    d = runtime.choose(interpret)
+    if words.shape[-1] == 0 or d.kind == "xla":
+        # zero-rate rows have no words at all — nothing for a kernel block to
+        # load; the XLA program handles the degenerate layout
+        m = None if mask is None else jnp.asarray(mask, jnp.float32)
+        return _qgram_packed_xla(
+            words, rates, scaled_cents, y, m, total_bits, mask is not None
+        )
+    return _qgram_packed_kernel_path(
+        words, rates, scaled_cents, y, total_bits=total_bits,
+        interpret=d.interpret, mask=mask, block=block, echunk=echunk,
     )
-    wpad = _pad_axis(words, pad_n, 0)
-    mpad = _pad_axis(mask_col, pad_n, 0)  # padded rows masked to zero
-    tpad = _pad_axis(_pad_axis(jnp.asarray(scaled_cents), 8, 0), echunk, 1)
-    d_pad = tpad.shape[0]
-    ypad = _pad_axis(_pad_axis(jnp.asarray(y, jnp.float32), pad_p, 0), d_pad, 1)
-    meta = _pack_meta(rates, d_pad)
-    if autotune:
-        bn, bp = _autotune_block(wpad, meta, tpad, ypad, mpad, echunk)
-    out = qgram_packed_pallas(
-        wpad, meta, tpad, ypad, mpad, block=(bn, bp), echunk=echunk,
-        interpret=interpret,
-    )
-    return out[:n, :p]
 
 
 def qgram_packed_batched(words, rates, scaled_cents, y, *, total_bits, mask=None, **kw):
@@ -187,16 +224,8 @@ def _qgram_xla(codes, scaled_cents, y):
     return xhat @ jnp.asarray(y, jnp.float32).T
 
 
-def qgram(codes, scaled_cents, y, *, block=DEFAULT_BLOCK, echunk=DEFAULT_ECHUNK, interpret=None):
-    """G = decode(codes) @ y^T without materializing the reconstruction.
-
-    codes: (n, d) int32 per-symbol codes (-1 decodes to 0); scaled_cents:
-    (d, C); y: (p, d).  Prefer :func:`qgram_packed` — it eats the wire's
-    packed words directly."""
-    if interpret is None:
-        if not _use_pallas():
-            return _qgram_xla(jnp.asarray(codes), scaled_cents, y)
-        interpret = jax.default_backend() != "tpu"
+def _qgram_kernel_path(codes, scaled_cents, y, *, interpret,
+                       block=DEFAULT_BLOCK, echunk=DEFAULT_ECHUNK):
     n, d = codes.shape
     p = y.shape[0]
     bn, bp, bd = block
@@ -208,6 +237,20 @@ def qgram(codes, scaled_cents, y, *, block=DEFAULT_BLOCK, echunk=DEFAULT_ECHUNK,
     return out[:n, :p]
 
 
+def qgram(codes, scaled_cents, y, *, block=DEFAULT_BLOCK, echunk=DEFAULT_ECHUNK, interpret=None):
+    """G = decode(codes) @ y^T without materializing the reconstruction.
+
+    codes: (n, d) int32 per-symbol codes (-1 decodes to 0); scaled_cents:
+    (d, C); y: (p, d).  Prefer :func:`qgram_packed` — it eats the wire's
+    packed words directly."""
+    d = runtime.choose(interpret)
+    if d.kind == "xla":
+        return _qgram_xla(jnp.asarray(codes), scaled_cents, y)
+    return _qgram_kernel_path(
+        codes, scaled_cents, y, interpret=d.interpret, block=block, echunk=echunk
+    )
+
+
 def qgram_batched(codes, scaled_cents, y, **kw):
     """vmapped fused dequantize+gram over a leading machine axis.
 
@@ -217,3 +260,22 @@ def qgram_batched(codes, scaled_cents, y, **kw):
     if y.ndim == 2:
         return jax.vmap(lambda c, t: qgram(c, t, y, **kw))(codes, scaled_cents)
     return jax.vmap(lambda c, t, yy: qgram(c, t, yy, **kw))(codes, scaled_cents, y)
+
+
+runtime.register_kernel_op(runtime.KernelImpl(
+    name="qgram",
+    pallas=_qgram_kernel_path,
+    xla=lambda c, t, y, block=None, echunk=None: _qgram_xla(jnp.asarray(c), t, y),
+    ref=qgram_ref,
+))
+runtime.register_kernel_op(runtime.KernelImpl(
+    name="qgram_packed",
+    pallas=_qgram_packed_kernel_path,
+    xla=lambda w, r, t, y, *, total_bits, mask=None, block=None, echunk=None:
+        _qgram_packed_xla(
+            jnp.asarray(w), r, t, y,
+            None if mask is None else jnp.asarray(mask, jnp.float32),
+            total_bits, mask is not None,
+        ),
+    ref=qgram_packed_ref,
+))

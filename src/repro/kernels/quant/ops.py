@@ -2,28 +2,20 @@
 
 Builds the per-dimension scaled tables from (sigma, rates) using
 repro.core.quantizers codebooks, pads everything to tile multiples, and runs
-the Pallas kernels (interpret mode off-TPU).
+the Pallas kernels.  Backend selection (compiled Pallas on TPU, jitted-XLA
+fallback elsewhere, ``REPRO_FORCE_PALLAS=1`` for interpret-mode debugging) is
+the unified runtime policy — :func:`repro.kernels.runtime.choose`.
 """
 from __future__ import annotations
-
-import os
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from ...core import quantizers as Q
+from .. import runtime
 from .quant import encode_pallas, decode_pallas, DEFAULT_BLOCK, DEFAULT_ECHUNK
 from .ref import encode_ref, decode_ref
-
-
-def _xla_fallback() -> bool:
-    """Off-TPU default: run the jitted pure-XLA oracle instead of
-    interpret-mode Pallas (interpret=True or REPRO_FORCE_PALLAS=1 forces the
-    kernel path — interpret mode off-TPU, for debugging only)."""
-    return jax.default_backend() != "tpu" and os.environ.get(
-        "REPRO_FORCE_PALLAS", ""
-    ) != "1"
 
 
 _encode_xla = jax.jit(encode_ref)
@@ -59,11 +51,8 @@ def build_scaled_tables(sigma, rates, echunk: int = DEFAULT_ECHUNK):
     return jnp.asarray(edges), jnp.asarray(cents)
 
 
-def encode(x, scaled_edges, *, block=DEFAULT_BLOCK, echunk=DEFAULT_ECHUNK, interpret=None):
-    if interpret is None:
-        if _xla_fallback():
-            return _encode_xla(jnp.asarray(x, jnp.float32), jnp.asarray(scaled_edges))
-        interpret = jax.default_backend() != "tpu"
+def _encode_kernel_path(x, scaled_edges, *, interpret: bool,
+                        block=DEFAULT_BLOCK, echunk=DEFAULT_ECHUNK):
     n, d = x.shape
     bn, bd = block
     xp = _pad_axis(_pad_axis(jnp.asarray(x, jnp.float32), bn, 0), bd, 1)
@@ -72,14 +61,47 @@ def encode(x, scaled_edges, *, block=DEFAULT_BLOCK, echunk=DEFAULT_ECHUNK, inter
     return out[:n, :d]
 
 
-def decode(codes, scaled_cents, *, block=DEFAULT_BLOCK, echunk=DEFAULT_ECHUNK, interpret=None):
-    if interpret is None:
-        if _xla_fallback():
-            return _decode_xla(jnp.asarray(codes), jnp.asarray(scaled_cents))
-        interpret = jax.default_backend() != "tpu"
+def _decode_kernel_path(codes, scaled_cents, *, interpret: bool,
+                        block=DEFAULT_BLOCK, echunk=DEFAULT_ECHUNK):
     n, d = codes.shape
     bn, bd = block
     cp = _pad_axis(_pad_axis(jnp.asarray(codes), bn, 0), bd, 1)
     tp = _pad_axis(jnp.asarray(scaled_cents), bd, 0)
     out = decode_pallas(cp, tp, block=block, echunk=echunk, interpret=interpret)
     return out[:n, :d]
+
+
+runtime.register_kernel_op(runtime.KernelImpl(
+    name="quant_encode",
+    pallas=_encode_kernel_path,
+    xla=lambda x, e, block=None, echunk=None: _encode_xla(
+        jnp.asarray(x, jnp.float32), jnp.asarray(e)
+    ),
+    ref=encode_ref,
+))
+runtime.register_kernel_op(runtime.KernelImpl(
+    name="quant_decode",
+    pallas=_decode_kernel_path,
+    xla=lambda c, t, block=None, echunk=None: _decode_xla(
+        jnp.asarray(c), jnp.asarray(t)
+    ),
+    ref=decode_ref,
+))
+
+
+def encode(x, scaled_edges, *, block=DEFAULT_BLOCK, echunk=DEFAULT_ECHUNK, interpret=None):
+    d = runtime.choose(interpret)
+    if d.kind == "xla":
+        return _encode_xla(jnp.asarray(x, jnp.float32), jnp.asarray(scaled_edges))
+    return _encode_kernel_path(
+        x, scaled_edges, interpret=d.interpret, block=block, echunk=echunk
+    )
+
+
+def decode(codes, scaled_cents, *, block=DEFAULT_BLOCK, echunk=DEFAULT_ECHUNK, interpret=None):
+    d = runtime.choose(interpret)
+    if d.kind == "xla":
+        return _decode_xla(jnp.asarray(codes), jnp.asarray(scaled_cents))
+    return _decode_kernel_path(
+        codes, scaled_cents, interpret=d.interpret, block=block, echunk=echunk
+    )
