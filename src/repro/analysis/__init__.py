@@ -1,0 +1,65 @@
+"""Static analysis of the compiled programs and the source tree.
+
+Two planes (see docs/program_contracts.md):
+
+* :mod:`.jaxpr_walk` + :mod:`.contracts` — the program plane: recursive
+  primitive visitation of the actual serve/update jaxprs, a declarative
+  :class:`~.contracts.Contract` rule vocabulary (primitive budgets, host
+  callbacks, collective accounting, sharding leaks, ledger cross-checks),
+  per-protocol contracts registered next to each protocol, and the
+  :func:`~.contracts.check_contracts` enforcement entry point (trace-neutral
+  by construction).
+* :mod:`.lint` — the source plane: ``python -m repro.analysis.lint src/``
+  enforces the repo conventions that keep the program plane checkable.
+"""
+from .jaxpr_walk import (
+    COLLECTIVE_PRIMITIVES,
+    FACTORIZATION_PRIMITIVES,
+    HOST_CALLBACK_PRIMITIVES,
+    collective_stats,
+    primitive_counts,
+    walk_jaxpr,
+)
+from .contracts import (
+    CollectiveBudget,
+    Contract,
+    ContractReport,
+    ContractViolation,
+    Finding,
+    LedgerAccounting,
+    NoHostCallbacks,
+    NoShardingLeak,
+    PrimitiveBudget,
+    check_contracts,
+    contract_for,
+    find_sharding_leaks,
+    forbid_primitives,
+    predict_jaxpr,
+    register_contract,
+    retrace_budget,
+)
+
+__all__ = [
+    "COLLECTIVE_PRIMITIVES",
+    "FACTORIZATION_PRIMITIVES",
+    "HOST_CALLBACK_PRIMITIVES",
+    "walk_jaxpr",
+    "primitive_counts",
+    "collective_stats",
+    "Contract",
+    "ContractReport",
+    "ContractViolation",
+    "Finding",
+    "PrimitiveBudget",
+    "forbid_primitives",
+    "NoHostCallbacks",
+    "CollectiveBudget",
+    "NoShardingLeak",
+    "LedgerAccounting",
+    "register_contract",
+    "contract_for",
+    "check_contracts",
+    "predict_jaxpr",
+    "find_sharding_leaks",
+    "retrace_budget",
+]

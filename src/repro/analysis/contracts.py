@@ -1,0 +1,517 @@
+"""Declarative program contracts for the serve/wire hot paths.
+
+The repo's production guarantees are *structural* facts about compiled
+programs — a warm predict contains zero factorizations, an update is one
+jitted program with no host round-trip, the mesh wire is the only collective
+channel, nothing escapes a fit committed to a mesh sharding.  Until now each
+was enforced ad-hoc (``predict_op_counts`` asserts sprinkled through tests,
+trace-counter deltas snapshotted in the right order by hand).  This module
+makes them first-class:
+
+* a :class:`Rule` vocabulary over the planes the checker inspects — the
+  recursive jaxpr (:class:`PrimitiveBudget`, :class:`NoHostCallbacks`,
+  :class:`CollectiveBudget`), the committed shardings of the artifact's
+  array leaves (:class:`NoShardingLeak` — the PR-8 bug class), and the
+  §4 ledgers cross-checked against :mod:`repro.comm.accounting`
+  (:class:`LedgerAccounting`);
+* a :class:`Contract` = named rule bundle, declared NEXT TO each protocol
+  (``center.py``/``broadcast.py``/``poe.py``/``mesh.py`` call
+  :func:`register_contract` at import time) and looked up per
+  (protocol, impl, phase);
+* one enforcement entry point, :func:`check_contracts`, which builds the
+  artifact's actual serve program TRACE-NEUTRALLY (the serve/update trace
+  counters are snapshotted and restored, so checking an artifact never
+  perturbs a retrace-budget measurement) and raises
+  :class:`ContractViolation` with every finding, or returns the full
+  :class:`ContractReport`;
+* :func:`retrace_budget` — the trace counters as a contract: a context
+  manager that fails if the wrapped block (re)traces more than budgeted.
+
+docs/program_contracts.md tabulates the shipped contracts per
+protocol × phase and how to add a rule.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .jaxpr_walk import (
+    COLLECTIVE_PRIMITIVES,
+    FACTORIZATION_PRIMITIVES,
+    HOST_CALLBACK_PRIMITIVES,
+    collective_stats,
+    primitive_counts,
+)
+
+__all__ = [
+    "Finding",
+    "ContractViolation",
+    "ContractReport",
+    "Contract",
+    "PrimitiveBudget",
+    "forbid_primitives",
+    "NoHostCallbacks",
+    "CollectiveBudget",
+    "NoShardingLeak",
+    "LedgerAccounting",
+    "register_contract",
+    "contract_for",
+    "check_contracts",
+    "find_sharding_leaks",
+    "retrace_budget",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One contract violation: which contract/rule fired and on what."""
+
+    contract: str
+    rule: str
+    detail: str
+
+    def __str__(self) -> str:
+        return f"[{self.contract}] {self.rule}: {self.detail}"
+
+
+class ContractViolation(AssertionError):
+    """Raised by :func:`check_contracts` (and :func:`retrace_budget`) with
+    every finding attached — an AssertionError so existing pytest suites
+    treat a broken contract exactly like a failed assert."""
+
+    def __init__(self, findings):
+        self.findings = tuple(findings)
+        super().__init__(
+            "program contract violated:\n  "
+            + "\n  ".join(str(f) for f in self.findings)
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ContractReport:
+    """What :func:`check_contracts` measured: the contract that ran, the
+    primitive counts and collective stats of the actual serve program, the
+    sharding-leak scan result, and any findings (empty = contract holds)."""
+
+    contract: str
+    protocol: str
+    impl: str
+    phase: str
+    op_counts: dict
+    collectives: dict
+    leaks: tuple
+    findings: tuple
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+
+# --------------------------------------------------------------------------
+# rules
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PrimitiveBudget:
+    """Per-primitive equation budgets over the recursive program jaxpr.
+
+    ``budgets``: ``{primitive_name: max_allowed_count}`` — the warm-serve
+    contract is ``{"cholesky": 0, "eigh": 0}`` (no refactorization, no scheme
+    refit), generalizing the old ``predict_op_counts`` assert into a
+    declarative rule."""
+
+    budgets: tuple  # ((name, max_count), ...) — hashable/declarable inline
+    name: str = "primitive-budget"
+
+    def check(self, ctx) -> list:
+        if ctx.jaxpr is None:
+            return []
+        budgets = dict(self.budgets)
+        counts = primitive_counts(ctx.jaxpr, names=budgets.keys())
+        return [
+            f"{prim}: {counts[prim]} eqns > budget {cap}"
+            for prim, cap in budgets.items()
+            if counts[prim] > cap
+        ]
+
+
+def forbid_primitives(*names) -> PrimitiveBudget:
+    """A zero budget for each named primitive (``forbid_primitives
+    ("cholesky", "eigh")`` is the §5 warm-serve factorization contract);
+    with no names, forbids every one-shot factorization decomposition."""
+    names = names or tuple(sorted(FACTORIZATION_PRIMITIVES))
+    return PrimitiveBudget(budgets=tuple((n, 0) for n in names))
+
+
+@dataclasses.dataclass(frozen=True)
+class NoHostCallbacks:
+    """No host round-trip may hide inside the program: callback primitives
+    (``pure_callback``/``io_callback``/``debug_callback``/...) punch through
+    the device boundary once per dispatch — the PR-7 update() bug class."""
+
+    allow: tuple = ()
+    name: str = "no-host-callbacks"
+
+    def check(self, ctx) -> list:
+        if ctx.jaxpr is None:
+            return []
+        banned = HOST_CALLBACK_PRIMITIVES - set(self.allow)
+        counts = primitive_counts(ctx.jaxpr, names=banned)
+        return [
+            f"host-transfer primitive {prim!r} appears {n}x in a hot-path "
+            "program (one host round-trip per dispatch)"
+            for prim, n in sorted(counts.items())
+            if n > 0
+        ]
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveBudget:
+    """The wire is the ONLY collective channel, and it is budgeted.
+
+    ``max_count``: total collective equations allowed in the program (the
+    batched serve path budgets 0 — machines are a vmap axis, nothing may
+    synchronize; the fused mesh epilogue budgets exactly 1 stacked psum).
+    ``max_bytes``: optional ceiling on the summed collective output payload —
+    cross-checked against the Theorem-1 ledger by the mesh contracts (a
+    collective moving more than the accounted payload is an unaccounted
+    channel)."""
+
+    max_count: int = 0
+    max_bytes: int | None = None
+    names: frozenset = COLLECTIVE_PRIMITIVES
+    name: str = "collective-budget"
+
+    def check(self, ctx) -> list:
+        if ctx.jaxpr is None:
+            return []
+        stats = {
+            k: v for k, v in collective_stats(ctx.jaxpr).items()
+            if k in self.names
+        }
+        total = sum(v["count"] for v in stats.values())
+        out = []
+        if total > self.max_count:
+            detail = ", ".join(
+                "{} x{}".format(k, v["count"]) for k, v in sorted(stats.items())
+            )
+            out.append(
+                f"{total} collective eqns ({detail}) > budget "
+                f"{self.max_count} — an unaccounted collective channel "
+                "beside the §4 wire"
+            )
+        if self.max_bytes is not None:
+            nbytes = sum(v["bytes"] for v in stats.values())
+            if nbytes > self.max_bytes:
+                out.append(
+                    f"collective payload {nbytes} B > budgeted "
+                    f"{self.max_bytes} B (Theorem-1 ledger cross-check)"
+                )
+        return out
+
+
+def find_sharding_leaks(tree, *, max_devices=1, allow=None) -> list:
+    """Array leaves committed to more devices than allowed.
+
+    The PR-8 bug class: a ``shard_map`` output with ``out_specs=P()`` comes
+    back COMMITTED to a replicated ``NamedSharding`` over the whole mesh, and
+    that sharding is sticky — every downstream jit consuming the leaf
+    compiles as m-way SPMD with per-dispatch device sync.  A fit-time program
+    must not let such arrays escape into a serving artifact.
+
+    ``allow``: optional predicate over the leaf's ``/``-joined key path
+    string (e.g. ``lambda p: p.startswith("factors")``) for leaves that are
+    SUPPOSED to be sharded (mesh artifacts shard factors along the machine
+    axis by design).  Returns ``[(path, n_devices), ...]``."""
+    leaks = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        if not isinstance(leaf, jax.Array):
+            continue
+        sharding = getattr(leaf, "sharding", None)
+        if sharding is None:
+            continue
+        ndev = len(sharding.device_set)
+        if ndev <= max_devices:
+            continue
+        pstr = _path_str(path)
+        if allow is not None and allow(pstr):
+            continue
+        leaks.append((pstr, ndev))
+    return leaks
+
+
+def _path_str(path) -> str:
+    """A pytree key path as a stable ``a/b/c`` string (GetAttrKey names,
+    DictKey keys, and sequence indices, uniformly)."""
+    parts = []
+    for k in path:
+        for attr in ("name", "key", "idx"):
+            if hasattr(k, attr):
+                parts.append(str(getattr(k, attr)))
+                break
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+@dataclasses.dataclass(frozen=True)
+class NoShardingLeak:
+    """No artifact leaf may stay committed to a multi-device sharding unless
+    the contract names it as deliberately sharded (``allow_prefixes``)."""
+
+    max_devices: int = 1
+    allow_prefixes: tuple = ()
+    name: str = "no-sharding-leak"
+
+    def check(self, ctx) -> list:
+        if ctx.tree is None:
+            return []
+        allow = None
+        if self.allow_prefixes:
+            prefixes = self.allow_prefixes
+
+            def allow(pstr):
+                return any(p in pstr for p in prefixes)
+
+        leaks = find_sharding_leaks(
+            ctx.tree, max_devices=self.max_devices, allow=allow
+        )
+        return [
+            f"leaf {path!r} is committed to {ndev} devices (> "
+            f"{self.max_devices}) — a mesh sharding leaked out of the "
+            "fit-time program (every downstream jit goes m-way SPMD)"
+            for path, ndev in leaks
+        ]
+
+
+@dataclasses.dataclass(frozen=True)
+class LedgerAccounting:
+    """The three §4 ledgers must stay mutually consistent with
+    :mod:`repro.comm.accounting` — Theorem 1 is an accounting identity, so a
+    protocol whose measured payload undercuts its information ledger (or
+    whose CRC ledger is not whole frames) has an unaccounted channel."""
+
+    name: str = "ledger-accounting"
+
+    def check(self, ctx) -> list:
+        art = ctx.artifact
+        if art is None or getattr(art, "stream", None) is None:
+            return []
+        from ..comm.accounting import CRC_BITS
+
+        wire = int(art.wire_bits)
+        payload = int(art.payload_bits)
+        integrity = int(art.integrity_bits)
+        out = []
+        if payload < wire:
+            out.append(
+                f"payload_bits ({payload}) < wire_bits ({wire}): the wire "
+                "physically moved fewer bits than the Theorem-1 ledger "
+                "charges — an unaccounted side channel"
+            )
+        if integrity % CRC_BITS:
+            out.append(
+                f"integrity_bits ({integrity}) is not a whole number of "
+                f"{CRC_BITS}-bit CRC frames"
+            )
+        if min(wire, payload, integrity) < 0:
+            out.append(
+                f"negative ledger (wire={wire}, payload={payload}, "
+                f"crc={integrity})"
+            )
+        return out
+
+
+# --------------------------------------------------------------------------
+# contracts: named rule bundles, declared next to each protocol
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Contract:
+    """A named bundle of rules enforced together over one program/artifact."""
+
+    name: str
+    rules: tuple
+
+    def check(self, ctx) -> list:
+        findings = []
+        for rule in self.rules:
+            findings.extend(
+                Finding(self.name, rule.name, detail)
+                for detail in rule.check(ctx)
+            )
+        return findings
+
+
+@dataclasses.dataclass
+class _CheckContext:
+    """What one enforcement pass inspects: the program jaxpr (None for
+    artifact-only phases), the artifact, and the pytree whose shardings the
+    leak scan walks."""
+
+    jaxpr: object = None
+    artifact: object = None
+    tree: object = None
+
+
+# (protocol, impl, phase) -> Contract; impl "*" matches any.  Protocol
+# modules register at import top level (repro.analysis.lint enforces that).
+_CONTRACTS: dict = {}
+
+
+def register_contract(protocol: str, phase: str, contract: Contract,
+                      impl: str = "*") -> Contract:
+    """Declare the contract for one (protocol, phase) — called at module top
+    level next to the protocol's ``register_protocol``.  ``impl`` narrows to
+    one execution substrate (``"mesh"``); ``"*"`` covers the rest."""
+    key = (protocol, impl, phase)
+    if key in _CONTRACTS:
+        raise ValueError(f"contract already registered for {key}")
+    _CONTRACTS[key] = contract
+    return contract
+
+
+def contract_for(protocol: str, impl: str, phase: str) -> Contract:
+    """Most-specific registered contract for (protocol, impl, phase)."""
+    for key in ((protocol, impl, phase), (protocol, "*", phase)):
+        if key in _CONTRACTS:
+            return _CONTRACTS[key]
+    known = sorted({f"{p}/{i}/{ph}" for p, i, ph in _CONTRACTS})
+    raise KeyError(
+        f"no contract registered for {protocol}/{impl}/{phase} "
+        f"(known: {', '.join(known)})"
+    )
+
+
+# --------------------------------------------------------------------------
+# trace-neutral program building + the check_contracts entry point
+# --------------------------------------------------------------------------
+
+
+@contextlib.contextmanager
+def _trace_neutral():
+    """Snapshot/restore the serve/update trace counters around an abstract
+    trace, so building a program to INSPECT it never shows up in a retrace
+    budget (the old ``predict_op_counts`` traced the predict body and bumped
+    the counter, forcing callers into a fragile snapshot-before ordering)."""
+    from ..core.protocols import base
+
+    saved_serve = dict(base._SERVE_TRACES)
+    saved_update = dict(base._UPDATE_TRACES)
+    try:
+        yield
+    finally:
+        base._SERVE_TRACES.clear()
+        base._SERVE_TRACES.update(saved_serve)
+        base._UPDATE_TRACES.clear()
+        base._UPDATE_TRACES.update(saved_update)
+
+
+def predict_jaxpr(art, X_star):
+    """The artifact's ACTUAL serve program as a closed jaxpr (the shard_map
+    mesh program for mesh broadcast/PoE artifacts), built trace-neutrally.
+
+    Trace-neutral means the counters are unchanged by this call.  Because
+    ``make_jaxpr`` shares the pjit trace cache with ``jax.jit``, the abstract
+    trace also WARMS the serve cache: a subsequent ``predict`` at the same
+    shapes reuses it and performs no additional trace — so the counters stay
+    an accurate record of tracing work actually performed, in either call
+    order (the property ``launch/serve_gp.py`` used to guarantee by hand with
+    a snapshot-before-check ordering)."""
+    from ..core.protocols import base
+
+    if base._uses_mesh_predict(art):
+        from ..core.protocols import mesh
+
+        fn = mesh._predict_mesh_impl
+    else:
+        fn = base._predict_impl
+    with _trace_neutral():
+        return jax.make_jaxpr(fn)(
+            art, jnp.asarray(X_star, jnp.float32), base._availability(art, None)
+        )
+
+
+def check_contracts(art, X_star=None, phase: str = "predict", *,
+                    raise_on_violation: bool = True) -> ContractReport:
+    """Enforce the registered (protocol, impl, phase) contract on a fitted
+    artifact.
+
+    Builds the artifact's real serve program (trace-neutrally — calling this
+    never perturbs ``serve_trace_count``/``update_trace_count``), runs every
+    rule of the registered contract over the program jaxpr, the artifact's
+    committed shardings, and its §4 ledgers, and raises
+    :class:`ContractViolation` listing every finding (or returns the clean
+    :class:`ContractReport` with the measured counts).  ``X_star``: query
+    batch the program is traced at (a (8, d) probe is synthesized from the
+    artifact when omitted)."""
+    contract = contract_for(art.protocol, art.impl, phase)
+    jaxpr = None
+    if phase == "predict":
+        if X_star is None:
+            d = _query_dim(art)
+            X_star = np.zeros((8, d), np.float32)
+        jaxpr = predict_jaxpr(art, X_star)
+    ctx = _CheckContext(jaxpr=jaxpr, artifact=art, tree=art)
+    findings = contract.check(ctx)
+    report = ContractReport(
+        contract=contract.name,
+        protocol=art.protocol,
+        impl=art.impl,
+        phase=phase,
+        op_counts=dict(
+            primitive_counts(jaxpr, names=FACTORIZATION_PRIMITIVES)
+        ) if jaxpr is not None else {},
+        collectives=collective_stats(jaxpr) if jaxpr is not None else {},
+        leaks=tuple(find_sharding_leaks(art)),
+        findings=tuple(findings),
+    )
+    if findings and raise_on_violation:
+        raise ContractViolation(findings)
+    return report
+
+
+def _query_dim(art) -> int:
+    """Feature dimension of the artifact's query space."""
+    for key in ("Xc", "X_recon", "Xs"):
+        if key in art.data:
+            return int(art.data[key].shape[-1])
+    raise ValueError("cannot infer query dimension; pass X_star explicitly")
+
+
+@contextlib.contextmanager
+def retrace_budget(protocol: str, *, serve: int = 0, update: int | None = None):
+    """The retrace contract as a context manager: the wrapped block may
+    (re)trace the protocol's serve program at most ``serve`` times (and, when
+    given, its update program at most ``update`` times) — a warm serve loop
+    budgets 0.  Raises :class:`ContractViolation` on exit otherwise.  Pair
+    with :func:`check_contracts`, which is trace-neutral by construction, so
+    ordering between structural checks and budget windows no longer
+    matters."""
+    from ..core.protocols import base
+
+    s0 = base._SERVE_TRACES[protocol]
+    u0 = base._UPDATE_TRACES[protocol]
+    yield
+    findings = []
+    ds = base._SERVE_TRACES[protocol] - s0
+    if ds > serve:
+        findings.append(Finding(
+            f"{protocol}-retrace-budget", "serve-retraces",
+            f"{ds} serve (re)traces > budget {serve}",
+        ))
+    if update is not None:
+        du = base._UPDATE_TRACES[protocol] - u0
+        if du > update:
+            findings.append(Finding(
+                f"{protocol}-retrace-budget", "update-retraces",
+                f"{du} update (re)traces > budget {update}",
+            ))
+    if findings:
+        raise ContractViolation(findings)

@@ -40,9 +40,6 @@ __all__ = [
     "train_gp",
 ]
 
-# pinned in linalg_safe so every module shares ONE constant (and tolerance)
-_JITTER = DEFAULT_JITTER
-
 
 def _inner_products(X, X2, backend: str):
     """X @ X2^T, optionally through the Pallas tiled-gram kernel.
@@ -159,7 +156,7 @@ def posterior_factors(G, y, noise_var):
     n = G.shape[0]
     noise = jnp.asarray(noise_var)
     noise = jnp.broadcast_to(noise, (n,)) if noise.ndim <= 1 else noise
-    K = G + jnp.diag(noise + _JITTER)
+    K = G + jnp.diag(noise + DEFAULT_JITTER)
     # fit-time: jitter already on the diagonal; escalate only if the factor
     # still comes back non-finite (rank-deficient gram)
     L = chol_safe(K)
@@ -194,7 +191,7 @@ def nlml_from_gram(G, y, noise_var):
     n = G.shape[0]
     # differentiated (training loss): one-shot jitter — while_loop escalation
     # has no reverse-mode rule
-    L = chol_jittered(G, noise_var + _JITTER)
+    L = chol_jittered(G, noise_var + DEFAULT_JITTER)
     alpha = jax.scipy.linalg.cho_solve((L, True), y)
     return (
         0.5 * y @ alpha

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from . import quantizers as Q
+from .linalg_safe import eigh_sym
 
 __all__ = [
     "fit_scheme",
@@ -58,7 +59,7 @@ def _unit_distortion_table(max_bits: int) -> jnp.ndarray:
 
 
 def _sqrt_psd_jax(M):
-    w, v = jnp.linalg.eigh(M)
+    w, v = eigh_sym(M)
     w = jnp.clip(w, 0.0, None)
     s = jnp.sqrt(w)
     inv_s = jnp.where(s > 1e-12 * jnp.max(s), 1.0 / jnp.where(s == 0, 1.0, s), 0.0)
@@ -70,7 +71,7 @@ def fit_scheme(Qx, Qy, total_bits: int, max_bits: int = 8):
     """Returns dict(T, T_inv, sigma, rates) — the on-device scheme state."""
     Qy_half, Qy_inv_half = _sqrt_psd_jax(Qy.astype(jnp.float32))
     B = Qy_half @ Qx.astype(jnp.float32) @ Qy_half
-    lam, U = jnp.linalg.eigh(0.5 * (B + B.T))
+    lam, U = eigh_sym(0.5 * (B + B.T))
     lam = jnp.clip(lam[::-1], 0.0, None)
     U = U[:, ::-1]
     T = U.T @ Qy_half

@@ -26,9 +26,22 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["DEFAULT_JITTER", "chol_jittered", "chol_safe"]
+__all__ = ["DEFAULT_JITTER", "chol_jittered", "chol_safe", "eigh_sym"]
 
 DEFAULT_JITTER = 1e-6
+
+
+def eigh_sym(M):
+    """Eigendecomposition of a symmetric matrix — the ONE on-device ``eigh``
+    home (repro.analysis.lint: ``raw-eigh``).
+
+    ``jnp.linalg.eigh`` silently reads only one triangle, so a nominally
+    symmetric input hides asymmetry bugs; callers symmetrize explicitly at
+    the call site (``eigh_sym(0.5 * (B + B.T))``) where the input is only
+    symmetric up to roundoff.  Centralized so eigh policy changes (clipping,
+    dtype promotion, a backend switch) happen in one place, like the Cholesky
+    jitter policy above."""
+    return jnp.linalg.eigh(M)
 
 
 def chol_jittered(M, eps):
@@ -69,9 +82,13 @@ def chol_safe(M, eps=0.0, *, growth=10.0, max_tries=6):
         t, L = carry
         return (t < max_tries) & ~jnp.all(jnp.isfinite(L))
 
+    growth = jnp.asarray(growth, M.dtype)
+
     def body(carry):
         t, L = carry
-        L_new = jnp.linalg.cholesky(M + (eps + base * growth**t) * eye)
+        # explicit cast: float ** int32 has no promotion path under
+        # jax_numpy_dtype_promotion=strict (the strict-mode runtime contract)
+        L_new = jnp.linalg.cholesky(M + (eps + base * growth ** t.astype(M.dtype)) * eye)
         ok = jnp.isfinite(L)
         return t + 1, jnp.where(ok, L, L_new)
 

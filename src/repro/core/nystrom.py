@@ -32,9 +32,6 @@ __all__ = [
     "chol_append_at",
 ]
 
-# pinned in linalg_safe so every module shares ONE constant (and tolerance)
-_JITTER = DEFAULT_JITTER
-
 
 def nystrom_complete(G_KK, G_KN, exact_diag=None):
     """Ghat = G_NK G_KK^{-1} G_KN   (eq. 61).
@@ -44,7 +41,7 @@ def nystrom_complete(G_KK, G_KN, exact_diag=None):
     K = G_KK.shape[0]
     # differentiated (training-loss gram_override path): one-shot jitter —
     # lax.while_loop escalation has no reverse-mode rule
-    L = chol_jittered(G_KK, _JITTER * jnp.trace(G_KK) / K)
+    L = chol_jittered(G_KK, DEFAULT_JITTER * jnp.trace(G_KK) / K)
     W = jax.scipy.linalg.solve_triangular(L, G_KN, lower=True)  # (K, N)
     Ghat = W.T @ W
     if exact_diag is not None:
@@ -59,7 +56,7 @@ def nystrom_cross(G_KK, G_KN, G_star_K):
     Nyström-structured train gram amplifies y-components outside the rank-K
     span — see CenterGP.predict."""
     K = G_KK.shape[0]
-    L = chol_jittered(G_KK, _JITTER * jnp.trace(G_KK) / K)
+    L = chol_jittered(G_KK, DEFAULT_JITTER * jnp.trace(G_KK) / K)
     W = jax.scipy.linalg.solve_triangular(L, G_KN, lower=True)  # (K, N)
     B = jax.scipy.linalg.solve_triangular(L, G_star_K.T, lower=True)  # (K, t)
     return B.T @ W
@@ -89,9 +86,9 @@ def nystrom_factors(G_KK, G_KN, y, noise_var):
     K = G_KK.shape[0]
     # fit-time: escalate jitter on non-finite factors (rank-deficient grams
     # from corrupted/demoted wire rows) rather than serving NaNs
-    L = chol_safe(G_KK, _JITTER * jnp.trace(G_KK) / K)
+    L = chol_safe(G_KK, DEFAULT_JITTER * jnp.trace(G_KK) / K)
     W = jax.scipy.linalg.solve_triangular(L, G_KN, lower=True)  # (K, N)
-    s2 = noise_var + _JITTER
+    s2 = noise_var + DEFAULT_JITTER
     M = s2 * jnp.eye(K, dtype=W.dtype) + W @ W.T
     Lm = chol_safe(M)
     alpha = nystrom_kinv(W, Lm, s2, y)
@@ -102,7 +99,7 @@ def nystrom_apply(factors, G_star_K, g_star_star, noise_var):
     """Query-time half of the Nyström predictive: O(t N K) triangular solves
     against cached :func:`nystrom_factors` — no Cholesky factorization."""
     L, W, Lm, alpha = factors["L_KK"], factors["W"], factors["L_M"], factors["alpha"]
-    s2 = noise_var + _JITTER
+    s2 = noise_var + DEFAULT_JITTER
     # test cross-covariances via the same Nyström map: G_*N = G_*K G_KK^{-1} G_KN
     B = jax.scipy.linalg.solve_triangular(L, G_star_K.T, lower=True)  # (K, t)
     G_sN = B.T @ W  # (t, N)
@@ -148,7 +145,7 @@ def nystrom_apply_cached(factors, G_star_K, g_star_star, noise_var):
     Ainv, U, Lm, walpha = (
         factors["Ainv"], factors["U"], factors["L_M"], factors["walpha"],
     )
-    s2 = noise_var + _JITTER
+    s2 = noise_var + DEFAULT_JITTER
     B = Ainv @ G_star_K.T  # (K, t)
     mean = B.T @ walpha
     P = (U - U @ jax.scipy.linalg.cho_solve((Lm, True), U)) / s2  # (K, K)

@@ -492,6 +492,15 @@ def serve_trace_count(protocol: str = "center") -> int:
     return _SERVE_TRACES[protocol]
 
 
+def _machine_index(j):
+    """The update() machine index as a device scalar via an EXPLICIT
+    device_put of a numpy scalar.  ``jnp.int32(j)`` would materialize the
+    same buffer through an IMPLICIT host-to-device transfer, which the
+    strict-mode runtime contract (``jax.transfer_guard("disallow")`` around
+    the streaming-update tests) rejects."""
+    return jax.device_put(np.int32(j))
+
+
 def _predict_impl(art: FittedProtocol, X_star, avail=None):
     _SERVE_TRACES[art.protocol] += 1  # runs at trace time only
     p = art.params
@@ -956,44 +965,30 @@ def load_artifact(directory: str, step: int | None = None, shardings=None) -> Fi
     )
 
 
-def _walk_jaxpr(jaxpr):
-    from jax.core import Jaxpr, ClosedJaxpr
-
-    def subs(v):
-        if isinstance(v, ClosedJaxpr):
-            yield v.jaxpr
-        elif isinstance(v, Jaxpr):
-            yield v
-        elif isinstance(v, (list, tuple)):
-            for x in v:
-                yield from subs(x)
-
-    for eqn in jaxpr.eqns:
-        yield eqn
-        for pv in eqn.params.values():
-            for sub in subs(pv):
-                yield from _walk_jaxpr(sub)
-
-
 def predict_op_counts(art: FittedProtocol, X_star, ops=("cholesky", "eigh")) -> dict:
     """Count primitives in the :func:`predict` program for this artifact —
     the structural serve-path check: a warm predict must contain ZERO
     ``cholesky`` (no refactorization) and ZERO ``eigh`` (no scheme refit)
     equations.  Mesh artifacts are checked on their actual shard_map serve
     program (the walk descends into the shard_map body jaxpr).
-    benchmarks/serve_bench.py records these counts in BENCH_serve.json and
-    tests/test_serving.py locks them."""
-    if _uses_mesh_predict(art):
-        from . import mesh
 
-        fn = mesh._predict_mesh_impl
-    else:
-        fn = _predict_impl
-    jaxpr = jax.make_jaxpr(fn)(
-        art, jnp.asarray(X_star, jnp.float32), _availability(art, None)
-    )
+    Thin wrapper over :mod:`repro.analysis` (which generalizes this into the
+    declarative :func:`repro.analysis.check_contracts` rule system); kept for
+    benchmarks/serve_bench.py's BENCH_serve.json and the existing test
+    suites.  Trace-neutral: the abstract trace this performs is excluded from
+    ``serve_trace_count``, so callers may order it freely around retrace
+    assertions."""
+    from ...analysis.contracts import predict_jaxpr
+
+    jaxpr = predict_jaxpr(art, X_star)
     counts = {op: 0 for op in ops}
     for eqn in _walk_jaxpr(jaxpr.jaxpr):
         if eqn.primitive.name in counts:
             counts[eqn.primitive.name] += 1
     return counts
+
+
+def _walk_jaxpr(jaxpr):
+    from ...analysis.jaxpr_walk import walk_jaxpr
+
+    return walk_jaxpr(jaxpr)

@@ -35,8 +35,8 @@ from ..nystrom import (
     nystrom_apply_cached,
     nystrom_kinv,
     chol_update_rank,
-    _JITTER,
 )
+from ..linalg_safe import DEFAULT_JITTER
 from ..registry import FUSIONS, SCHEMES, ProtocolSpec, register_protocol
 from . import base, mesh
 from .base import (
@@ -558,7 +558,7 @@ def _predict_broadcast_fused(art, spec, X_star, sq_star, g_ss, noise, avail):
         lambda Ci, sqi, mi: kernel_from_inner(art.kernel, p, Ci, sq_star, sqi)
         * mi[None, :]
     )(C, sq_exact, mask)
-    s2 = noise + _JITTER
+    s2 = noise + DEFAULT_JITTER
     # the woodbury quad-form projector P = (U - U M^{-1} U)/s2 per expert
     P = jax.vmap(
         lambda U, Lm: (U - U @ jax.scipy.linalg.cho_solve((Lm, True), U)) / s2
@@ -617,7 +617,7 @@ def _update_broadcast_jit(art, X_new, y_new, j, pre):
     ip_new = jnp.einsum("ind,ied->ine", art.data["Xs"], reps)  # (m, n_pad, n_new)
     pos = art.stream.cols
     y2 = jax.lax.dynamic_update_slice(art.y, y_new, (pos,))
-    s2 = noise + _JITTER
+    s2 = noise + DEFAULT_JITTER
 
     def upd(fac, ipn, sqi, sqn, mi):
         G_KN_new = kernel_from_inner(art.kernel, p, ipn, sqi, sqn) * mi[:, None]
@@ -658,8 +658,8 @@ def _update_broadcast(art: FittedProtocol, X_new, y_new, j, pre=None):
     if art.impl == "mesh":
         # the sharded factors grow IN PLACE on their devices: re-encode and
         # rank-k growth run as one shard_map program, no host pull
-        return mesh._update_mesh_jit(art, X_new, y_new, jnp.int32(j), pre)
-    return _update_broadcast_jit(art, X_new, y_new, jnp.int32(j), pre)
+        return mesh._update_mesh_jit(art, X_new, y_new, base._machine_index(j), pre)
+    return _update_broadcast_jit(art, X_new, y_new, base._machine_index(j), pre)
 
 
 register_protocol(ProtocolSpec(
@@ -668,4 +668,36 @@ register_protocol(ProtocolSpec(
     predict=_predict_broadcast,
     update=_update_broadcast,
     fit_host=fit_broadcast_host,
+))
+
+
+# --------------------------------------------------------------------------
+# the program contract (repro.analysis.check_contracts enforces it); the
+# impl="mesh" substrate registers its own override in mesh.py
+# --------------------------------------------------------------------------
+from ...analysis.contracts import (
+    CollectiveBudget,
+    Contract,
+    LedgerAccounting,
+    NoHostCallbacks,
+    NoShardingLeak,
+    forbid_primitives,
+    register_contract,
+)
+
+# §5.2 batched serving: m machines are a vmap axis inside one program —
+# nothing may factorize, synchronize, or stay sharded.
+register_contract("broadcast", "predict", Contract(
+    name="broadcast-serve",
+    rules=(
+        forbid_primitives(),
+        NoHostCallbacks(),
+        CollectiveBudget(max_count=0),
+        NoShardingLeak(max_devices=1),
+        LedgerAccounting(),
+    ),
+))
+register_contract("broadcast", "update", Contract(
+    name="broadcast-update",
+    rules=(NoShardingLeak(max_devices=1), LedgerAccounting()),
 ))

@@ -40,8 +40,8 @@ from ..nystrom import (
     nystrom_kinv,
     chol_update_rank,
     chol_append_at,
-    _JITTER,
 )
+from ..linalg_safe import DEFAULT_JITTER, chol_jittered
 from ..registry import SCHEMES, ProtocolSpec, register_protocol
 from . import base
 from .base import (
@@ -506,9 +506,7 @@ def _fit_center(parts, cfg, params: GPParams | None = None) -> FittedProtocol:
         G = nystrom_complete(G_KK, G_KN, exact_diag=builder._exact_diag(p))
         factors = posterior_factors(G, y_all, noise)
         # FITC-consistent test map Q_*N = G_*K G_KK^{-1} G_KN needs (L_KK, W)
-        L_KK = jnp.linalg.cholesky(
-            G_KK + _JITTER * jnp.trace(G_KK) / K * jnp.eye(K, dtype=G_KK.dtype)
-        )
+        L_KK = chol_jittered(G_KK, DEFAULT_JITTER * jnp.trace(G_KK) / K)
         factors["L_KK"] = L_KK
         factors["W"] = jax.scipy.linalg.solve_triangular(L_KK, G_KN, lower=True)
     elif gram_mode == "direct":
@@ -613,7 +611,7 @@ def _update_center_jit(art, X_new, y_new, j, pre):
     p = art.params
     noise = jnp.exp(p.log_noise)
     n_new = X_new.shape[0]
-    s2 = noise + _JITTER
+    s2 = noise + DEFAULT_JITTER
     if pre is None:
         # transmitting machine, jit-safe scheme: the full wire plane
         # (encode→pack→CRC→unpack→decode) runs inside this program
@@ -700,7 +698,7 @@ def _update_center(art: FittedProtocol, X_new, y_new, j, pre=None):
             'gram_mode="nystrom" only (direct/fitc query paths read the '
             "fit-time wire codes, which update does not extend)"
         )
-    return _update_center_jit(art, X_new, y_new, jnp.int32(j), pre)
+    return _update_center_jit(art, X_new, y_new, base._machine_index(j), pre)
 
 
 register_protocol(ProtocolSpec(
@@ -709,4 +707,37 @@ register_protocol(ProtocolSpec(
     predict=_predict_center,
     update=_update_center,
     fit_host=fit_center_host,
+))
+
+
+# --------------------------------------------------------------------------
+# the program contract (repro.analysis.check_contracts enforces it)
+# --------------------------------------------------------------------------
+from ...analysis.contracts import (
+    CollectiveBudget,
+    Contract,
+    LedgerAccounting,
+    NoHostCallbacks,
+    NoShardingLeak,
+    forbid_primitives,
+    register_contract,
+)
+
+# §5.1 serving: the center holds ONE factor set, so a warm predict is pure
+# triangular algebra — zero factorizations, zero host round-trips, zero
+# collectives (machines were a fit-time construct), and nothing committed to
+# more than one device (impl="mesh" unshards at the fit boundary).
+register_contract("center", "predict", Contract(
+    name="center-serve",
+    rules=(
+        forbid_primitives(),
+        NoHostCallbacks(),
+        CollectiveBudget(max_count=0),
+        NoShardingLeak(max_devices=1),
+        LedgerAccounting(),
+    ),
+))
+register_contract("center", "update", Contract(
+    name="center-update",
+    rules=(NoShardingLeak(max_devices=1), LedgerAccounting()),
 ))

@@ -38,8 +38,8 @@ from ..nystrom import (
     nystrom_kinv,
     chol_update_rank,
     chol_append_at,
-    _JITTER,
 )
+from ..linalg_safe import DEFAULT_JITTER
 from ..fusion import kl_fuse_diag
 from ..registry import FUSIONS, SCHEMES
 from .base import StreamState, WireState, _mask_gram, _SERVE_TRACES, _UPDATE_TRACES
@@ -310,7 +310,7 @@ def _update_mesh_impl(art, X_new, y_new, j, pre):
             i = jax.lax.axis_index(MESH_AXIS)
             fac_i = jax.tree.map(lambda a: a[0], fac)
             Xi, mi, sqi = Xs_blk[0], mask_blk[0], sq_blk[0]
-            s2 = jnp.exp(pr.log_noise) + _JITTER
+            s2 = jnp.exp(pr.log_noise) + DEFAULT_JITTER
             X_eff = jnp.where(i == jj, Xn, dec)  # own batch exact, peers X̂
             sqn = jnp.sum(X_eff**2, -1)
             G_KN_new = kernel_from_inner(
@@ -356,7 +356,7 @@ def _update_mesh_impl(art, X_new, y_new, j, pre):
             i = jax.lax.axis_index(MESH_AXIS)
             fac_i = jax.tree.map(lambda a: a[0], fac)
             Xi, mi, sqi = Xs_blk[0], mask_blk[0], sq_blk[0]
-            s2 = jnp.exp(pr.log_noise) + _JITTER
+            s2 = jnp.exp(pr.log_noise) + DEFAULT_JITTER
             nn = Xn.shape[0]
             vi = jnp.where(i == jj, 1.0, 0.0) * jnp.ones((nn,), jnp.float32)
             Xi2 = jax.lax.dynamic_update_slice(Xi, Xn, (ps, 0))
@@ -401,7 +401,45 @@ def _update_mesh_impl(art, X_new, y_new, j, pre):
                                stream=stream)
 
 
-_update_mesh_jit = jax.jit(_update_mesh_impl)
+_update_mesh_jit_raw = jax.jit(_update_mesh_impl)
+
+# Leaf path prefixes that are SUPPOSED to live sharded along the machine
+# axis (that is the point of the substrate); every other artifact leaf is
+# single-device, enforced by the mesh-update contract (repro.analysis:
+# NoShardingLeak).
+_MESH_SHARDED_LEAVES = ("factors/", "data/")
+
+
+def _update_mesh_jit(art, X_new, y_new, j, pre):
+    """In-bucket mesh update plus sharding hygiene on the outputs.
+
+    The update program consumes mesh-sharded factors, so GSPMD commits ALL
+    of its outputs to the mesh — the logically-replicated leaves (params,
+    y, wire state, stream ledger) come back COMMITTED to a replicated
+    NamedSharding over every device.  That is the PR-8 leak class: the
+    commitment is sticky, so downstream host/batched consumers of those
+    leaves compile as m-way SPMD with per-dispatch device sync, and the
+    update program itself re-specializes between the first dispatch
+    (uncommitted fit-time leaves) and every later one.  A single-device
+    commitment is no fix — one jit cannot mix a leaf pinned to device 0
+    with factors pinned to the mesh — so do exactly what the fit boundary
+    does (see ``_mesh_wire_state``): host-sync the leaked leaves to erase
+    the commitment.  Only the O(1)/O(rows) bookkeeping moves; the O(cols²)
+    factor and data buffers stay device-resident and mesh-sharded, which is
+    the streaming contract that matters.
+    """
+    out = _update_mesh_jit_raw(art, X_new, y_new, j, pre)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(out)
+    fixed = []
+    for path, leaf in leaves:
+        if (
+            isinstance(leaf, jax.Array)
+            and len(leaf.sharding.device_set) > 1
+            and not _path_str(path).startswith(_MESH_SHARDED_LEAVES)
+        ):
+            leaf = jnp.asarray(jax.device_get(leaf))
+        fixed.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, fixed)
 
 
 # --------------------------------------------------------------------------
@@ -472,3 +510,50 @@ def broadcast_gp_mesh(
         check_vma=False,
     )
     return jax.jit(fn)(X, y, X_star)
+
+
+# --------------------------------------------------------------------------
+# the impl="mesh" program contracts: overrides for the protocols whose serve
+# program actually runs on the machine mesh (broadcast/PoE; center unshards
+# at the fit boundary and keeps the batched contract)
+# --------------------------------------------------------------------------
+from ...analysis.contracts import (
+    CollectiveBudget,
+    Contract,
+    LedgerAccounting,
+    NoHostCallbacks,
+    NoShardingLeak,
+    _path_str,
+    forbid_primitives,
+    register_contract,
+)
+
+# _MESH_SHARDED_LEAVES (defined next to _update_mesh_jit above): factor and
+# data leaves are deliberately mesh-sharded; anything else committed to more
+# than one device is the PR-8 leak class (replicated-committed shard_map
+# outputs turning every downstream jit m-way SPMD).
+
+# The fused serve epilogue is ONE stacked psum of the (mu, s2-moment, weight)
+# rows — the single collective the §4 wire model licenses at serve time.
+# More than one means the legacy 2-3 psum epilogue (or an unaccounted
+# channel) regressed in.
+_MESH_SERVE_CONTRACT = Contract(
+    name="mesh-serve",
+    rules=(
+        forbid_primitives(),
+        NoHostCallbacks(),
+        CollectiveBudget(max_count=1),
+        NoShardingLeak(max_devices=1, allow_prefixes=_MESH_SHARDED_LEAVES),
+        LedgerAccounting(),
+    ),
+)
+_MESH_UPDATE_CONTRACT = Contract(
+    name="mesh-update",
+    rules=(
+        NoShardingLeak(max_devices=1, allow_prefixes=_MESH_SHARDED_LEAVES),
+        LedgerAccounting(),
+    ),
+)
+for _protocol in ("broadcast", "poe"):
+    register_contract(_protocol, "predict", _MESH_SERVE_CONTRACT, impl="mesh")
+    register_contract(_protocol, "update", _MESH_UPDATE_CONTRACT, impl="mesh")

@@ -21,7 +21,8 @@ from ..gp import (
     posterior_from_gram,
     train_gp,
 )
-from ..nystrom import chol_append_at, _JITTER
+from ..linalg_safe import DEFAULT_JITTER
+from ..nystrom import chol_append_at
 from ..registry import FUSIONS, ProtocolSpec, register_protocol
 from . import base, mesh
 from .base import (
@@ -249,7 +250,7 @@ def _update_poe_jit(art, X_new, y_new, j, pre):
     m = len(art.fit_lengths)
     n_new = X_new.shape[0]
     k = gram_fn(art.kernel)
-    s2 = noise + _JITTER
+    s2 = noise + DEFAULT_JITTER
     Xs, mask = art.data["Xs"], art.data["mask"]
     pos = art.stream.cols
     zero = jnp.int32(0)
@@ -292,8 +293,8 @@ def _update_poe_jit(art, X_new, y_new, j, pre):
 def _update_poe(art: FittedProtocol, X_new, y_new, j, pre=None):
     if art.impl == "mesh":
         # sharded expert buffers grow in place on their devices (shard_map)
-        return mesh._update_mesh_jit(art, X_new, y_new, jnp.int32(j), pre)
-    return _update_poe_jit(art, X_new, y_new, jnp.int32(j), pre)
+        return mesh._update_mesh_jit(art, X_new, y_new, base._machine_index(j), pre)
+    return _update_poe_jit(art, X_new, y_new, base._machine_index(j), pre)
 
 
 register_protocol(ProtocolSpec(
@@ -302,4 +303,36 @@ register_protocol(ProtocolSpec(
     predict=_predict_poe,
     update=_update_poe,
     fit_host=fit_poe_host,
+))
+
+
+# --------------------------------------------------------------------------
+# the program contract (repro.analysis.check_contracts enforces it); the
+# impl="mesh" substrate registers its own override in mesh.py
+# --------------------------------------------------------------------------
+from ...analysis.contracts import (
+    CollectiveBudget,
+    Contract,
+    LedgerAccounting,
+    NoHostCallbacks,
+    NoShardingLeak,
+    forbid_primitives,
+    register_contract,
+)
+
+# zero-rate baseline: experts are a vmap axis; the wire ledger is 0 and the
+# serve program must be as silent as the wire.
+register_contract("poe", "predict", Contract(
+    name="poe-serve",
+    rules=(
+        forbid_primitives(),
+        NoHostCallbacks(),
+        CollectiveBudget(max_count=0),
+        NoShardingLeak(max_devices=1),
+        LedgerAccounting(),
+    ),
+))
+register_contract("poe", "update", Contract(
+    name="poe-update",
+    rules=(NoShardingLeak(max_devices=1), LedgerAccounting()),
 ))

@@ -16,20 +16,17 @@ from .linalg_safe import DEFAULT_JITTER, chol_jittered
 
 __all__ = ["SGPR", "train_sgpr", "elbo"]
 
-# pinned in linalg_safe so every module shares ONE constant (and tolerance)
-_JITTER = DEFAULT_JITTER
-
 
 def _chol(K):
     # the ELBO (and hence _chol) sits under jax.grad — one-shot jitter only
-    return chol_jittered(K, _JITTER)
+    return chol_jittered(K, DEFAULT_JITTER)
 
 
 def elbo(params: GPParams, Z, X, y, kernel: str):
     """Titsias ELBO:  log N(y | 0, Qnn + s2 I) - tr(Knn - Qnn)/(2 s2),
     with Qnn = Knm Kmm^{-1} Kmn, computed in O(n m^2)."""
     k = gram_fn(kernel)
-    s2 = jnp.exp(params.log_noise) + _JITTER
+    s2 = jnp.exp(params.log_noise) + DEFAULT_JITTER
     n, m = X.shape[0], Z.shape[0]
     Kmm = k(params, Z)
     Kmn = k(params, Z, X)
@@ -56,7 +53,7 @@ class SGPR:
     def predict(self, X_star):
         """Standard SGPR predictive (Titsias eq. 6)."""
         k = gram_fn(self.kernel)
-        s2 = jnp.exp(self.params.log_noise) + _JITTER
+        s2 = jnp.exp(self.params.log_noise) + DEFAULT_JITTER
         m = self.Z.shape[0]
         Kmm = k(self.params, self.Z)
         Kmn = k(self.params, self.Z, self.X)
@@ -83,7 +80,7 @@ class SGPR:
         the machine-local summary a distributed sparse GP ships (Fig. 7).
         Returns (m_u (m,), diag(S_u) (m,))."""
         k = gram_fn(self.kernel)
-        s2 = jnp.exp(self.params.log_noise) + _JITTER
+        s2 = jnp.exp(self.params.log_noise) + DEFAULT_JITTER
         m = self.Z.shape[0]
         Kmm = k(self.params, self.Z)
         Kmn = k(self.params, self.Z, self.X)

@@ -128,7 +128,8 @@ def main():
     import numpy as np
     import jax
     from repro.core import DGPConfig, DistributedGP
-    from repro.core.protocols import predict_op_counts, serve_trace_count
+    from repro.analysis import check_contracts
+    from repro.core.protocols import serve_trace_count
 
     fusion = args.fusion
     if fusion is None:
@@ -237,19 +238,30 @@ def main():
                   f"{machine} in {time.perf_counter()-t0:.3f}s "
                   f"(ledger {art.wire_bits/1e3:.1f} kbit)")
 
-    # snapshot the retrace delta BEFORE predict_op_counts (which itself traces)
+    # contract check is trace-neutral (repro.analysis), so it can run before
+    # the retrace delta is read — no snapshot-ordering fragility to maintain
+    report = check_contracts(
+        art, rng.normal(size=(args.batch, args.d)).astype(np.float32),
+        raise_on_violation=False,
+    )
     retraces = serve_trace_count(args.protocol) - c0
     lat_ms = np.asarray(lat[1:]) * 1e3  # drop the first (trace) batch
-    ops = predict_op_counts(art, rng.normal(size=(args.batch, args.d)).astype(np.float32))
     print(f"serve: {args.queries} batches x {args.batch} pts | warm p50 "
           f"{np.percentile(lat_ms, 50):.2f} ms, p99 {np.percentile(lat_ms, 99):.2f} ms"
           f" | {args.batch/ (np.median(lat_ms)/1e3):.0f} queries/s")
     if args.timeout_ms:
         print(f"timeout budget: {n_over}/{args.queries - 1} warm requests over "
               f"{args.timeout_ms:.0f} ms")
+    ops = report.op_counts
+    n_coll = sum(v["count"] for v in report.collectives.values())
     print(f"warm path: retraces={retraces} (expected {n_updates}, one per "
-          f"streamed growth) cholesky_eqns={ops['cholesky']} "
-          f"eigh_eqns={ops['eigh']} (0/0 = no refit, no refactorization)")
+          f"streamed growth) cholesky_eqns={ops.get('cholesky', 0)} "
+          f"eigh_eqns={ops.get('eigh', 0)} collectives={n_coll} "
+          f"contract={report.contract}:{'ok' if report.ok else 'VIOLATED'}")
+    if not report.ok:
+        for finding in report.findings:
+            print(f"contract violation: {finding}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

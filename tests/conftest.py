@@ -30,3 +30,23 @@ def rand_cov(rng, d, scale=1.0):
 def cov_pair(rng):
     d = 12
     return rand_cov(rng, d), rand_cov(rng, d), d
+
+
+@pytest.fixture
+def strict_device_guard():
+    """Run the guarded block under jax's strictest runtime modes: any IMPLICIT
+    host<->device transfer (a numpy array silently crossing into a jitted
+    program, a traced value concretized on host) and any implicit dtype
+    promotion raise instead of silently costing a sync / widening to f64.
+
+    The warm-serve and streaming-update paths must pass under both — they are
+    the runtime complement of the jaxpr-level contracts in repro.analysis
+    (``check_contracts`` proves no callback primitive is IN the program; this
+    proves the dispatch loop AROUND the program moves nothing by accident).
+    Explicit jax.device_put/device_get remain allowed.
+    """
+    import jax
+
+    with jax.transfer_guard("disallow"), \
+            jax.numpy_dtype_promotion("strict"):
+        yield

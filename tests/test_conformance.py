@@ -34,6 +34,7 @@ from repro.core.distributed_gp import (
     serve_trace_count,
     MESH_AXIS,
 )
+from repro.analysis import check_contracts, retrace_budget
 
 try:
     import hypothesis
@@ -351,12 +352,19 @@ def test_mesh_predict_structure_and_streaming():
     update() charges the frozen per-machine rate to the ledger."""
     parts, Xt = _problem(seed=6, m=4)
     art = fit(parts, 24, "broadcast", steps=4, impl="mesh")
-    assert predict_op_counts(art, Xt) == {"cholesky": 0, "eigh": 0}
+    # the registered mesh-serve contract: zero factorizations, ONE stacked
+    # psum, machine-axis shardings only (check is trace-neutral, so its
+    # placement relative to the retrace budget below is free)
+    report = check_contracts(art, Xt)
+    assert report.op_counts["cholesky"] == 0
+    assert report.op_counts["eigh"] == 0
+    assert sum(v["count"] for v in report.collectives.values()) == 1
     predict(art, Xt)  # trace once
     c0 = serve_trace_count("broadcast")
-    for _ in range(3):
-        predict(art, Xt)
-    assert serve_trace_count("broadcast") == c0
+    with retrace_budget("broadcast", serve=0):
+        for _ in range(3):
+            predict(art, Xt)
+        check_contracts(art, Xt)
     rng = np.random.default_rng(0)
     Xn = rng.normal(size=(7, parts[0][0].shape[1])).astype(np.float32)
     art2 = update(art, Xn, np.zeros(7, np.float32), machine=2)

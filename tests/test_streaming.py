@@ -43,6 +43,7 @@ from repro.core.protocols import (
     update_trace_count,
 )
 from repro.core.protocols.streaming import next_pow2
+from repro.analysis import check_contracts
 from repro.comm.accounting import (
     CRC_BITS,
     integrity_bits_formula,
@@ -396,6 +397,9 @@ def test_warm_predict_on_bucketed_buffers_is_factorization_free(protocol):
     predict jaxpr on a streamed (padded) artifact still contains zero
     cholesky/eigh equations."""
     _, _, _, _, art, Xt = _warm_and_stream(protocol)
+    report = check_contracts(art, Xt)  # full registered contract, incl. budgets
+    assert report.op_counts["cholesky"] == 0
+    assert report.op_counts["eigh"] == 0
     assert predict_op_counts(art, Xt) == {"cholesky": 0, "eigh": 0}
 
 
@@ -407,7 +411,31 @@ def test_mesh_in_bucket_updates_do_not_retrace(protocol):
     u0, u1, c0, c1, art, Xt = _warm_and_stream(protocol, impl="mesh")
     assert u1 == u0
     assert c1 == c0
-    assert predict_op_counts(art, Xt) == {"cholesky": 0, "eigh": 0}
+    # the mesh-serve contract additionally budgets the fused epilogue to ONE
+    # stacked psum and allows only the machine-axis factor/data shardings
+    check_contracts(art, Xt)
+
+
+def test_in_bucket_update_under_strict_device_guard(strict_device_guard):
+    """A warm in-bucket update survives jax.transfer_guard("disallow") +
+    strict dtype promotion: the streamed batch is device_put explicitly, the
+    machine index crosses via the explicit _machine_index transfer, and
+    nothing else moves — the runtime complement of the update contract."""
+    import jax.numpy as jnp
+
+    with jax.transfer_guard("allow"), jax.numpy_dtype_promotion("standard"):
+        parts, Xt, f = _problem(23, n=96, d=4)
+        art = fit(parts, 16, "center", steps=2)
+        Xn, yn = _batch(f, 6, 4, 0)
+        art = update(art, Xn, yn, machine=1)   # warm the update program
+        predict(art, Xt)                        # and the serve program
+        Xn_dev = jax.device_put(jnp.asarray(Xn))
+        yn_dev = jax.device_put(jnp.asarray(yn))
+        Xt_dev = jax.device_put(jnp.asarray(Xt))
+    art = update(art, Xn_dev, yn_dev, machine=1)
+    mu, s2 = predict(art, Xt_dev)
+    assert np.isfinite(np.asarray(jax.block_until_ready(mu))).all()
+    assert np.all(np.asarray(s2) > 0)
 
 
 def test_vq_in_bucket_updates_do_not_retrace():
