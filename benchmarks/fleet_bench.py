@@ -1,0 +1,164 @@
+"""Multi-tenant fleet serving benchmark (docs/fleet_serving.md).
+
+Two measurements, both GATED (an assertion failure fails the bench run):
+
+* ``fleet/predict_stacked_S{S}`` — the core tentpole claim: ONE stacked
+  vmapped dispatch answering S resident tenants vs a serial python loop
+  making S per-tenant predict calls at the SAME per-request batch.  Gate:
+  aggregate qps of the stacked path >= 5x the serial loop.
+* ``fleet/traffic_zipf_T{T}`` — the serving story end to end: >=256 tenants
+  (quick mode shrinks the REQUEST count, never the tenant count), zipf-mixed
+  traffic through the FleetServer (LRU artifact cache with checkpoint-backed
+  load-on-miss, latency-budgeted micro-batching).  Reports aggregate qps,
+  p50/p99 request latency, cache hit rate, tenant swaps.  Gate: the
+  steady-state loop retraces NOTHING (fleet + serve trace counters flat) —
+  tenant swaps, cache misses, and ragged tail flushes included.
+
+The 256-tenant fleet is built from ONE base fit via exact y-scaling
+(:func:`repro.core.fleet.scale_targets`): genuinely distinct posteriors,
+same homogeneity bucket, no per-tenant fit cost.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from .common import emit, timed
+
+N_TENANTS = 256  # the >=256-tenant floor holds in quick mode too
+QPS_SPEEDUP_GATE = 5.0
+
+
+def main(quick: bool = True):
+    import jax
+    from repro.core import DGPConfig, DistributedGP
+    from repro.core.fleet import FleetStack, fleet_trace_count
+    from repro.core.protocols import serve_trace_count
+    from repro.launch.fleet import (
+        FleetServer,
+        build_fleet,
+        serve_loop,
+        zipf_tenants,
+    )
+
+    m, n, d, steps = 4, 256, 6, 5
+    batch = 16  # query points per request
+    slots = 32  # micro-batch flush width == stacked dispatch size
+    cache_cap = 64
+    n_requests = 256 if quick else 2048
+
+    cfg = DGPConfig(
+        protocol="broadcast",
+        gram_backend="pallas",  # fused fleet epilogue path
+        gram_mode="nystrom",
+        bits_per_sample=8,
+        steps=steps,
+    )
+    est = DistributedGP(cfg)
+    rng = np.random.default_rng(0)
+    W = rng.normal(size=(d, 2))
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    y = (np.sin(X @ W[:, 0]) + 0.4 * (X @ W[:, 1])
+         + 0.05 * rng.normal(size=n)).astype(np.float32)
+    base_art = est.fit(X, y, m, key=jax.random.PRNGKey(0))
+
+    with tempfile.TemporaryDirectory() as td:
+        store, tids = build_fleet([base_art], N_TENANTS, td)
+
+        # ---- gate 1: stacked dispatch vs serial per-tenant loop ----------
+        sub = tids[:slots]
+        arts = [store.load(t) for t in sub]  # resident for BOTH paths
+        stack = FleetStack(dict(zip(sub, arts)), slots=slots)
+        Xq = rng.normal(size=(slots, batch, d)).astype(np.float32)
+
+        def fleet_call():
+            mu, var = stack.predict(sub, Xq)
+            jax.block_until_ready(mu)
+            return mu
+
+        def serial_call():
+            out = []
+            for art, Xi in zip(arts, Xq):
+                mu, var = est.predict(art, Xi)
+                jax.block_until_ready(mu)
+                out.append(mu)
+            return out
+
+        _, us_fleet = timed(fleet_call, repeats=10)
+        _, us_serial = timed(serial_call, repeats=10)
+        qps_fleet = slots * batch / (us_fleet / 1e6)
+        qps_serial = slots * batch / (us_serial / 1e6)
+        speedup = qps_fleet / qps_serial
+        # parity spot-check rides along: gates are only meaningful if the
+        # stacked path computes the same posterior
+        mu_f = np.asarray(fleet_call())
+        mu_s = np.asarray(serial_call())
+        dmu = float(np.max(np.abs(mu_f - mu_s)))
+        emit(
+            f"fleet/predict_stacked_S{slots}",
+            us_fleet,
+            qps_fleet=qps_fleet,
+            qps_serial=qps_serial,
+            speedup=speedup,
+            max_dmu_vs_serial=dmu,
+            gate_ok=int(speedup >= QPS_SPEEDUP_GATE and dmu < 1e-3),
+        )
+        assert dmu < 1e-3, (
+            f"stacked fleet predict diverges from the serial per-tenant "
+            f"loop: max |dmu| = {dmu:.3e}"
+        )
+        assert speedup >= QPS_SPEEDUP_GATE, (
+            f"fleet stacked predict speedup gate FAILED: {speedup:.2f}x < "
+            f"{QPS_SPEEDUP_GATE}x (qps_fleet={qps_fleet:.0f}, "
+            f"qps_serial={qps_serial:.0f})"
+        )
+
+        # ---- gate 2: zipf traffic, steady state never retraces -----------
+        server = FleetServer(
+            store, cache_artifacts=cache_cap, slots=slots, budget_ms=2.0
+        )
+        stream = zipf_tenants(tids, n_requests, a=1.1)
+        make_query = lambda i: rng.normal(size=(batch, d)).astype(np.float32)
+        # warm pass traces the healthy-shape program; the measured loop
+        # (swaps, misses, ragged tail flush included) must hold the
+        # counters flat
+        serve_loop(server, stream[: 4 * slots], make_query)
+        server.reset_stats()
+        c0 = fleet_trace_count("broadcast")
+        s0 = serve_trace_count("broadcast")
+        t0 = time.perf_counter()
+        stats = serve_loop(server, stream, make_query)
+        wall = time.perf_counter() - t0
+        retraces = (fleet_trace_count("broadcast") - c0) + \
+            (serve_trace_count("broadcast") - s0)
+        qps = stats["completed"] * batch / wall
+        cache = stats["cache"]
+        emit(
+            f"fleet/traffic_zipf_T{N_TENANTS}",
+            wall / max(stats["completed"], 1) * 1e6,
+            tenants=N_TENANTS,
+            requests=stats["completed"],
+            qps=qps,
+            p50_ms=stats["p50_ms"],
+            p99_ms=stats["p99_ms"],
+            hit_rate=cache["hit_rate"],
+            evictions=cache["evictions"],
+            stack_swaps=stats["stack_swaps"],
+            retraces=retraces,
+            gate_ok=int(retraces == 0),
+        )
+        assert stats["completed"] == n_requests, (
+            f"fleet server dropped requests: {stats['completed']} of "
+            f"{n_requests} completed"
+        )
+        assert retraces == 0, (
+            f"steady-state retrace gate FAILED: {retraces} retrace(s) during "
+            "the measured zipf traffic loop (tenant swaps and cache misses "
+            "must not retrace)"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -23,13 +23,14 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list of: fig2,fig3,fig4,fig56,fig7,kernels,"
                          "ablation_bits,roofline,hotpath,serve,mesh,vq,wire,"
-                         "fault,stream")
+                         "fault,stream,fleet")
     args = ap.parse_args()
     quick = not args.full
 
     from . import fig2_distortion, fig3_pca, fig4_gp1d, fig56_regression, fig7_sparse
     from . import kernels_bench, roofline, ablation_bits, hotpath_bench, serve_bench
     from . import mesh_bench, vq_bench, wire_bench, fault_bench, stream_bench
+    from . import fleet_bench
     from . import common
 
     benches = {
@@ -48,6 +49,7 @@ def main() -> None:
         "wire": lambda: wire_bench.main(quick=quick),
         "fault": lambda: fault_bench.main(quick=quick),
         "stream": lambda: stream_bench.main(quick=quick),
+        "fleet": lambda: fleet_bench.main(quick=quick),
     }
     selected = args.only.split(",") if args.only else list(benches)
     print("name,us_per_call,derived")

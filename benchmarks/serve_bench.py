@@ -119,9 +119,44 @@ def main(quick: bool = True) -> None:
     t0 = time.perf_counter()
     jax.block_until_ready(predict(art_u, Xq))  # the one retrace growth pays
     us_regrow = (time.perf_counter() - t0) * 1e6
+    # first_predict_after_us here INCLUDES the capacity-growth retrace (the
+    # first update after a fresh fit always crosses into a bigger bucket) —
+    # it is a compile-cost row, not a steady-state serving row
     emit("serve/update_stream_m40", us_update, n_new=n_new,
          wire_bits_added=art_u.wire_bits - art.wire_bits,
-         first_predict_after_us=us_regrow)
+         first_predict_after_us=us_regrow, includes_growth_retrace=1)
+
+    # ---- in-bucket streaming update: NO retrace allowed ----
+    # the growth above padded the buffers to a power-of-two capacity, so the
+    # next small update stays inside the bucket: shapes are unchanged and the
+    # first predict after it must reuse the cached program.  The gate is
+    # asserted — a post-update recompile regression FAILS the bench instead
+    # of silently inflating first_predict_after_us (the pre-PR7 behavior,
+    # ~276ms, re-paid compile on every update).
+    Xn2 = rng.normal(size=(n_new, d)).astype(np.float32)
+    t0 = time.perf_counter()
+    art_u2 = update(art_u, Xn2, yn, machine=2)
+    jax.block_until_ready(art_u2.factors["alpha"])
+    us_update2 = (time.perf_counter() - t0) * 1e6
+    c1 = serve_trace_count("center")
+    t0 = time.perf_counter()
+    jax.block_until_ready(predict(art_u2, Xq))
+    us_after2 = (time.perf_counter() - t0) * 1e6
+    retraces_after = serve_trace_count("center") - c1
+    gate_ok = retraces_after == 0 and us_after2 < WARM_GATE_US
+    emit("serve/update_stream_inbucket_m40", us_update2, n_new=n_new,
+         first_predict_after_us=us_after2, retraces_after_update=retraces_after,
+         p50_gate_us=WARM_GATE_US, gate_ok=int(gate_ok))
+    assert retraces_after == 0, (
+        f"in-bucket streaming update retraced the serve program "
+        f"{retraces_after}x (capacity unchanged — the predict must reuse "
+        "the cached trace)"
+    )
+    assert us_after2 < WARM_GATE_US, (
+        f"first predict after an in-bucket update took {us_after2:.0f}us "
+        f"(> {WARM_GATE_US:.0f}us warm gate) — post-update recompile "
+        "regression"
+    )
 
     # ---- checkpoint round-trip: bitwise-identical serving ----
     mu0, v0 = predict(art, Xq)

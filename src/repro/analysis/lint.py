@@ -90,6 +90,7 @@ _PROTOCOL_HOST_SYNC = {
 _REGISTER_CALLS = (
     "register_kernel", "register_scheme", "register_fusion",
     "register_protocol", "register_kernel_op", "register_contract",
+    "register_tune_candidates",
 )
 
 RULES = {

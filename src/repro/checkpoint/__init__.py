@@ -6,4 +6,5 @@ from .ckpt import (
     latest_step,
     save_artifact,
     load_artifact_arrays,
+    load_artifact_meta,
 )

@@ -121,6 +121,20 @@ def save_artifact(directory: str, step: int, tree, meta: dict) -> str:
     return path
 
 
+def load_artifact_meta(directory: str, step: int | None = None) -> dict:
+    """The sidecar metadata of an artifact checkpoint WITHOUT touching the
+    npz — a cheap screen (protocol, config, format version) before paying an
+    array load.  The fleet's artifact store uses this to check
+    bucket-compatibility of a tenant before admitting it.  ``step=None``
+    loads the latest."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    with open(os.path.join(directory, f"meta_{step:08d}.json")) as f:
+        return json.load(f)
+
+
 def load_artifact_arrays(directory: str, step: int | None = None):
     """(meta, {key_path: np.ndarray}) for an artifact checkpoint; ``step=None``
     loads the latest.  When the meta records ``array_checksums`` (format v4),

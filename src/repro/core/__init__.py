@@ -14,7 +14,7 @@ entry points (``single_center_gp`` & co.) remain as deprecated wrappers in
 """
 from . import quantizers, rate_distortion, transforms, distortion, schemes
 from . import gp, nystrom, poe, sparse_gp, fusion
-from . import registry, config, protocols, api, distributed_gp
+from . import registry, config, protocols, api, distributed_gp, fleet
 
 from .schemes import PerSymbolScheme, OptimalScheme, DimReductionScheme, PCAScheme
 from .gp import GPModel, GPParams, train_gp, init_params
@@ -32,6 +32,16 @@ from .protocols import (
     save_artifact,
     load_artifact,
 )
+from .fleet import (
+    FleetStack,
+    ArtifactCache,
+    ArtifactStore,
+    stack_artifacts,
+    pad_to_capacity,
+    scale_targets,
+    bucket_key,
+    fleet_trace_count,
+)
 # legacy entry points: deprecated wrappers (warn once, then delegate)
 from .distributed_gp import (
     single_center_gp,
@@ -45,7 +55,7 @@ from .distributed_gp import (
 __all__ = [
     "quantizers", "rate_distortion", "transforms", "distortion", "schemes",
     "gp", "nystrom", "poe", "sparse_gp", "fusion",
-    "registry", "config", "protocols", "api", "distributed_gp",
+    "registry", "config", "protocols", "api", "distributed_gp", "fleet",
     "PerSymbolScheme", "OptimalScheme", "DimReductionScheme", "PCAScheme",
     "GPModel", "GPParams", "train_gp", "init_params",
     "SGPR", "train_sgpr",
@@ -55,4 +65,6 @@ __all__ = [
     "DGPConfig", "DistributedGP",
     "split_machines", "single_center_gp", "broadcast_gp", "poe_baseline",
     "FittedProtocol", "fit", "predict", "update", "save_artifact", "load_artifact",
+    "FleetStack", "ArtifactCache", "ArtifactStore", "stack_artifacts",
+    "pad_to_capacity", "scale_targets", "bucket_key", "fleet_trace_count",
 ]

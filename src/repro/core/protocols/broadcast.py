@@ -540,14 +540,47 @@ def _predict_broadcast_experts(art, X_star, sq_star, g_ss, noise):
     return jax.vmap(apply_i)(jnp.arange(m), art.factors)
 
 
-def _predict_broadcast_fused(art, spec, X_star, sq_star, g_ss, noise, avail):
-    """One-launch serve epilogue (pallas backend + cached Nyström factors):
-    the per-expert cached apply AND the fusion moment rows run as a single
-    ``kernels.epilogue`` call; only the method's cheap ``finalize`` remains
-    outside.  Algebraically equal to experts + ``spec.fuse`` (asserted by
-    tests/test_kernel_runtime.py for every fusion method)."""
-    from ...kernels.epilogue.ops import epilogue_moments
+def _uses_fused_epilogue(art, spec) -> bool:
+    """Static predicate: this artifact serves through the one-launch fused
+    epilogue (pallas backend, cached Nyström serve operands, a fusion that
+    exposes moment rows).  Shared with :mod:`repro.core.fleet`, which batches
+    the same path over a leading tenant axis."""
+    return (
+        art.gram_backend == "pallas"
+        and art.gram_mode == "nystrom"
+        and "Ainv" in art.factors
+        and spec.moments is not None
+        and spec.finalize is not None
+    )
 
+
+def _epilogue_projector(art, noise=None):
+    """The woodbury quad-form projector ``P = (U - U M^{-1} U)/s2`` per
+    expert — the QUERY-INDEPENDENT half of the fused serve epilogue's
+    operand set (it depends only on the artifact's cached factors and
+    noise).  The single-tenant serve path rebuilds it inside each predict;
+    the fleet stack (:mod:`repro.core.fleet`) precomputes it ONCE per
+    admitted tenant and keeps it device-resident, amortizing the per-expert
+    ``cho_solve`` chain across every query the tenant serves."""
+    if noise is None:
+        noise = jnp.exp(art.params.log_noise)
+    f = art.factors
+    s2 = noise + DEFAULT_JITTER
+    return jax.vmap(
+        lambda U, Lm: (U - U @ jax.scipy.linalg.cho_solve((Lm, True), U)) / s2
+    )(f["U"], f["L_M"])
+
+
+def _fused_epilogue_operands(art, X_star, sq_star, g_ss, noise, avail,
+                             P=None):
+    """Build the ``kernels.epilogue`` operand set ``(G, Ainv, P, walpha,
+    prior, w)`` for one artifact's fused serve: the masked cross-gram tiles,
+    the cached inverse, the woodbury quad-form projector, and the
+    availability weights.  Split out of :func:`_predict_broadcast_fused` so
+    the fleet path (:mod:`repro.core.fleet`) can vmap THIS over a stacked
+    tenant axis and hand the batch to the tenant-batched epilogue kernel;
+    ``P`` accepts that path's precomputed :func:`_epilogue_projector` (None
+    = build it here, as the single-tenant serve does)."""
     p = art.params
     f = art.factors
     Xs, mask = art.data["Xs"], art.data["mask"]
@@ -558,30 +591,35 @@ def _predict_broadcast_fused(art, spec, X_star, sq_star, g_ss, noise, avail):
         lambda Ci, sqi, mi: kernel_from_inner(art.kernel, p, Ci, sq_star, sqi)
         * mi[None, :]
     )(C, sq_exact, mask)
-    s2 = noise + DEFAULT_JITTER
-    # the woodbury quad-form projector P = (U - U M^{-1} U)/s2 per expert
-    P = jax.vmap(
-        lambda U, Lm: (U - U @ jax.scipy.linalg.cho_solve((Lm, True), U)) / s2
-    )(f["U"], f["L_M"])
+    if P is None:
+        P = _epilogue_projector(art, noise)
     w = jnp.ones((m,), jnp.float32) if avail is None else jnp.asarray(
         avail, jnp.float32
     )
     prior = g_ss + noise
-    S = epilogue_moments(G, f["Ainv"], P, f["walpha"], g_ss, prior, w,
-                         fuse=art.fuse)
+    return G, f["Ainv"], P, f["walpha"], prior, w
+
+
+def _predict_broadcast_fused(art, spec, X_star, sq_star, g_ss, noise, avail):
+    """One-launch serve epilogue (pallas backend + cached Nyström factors):
+    the per-expert cached apply AND the fusion moment rows run as a single
+    ``kernels.epilogue`` call; only the method's cheap ``finalize`` remains
+    outside.  Algebraically equal to experts + ``spec.fuse`` (asserted by
+    tests/test_kernel_runtime.py for every fusion method)."""
+    from ...kernels.epilogue.ops import epilogue_moments
+
+    m = art.data["Xs"].shape[0]
+    G, Ainv, P, walpha, prior, w = _fused_epilogue_operands(
+        art, X_star, sq_star, g_ss, noise, avail
+    )
+    S = epilogue_moments(G, Ainv, P, walpha, g_ss, prior, w, fuse=art.fuse)
     return spec.finalize(S, m, prior)
 
 
 def _predict_broadcast(art: FittedProtocol, X_star, sq_star, g_ss, noise,
                        avail=None):
     spec = FUSIONS.get(art.fuse)
-    if (
-        art.gram_backend == "pallas"
-        and art.gram_mode == "nystrom"
-        and "Ainv" in art.factors
-        and spec.moments is not None
-        and spec.finalize is not None
-    ):
+    if _uses_fused_epilogue(art, spec):
         return _predict_broadcast_fused(art, spec, X_star, sq_star, g_ss,
                                         noise, avail)
     mus, s2s = _predict_broadcast_experts(art, X_star, sq_star, g_ss, noise)

@@ -64,6 +64,80 @@ def _epilogue_kernel(g_ref, a_ref, p_ref, wa_ref, gss_ref, prior_ref, w_ref,
     o_ref[...] += jnp.concatenate([r0, r1, r2, pad], axis=0)
 
 
+def _epilogue_fleet_kernel(g_ref, a_ref, p_ref, wa_ref, gss_ref, prior_ref,
+                           w_ref, o_ref, *, fuse):
+    # grid (T, t-tiles, m): expert axis innermost, so each tenant's output
+    # tile is revisited across its m experts with the accumulator init at
+    # the first expert — tenants NEVER share an accumulator row (summing
+    # all T*m experts into one tile would fuse tenants together)
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    G = g_ref[0, 0]        # (bt, K)
+    A = a_ref[0, 0]        # (K, K)  Ainv
+    P = p_ref[0, 0]        # (K, K)
+    wa = wa_ref[0, 0]      # (1, K)
+    gss = gss_ref[0]       # (1, bt)
+    prior = prior_ref[0]
+    w = w_ref[0]           # (1, bt)
+
+    Bt = jax.lax.dot_general(
+        G, A, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (bt, K)
+    mu = jnp.sum(Bt * wa, axis=1, keepdims=True).T  # (1, bt)
+    Q = jax.lax.dot_general(
+        Bt, P, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    quad = jnp.sum(Bt * Q, axis=1, keepdims=True).T
+    s2 = jnp.maximum(gss - quad, 1e-12)
+
+    # fusion moment rows — MUST mirror FusionSpec.moments term for term
+    if fuse == "none":
+        r0, r1, r2 = mu, s2, w
+    elif fuse == "kl":
+        r0, r1, r2 = w * mu, w * (s2 + mu * mu), w
+    elif fuse == "rbcm":
+        beta = 0.5 * (jnp.log(prior) - jnp.log(s2)) * w
+        r0, r1, r2 = beta / s2, beta * mu / s2, beta
+    else:  # poe / gpoe / bcm share precision rows
+        r0, r1, r2 = w / s2, w * mu / s2, w
+
+    pad = jnp.zeros((ROWS - 3, mu.shape[1]), jnp.float32)
+    o_ref[0] += jnp.concatenate([r0, r1, r2, pad], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("fuse", "block", "interpret"))
+def epilogue_fleet_pallas(G, Ainv, P, walpha, gss, prior, w, *, fuse,
+                          block=None, interpret=False):
+    """Tenant-batched fused serve epilogue: G (T, m, t, K); Ainv/P
+    (T, m, K, K); walpha (T, m, 1, K); gss/prior (T, 1, t); w (T, m, t).
+    t and K must be LANE-multiples (ops.py pads); ``block`` is the tuned
+    t-tile (None = full t, must divide t).  Returns the (T, ROWS, t)
+    accumulator; rows [:, :3] are each tenant's summed fusion moments."""
+    T, m, t, K = G.shape
+    bt = t if block is None else int(block)
+    grid = (T, t // bt, m)
+    return pl.pallas_call(
+        functools.partial(_epilogue_fleet_kernel, fuse=fuse),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bt, K), lambda i, s, j: (i, j, s, 0)),
+            pl.BlockSpec((1, 1, K, K), lambda i, s, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, K, K), lambda i, s, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, K), lambda i, s, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, bt), lambda i, s, j: (i, 0, s)),
+            pl.BlockSpec((1, 1, bt), lambda i, s, j: (i, 0, s)),
+            pl.BlockSpec((1, 1, bt), lambda i, s, j: (i, j, s)),
+        ],
+        out_specs=pl.BlockSpec((1, ROWS, bt), lambda i, s, j: (i, 0, s)),
+        out_shape=jax.ShapeDtypeStruct((T, ROWS, t), jnp.float32),
+        interpret=interpret,
+    )(G, Ainv, P, walpha, gss, prior, w)
+
+
 @functools.partial(jax.jit, static_argnames=("fuse", "interpret"))
 def epilogue_pallas(G, Ainv, P, walpha, gss, prior, w, *, fuse,
                     interpret=False):

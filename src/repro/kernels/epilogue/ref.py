@@ -24,9 +24,13 @@ Inputs (m experts, t test points, K retained columns):
 """
 from __future__ import annotations
 
+import functools
+
+import jax
 import jax.numpy as jnp
 
-__all__ = ["epilogue_moments_ref", "EPILOGUE_FUSES"]
+__all__ = ["epilogue_moments_ref", "epilogue_moments_fleet_ref",
+           "EPILOGUE_FUSES"]
 
 EPILOGUE_FUSES = ("none", "kl", "poe", "gpoe", "bcm", "rbcm")
 
@@ -55,3 +59,13 @@ def epilogue_moments_ref(G, Ainv, P, walpha, gss, prior, w, *, fuse):
     s2 = jnp.maximum(gss[None, :] - quad, 1e-12)
     wc = jnp.asarray(w, mu.dtype)[:, None] * jnp.ones_like(mu)
     return jnp.sum(_moment_rows(fuse, mu, s2, prior, wc), axis=0)
+
+
+def epilogue_moments_fleet_ref(G, Ainv, P, walpha, gss, prior, w, *, fuse):
+    """Tenant-batched twin of :func:`epilogue_moments_ref`: every operand
+    carries a leading tenant axis T (``G (T, m, t, K)``, ``gss/prior
+    (T, t)``, ``w (T, m)``) and the moment rows sum over each tenant's OWN
+    m experts only — returns ``(T, 3, t)``.  One vmap of the single-tenant
+    oracle; the pallas kernel must match this tenant for tenant."""
+    fn = functools.partial(epilogue_moments_ref, fuse=fuse)
+    return jax.vmap(fn)(G, Ainv, P, walpha, gss, prior, w)

@@ -20,7 +20,6 @@ only to the cached winner instead of the largest tune candidate.
 """
 from __future__ import annotations
 
-import os
 import time
 
 import jax
@@ -62,14 +61,15 @@ def _qgram_packed_xla(words, rates, scaled_cents, y, mask, total_bits, has_mask)
     return xhat @ jnp.asarray(y, jnp.float32).T
 
 
-_TUNE_CANDIDATES = ((128, 128), (256, 128), (128, 256), (256, 256))
+# candidate menu lives in the runtime's central registry (satellite of the
+# fleet-epilogue work: every family's sweep table is declared next to its
+# KernelImpl and enumerable from one place)
+_TUNE_CANDIDATES = runtime.register_tune_candidates(
+    "qgram_packed", ((128, 128), (256, 128), (128, 256), (256, 256))
+)
 
-
-def _interpret_autotune() -> bool:
-    """Normally the sweep only runs on the compiled (TPU) path — timing the
-    interpreter is meaningless.  REPRO_AUTOTUNE_INTERPRET=1 lets tests drive
-    the full autotune round-trip (sweep -> persist -> warm hit) on CPU."""
-    return os.environ.get("REPRO_AUTOTUNE_INTERPRET", "") == "1"
+# kept as a name (tests/benchmarks import it); the policy is runtime's
+_interpret_autotune = runtime.interpret_autotune
 
 
 def _padded_inputs(words, rates, scaled_cents, y, mask, echunk, bn, bp):
@@ -102,8 +102,9 @@ def _autotune_block(words, rates, scaled_cents, y, mask, echunk, total_bits,
         bits=total_bits,
         extra=(f"echunk={echunk}",),
     )
-    max_bn = max(c[0] for c in _TUNE_CANDIDATES)
-    max_bp = max(c[1] for c in _TUNE_CANDIDATES)
+    cands = runtime.tune_candidates("qgram_packed")
+    max_bn = max(c[0] for c in cands)
+    max_bp = max(c[1] for c in cands)
     padded = None  # built lazily: only a cache MISS pays the max-pad
 
     def measure(cand):
@@ -125,7 +126,7 @@ def _autotune_block(words, rates, scaled_cents, y, mask, echunk, total_bits,
         jax.block_until_ready(fn())
         return time.perf_counter() - t0
 
-    return runtime.autotune(key, _TUNE_CANDIDATES, measure, DEFAULT_BLOCK_PACKED)
+    return runtime.autotune(key, cands, measure, DEFAULT_BLOCK_PACKED)
 
 
 def _pack_meta(rates, d_pad):

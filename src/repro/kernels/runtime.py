@@ -118,6 +118,49 @@ def dispatch(name: str, interpret: bool | None = None):
 
 
 # --------------------------------------------------------------------------
+# autotune candidate registry (one menu per op family)
+# --------------------------------------------------------------------------
+#
+# Families used to keep their candidate tables as private module constants,
+# which meant a new shape family (the tenant-batched fleet epilogue) had no
+# sanctioned place to declare what is worth sweeping.  Candidates now
+# register next to the KernelImpl, at module top level, and every sweep
+# (qgram's block autotune, the fleet epilogue's t-tile resolve) reads the
+# same table.
+
+_TUNE_CANDIDATES: dict[str, tuple] = {}
+
+
+def register_tune_candidates(op: str, candidates: Iterable[tuple]) -> tuple:
+    """Declare the autotune candidate set for one kernel op (module top
+    level, like :func:`register_kernel_op`).  Re-registration replaces the
+    menu — the persistent cache keys are shape-scoped, so stale winners that
+    fall off the menu are ignored by :func:`autotune`'s membership check."""
+    cands = tuple(tuple(c) for c in candidates)
+    _TUNE_CANDIDATES[op] = cands
+    return cands
+
+
+def tune_candidates(op: str) -> tuple:
+    """The registered candidate menu for ``op`` (KeyError names the menu on
+    a typo, mirroring the registry convention)."""
+    try:
+        return _TUNE_CANDIDATES[op]
+    except KeyError:
+        raise KeyError(
+            f"no autotune candidates registered for {op!r}: known are "
+            f"{sorted(_TUNE_CANDIDATES)}"
+        ) from None
+
+
+def interpret_autotune() -> bool:
+    """Normally sweeps only run on the compiled (TPU) path — timing the
+    interpreter is meaningless.  REPRO_AUTOTUNE_INTERPRET=1 lets tests drive
+    the full autotune round-trip (sweep -> persist -> warm hit) on CPU."""
+    return os.environ.get("REPRO_AUTOTUNE_INTERPRET", "") == "1"
+
+
+# --------------------------------------------------------------------------
 # persistent autotune cache
 # --------------------------------------------------------------------------
 #

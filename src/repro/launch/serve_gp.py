@@ -29,10 +29,12 @@ import sys
 import time
 
 
-def _retry(label: str, fn, attempts: int = 3, backoff: float = 0.5):
+def _retry(label: str, fn, attempts: int = 3, backoff: float = 0.5,
+           sleep=time.sleep):
     """Run ``fn()`` with exponential-backoff retries; re-raise after the last
     attempt (transient load/fit failures should not kill an unattended
-    server, persistent ones should)."""
+    server, persistent ones should).  ``sleep`` is injectable so tests
+    exercise the backoff schedule without waiting it out."""
     for k in range(attempts):
         try:
             return fn()
@@ -43,7 +45,7 @@ def _retry(label: str, fn, attempts: int = 3, backoff: float = 0.5):
             print(f"  [{label}] attempt {k + 1}/{attempts} failed "
                   f"({type(e).__name__}: {e}); retrying in {wait:.1f}s",
                   file=sys.stderr)
-            time.sleep(wait)
+            sleep(wait)
 
 
 def _parse_chaos(spec: str):
@@ -73,6 +75,70 @@ def _parse_chaos(spec: str):
                 "flip:RATE, straggle:J@SECONDS)"
             )
     return plan
+
+
+def _run_fleet(args, art, degraded_avail, rng):
+    """``--fleet`` mode: serve a multi-tenant fleet derived from the fitted
+    artifact through the launch.fleet server (LRU artifact cache,
+    latency-budgeted micro-batching, one stacked dispatch per flush).  The
+    chaos/degraded machinery applies PER TENANT: every 7th flush-width block
+    tags one tenant's request with the degraded availability mask, and only
+    that tenant's answers renormalize over survivors."""
+    import tempfile
+
+    import numpy as np
+    from repro.core.fleet import fleet_trace_count
+    from repro.core.protocols import serve_trace_count
+
+    from .fleet import FleetServer, build_fleet, serve_loop, zipf_tenants
+
+    n_requests = max(args.queries, 4 * args.fleet_slots)
+    with tempfile.TemporaryDirectory() as td:
+        store_dir = args.artifact_dir or td
+        store, tids = build_fleet([art], args.fleet_tenants, store_dir)
+        print(f"fleet: {len(tids)} tenants (y-scaled variants of the fit) "
+              f"stored under {store_dir}")
+        server = FleetServer(
+            store,
+            cache_artifacts=args.fleet_cache,
+            cache_bytes=args.fleet_cache_bytes or None,
+            slots=args.fleet_slots,
+            budget_ms=args.fleet_budget_ms,
+        )
+        stream = zipf_tenants(tids, n_requests, a=args.fleet_zipf)
+        make_query = lambda i: rng.normal(
+            size=(args.batch, args.d)
+        ).astype(np.float32)
+        degraded_every = 7 if degraded_avail is not None else 0
+        # warm pass traces the per-bucket programs (healthy + degraded
+        # shapes); the measured loop must then hold every counter flat
+        serve_loop(server, stream[: 4 * args.fleet_slots], make_query,
+                   degraded_every=degraded_every,
+                   degraded_avail=degraded_avail)
+        server.reset_stats()
+        c0 = fleet_trace_count(args.protocol)
+        s0 = serve_trace_count(args.protocol)
+        t0 = time.perf_counter()
+        stats = serve_loop(server, stream, make_query,
+                           degraded_every=degraded_every,
+                           degraded_avail=degraded_avail)
+        wall = time.perf_counter() - t0
+        retraces = (fleet_trace_count(args.protocol) - c0) + \
+            (serve_trace_count(args.protocol) - s0)
+        qps = stats["completed"] * args.batch / wall
+        c = stats["cache"]
+        print(f"fleet serve: {stats['completed']} requests x {args.batch} "
+              f"pts in {wall:.2f}s -> {qps:.0f} q/s | p50 "
+              f"{stats['p50_ms']:.2f} ms p99 {stats['p99_ms']:.2f} ms "
+              f"(budget {args.fleet_budget_ms} ms, flush width "
+              f"{args.fleet_slots})")
+        print(f"fleet cache: hit rate {c['hit_rate']:.2f} "
+              f"({c['hits']}h/{c['misses']}m, {c['evictions']} evictions) | "
+              f"{stats['stacks']} stack(s), {stats['stack_swaps']} tenant "
+              f"swaps | steady-state retraces={retraces}")
+        if retraces:
+            print("FATAL: steady-state fleet loop retraced", file=sys.stderr)
+            sys.exit(1)
 
 
 def main():
@@ -117,6 +183,23 @@ def main():
                          "are counted and reported (0 = no budget)")
     ap.add_argument("--retries", type=int, default=3,
                     help="fit/load attempts before giving up")
+    ap.add_argument("--fleet", action="store_true",
+                    help="multi-tenant mode: derive --fleet-tenants y-scaled "
+                         "tenants from the fit and serve them through the "
+                         "launch.fleet server (LRU artifact cache + "
+                         "latency-budgeted micro-batching); chaos/degraded "
+                         "masks apply per tenant")
+    ap.add_argument("--fleet-tenants", type=int, default=16)
+    ap.add_argument("--fleet-cache", type=int, default=8,
+                    help="artifact cache capacity (count)")
+    ap.add_argument("--fleet-cache-bytes", type=int, default=0,
+                    help="artifact cache capacity in bytes (0 = unbounded)")
+    ap.add_argument("--fleet-budget-ms", type=float, default=2.0,
+                    help="micro-batch latency budget")
+    ap.add_argument("--fleet-slots", type=int, default=4,
+                    help="micro-batch flush width")
+    ap.add_argument("--fleet-zipf", type=float, default=1.1,
+                    help="zipf exponent of the tenant traffic mix")
     args = ap.parse_args()
 
     if args.mesh:
@@ -205,6 +288,10 @@ def main():
               f"lost={list(h.machines_lost)} demoted={h.rows_demoted} "
               f"var_inflation={h.variance_inflation:.2f}")
     stragglers = dict(chaos.straggle) if chaos is not None else {}
+
+    if args.fleet:
+        _run_fleet(args, art, degraded_avail, rng)
+        return
 
     lat, machine, n_updates = [], 1 % args.m, 0
     n_over = 0  # requests over the --timeout-ms budget

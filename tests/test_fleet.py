@@ -1,0 +1,354 @@
+"""Multi-tenant fleet serving contract (core.fleet + launch.fleet).
+
+Locks the tentpole invariants of the stacked vmapped serve path:
+  * equivalence — one stacked dispatch over a mixed-tenant micro-batch
+    matches the per-artifact serial predict loop, for the plain-vmap path
+    (center) AND the tenant-batched fused epilogue path (broadcast +
+    pallas-mode artifacts);
+  * isolation — one tenant's hostile query rows (NaN) or degraded
+    availability mask never perturbs a co-batched tenant: the neighbor's
+    answers are BITWISE identical with and without the bad tenant present;
+  * retrace-freedom — admitting tenants, swapping the batch mix, and LRU
+    evictions leave ``fleet_trace_count`` flat (row writes + traced gather
+    indices never change the jit key);
+  * the cache plane — LRU eviction order, byte-capacity accounting, and
+    checkpoint-backed load-on-miss serving BITWISE identically to a direct
+    ``load_artifact``;
+  * the request plane — MicroBatcher budget/size flush semantics under a
+    fake clock (no sleeping), FleetServer end-to-end, and the injectable
+    ``_retry`` backoff.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import split_machines
+from repro.core.fleet import (
+    ArtifactCache,
+    ArtifactStore,
+    FleetStack,
+    artifact_nbytes,
+    bucket_key,
+    fleet_trace_count,
+    pad_to_capacity,
+    scale_targets,
+    stack_artifacts,
+)
+from repro.core.protocols import fit, predict, update
+from repro.launch.fleet import FleetServer, MicroBatcher, build_fleet, \
+    serve_loop, zipf_tenants
+
+M, N, D, STEPS, BITS = 4, 96, 4, 2, 8
+T_Q = 8  # query points per tenant request
+
+
+def _parts(seed=0):
+    rng = np.random.default_rng(seed)
+    W = rng.normal(size=(D, 2))
+    X = rng.normal(size=(N, D)).astype(np.float32)
+    y = (np.sin(X @ W[:, 0]) + 0.4 * (X @ W[:, 1])
+         + 0.05 * rng.normal(size=N)).astype(np.float32)
+    return split_machines(X, y, M, jax.random.PRNGKey(seed))
+
+
+@pytest.fixture(scope="module")
+def base_fused():
+    """One broadcast artifact on the fused serve path (pallas gram mode +
+    cached Nyström serve factors) — the tenant-batched epilogue route."""
+    art = fit(_parts(0), BITS, "broadcast", steps=STEPS,
+              gram_backend="pallas")
+    assert "Ainv" in art.factors  # precondition: fused epilogue applies
+    return art
+
+
+@pytest.fixture(scope="module")
+def base_center():
+    """One center-protocol artifact — the plain-vmap fleet route."""
+    return fit(_parts(1), BITS, "center", steps=STEPS)
+
+
+def _tenants(base, n, start=0.3, step=0.2):
+    """n genuinely distinct same-bucket tenants via exact y-scaling."""
+    return {i: scale_targets(base, start + step * i) for i in range(n)}
+
+
+def _queries(S, seed=2):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(S, T_Q, D)).astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# equivalence: stacked dispatch == serial per-artifact loop
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("which", ["fused", "center"])
+def test_stacked_predict_matches_serial(which, base_fused, base_center):
+    base = base_fused if which == "fused" else base_center
+    tenants = _tenants(base, 5)
+    stack = FleetStack(tenants, slots=8)
+    tids = [3, 0, 4, 1, 3]  # repeats allowed
+    Xq = _queries(len(tids))
+    mu_s, var_s = stack.predict(tids, Xq)
+    for s, tid in enumerate(tids):
+        mu_1, var_1 = predict(tenants[tid], Xq[s])
+        np.testing.assert_allclose(np.asarray(mu_s[s]), np.asarray(mu_1),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(var_s[s]), np.asarray(var_1),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_scale_targets_is_exact(base_fused, base_center):
+    """scale_targets(art, c) == the posterior on c*y: the mean scales by c
+    (linearity of alpha in y).  The center protocol's GP variance never
+    depends on y, so it stays BITWISE unchanged; the broadcast KL fusion's
+    moment-matched variance legitimately shifts with the expert means, so
+    only the mean is checked there."""
+    Xq = _queries(1)[0]
+    mu0, var0 = predict(base_center, Xq)
+    mu2, var2 = predict(scale_targets(base_center, -2.0), Xq)
+    np.testing.assert_allclose(np.asarray(mu2), -2.0 * np.asarray(mu0),
+                               rtol=1e-5, atol=1e-5)
+    assert np.array_equal(np.asarray(var2), np.asarray(var0))
+    mu0f, _ = predict(base_fused, Xq)
+    mu2f, _ = predict(scale_targets(base_fused, -2.0), Xq)
+    np.testing.assert_allclose(np.asarray(mu2f), -2.0 * np.asarray(mu0f),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# isolation: a bad tenant never perturbs its co-batched neighbors
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("which", ["fused", "center"])
+def test_nan_query_tenant_is_isolated(which, base_fused, base_center):
+    base = base_fused if which == "fused" else base_center
+    tenants = _tenants(base, 3)
+    stack = FleetStack(tenants, slots=4)
+    tids = [0, 1, 2]
+    Xq = _queries(3)
+    mu_ref, var_ref = stack.predict(tids, Xq)
+    hostile = Xq.copy()
+    hostile[1] = np.nan  # tenant 1's whole request goes hostile
+    mu_h, var_h = stack.predict(tids, hostile)
+    # neighbors bitwise untouched
+    for s in (0, 2):
+        assert np.array_equal(np.asarray(mu_h[s]), np.asarray(mu_ref[s]))
+        assert np.array_equal(np.asarray(var_h[s]), np.asarray(var_ref[s]))
+    # the hostile tenant degrades to the prior (finite), not NaN
+    assert np.isfinite(np.asarray(mu_h[1])).all()
+    assert np.isfinite(np.asarray(var_h[1])).all()
+    assert np.allclose(np.asarray(mu_h[1]), 0.0)
+
+
+def test_degraded_mask_tenant_is_isolated(base_fused):
+    tenants = _tenants(base_fused, 3)
+    stack = FleetStack(tenants, slots=4)
+    tids = [0, 1, 2]
+    Xq = _queries(3)
+    healthy = np.ones((3, M), np.float32)
+    mu_ref, var_ref = stack.predict(tids, Xq, healthy)
+    degraded = healthy.copy()
+    degraded[1, 0] = 0.0  # tenant 1 loses machine 0
+    mu_d, var_d = stack.predict(tids, Xq, degraded)
+    for s in (0, 2):
+        assert np.array_equal(np.asarray(mu_d[s]), np.asarray(mu_ref[s]))
+        assert np.array_equal(np.asarray(var_d[s]), np.asarray(var_ref[s]))
+    # the degraded tenant matches its own single-artifact degraded serve
+    avail = degraded[1]
+    mu_1, var_1 = predict(tenants[1], Xq[1], available=avail)
+    np.testing.assert_allclose(np.asarray(mu_d[1]), np.asarray(mu_1),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(var_d[1]), np.asarray(var_1),
+                               rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------------------------------
+# retrace-freedom: swaps and mix changes never recompile
+# --------------------------------------------------------------------------
+
+
+def test_tenant_swap_never_retraces(base_fused):
+    tenants = _tenants(base_fused, 6)
+    stack = FleetStack(dict(list(tenants.items())[:4]), slots=4)
+    Xq = _queries(3)
+    stack.predict([0, 1, 2], Xq)  # traces once
+    c0 = fleet_trace_count("broadcast")
+    stack.predict([2, 0, 3], Xq)          # new mix
+    stack.admit(4, tenants[4])            # LRU eviction (stack is full)
+    stack.admit(5, tenants[5])
+    stack.predict([4, 5, 3], Xq)          # swapped-in tenants
+    stack.admit(0, tenants[0])            # still resident: refresh, not swap
+    stack.predict([0, 0, 0], Xq)
+    assert fleet_trace_count("broadcast") == c0
+    assert stack.swaps == 2  # admits of 4 and 5 evicted tenants 1 and 2
+
+
+def test_stack_rejects_nonresident_and_heterogeneous(base_fused, base_center):
+    stack = FleetStack(_tenants(base_fused, 2), slots=4)
+    with pytest.raises(KeyError, match="not resident"):
+        stack.predict([0, 99], _queries(2))
+    with pytest.raises(ValueError, match="bucket-compatible"):
+        stack.admit(7, base_center)
+    with pytest.raises(ValueError, match="bucket-compatible"):
+        stack_artifacts([base_fused, base_center])
+
+
+def test_pad_to_capacity_cobuckets_streamed_artifacts(base_center):
+    """A fresh fit (exact-size buffers) and a streamed artifact (grown
+    buffers) land in different buckets until padded to a common capacity —
+    and the padded artifact predicts identically."""
+    rng = np.random.default_rng(3)
+    Xn = rng.normal(size=(4, D)).astype(np.float32)
+    yn = np.zeros(4, np.float32)
+    streamed = update(base_center, Xn, yn, machine=0)
+    assert bucket_key(streamed) != bucket_key(base_center)
+    cap = int(streamed.y.shape[-1])
+    fresh_padded = pad_to_capacity(base_center, cap)
+    assert bucket_key(fresh_padded) == bucket_key(streamed)
+    Xq = _queries(1)[0]
+    mu0, var0 = predict(base_center, Xq)
+    mu1, var1 = predict(fresh_padded, Xq)
+    np.testing.assert_allclose(np.asarray(mu1), np.asarray(mu0),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(var1), np.asarray(var0),
+                               rtol=1e-5, atol=1e-5)
+    stack = FleetStack({0: fresh_padded, 1: streamed})
+    mu_s, _ = stack.predict([0, 1], _queries(2))
+    assert np.isfinite(np.asarray(mu_s)).all()
+
+
+# --------------------------------------------------------------------------
+# cache plane: LRU, bytes, bitwise load-on-miss
+# --------------------------------------------------------------------------
+
+
+def test_cache_lru_eviction_and_load_on_miss(base_fused, tmp_path):
+    from repro.core.protocols import load_artifact
+
+    tenants = _tenants(base_fused, 4)
+    store = ArtifactStore(str(tmp_path))
+    for tid, art in tenants.items():
+        store.save(tid, art)
+    assert store.tenants() == sorted(str(t) for t in tenants)
+    cache = ArtifactCache(store.load, capacity=2)
+    cache.get(0), cache.get(1)
+    cache.get(0)          # refresh 0: now 1 is LRU
+    cache.get(2)          # evicts 1
+    assert 1 not in cache and 0 in cache and 2 in cache
+    assert (cache.hits, cache.misses, cache.evictions) == (1, 3, 1)
+    # load-on-miss serves BITWISE identically to a direct checkpoint load
+    art_c = cache.get(1)
+    art_d = load_artifact(store.path(1))
+    Xq = _queries(1)[0]
+    mu_c, var_c = predict(art_c, Xq)
+    mu_d, var_d = predict(art_d, Xq)
+    assert np.array_equal(np.asarray(mu_c), np.asarray(mu_d))
+    assert np.array_equal(np.asarray(var_c), np.asarray(var_d))
+    # and the store's meta screen reads without touching arrays
+    meta = store.meta(1)
+    assert meta["protocol"] == "broadcast"
+
+
+def test_cache_byte_capacity(base_fused):
+    nb = artifact_nbytes(base_fused)
+    tenants = _tenants(base_fused, 3)
+    cache = ArtifactCache(lambda t: tenants[t], capacity_bytes=2 * nb)
+    cache.get(0), cache.get(1)
+    assert cache.total_bytes == 2 * nb
+    cache.get(2)  # over budget -> evict LRU tenant 0
+    assert 0 not in cache and cache.total_bytes == 2 * nb
+    # a single artifact bigger than the budget is still kept (bounded, not
+    # refused)
+    tiny = ArtifactCache(lambda t: tenants[t], capacity_bytes=nb // 2)
+    tiny.get(0)
+    assert 0 in tiny and len(tiny) == 1
+
+
+# --------------------------------------------------------------------------
+# request plane: batcher, server, retry
+# --------------------------------------------------------------------------
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_microbatcher_flushes_on_size_and_budget():
+    clk = FakeClock()
+    mb = MicroBatcher(slots=3, budget_ms=5.0, clock=clk)
+    assert mb.add("a", 1) is None and mb.add("b", 2) is None
+    batch = mb.add("c", 3)  # third request fills the slots
+    assert [r.tenant for r in batch] == ["a", "b", "c"] and len(mb) == 0
+    mb.add("d", 4)
+    assert not mb.due()
+    clk.t += 0.0049
+    assert not mb.due()  # 4.9ms < 5ms budget
+    clk.t += 0.0002
+    assert mb.due()      # 5.1ms >= budget
+    assert [r.tenant for r in mb.flush()] == ["d"]
+    assert not mb.due()  # empty queue is never due
+
+
+def test_fleet_server_end_to_end(base_fused, tmp_path):
+    store, tids = build_fleet([base_fused], 10, str(tmp_path))
+    clk = FakeClock()
+    server = FleetServer(store, cache_artifacts=6, slots=3, budget_ms=5.0,
+                         clock=clk)
+    rng = np.random.default_rng(4)
+    mk = lambda i: rng.normal(size=(T_Q, D)).astype(np.float32)
+    stats = serve_loop(server, zipf_tenants(tids, 20, seed=1), mk)
+    assert stats["completed"] == 20
+    assert stats["cache"]["misses"] >= 6  # cold start + capacity pressure
+    assert stats["requests"] == 20 and stats["stacks"] == 1
+    # a ragged tail flush (padded to the fixed width) answers correctly
+    out = server.submit(tids[0], mk(0))
+    assert out == []
+    server.batcher._queue[0].enqueued_at -= 1.0  # age it past the budget
+    done = server.poll()
+    assert len(done) == 1 and done[0][0] == tids[0]
+
+
+def test_fleet_server_padded_tail_matches_direct(base_fused, tmp_path):
+    """A partial flush is padded to the fixed width; the answer for the real
+    request must match the tenant's direct single-artifact predict."""
+    store, tids = build_fleet([base_fused], 4, str(tmp_path))
+    server = FleetServer(store, cache_artifacts=4, slots=4, budget_ms=0.0)
+    rng = np.random.default_rng(5)
+    Xq = rng.normal(size=(T_Q, D)).astype(np.float32)
+    server.submit(tids[2], Xq)
+    (tid, mu, var, lat), = server.poll()  # budget 0 -> due immediately
+    assert tid == tids[2] and lat >= 0.0
+    mu_d, var_d = predict(store.load(tids[2]), Xq)
+    np.testing.assert_allclose(np.asarray(mu), np.asarray(mu_d),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(var), np.asarray(var_d),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_retry_injectable_sleep():
+    from repro.launch.serve_gp import _retry
+
+    waits = []
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    assert _retry("t", flaky, attempts=4, backoff=0.5,
+                  sleep=waits.append) == "ok"
+    assert waits == [0.5, 1.0]  # exponential backoff, recorded not slept
+
+    with pytest.raises(RuntimeError):
+        _retry("t", lambda: (_ for _ in ()).throw(RuntimeError("hard")),
+               attempts=2, backoff=0.25, sleep=waits.append)
+    assert waits == [0.5, 1.0, 0.25]
